@@ -1,0 +1,98 @@
+//! Figure 1: the correlation between data parallelism and the number of
+//! epochs needed to reach a training goal.
+//!
+//! * (a) mSGD/CNN on cifar_like: sweep the global batch size (K·L with
+//!   H = 1, the mSGD special case) and measure epochs to the target test
+//!   accuracy — the paper reports e.g. +44% epochs from batch 256 → 512.
+//! * (b) CoCoA/SVM on criteo_like: sweep the number of partitions K and
+//!   measure epochs to the target duality gap — the paper reports +65%
+//!   from 16 → 32 partitions.
+//!
+//! Run `--part a`, `--part b`, or both (default). `CHICLE_FAST=1` shrinks
+//! the sweep.
+
+use chicle::config::{AlgoConfig, SessionConfig, TaskModel};
+use chicle::coordinator::TrainingSession;
+use chicle::harness::{fast_mode, print_table, summarize, write_tsv, Workload};
+
+fn part_a() -> chicle::Result<()> {
+    println!("Fig 1a: epochs to {:.0}% accuracy vs global batch (mSGD/CNN, cifar_like)",
+             Workload::CifarLike.target() * 100.0);
+    let ks: &[usize] = if fast_mode() { &[2, 8] } else { &[2, 4, 8, 16, 32] };
+    let mut rows = Vec::new();
+    let mut tsv = String::from("batch\tk\tepochs_to_target\tbest_acc\n");
+    for &k in ks {
+        let ds = Workload::CifarLike.dataset(42);
+        let mut cfg = Workload::CifarLike.session(&format!("fig1a-k{k}"), k);
+        cfg.task_model = TaskModel::MicroTasks { k };
+        if let AlgoConfig::Lsgd(l) = &mut cfg.algo {
+            l.h = 1; // mSGD
+            l.eval_every = 5;
+        }
+        cfg.max_iters = if fast_mode() { 100 } else { 4000 };
+        cfg.max_epochs = 20.0;
+        let batch = k * 8;
+        let mut s = TrainingSession::new(cfg, ds)?;
+        let log = s.run()?;
+        let (epochs, _, last) = summarize(&log, Workload::CifarLike.target());
+        let best = log.best_accuracy().unwrap_or(0.0);
+        rows.push(vec![
+            format!("{batch}"),
+            format!("{k}"),
+            epochs.clone(),
+            format!("{best:.3}"),
+        ]);
+        tsv.push_str(&format!("{batch}\t{k}\t{epochs}\t{best:.4}\n"));
+        let _ = last;
+    }
+    print_table(
+        "Fig 1a (epochs to target vs batch size)",
+        &["batch (K·L)", "K", "epochs", "best acc"],
+        &rows,
+    );
+    write_tsv("fig1a_batch_vs_epochs.tsv", &tsv)?;
+    Ok(())
+}
+
+fn part_b() -> chicle::Result<()> {
+    println!("Fig 1b: epochs to gap {:.0e} vs #partitions (CoCoA/SVM, criteo_like)",
+             Workload::CriteoLike.target());
+    let ks: &[usize] = if fast_mode() { &[2, 16] } else { &[2, 4, 8, 16, 32, 64] };
+    let mut rows = Vec::new();
+    let mut tsv = String::from("k\tepochs_to_target\tfinal_gap\n");
+    for &k in ks {
+        let ds = Workload::CriteoLike.dataset(42);
+        let mut cfg = Workload::CriteoLike.session(&format!("fig1b-k{k}"), k);
+        cfg.task_model = TaskModel::MicroTasks { k };
+        cfg.max_iters = if fast_mode() { 20 } else { 120 };
+        let mut s = TrainingSession::new(cfg, ds)?;
+        let log = s.run()?;
+        let (epochs, _, last) = summarize(&log, Workload::CriteoLike.target());
+        rows.push(vec![format!("{k}"), epochs.clone(), last.clone()]);
+        tsv.push_str(&format!("{k}\t{epochs}\t{last}\n"));
+    }
+    print_table(
+        "Fig 1b (epochs to target vs #partitions)",
+        &["K", "epochs", "final gap"],
+        &rows,
+    );
+    write_tsv("fig1b_partitions_vs_epochs.tsv", &tsv)?;
+    Ok(())
+}
+
+fn main() -> chicle::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let part = args
+        .iter()
+        .position(|a| a == "--part")
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+        .unwrap_or("both");
+    if part == "a" || part == "both" {
+        part_a()?;
+    }
+    if part == "b" || part == "both" {
+        part_b()?;
+    }
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Figures 4 + 9: elastic scale-in (16→2) and scale-out (2→16), ±2 nodes
+//! every 20 s — convergence over (projected) time and per epoch, uni-tasks
+//! vs micro-task emulation with K ∈ {16, 24, 32, 64}.
+//!
+//! Per paper §5.3: convergence is measured with real training; time is
+//! projected with the wave/balance model (transfer overheads excluded,
+//! which favors micro-tasks). One TSV per (workload, scenario, variant)
+//! lands in results/, plus a summary table of epochs/time to target.
+//!
+//! `CHICLE_FAST=1` runs a reduced matrix. `--workloads cocoa|lsgd|all`
+//! selects the workload family (default: all; the CNN runs dominate
+//! wall-clock).
+
+use chicle::config::SessionConfig;
+use chicle::coordinator::TrainingSession;
+use chicle::harness::{
+    fast_mode, print_table, scale_in_spec, scale_out_spec, summarize, task_model_variants,
+    write_tsv, Workload,
+};
+
+fn run_matrix(workloads: &[Workload]) -> chicle::Result<()> {
+    let micro_ks: &[usize] = if fast_mode() { &[16, 64] } else { &[16, 24, 32, 64] };
+    let scenarios: &[(&str, fn() -> chicle::config::ElasticSpec)] =
+        &[("scale_in", scale_in_spec), ("scale_out", scale_out_spec)];
+
+    let mut summary = Vec::new();
+    for w in workloads {
+        for (scen_name, scen) in scenarios {
+            for (variant, tm) in task_model_variants(micro_ks) {
+                let name = format!("fig4_{}_{}_{}", w.name(), scen_name, variant);
+                let ds = w.dataset(42);
+                let mut cfg: SessionConfig = w.session(&name, 16);
+                cfg.elastic = scen();
+                cfg.task_model = tm;
+                // Run a fixed horizon so the full curve is recorded.
+                cfg.max_epochs = w.horizon_epochs();
+                let mut s = TrainingSession::new(cfg, ds)?;
+                let log = s.run()?;
+                write_tsv(&format!("{name}.tsv"), &log.to_tsv())?;
+                let (epochs, time, last) = summarize(&log, w.target());
+                summary.push(vec![
+                    w.name().to_string(),
+                    scen_name.to_string(),
+                    variant.clone(),
+                    epochs,
+                    time,
+                    last,
+                ]);
+            }
+        }
+    }
+    print_table(
+        "Fig 4/9 summary: epochs & projected time to target",
+        &["workload", "scenario", "tasks", "epochs", "time", "final metric"],
+        &summary,
+    );
+    let mut tsv =
+        String::from("workload\tscenario\ttasks\tepochs_to_target\ttime_to_target\tfinal\n");
+    for row in &summary {
+        tsv.push_str(&row.join("\t"));
+        tsv.push('\n');
+    }
+    write_tsv("fig4_summary.tsv", &tsv)?;
+    Ok(())
+}
+
+fn main() -> chicle::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let which = args
+        .iter()
+        .position(|a| a == "--workloads")
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let workloads: Vec<Workload> = match which {
+        "cocoa" => vec![Workload::HiggsLike, Workload::CriteoLike],
+        "lsgd" => vec![Workload::CifarLike, Workload::FmnistLike],
+        _ => vec![
+            Workload::HiggsLike,
+            Workload::CriteoLike,
+            Workload::FmnistLike,
+            Workload::CifarLike,
+        ],
+    };
+    run_matrix(&workloads)
+}

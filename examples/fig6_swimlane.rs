@@ -1,0 +1,104 @@
+//! Figures 6 + 11: the load-balancing process visualized as swimlanes —
+//! per-task runtimes per iteration without and with the rebalance policy,
+//! plus the relative per-task workload (chunk counts).
+//!
+//! Cluster: 16 nodes of which 4 are down-clocked to 1.2 GHz (speed
+//! 1.2/2.6 ≈ 0.46), matching the paper's §5.4 second scenario. Without
+//! load balancing, iteration time is pinned to the slow nodes; with it,
+//! chunks drain from slow to fast nodes over the first few iterations
+//! until runtimes align.
+
+use chicle::config::ElasticSpec;
+use chicle::coordinator::TrainingSession;
+use chicle::harness::{print_table, write_tsv, Workload};
+
+fn run(workload: &Workload, rebalance: bool, iters: usize) -> chicle::Result<TrainingSession> {
+    let name = format!(
+        "fig6_{}_{}",
+        workload.name(),
+        if rebalance { "lb" } else { "nolb" }
+    );
+    let ds = workload.dataset(42);
+    let mut cfg = workload.session(&name, 16);
+    // 12 fast nodes + 4 down-clocked to 1.2/2.6 GHz.
+    let mut speeds = vec![1.0; 12];
+    speeds.extend(vec![1.2 / 2.6; 4]);
+    cfg.elastic = ElasticSpec::Trace { points: vec![(0.0, speeds)] };
+    cfg.policies.rebalance = rebalance;
+    cfg.policies.rebalance_step = 4;
+    cfg.max_iters = iters;
+    cfg.max_epochs = f64::INFINITY;
+    let mut s = TrainingSession::new(cfg, ds)?;
+    s.run_iters(iters)?;
+    Ok(s)
+}
+
+fn main() -> chicle::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let which = args
+        .iter()
+        .position(|a| a == "--workload")
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+        .unwrap_or("criteo");
+    let (workload, iters) = match which {
+        "higgs" => (Workload::HiggsLike, 10),
+        "fmnist" => (Workload::FmnistLike, 50),
+        _ => (Workload::CriteoLike, 10),
+    };
+
+    println!("running WITHOUT load balancing ({} iterations)...", iters);
+    let no_lb = run(&workload, false, iters)?;
+    println!("running WITH load balancing...");
+    let lb = run(&workload, true, iters)?;
+
+    println!("\n-- task runtimes per node, NO load balancing (Fig 6 top) --");
+    print!("{}", no_lb.swimlanes().render_ascii(100));
+    println!("\n-- task runtimes per node, WITH load balancing (Fig 6 middle) --");
+    print!("{}", lb.swimlanes().render_ascii(100));
+    println!("\n-- relative workload (chunks/task, final iteration; Fig 6 bottom) --");
+    print!("{}", lb.swimlanes().render_workload());
+
+    let mut rows = Vec::new();
+    for it in 0..iters {
+        let d0 = no_lb
+            .swimlanes()
+            .iteration_duration(it)
+            .map_or(0.0, |d| d.as_secs_f64());
+        let d1 = lb
+            .swimlanes()
+            .iteration_duration(it)
+            .map_or(0.0, |d| d.as_secs_f64());
+        let i0 = no_lb.swimlanes().imbalance(it).unwrap_or(0.0);
+        let i1 = lb.swimlanes().imbalance(it).unwrap_or(0.0);
+        rows.push(vec![
+            format!("{it}"),
+            format!("{d0:.3}"),
+            format!("{d1:.3}"),
+            format!("{i0:.2}"),
+            format!("{i1:.2}"),
+        ]);
+    }
+    print_table(
+        &format!("iteration durations & imbalance ({})", workload.name()),
+        &["iter", "dur no-LB", "dur LB", "imbalance no-LB", "imbalance LB"],
+        &rows,
+    );
+
+    write_tsv(
+        &format!("fig6_{}_nolb_spans.tsv", workload.name()),
+        &no_lb.swimlanes().to_tsv(),
+    )?;
+    write_tsv(
+        &format!("fig6_{}_lb_spans.tsv", workload.name()),
+        &lb.swimlanes().to_tsv(),
+    )?;
+
+    let last = iters - 1;
+    let (i_no, i_lb) = (
+        no_lb.swimlanes().imbalance(last).unwrap_or(1.0),
+        lb.swimlanes().imbalance(last).unwrap_or(1.0),
+    );
+    println!("\nfinal-iteration imbalance: {i_no:.2}x (no LB) -> {i_lb:.2}x (LB)");
+    Ok(())
+}

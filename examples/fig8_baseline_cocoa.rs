@@ -1,0 +1,59 @@
+//! Figure 8: baseline comparison for CoCoA — "Chicle vs Snap ML"
+//! (paper §5.2 / §A.1).
+//!
+//! Snap ML is not available offline; the rigid baseline is this stack
+//! with policies disabled, MPI-style fixed K=16 and — the one behavioural
+//! difference the paper reports — **contiguous partitioning**: Snap ML
+//! splits the dataset into 16 contiguous blocks, Chicle assigns random
+//! chunks. On Criteo(-like) data, whose consecutive samples are
+//! session-correlated, contiguous partitioning concentrates correlated
+//! samples on single workers and convergence suffers; on HIGGS(-like)
+//! i.i.d. data the two coincide (paper: "Chicle performed virtually
+//! identically for the Higgs dataset but outperformed it for Criteo").
+
+use chicle::config::Partitioning;
+use chicle::coordinator::TrainingSession;
+use chicle::harness::{fast_mode, print_table, rigid_policies, summarize, write_tsv, Workload};
+
+fn main() -> chicle::Result<()> {
+    let workloads = [Workload::HiggsLike, Workload::CriteoLike];
+    let mut rows = Vec::new();
+    for w in &workloads {
+        for (label, partitioning) in [
+            ("snapml-rigid (contiguous)", Partitioning::Contiguous),
+            ("chicle (random chunks)", Partitioning::RandomChunks),
+        ] {
+            let name = format!(
+                "fig8_{}_{}",
+                w.name(),
+                if matches!(partitioning, Partitioning::Contiguous) { "contig" } else { "random" }
+            );
+            let ds = w.dataset(42);
+            let mut cfg = w.session(&name, 16);
+            cfg.partitioning = partitioning;
+            if matches!(partitioning, Partitioning::Contiguous) {
+                cfg.policies = rigid_policies();
+            }
+            cfg.max_iters = if fast_mode() { 15 } else { 80 };
+            let mut s = TrainingSession::new(cfg, ds)?;
+            let log = s.run()?;
+            write_tsv(&format!("{name}.tsv"), &log.to_tsv())?;
+            let (epochs, time, last) = summarize(&log, w.target());
+            rows.push(vec![w.name().to_string(), label.to_string(), epochs, time, last]);
+        }
+    }
+    print_table(
+        "Fig 8: Snap-ML-style rigid baseline vs Chicle (CoCoA, K=16)",
+        &["workload", "system", "epochs→target", "time→target", "final gap"],
+        &rows,
+    );
+    let mut tsv = String::from("workload\tsystem\tepochs_to_target\ttime_to_target\tfinal\n");
+    for r in &rows {
+        tsv.push_str(&r.join("\t"));
+        tsv.push('\n');
+    }
+    write_tsv("fig8_summary.tsv", &tsv)?;
+    println!("\nExpected shape (paper §A.1): ~identical on higgs_like; Chicle converges");
+    println!("in fewer epochs on criteo_like due to partitioning sensitivity.");
+    Ok(())
+}

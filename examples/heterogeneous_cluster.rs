@@ -1,0 +1,40 @@
+//! Heterogeneous-cluster demo: 3 fast + 1 half-speed node. The rebalance
+//! policy learns per-sample runtimes from iteration timings and drains
+//! chunks from the slow node until all tasks finish together (paper §4.5).
+//!
+//!     cargo run --release --example heterogeneous_cluster
+
+use chicle::config::{ElasticSpec, SessionConfig};
+use chicle::coordinator::TrainingSession;
+use chicle::data::synth;
+
+fn main() -> chicle::Result<()> {
+    let dataset = synth::higgs_like(12_000, 3);
+    let mut cfg = SessionConfig::cocoa("hetero-demo", 4);
+    cfg.chunk_bytes = 8 * 1024;
+    cfg.elastic = ElasticSpec::Trace { points: vec![(0.0, vec![1.0, 1.0, 1.0, 0.5])] };
+    cfg.policies.rebalance = true;
+    cfg.policies.rebalance_step = 2;
+    cfg.max_iters = 15;
+
+    let mut session = TrainingSession::new(cfg, dataset)?;
+    session.run_iters(15)?;
+
+    println!("-- task runtime swimlanes (node 3 runs at half speed) --");
+    print!("{}", session.swimlanes().render_ascii(90));
+    println!("\n-- final relative workload --");
+    print!("{}", session.swimlanes().render_workload());
+
+    println!("\niteration durations (time units):");
+    for it in 0..session.swimlanes().n_iterations() {
+        if let Some(d) = session.swimlanes().iteration_duration(it) {
+            let imb = session.swimlanes().imbalance(it).unwrap_or(1.0);
+            println!("  iter {it:>2}: {:.3} (imbalance {imb:.2}x)", d.as_secs_f64());
+        }
+    }
+    let first = session.swimlanes().imbalance(0).unwrap();
+    let last_iter = session.swimlanes().n_iterations() - 1;
+    let last = session.swimlanes().imbalance(last_iter).unwrap();
+    println!("\nimbalance: {first:.2}x -> {last:.2}x (rebalancer learned node speeds)");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: train an SVM with CoCoA on 4 simulated nodes through the
+//! full production path — JAX/Pallas AOT artifacts executed via PJRT
+//! from the rust coordinator. Falls back to the native backend when
+//! artifacts are missing (`make artifacts` builds them).
+//!
+//!     cargo run --release --example quickstart
+
+use chicle::config::{ComputeBackend, SessionConfig};
+use chicle::coordinator::TrainingSession;
+use chicle::data::synth;
+
+fn main() -> chicle::Result<()> {
+    let dataset = synth::higgs_like(8_000, 42);
+    println!(
+        "dataset: {} ({} samples, {} features)",
+        dataset.name,
+        dataset.n_samples(),
+        dataset.dim()
+    );
+
+    let mut cfg = SessionConfig::cocoa("quickstart", 4);
+    cfg.chunk_bytes = 16 * 1024;
+    cfg.max_iters = 30;
+    cfg.backend = if std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("backend: HLO via PJRT (AOT JAX/Pallas artifacts)");
+        ComputeBackend::Hlo
+    } else {
+        println!("backend: native (run `make artifacts` for the HLO path)");
+        ComputeBackend::Native
+    };
+
+    let mut session = TrainingSession::new(cfg, dataset)?;
+    let log = session.run()?;
+
+    println!("\niter  epochs  gap");
+    for r in log.records.iter().step_by(3) {
+        if let Some(m) = r.metric {
+            println!("{:>4}  {:>6.1}  {:.6}", r.iter, r.epochs, m.value());
+        }
+    }
+    let gap = log.last_gap().expect("gap recorded");
+    println!(
+        "\nconverged to duality gap {gap:.6} in {} iterations ({:.2}s wall)",
+        log.records.len(),
+        log.total_wall().as_secs_f64()
+    );
+    assert!(gap < 0.01, "quickstart should converge");
+    Ok(())
+}

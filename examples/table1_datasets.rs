@@ -1,0 +1,67 @@
+//! Table 1: datasets used in the evaluation — number of samples (#S),
+//! features (#F), categories (#C) and in-memory size.
+//!
+//! The paper's corpora (HIGGS, Criteo, CIFAR-10, Fashion-MNIST) are
+//! substituted with synthetic equivalents at a scale this testbed trains
+//! in minutes; see DESIGN.md §Substitutions. Paper values are printed
+//! alongside for reference.
+
+use chicle::harness::{print_table, write_tsv, Workload};
+
+fn human(bytes: usize) -> String {
+    if bytes >= 1 << 30 {
+        format!("{:.1}GiB", bytes as f64 / (1u64 << 30) as f64)
+    } else if bytes >= 1 << 20 {
+        format!("{:.1}MiB", bytes as f64 / (1 << 20) as f64)
+    } else {
+        format!("{:.1}KiB", bytes as f64 / (1 << 10) as f64)
+    }
+}
+
+fn main() -> chicle::Result<()> {
+    let paper: &[(&str, &str, &str, &str, &str)] = &[
+        ("HIGGS", "11M", "28", "2", "2.5GiB"),
+        ("Criteo", "46M", "1M", "2", "15GiB"),
+        ("CIFAR-10", "60k", "3072", "10", "162MiB"),
+        ("Fashion-MNIST", "70k", "784", "10", "30MiB"),
+    ];
+    let workloads = [
+        Workload::HiggsLike,
+        Workload::CriteoLike,
+        Workload::CifarLike,
+        Workload::FmnistLike,
+    ];
+    let mut rows = Vec::new();
+    let mut tsv = String::from("dataset\tsamples\tfeatures\tclasses\tsize_bytes\n");
+    for (w, p) in workloads.iter().zip(paper) {
+        let ds = w.dataset(42);
+        let classes = match &ds.labels {
+            chicle::data::Labels::Binary(_) => 2,
+            chicle::data::Labels::Class(_) => ds.n_classes(),
+            chicle::data::Labels::None => 0,
+        };
+        rows.push(vec![
+            ds.name.clone(),
+            format!("{}", ds.n_samples()),
+            format!("{}", ds.dim()),
+            format!("{classes}"),
+            human(ds.size_bytes()),
+            format!("(paper {}: {} / {} / {} / {})", p.0, p.1, p.2, p.3, p.4),
+        ]);
+        tsv.push_str(&format!(
+            "{}\t{}\t{}\t{}\t{}\n",
+            ds.name,
+            ds.n_samples(),
+            ds.dim(),
+            classes,
+            ds.size_bytes()
+        ));
+    }
+    print_table(
+        "Table 1: evaluation datasets (synthetic equivalents)",
+        &["dataset", "#S", "#F", "#C", "size", "paper reference"],
+        &rows,
+    );
+    write_tsv("table1_datasets.tsv", &tsv)?;
+    Ok(())
+}

@@ -1,0 +1,219 @@
+"""AOT compiler: lower every L2 computation to HLO text + write a manifest.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (behind the
+rust `xla` 0.1.6 crate) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--tfm-preset small|e2e|100m]
+
+Outputs:
+    artifacts/<name>.hlo.txt   one per computation variant
+    artifacts/manifest.json    name -> file, input/output shapes+dtypes,
+                               flat-parameter layouts, hyper-parameter meta
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _flat(out):
+    """Flatten nested loss outputs (loss, (correct, n)) -> (loss, correct, n)."""
+    return tuple(jax.tree_util.tree_leaves(out))
+
+
+def _io_meta(avals):
+    avals = jax.tree_util.tree_leaves(avals)
+    return [{"shape": [int(d) for d in a.shape], "dtype": str(a.dtype)} for a in avals]
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"artifacts": {}, "models": {}}
+
+    def add(self, name: str, fn, in_specs, meta=None):
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *in_specs)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        entry = {
+            "file": fname,
+            "inputs": _io_meta(in_specs),
+            "outputs": _io_meta(out_avals),
+        }
+        if meta:
+            entry["meta"] = meta
+        self.manifest["artifacts"][name] = entry
+        print(f"  {name}: {len(text)} chars, "
+              f"{len(in_specs)} inputs -> {len(out_avals)} outputs")
+
+    def add_model(self, name: str, specs, extra=None):
+        layout, total = M.param_layout(specs)
+        entry = {"params": layout, "param_count": total}
+        if extra:
+            entry.update(extra)
+        self.manifest["models"][name] = entry
+        print(f"  model {name}: {total} params, {len(layout)} tensors")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_cocoa(b: Builder, s: int, f: int):
+    """CoCoA/SCD artifacts over dense (s, f) chunk blocks."""
+    b.add(
+        f"scd_chunk_s{s}_f{f}",
+        M.scd_chunk,
+        (spec((s, f)), spec((s,)), spec((s,), I32), spec((s,)), spec((f,)),
+         spec(()), spec(())),
+        meta={"kind": "scd_chunk", "samples": s, "features": f},
+    )
+    b.add(
+        f"linear_eval_s{s}_f{f}",
+        M.linear_eval,
+        (spec((s, f)), spec((s,)), spec((s,)), spec((f,))),
+        meta={"kind": "linear_eval", "samples": s, "features": f},
+    )
+
+
+def build_mlp(b: Builder, grad_batch: int, eval_batch: int):
+    dims = M.MLP_DIMS
+    specs = M.mlp_specs(dims)
+    _, total = M.param_layout(specs)
+    b.add_model("mlp", specs, {"dims": list(dims)})
+    b.add("mlp_init", lambda seed: M.mlp_init(seed[0]), (spec((1,), I32),),
+          meta={"kind": "init", "model": "mlp"})
+    b.add(
+        f"mlp_grad_l{grad_batch}",
+        functools.partial(M.mlp_grad, dims=dims),
+        (spec((total,)), spec((grad_batch, dims[0])), spec((grad_batch,), I32)),
+        meta={"kind": "grad", "model": "mlp", "batch": grad_batch},
+    )
+    b.add(
+        f"mlp_eval_b{eval_batch}",
+        lambda p, x, y: _flat(M.mlp_loss(p, x, y, dims)),
+        (spec((total,)), spec((eval_batch, dims[0])), spec((eval_batch,), I32)),
+        meta={"kind": "eval", "model": "mlp", "batch": eval_batch},
+    )
+
+
+def build_cnn(b: Builder, grad_batch: int, eval_batch: int):
+    cfg = M.CnnConfig()
+    specs = M.cnn_specs(cfg)
+    _, total = M.param_layout(specs)
+    b.add_model("cnn", specs, {"input_dim": cfg.input_dim, "n_classes": cfg.n_classes})
+    b.add("cnn_init", lambda seed: M.cnn_init(seed[0], cfg), (spec((1,), I32),),
+          meta={"kind": "init", "model": "cnn"})
+    b.add(
+        f"cnn_grad_l{grad_batch}",
+        functools.partial(M.cnn_grad, cfg=cfg),
+        (spec((total,)), spec((grad_batch, cfg.input_dim)), spec((grad_batch,), I32)),
+        meta={"kind": "grad", "model": "cnn", "batch": grad_batch},
+    )
+    b.add(
+        f"cnn_eval_b{eval_batch}",
+        lambda p, x, y: _flat(M.cnn_loss(p, x, y, cfg)),
+        (spec((total,)), spec((eval_batch, cfg.input_dim)), spec((eval_batch,), I32)),
+        meta={"kind": "eval", "model": "cnn", "batch": eval_batch},
+    )
+
+
+TFM_PRESETS = {
+    # vocab, d_model, n_layers, n_heads, d_ff, seq_len — "e2e" is the default
+    # end-to-end validation size for this CPU-PJRT testbed; "100m" matches the
+    # brief's ~100M-param ask and compiles, but is slow on CPU.
+    "small": M.TfmConfig(vocab=1024, d_model=128, n_layers=2, n_heads=4, d_ff=512, seq_len=64),
+    "e2e": M.TfmConfig(vocab=4096, d_model=256, n_layers=4, n_heads=8, d_ff=1024, seq_len=64),
+    "100m": M.TfmConfig(vocab=32768, d_model=768, n_layers=12, n_heads=12, d_ff=3072, seq_len=128),
+}
+
+
+def build_tfm(b: Builder, preset: str, grad_batch: int):
+    cfg = TFM_PRESETS[preset]
+    specs = M.tfm_specs(cfg)
+    _, total = M.param_layout(specs)
+    b.add_model(f"tfm_{preset}", specs, {"config": dataclass_dict(cfg)})
+    b.add(f"tfm_{preset}_init", lambda seed: M.tfm_init(seed[0], cfg),
+          (spec((1,), I32),), meta={"kind": "init", "model": f"tfm_{preset}"})
+    b.add(
+        f"tfm_{preset}_grad_b{grad_batch}",
+        functools.partial(M.tfm_grad, cfg=cfg),
+        (spec((total,)), spec((grad_batch, cfg.seq_len), I32)),
+        meta={"kind": "grad", "model": f"tfm_{preset}", "batch": grad_batch},
+    )
+    b.add(
+        f"tfm_{preset}_eval_b{grad_batch}",
+        lambda p, t: _flat(M.tfm_loss(p, t, cfg)),
+        (spec((total,)), spec((grad_batch, cfg.seq_len), I32)),
+        meta={"kind": "eval", "model": f"tfm_{preset}", "batch": grad_batch},
+    )
+
+
+def dataclass_dict(cfg):
+    import dataclasses
+    return dataclasses.asdict(cfg)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--tfm-preset", default="small",
+                    choices=list(TFM_PRESETS) + ["none"])
+    ap.add_argument("--nn-batch", type=int, default=8,
+                    help="local batch L for lSGD grad artifacts (paper: L=8)")
+    ap.add_argument("--eval-batch", type=int, default=256)
+    ap.add_argument("--chunk-samples", type=int, default=256)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    b = Builder(args.out_dir)
+    print("lowering CoCoA artifacts...")
+    build_cocoa(b, args.chunk_samples, 28)   # higgs_like feature width
+    print("lowering MLP artifacts...")
+    build_mlp(b, args.nn_batch, args.eval_batch)
+    print("lowering CNN artifacts...")
+    build_cnn(b, args.nn_batch, args.eval_batch)
+    if args.tfm_preset != "none":
+        print(f"lowering transformer ({args.tfm_preset}) artifacts...")
+        build_tfm(b, args.tfm_preset, grad_batch=8)
+    b.finish()
+    print(f"manifest written to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

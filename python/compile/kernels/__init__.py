@@ -1,0 +1,4 @@
+"""L1 Pallas kernels for Chicle's compute hot-spots + pure-jnp oracles."""
+
+from .fused_linear import fused_linear, matmul  # noqa: F401
+from .scd import scd_block  # noqa: F401

@@ -1,0 +1,135 @@
+"""L1 Pallas kernels: tiled matmul and fused linear (matmul + bias + activation).
+
+These are the dense compute hot-spots of Chicle's NN solvers (the FC layers of
+the paper's CNN, the MLP, and the transformer FFN/attention projections). They
+are written as Pallas kernels so the L2 jax models lower them into the same
+HLO module that the rust runtime executes via PJRT.
+
+TPU notes (see DESIGN.md §Hardware-Adaptation / §Perf): blocks default to
+128x128 which matches the MXU systolic array; the K dimension is kept whole in
+VMEM per block-row (all shapes used in this repo have K*bm*4B well under the
+~16MiB VMEM budget — the manifest records the footprint per variant). On this
+testbed kernels run with interpret=True because the CPU PJRT client cannot
+execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Interpret mode is mandatory on CPU-PJRT (see module docstring).
+INTERPRET = True
+
+# Default tile sizes, chosen for the MXU (128x128 systolic array).
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _act(x, act: str):
+    if act == "none":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    # One (bm, K) x (K, bn) tile product, f32 accumulation on the MXU.
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _fused_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = _act(acc + b_ref[...][None, :], act)
+
+
+def _grid(m: int, n: int, bm: int, bn: int):
+    return (pl.cdiv(m, bm), pl.cdiv(n, bn))
+
+
+def matmul(x: jax.Array, w: jax.Array, *, bm: int = BLOCK_M, bn: int = BLOCK_N) -> jax.Array:
+    """Tiled Pallas matmul: (M, K) @ (K, N) -> (M, N), f32 accumulate."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=_grid(m, n, bm, bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w)
+
+
+def _fused_linear_fwd_pallas(x, w, b, act: str, bm: int, bn: int):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,), (x.shape, w.shape, b.shape)
+    bm = min(bm, m)
+    bn = min(bn, n)
+    kernel = functools.partial(_fused_linear_kernel, act=act)
+    return pl.pallas_call(
+        kernel,
+        grid=_grid(m, n, bm, bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, act: str = "relu"):
+    """act(x @ w + b) with a Pallas forward and Pallas-matmul backward.
+
+    Pallas kernels carry no autodiff rule, so the VJP is hand-written: both
+    backward products (dy @ w.T and x.T @ dy) reuse the tiled matmul kernel.
+    """
+    return _fused_linear_fwd_pallas(x, w, b, act, BLOCK_M, BLOCK_N)
+
+
+def _fused_linear_fwd(x, w, b, act: str):
+    y = _fused_linear_fwd_pallas(x, w, b, act, BLOCK_M, BLOCK_N)
+    if act == "gelu":
+        # gelu' needs the pre-activation; keep it as residual.
+        pre = matmul(x, w) + b[None, :]
+        return y, (x, w, pre)
+    return y, (x, w, y)
+
+
+def _fused_linear_bwd(act: str, res, g):
+    x, w, saved = res
+    if act == "none":
+        dy = g
+    elif act == "relu":
+        # saved == y; relu' masks where the output was clamped.
+        dy = g * (saved > 0.0).astype(g.dtype)
+    elif act == "gelu":
+        dy = g * jax.grad(lambda t: jnp.sum(jax.nn.gelu(t)))(saved)
+    else:  # pragma: no cover
+        raise ValueError(act)
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

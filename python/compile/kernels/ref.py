@@ -1,0 +1,63 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels (build-time correctness).
+
+Every kernel in this package has a reference implementation here written with
+plain jax.numpy (no pallas), used by pytest/hypothesis to validate numerics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ref_matmul(x, w):
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def ref_fused_linear(x, w, b, act: str = "relu"):
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if act == "none":
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "gelu":
+        return jax.nn.gelu(y)
+    raise ValueError(act)
+
+
+def ref_scd_block(x, y, order, alpha, v, lam_n, sigma):
+    """Sequential numpy SDCA — the ground truth for kernels.scd.scd_block."""
+    x = np.asarray(x, np.float32)
+    y = np.asarray(y, np.float32)
+    alpha = np.array(alpha, np.float32, copy=True)
+    v = np.array(v, np.float32, copy=True)
+    dv = np.zeros_like(v)
+    lam_n = np.float32(lam_n)
+    sigma = np.float32(sigma)
+    for i in np.asarray(order, np.int64):
+        xi = x[i]
+        sqi = np.float32(np.dot(xi, xi))
+        if sqi <= 0.0:
+            continue
+        margin = y[i] * np.float32(np.dot(xi, v))
+        step = (np.float32(1.0) - margin) / (sigma * sqi / lam_n)
+        a_new = np.clip(alpha[i] + step, 0.0, 1.0).astype(np.float32)
+        upd = (a_new - alpha[i]) * y[i] / lam_n * xi
+        alpha[i] = a_new
+        # CoCoA+ local view: own updates enter scaled by sigma'.
+        v = v + sigma * upd
+        dv = dv + upd
+    return alpha, dv
+
+
+def ref_duality_gap(x, y, alpha, w, lam):
+    """gap = P(w) - D(alpha) for hinge-loss SVM; w must equal w(alpha)."""
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    alpha = np.asarray(alpha, np.float64)
+    w = np.asarray(w, np.float64)
+    margins = y * (x @ w)
+    hinge = np.maximum(0.0, 1.0 - margins)
+    # P - D = 1/n sum(hinge_i - alpha_i) + lambda ||w||^2
+    return float(np.mean(hinge - alpha) + lam * np.dot(w, w))

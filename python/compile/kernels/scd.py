@@ -1,0 +1,100 @@
+"""L1 Pallas kernel: a block of stochastic dual coordinate ascent (SDCA) steps.
+
+This is the CoCoA local-solver hot spot (paper §2.2, §4.1): each uni-task runs
+H sequential coordinate updates over the training samples in its local data
+chunks, against the shared vector v = w, and emits the accumulated model delta
+dv. Per-sample dual state alpha lives *with the chunk* (paper §4.4) and is
+updated in place.
+
+Math (hinge-loss SVM, CoCoA+ with aggregation parameter sigma' = K):
+    primal  P(w) = lambda/2 ||w||^2 + 1/n sum_i max(0, 1 - y_i x_i.w)
+    dual    D(a) = 1/n sum_i a_i - lambda/2 ||w(a)||^2,  a_i in [0, 1]
+    with    w(a) = (1/(lambda n)) sum_i a_i y_i x_i
+SDCA closed-form step on coordinate i (sq_i = ||x_i||^2), on the CoCoA+
+local subproblem: the solver's local view is w_loc = w + sigma' * dv (its
+own accumulated delta scaled by the aggregation parameter), and the step
+is damped by sigma':
+    delta = (1 - y_i x_i.w_loc) / (sigma * sq_i / (lambda n))
+    a_i  <- clip(a_i + delta, 0, 1)
+    dv   += (a_i_new - a_i_old) y_i x_i / (lambda n)
+The *unscaled* dv is returned; the trainer sums dv over tasks (gamma = 1).
+
+The whole (S, F) chunk block stays resident in VMEM; the sequential loop over
+coordinates is a fori_loop *inside* the kernel (the dependence chain through v
+is inherent to SCD — see Wright 2015). interpret=True for CPU-PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _scd_kernel(x_ref, y_ref, order_ref, alpha_ref, v_ref, scal_ref,
+                alpha_out_ref, dv_ref):
+    X = x_ref[...]            # (S, F) dense chunk block
+    y = y_ref[...]            # (S,)  labels in {-1, +1}
+    order = order_ref[...]    # (H,)  coordinate visit order (i32)
+    lam_n = scal_ref[0]       # lambda * n  (global sample count)
+    sigma = scal_ref[1]       # CoCoA aggregation parameter sigma' (= K)
+
+    sq = jnp.sum(X * X, axis=1)  # per-sample squared norms, hoisted
+    h = order.shape[0]
+
+    def body(t, carry):
+        alpha, v, dv = carry
+        i = order[t]
+        xi = jax.lax.dynamic_slice_in_dim(X, i, 1, axis=0)[0]      # (F,)
+        yi = jax.lax.dynamic_slice_in_dim(y, i, 1, axis=0)[0]
+        ai = jax.lax.dynamic_slice_in_dim(alpha, i, 1, axis=0)[0]
+        sqi = jax.lax.dynamic_slice_in_dim(sq, i, 1, axis=0)[0]
+        margin = yi * jnp.dot(xi, v)
+        denom = sigma * sqi / lam_n
+        # Guard zero-norm samples (padding rows use x = 0): no update.
+        step = jnp.where(sqi > 0.0, (1.0 - margin) / jnp.where(sqi > 0.0, denom, 1.0), 0.0)
+        a_new = jnp.clip(ai + step, 0.0, 1.0)
+        d = (a_new - ai) * yi / lam_n
+        upd = d * xi
+        alpha = jax.lax.dynamic_update_slice_in_dim(alpha, a_new[None], i, axis=0)
+        # CoCoA+ local view: own updates enter scaled by sigma'.
+        return alpha, v + sigma * upd, dv + upd
+
+    alpha0 = alpha_ref[...]
+    v0 = v_ref[...]
+    dv0 = jnp.zeros_like(v0)
+    alpha1, _v1, dv1 = jax.lax.fori_loop(0, h, body, (alpha0, v0, dv0))
+    alpha_out_ref[...] = alpha1
+    dv_ref[...] = dv1
+
+
+def scd_block(x, y, order, alpha, v, lam_n, sigma):
+    """Run len(order) sequential SDCA steps over a dense chunk block.
+
+    Args:
+      x:      f32 (S, F) samples.
+      y:      f32 (S,) labels in {-1, +1}.
+      order:  i32 (H,) visit order (row indices into x; may repeat / be shorter
+              or longer than S).
+      alpha:  f32 (S,) dual state (chunk-resident, paper §4.4).
+      v:      f32 (F,) shared vector (= w) snapshot for this iteration.
+      lam_n:  f32 scalar, lambda * n_total.
+      sigma:  f32 scalar, CoCoA sigma' (the paper sets it to K).
+
+    Returns:
+      (alpha_out (S,), dv (F,)) — updated dual state and accumulated model
+      delta; the trainer merges dv across tasks weighted by |D_k|/|D| (eq. 2).
+    """
+    s, f = x.shape
+    scal = jnp.stack([jnp.asarray(lam_n, jnp.float32),
+                      jnp.asarray(sigma, jnp.float32)])
+    return pl.pallas_call(
+        _scd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((s,), jnp.float32),
+            jax.ShapeDtypeStruct((f,), jnp.float32),
+        ),
+        interpret=INTERPRET,
+    )(x, y, order, alpha, v, scal)

@@ -1,0 +1,366 @@
+"""L2: Chicle's compute graphs in JAX, calling the L1 Pallas kernels.
+
+This module defines every computation the rust solvers execute at runtime:
+
+  * CoCoA/SCD local-solver pass over a dense chunk (`scd_chunk`) and the
+    per-chunk duality-gap contributions (`linear_eval`) — paper §2.2/§5.1.
+  * The paper's CNN (2 conv+maxpool layers, 3 FC layers — §5.1 "Synchronous
+    local SGD") loss/grads for local-SGD, plus eval.
+  * An MLP for the Fashion-MNIST-like workload.
+  * A decoder-only transformer LM (the end-to-end validation workload).
+
+All dense layers go through `kernels.fused_linear` so the Pallas kernels lower
+into the same HLO modules that rust loads via PJRT. Parameters cross the
+rust<->HLO boundary as one flat f32 vector; the layout (name/shape/offset) is
+recorded in artifacts/manifest.json by aot.py so the rust optimizer can
+address individual tensors.
+
+Python runs ONCE at build time (`make artifacts`); nothing here is on the
+training path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import fused_linear, scd_block
+
+# ---------------------------------------------------------------------------
+# Flat parameter handling
+# ---------------------------------------------------------------------------
+
+
+def param_layout(specs: Sequence[tuple[str, tuple[int, ...]]]):
+    """[(name, shape)] -> [{name, shape, offset, size}] + total size."""
+    out, off = [], 0
+    for name, shape in specs:
+        size = 1
+        for d in shape:
+            size *= d
+        out.append({"name": name, "shape": list(shape), "offset": off, "size": size})
+        off += size
+    return out, off
+
+
+def unflatten(flat: jax.Array, specs):
+    params = []
+    off = 0
+    for _, shape in specs:
+        size = 1
+        for d in shape:
+            size *= d
+        params.append(lax.dynamic_slice_in_dim(flat, off, size).reshape(shape))
+        off += size
+    return params
+
+
+def flatten(params) -> jax.Array:
+    return jnp.concatenate([p.reshape(-1) for p in params])
+
+
+# ---------------------------------------------------------------------------
+# CoCoA / SCD (GLM path)
+# ---------------------------------------------------------------------------
+
+
+def scd_chunk(x, y, order, alpha, v, lam_n, sigma):
+    """One local-SCD pass over a dense chunk (see kernels.scd)."""
+    return scd_block(x, y, order, alpha, v, lam_n, sigma)
+
+
+def linear_eval(x, y, alpha, w):
+    """Per-chunk duality-gap contributions for a hinge-loss SVM.
+
+    Padding rows carry y == 0 and are masked out. Returns
+    (sum_hinge, sum_alpha, correct, n_valid); the trainer combines chunks as
+      gap = (sum_hinge - sum_alpha)/n + lambda * ||w||^2.
+    """
+    valid = (y != 0.0).astype(jnp.float32)
+    margins = y * (x @ w)
+    hinge = jnp.maximum(0.0, 1.0 - margins)
+    correct = (margins > 0.0).astype(jnp.float32)
+    return (
+        jnp.sum(hinge * valid),
+        jnp.sum(alpha * valid),
+        jnp.sum(correct * valid),
+        jnp.sum(valid),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Shared NN pieces
+# ---------------------------------------------------------------------------
+
+
+def _softmax_xent(logits, labels, n_classes):
+    """Per-example CE with -1 = padding; returns (loss_sum, correct, n_valid)."""
+    valid = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[:, None], axis=-1)[:, 0]
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == safe).astype(jnp.float32)
+    return jnp.sum(nll * valid), jnp.sum(correct * valid), jnp.sum(valid)
+
+
+# ---------------------------------------------------------------------------
+# MLP (Fashion-MNIST-like workload)
+# ---------------------------------------------------------------------------
+
+MLP_DIMS = (784, 256, 128, 10)
+
+
+def mlp_specs(dims=MLP_DIMS):
+    specs = []
+    for i in range(len(dims) - 1):
+        specs.append((f"fc{i}.w", (dims[i], dims[i + 1])))
+        specs.append((f"fc{i}.b", (dims[i + 1],)))
+    return specs
+
+
+def mlp_forward(flat, x, dims=MLP_DIMS):
+    params = unflatten(flat, mlp_specs(dims))
+    h = x
+    n_layers = len(dims) - 1
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        act = "none" if i == n_layers - 1 else "relu"
+        h = fused_linear(h, w, b, act)
+    return h
+
+
+def mlp_loss(flat, x, y, dims=MLP_DIMS):
+    logits = mlp_forward(flat, x, dims)
+    loss_sum, correct, n = _softmax_xent(logits, y, dims[-1])
+    return loss_sum / jnp.maximum(n, 1.0), (correct, n)
+
+
+def mlp_grad(flat, x, y, dims=MLP_DIMS):
+    (loss, (correct, n)), g = jax.value_and_grad(mlp_loss, has_aux=True)(flat, x, y, dims)
+    return g, loss, correct, n
+
+
+def mlp_init(seed, dims=MLP_DIMS):
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for i in range(len(dims) - 1):
+        key, k = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / dims[i])
+        parts.append(jax.random.normal(k, (dims[i], dims[i + 1]), jnp.float32) * scale)
+        parts.append(jnp.zeros((dims[i + 1],), jnp.float32))
+    return flatten(parts)
+
+
+# ---------------------------------------------------------------------------
+# CNN (the paper's CIFAR-10 net: 2x [conv5x5 + maxpool + relu], 3x FC)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnConfig:
+    # Channel/FC widths sized for the 2-core CPU testbed (the paper's CNN
+    # is "two convolutional layers with maxpooling followed by 3 fully
+    # connected layers"; it does not pin the widths).
+    image: tuple[int, int, int] = (32, 32, 3)  # H, W, C (NHWC)
+    conv_channels: tuple[int, int] = (8, 16)
+    kernel: int = 5
+    fc_dims: tuple[int, int] = (256, 128)
+    n_classes: int = 10
+
+    @property
+    def flat_after_conv(self) -> int:
+        h, w, _ = self.image
+        return (h // 4) * (w // 4) * self.conv_channels[1]
+
+    @property
+    def input_dim(self) -> int:
+        h, w, c = self.image
+        return h * w * c
+
+
+def cnn_specs(cfg: CnnConfig):
+    k = cfg.kernel
+    c0 = cfg.image[2]
+    c1, c2 = cfg.conv_channels
+    f0 = cfg.flat_after_conv
+    f1, f2 = cfg.fc_dims
+    return [
+        ("conv1.w", (k, k, c0, c1)),
+        ("conv1.b", (c1,)),
+        ("conv2.w", (k, k, c1, c2)),
+        ("conv2.b", (c2,)),
+        ("fc1.w", (f0, f1)),
+        ("fc1.b", (f1,)),
+        ("fc2.w", (f1, f2)),
+        ("fc2.b", (f2,)),
+        ("fc3.w", (f2, cfg.n_classes)),
+        ("fc3.b", (cfg.n_classes,)),
+    ]
+
+
+def _maxpool2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _conv(x, w, b):
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b[None, None, None, :]
+
+
+def cnn_forward(flat, x_flat, cfg: CnnConfig):
+    p = unflatten(flat, cnn_specs(cfg))
+    h_img, w_img, c = cfg.image
+    x = x_flat.reshape((-1, h_img, w_img, c))
+    x = jnp.maximum(_maxpool2(_conv(x, p[0], p[1])), 0.0)
+    x = jnp.maximum(_maxpool2(_conv(x, p[2], p[3])), 0.0)
+    x = x.reshape((x.shape[0], cfg.flat_after_conv))
+    x = fused_linear(x, p[4], p[5], "relu")
+    x = fused_linear(x, p[6], p[7], "relu")
+    return fused_linear(x, p[8], p[9], "none")
+
+
+def cnn_loss(flat, x, y, cfg: CnnConfig):
+    logits = cnn_forward(flat, x, cfg)
+    loss_sum, correct, n = _softmax_xent(logits, y, cfg.n_classes)
+    return loss_sum / jnp.maximum(n, 1.0), (correct, n)
+
+
+def cnn_grad(flat, x, y, cfg: CnnConfig):
+    (loss, (correct, n)), g = jax.value_and_grad(cnn_loss, has_aux=True)(flat, x, y, cfg)
+    return g, loss, correct, n
+
+
+def cnn_init(seed, cfg: CnnConfig):
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shape in cnn_specs(cfg):
+        key, k = jax.random.split(key)
+        if name.endswith(".b"):
+            parts.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            scale = jnp.sqrt(2.0 / fan_in)
+            parts.append(jax.random.normal(k, shape, jnp.float32) * scale)
+    return flatten(parts)
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only transformer LM (end-to-end validation workload)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TfmConfig:
+    vocab: int = 4096
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 1024
+    seq_len: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def tfm_specs(cfg: TfmConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    specs = [
+        ("tok_emb", (cfg.vocab, d)),
+        ("pos_emb", (cfg.seq_len, d)),
+    ]
+    for i in range(cfg.n_layers):
+        specs += [
+            (f"l{i}.ln1.g", (d,)), (f"l{i}.ln1.b", (d,)),
+            (f"l{i}.qkv.w", (d, 3 * d)), (f"l{i}.qkv.b", (3 * d,)),
+            (f"l{i}.proj.w", (d, d)), (f"l{i}.proj.b", (d,)),
+            (f"l{i}.ln2.g", (d,)), (f"l{i}.ln2.b", (d,)),
+            (f"l{i}.ff1.w", (d, f)), (f"l{i}.ff1.b", (f,)),
+            (f"l{i}.ff2.w", (f, d)), (f"l{i}.ff2.b", (d,)),
+        ]
+    specs += [("ln_f.g", (d,)), ("ln_f.b", (d,))]
+    return specs
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * lax.rsqrt(var + eps) * g + b
+
+
+def _attention(x2d, bt_shape, qkv_w, qkv_b, proj_w, proj_b, cfg: TfmConfig):
+    b, t = bt_shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    qkv = fused_linear(x2d, qkv_w, qkv_b, "none")  # (B*T, 3d) via Pallas
+    qkv = qkv.reshape(b, t, 3, h, hd)
+    q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]  # (B, T, H, hd)
+    scores = jnp.einsum("bihd,bjhd->bhij", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), jnp.float32))
+    scores = jnp.where(mask[None, None] > 0, scores, -1e30)
+    att = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhij,bjhd->bihd", att, v).reshape(b * t, h * hd)
+    return fused_linear(out, proj_w, proj_b, "none")
+
+
+def tfm_forward(flat, tokens, cfg: TfmConfig):
+    specs = tfm_specs(cfg)
+    p = dict(zip([n for n, _ in specs], unflatten(flat, specs)))
+    b, t = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][None, :t]
+    x2d = x.reshape(b * t, cfg.d_model)
+    for i in range(cfg.n_layers):
+        pre = _ln(x2d, p[f"l{i}.ln1.g"], p[f"l{i}.ln1.b"])
+        x2d = x2d + _attention(
+            pre, (b, t), p[f"l{i}.qkv.w"], p[f"l{i}.qkv.b"],
+            p[f"l{i}.proj.w"], p[f"l{i}.proj.b"], cfg,
+        )
+        pre = _ln(x2d, p[f"l{i}.ln2.g"], p[f"l{i}.ln2.b"])
+        h = fused_linear(pre, p[f"l{i}.ff1.w"], p[f"l{i}.ff1.b"], "gelu")
+        x2d = x2d + fused_linear(h, p[f"l{i}.ff2.w"], p[f"l{i}.ff2.b"], "none")
+    x2d = _ln(x2d, p["ln_f.g"], p["ln_f.b"])
+    logits = jnp.dot(x2d, p["tok_emb"].T)  # tied embedding
+    return logits.reshape(b, t, cfg.vocab)
+
+
+def tfm_loss(flat, tokens, cfg: TfmConfig):
+    logits = tfm_forward(flat, tokens, cfg)
+    b, t, v = logits.shape
+    pred = logits[:, :-1].reshape(b * (t - 1), v)
+    tgt = tokens[:, 1:].reshape(b * (t - 1))
+    loss_sum, correct, n = _softmax_xent(pred, tgt, v)
+    return loss_sum / jnp.maximum(n, 1.0), (correct, n)
+
+
+def tfm_grad(flat, tokens, cfg: TfmConfig):
+    (loss, (correct, n)), g = jax.value_and_grad(tfm_loss, has_aux=True)(flat, tokens, cfg)
+    return g, loss, correct, n
+
+
+def tfm_init(seed, cfg: TfmConfig):
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shape in tfm_specs(cfg):
+        key, k = jax.random.split(key)
+        if name.endswith((".b", "ln1.g", "ln2.g", "ln_f.g")) or name.endswith(".g"):
+            if name.endswith(".g"):
+                parts.append(jnp.ones(shape, jnp.float32))
+            else:
+                parts.append(jnp.zeros(shape, jnp.float32))
+        elif name in ("tok_emb", "pos_emb"):
+            parts.append(jax.random.normal(k, shape, jnp.float32) * 0.02)
+        else:
+            scale = jnp.sqrt(1.0 / shape[0])
+            parts.append(jax.random.normal(k, shape, jnp.float32) * scale)
+    return flatten(parts)

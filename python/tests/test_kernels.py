@@ -1,0 +1,178 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp/numpy oracles.
+
+Hypothesis sweeps shapes and value ranges; assert_allclose at f32 tolerance.
+This is the core correctness signal for everything the rust runtime executes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fused_linear, matmul, scd_block
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.integers(min_value=1, max_value=200)
+small_dims = st.integers(min_value=1, max_value=48)
+
+
+def rng_arr(rng, shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rng_arr(rng, (m, k)), rng_arr(rng, (k, n))
+    got = matmul(jnp.asarray(x), jnp.asarray(w))
+    want = ref.ref_matmul(x, w)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_large_blocks():
+    # Exercise multiple 128x128 grid tiles including ragged edges.
+    rng = np.random.default_rng(0)
+    x, w = rng_arr(rng, (300, 70)), rng_arr(rng, (70, 257))
+    got = matmul(jnp.asarray(x), jnp.asarray(w))
+    assert_allclose(np.asarray(got), np.asarray(ref.ref_matmul(x, w)),
+                    rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused_linear forward + backward
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=small_dims, n=small_dims,
+       act=st.sampled_from(["none", "relu", "gelu"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_fused_linear_forward(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rng_arr(rng, (m, k)), rng_arr(rng, (k, n)), rng_arr(rng, (n,))
+    got = fused_linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), act)
+    want = ref.ref_fused_linear(x, w, b, act)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=small_dims, k=small_dims, n=small_dims,
+       act=st.sampled_from(["none", "relu", "gelu"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_fused_linear_grad(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rng_arr(rng, (m, k)), rng_arr(rng, (k, n)), rng_arr(rng, (n,))
+
+    def loss_pallas(x, w, b):
+        return jnp.sum(fused_linear(x, w, b, act) ** 2)
+
+    def loss_ref(x, w, b):
+        return jnp.sum(ref.ref_fused_linear(x, w, b, act) ** 2)
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    for a, bb in zip(gp, gr):
+        assert_allclose(np.asarray(a), np.asarray(bb), rtol=2e-4, atol=2e-4)
+
+
+def test_fused_linear_relu_clamps():
+    x = jnp.asarray([[-100.0, 0.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros((2,), jnp.float32)
+    y = fused_linear(x, w, b, "relu")
+    assert float(y[0, 0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# SCD block
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.integers(2, 64), f=st.integers(1, 32), h=st.integers(1, 128),
+       sigma=st.floats(1.0, 64.0), seed=st.integers(0, 2**31 - 1))
+def test_scd_block_matches_ref(s, f, h, sigma, seed):
+    rng = np.random.default_rng(seed)
+    x = rng_arr(rng, (s, f))
+    y = rng.choice([-1.0, 1.0], size=s).astype(np.float32)
+    order = rng.integers(0, s, size=h).astype(np.int32)
+    alpha = rng.uniform(0, 1, size=s).astype(np.float32)
+    v = rng_arr(rng, (f,), scale=0.1)
+    lam_n = np.float32(0.01 * 1000)
+
+    got_a, got_dv = scd_block(
+        jnp.asarray(x), jnp.asarray(y), jnp.asarray(order),
+        jnp.asarray(alpha), jnp.asarray(v), lam_n, np.float32(sigma))
+    want_a, want_dv = ref.ref_scd_block(x, y, order, alpha, v, lam_n, sigma)
+    assert_allclose(np.asarray(got_a), want_a, rtol=1e-4, atol=1e-5)
+    assert_allclose(np.asarray(got_dv), want_dv, rtol=1e-4, atol=1e-6)
+
+
+def test_scd_alpha_stays_in_box():
+    rng = np.random.default_rng(1)
+    s, f = 32, 8
+    x = rng_arr(rng, (s, f), scale=10.0)
+    y = rng.choice([-1.0, 1.0], size=s).astype(np.float32)
+    order = np.tile(np.arange(s, dtype=np.int32), 4)
+    alpha = np.zeros(s, np.float32)
+    v = np.zeros(f, np.float32)
+    a, _ = scd_block(jnp.asarray(x), jnp.asarray(y), jnp.asarray(order),
+                     jnp.asarray(alpha), jnp.asarray(v),
+                     np.float32(0.01 * s), np.float32(4.0))
+    a = np.asarray(a)
+    assert np.all(a >= 0.0) and np.all(a <= 1.0)
+
+
+def test_scd_padding_rows_are_noop():
+    # Zero-norm rows (chunk padding) must not change alpha or dv.
+    s, f = 8, 4
+    x = np.zeros((s, f), np.float32)
+    x[:4] = np.random.default_rng(2).standard_normal((4, f)).astype(np.float32)
+    y = np.array([1, -1, 1, -1, 0, 0, 0, 0], np.float32)
+    order = np.arange(s, dtype=np.int32)
+    alpha = np.zeros(s, np.float32)
+    v = np.zeros(f, np.float32)
+    a, dv = scd_block(jnp.asarray(x), jnp.asarray(y), jnp.asarray(order),
+                      jnp.asarray(alpha), jnp.asarray(v),
+                      np.float32(8 * 0.01), np.float32(1.0))
+    a = np.asarray(a)
+    assert np.all(a[4:] == 0.0)
+    want_a, want_dv = ref.ref_scd_block(x, y, order, alpha, v, 8 * 0.01, 1.0)
+    assert_allclose(a, want_a, rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(dv), want_dv, rtol=1e-5, atol=1e-7)
+
+
+def test_scd_converges_on_separable_data():
+    # SDCA on linearly separable data should drive the duality gap near zero.
+    rng = np.random.default_rng(3)
+    s, f = 128, 8
+    w_true = rng.standard_normal(f).astype(np.float32)
+    x = rng.standard_normal((s, f)).astype(np.float32)
+    y = np.sign(x @ w_true).astype(np.float32)
+    y[y == 0] = 1.0
+    lam = 0.01
+    alpha = np.zeros(s, np.float32)
+    v = np.zeros(f, np.float32)
+    order = np.arange(s, dtype=np.int32)
+    for _ in range(30):
+        rng.shuffle(order)
+        alpha, dv = scd_block(jnp.asarray(x), jnp.asarray(y), jnp.asarray(order),
+                              jnp.asarray(alpha), jnp.asarray(v),
+                              np.float32(lam * s), np.float32(1.0))
+        alpha = np.asarray(alpha)
+        v = v + np.asarray(dv)
+    gap = ref.ref_duality_gap(x, y, alpha, v, lam)
+    assert gap < 0.05, gap

@@ -1,0 +1,184 @@
+"""L2 model tests: shapes, gradient sanity, training-progress smoke tests."""
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# flat param plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_param_layout_offsets_contiguous():
+    specs = [("a", (3, 4)), ("b", (5,)), ("c", (2, 2, 2))]
+    layout, total = M.param_layout(specs)
+    assert total == 12 + 5 + 8
+    off = 0
+    for entry in layout:
+        assert entry["offset"] == off
+        off += entry["size"]
+
+
+def test_flatten_unflatten_roundtrip():
+    specs = [("a", (3, 4)), ("b", (5,))]
+    rng = np.random.default_rng(0)
+    params = [jnp.asarray(rng.standard_normal(s).astype(np.float32))
+              for _, s in specs]
+    flat = M.flatten(params)
+    back = M.unflatten(flat, specs)
+    for p, q in zip(params, back):
+        assert_allclose(np.asarray(p), np.asarray(q))
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def _mlp_data(rng, n, dims=M.MLP_DIMS):
+    x = rng.standard_normal((n, dims[0])).astype(np.float32)
+    y = rng.integers(0, dims[-1], size=n).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def test_mlp_shapes_and_finite():
+    rng = np.random.default_rng(0)
+    flat = M.mlp_init(0)
+    _, total = M.param_layout(M.mlp_specs())
+    assert flat.shape == (total,)
+    x, y = _mlp_data(rng, 8)
+    g, loss, correct, n = M.mlp_grad(flat, x, y)
+    assert g.shape == flat.shape
+    assert np.isfinite(float(loss))
+    assert 0 <= float(correct) <= 8 and float(n) == 8.0
+
+
+def test_mlp_loss_decreases_under_sgd():
+    rng = np.random.default_rng(1)
+    flat = M.mlp_init(1)
+    x, y = _mlp_data(rng, 8)
+    l0 = None
+    for _ in range(30):
+        g, loss, _, _ = M.mlp_grad(flat, x, y)
+        if l0 is None:
+            l0 = float(loss)
+        flat = flat - 0.05 * g
+    assert float(loss) < l0 * 0.5
+
+
+def test_mlp_padding_labels_masked():
+    rng = np.random.default_rng(2)
+    flat = M.mlp_init(2)
+    x, y = _mlp_data(rng, 8)
+    y_pad = y.at[4:].set(-1)
+    _, loss_pad, _, n = M.mlp_grad(flat, x, y_pad)
+    assert float(n) == 4.0
+    # masked loss must only depend on the first 4 rows
+    x2 = x.at[4:].set(0.0)
+    _, loss_pad2, _, _ = M.mlp_grad(flat, x2, y_pad)
+    assert_allclose(float(loss_pad), float(loss_pad2), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# CNN
+# ---------------------------------------------------------------------------
+
+
+def test_cnn_shapes_and_grad():
+    cfg = M.CnnConfig()
+    rng = np.random.default_rng(3)
+    flat = M.cnn_init(3, cfg)
+    x = jnp.asarray(rng.standard_normal((4, cfg.input_dim)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=4).astype(np.int32))
+    logits = M.cnn_forward(flat, x, cfg)
+    assert logits.shape == (4, 10)
+    g, loss, correct, n = M.cnn_grad(flat, x, y, cfg)
+    assert g.shape == flat.shape
+    assert np.isfinite(float(loss)) and float(n) == 4.0
+    assert float(jnp.sum(jnp.abs(g))) > 0.0
+
+
+def test_cnn_learns_templates():
+    # Two constant-template classes: should be separable within a few steps.
+    cfg = M.CnnConfig()
+    flat = M.cnn_init(4, cfg)
+    x0 = np.full((4, cfg.input_dim), 0.5, np.float32)
+    x1 = np.full((4, cfg.input_dim), -0.5, np.float32)
+    x = jnp.asarray(np.concatenate([x0, x1]))
+    y = jnp.asarray(np.array([0] * 4 + [1] * 4, np.int32))
+    for _ in range(15):
+        g, loss, correct, _ = M.cnn_grad(flat, x, y, cfg)
+        flat = flat - 0.05 * g
+    assert float(correct) == 8.0
+
+
+# ---------------------------------------------------------------------------
+# Transformer
+# ---------------------------------------------------------------------------
+
+TFM_TINY = M.TfmConfig(vocab=64, d_model=32, n_layers=2, n_heads=4,
+                       d_ff=64, seq_len=16)
+
+
+def test_tfm_shapes():
+    flat = M.tfm_init(0, TFM_TINY)
+    _, total = M.param_layout(M.tfm_specs(TFM_TINY))
+    assert flat.shape == (total,)
+    toks = jnp.asarray(np.random.default_rng(0).integers(
+        0, TFM_TINY.vocab, size=(2, TFM_TINY.seq_len)).astype(np.int32))
+    logits = M.tfm_forward(flat, toks, TFM_TINY)
+    assert logits.shape == (2, TFM_TINY.seq_len, TFM_TINY.vocab)
+
+
+def test_tfm_causality():
+    # Changing a future token must not change past logits.
+    flat = M.tfm_init(1, TFM_TINY)
+    rng = np.random.default_rng(1)
+    toks = rng.integers(0, TFM_TINY.vocab, size=(1, TFM_TINY.seq_len)).astype(np.int32)
+    toks2 = toks.copy()
+    toks2[0, -1] = (toks2[0, -1] + 1) % TFM_TINY.vocab
+    l1 = M.tfm_forward(flat, jnp.asarray(toks), TFM_TINY)
+    l2 = M.tfm_forward(flat, jnp.asarray(toks2), TFM_TINY)
+    assert_allclose(np.asarray(l1[0, :-1]), np.asarray(l2[0, :-1]),
+                    rtol=1e-4, atol=1e-5)
+
+
+def test_tfm_memorizes_sequence():
+    flat = M.tfm_init(2, TFM_TINY)
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, TFM_TINY.vocab,
+                                    size=(2, TFM_TINY.seq_len)).astype(np.int32))
+    losses = []
+    for _ in range(40):
+        g, loss, _, _ = M.tfm_grad(flat, toks, TFM_TINY)
+        losses.append(float(loss))
+        flat = flat - 0.5 * g
+    assert losses[-1] < losses[0] * 0.5, (losses[0], losses[-1])
+
+
+# ---------------------------------------------------------------------------
+# linear_eval (duality gap pieces)
+# ---------------------------------------------------------------------------
+
+
+def test_linear_eval_masks_padding():
+    rng = np.random.default_rng(5)
+    x = rng.standard_normal((8, 4)).astype(np.float32)
+    y = np.array([1, -1, 1, -1, 0, 0, 0, 0], np.float32)
+    alpha = rng.uniform(0, 1, 8).astype(np.float32)
+    w = rng.standard_normal(4).astype(np.float32)
+    sh, sa, corr, n = M.linear_eval(jnp.asarray(x), jnp.asarray(y),
+                                    jnp.asarray(alpha), jnp.asarray(w))
+    assert float(n) == 4.0
+    margins = y[:4] * (x[:4] @ w)
+    assert_allclose(float(sh), np.maximum(0, 1 - margins).sum(), rtol=1e-5)
+    assert_allclose(float(sa), alpha[:4].sum(), rtol=1e-5)
+    assert float(corr) == float((margins > 0).sum())

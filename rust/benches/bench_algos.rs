@@ -1,0 +1,78 @@
+//! Benchmarks: the native compute hot paths (solver inner loops).
+//!
+//! The §Perf log in EXPERIMENTS.md derives per-sample throughput from
+//! these (e.g. scd_dense pass time / 4096 samples).
+
+use std::time::Duration;
+
+use chicle::algos::nn::linear::{fused_linear_fwd, Act};
+use chicle::algos::nn::NativeModel;
+use chicle::algos::svm::{scd_pass_dense, scd_pass_sparse};
+use chicle::data::{synth, FeatureMatrix};
+use chicle::util::bench::Bencher;
+use chicle::util::Rng;
+
+fn main() {
+    let mut b = Bencher::new(Duration::from_secs(2));
+    let mut rng = Rng::seed_from_u64(0);
+
+    // --- SCD (CoCoA inner loop) ---
+    let (s, dim) = (4096usize, 28usize);
+    let x: Vec<f32> = (0..s * dim).map(|_| rng.normal_f32()).collect();
+    let y: Vec<f32> = (0..s).map(|_| if rng.bool(0.5) { 1.0 } else { -1.0 }).collect();
+    let order: Vec<usize> = (0..s).collect();
+    let lam_n = 0.01 * s as f32;
+    b.bench("scd_dense/4096x28_pass", || {
+        let mut alpha = vec![0.0f32; s];
+        let mut v = vec![0.0f32; dim];
+        let mut dv = vec![0.0f32; dim];
+        scd_pass_dense(&x, dim, &y, &order, &mut alpha, &mut v, &mut dv, lam_n, 16.0);
+        v[0]
+    });
+
+    let criteo = synth::criteo_like_with(4096, 50_000, 30, 16, 1);
+    let (rows, sdim, ys) = match (&criteo.features, &criteo.labels) {
+        (FeatureMatrix::Sparse { rows, dim }, chicle::data::Labels::Binary(yv)) => {
+            (rows.clone(), *dim, yv.clone())
+        }
+        _ => unreachable!(),
+    };
+    b.bench("scd_sparse/4096x50k_nnz30_pass", || {
+        let mut alpha = vec![0.0f32; rows.len()];
+        let mut v = vec![0.0f32; sdim];
+        let mut dv = vec![0.0f32; sdim];
+        scd_pass_sparse(&rows, &ys, &order, &mut alpha, &mut v, &mut dv, lam_n, 16.0);
+        v[0]
+    });
+
+    // --- fused linear (the Pallas kernel's native mirror) ---
+    let (m, k, n) = (64usize, 784usize, 256usize);
+    let xx: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+    let w: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+    let bias: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    b.bench("fused_linear/64x784x256_relu", || {
+        fused_linear_fwd(&xx, &w, &bias, m, k, n, Act::Relu).0[0]
+    });
+
+    // --- NN grad steps (lSGD inner loop) ---
+    let mlp = NativeModel::mlp_default();
+    let mlp_params = mlp.init(1);
+    let bx: Vec<f32> = (0..8 * 784).map(|_| rng.normal_f32()).collect();
+    let by: Vec<i32> = (0..8).map(|_| rng.below(10) as i32).collect();
+    b.bench("mlp_grad/L8", || mlp.grad(&mlp_params, &bx, &by).1);
+
+    let cnn = NativeModel::cnn_default();
+    let cnn_params = cnn.init(2);
+    let cx: Vec<f32> = (0..8 * 3072).map(|_| rng.normal_f32()).collect();
+    let cy: Vec<i32> = (0..8).map(|_| rng.below(10) as i32).collect();
+    let mut b_slow = Bencher::new(Duration::from_secs(3)).with_iters(5, 1_000);
+    b_slow.bench("cnn_grad/L8", || cnn.grad(&cnn_params, &cx, &cy).1);
+
+    // Eval paths.
+    let ex: Vec<f32> = (0..256 * 784).map(|_| rng.normal_f32()).collect();
+    let ey: Vec<i32> = (0..256).map(|_| rng.below(10) as i32).collect();
+    b.bench("mlp_eval/B256", || mlp.eval(&mlp_params, &ex, &ey).0);
+
+    b.write_tsv("results/bench_algos.tsv").unwrap();
+    b_slow.write_tsv("results/bench_algos_cnn.tsv").unwrap();
+}

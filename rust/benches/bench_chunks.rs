@@ -1,0 +1,48 @@
+//! Benchmarks: chunk substrate — chunking, store ops, transfer model.
+
+use std::time::Duration;
+
+use chicle::chunks::chunker::{make_chunks, make_chunks_shuffled};
+use chicle::chunks::{ChunkStore, NetworkModel};
+use chicle::data::synth;
+use chicle::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new(Duration::from_secs(2));
+    let higgs = synth::higgs_like(20_000, 1);
+    let criteo = synth::criteo_like_with(20_000, 50_000, 30, 16, 2);
+
+    b.bench("make_chunks/higgs_20k_64KiB", || make_chunks(&higgs, 64 * 1024).len());
+    b.bench("make_chunks/criteo_20k_64KiB", || make_chunks(&criteo, 64 * 1024).len());
+    b.bench("make_chunks_shuffled/higgs_20k", || {
+        make_chunks_shuffled(&higgs, 64 * 1024, 7).len()
+    });
+
+    let chunks = make_chunks(&higgs, 16 * 1024);
+    println!("  ({} chunks of ~16KiB)", chunks.len());
+    b.bench("store/add_remove_100", || {
+        let mut store = ChunkStore::new();
+        for c in chunks.iter().take(100) {
+            store.add(c.clone());
+        }
+        for c in chunks.iter().take(100) {
+            store.remove(c.id);
+        }
+        store.n_chunks()
+    });
+    let store = ChunkStore::from_chunks(chunks.clone());
+    b.bench("store/locate_mid", || store.locate(store.n_samples() / 2));
+    b.bench("store/n_samples", || store.n_samples());
+
+    let net = NetworkModel::default();
+    b.bench("net/transfer_cost_1MiB", || net.transfer_cost(1 << 20));
+    let sizes: Vec<usize> = chunks.iter().map(|c| c.size_bytes()).collect();
+    b.bench("net/bulk_cost_all_chunks", || net.bulk_cost(&sizes));
+
+    // The cost the paper quotes: ~16 MiB model exchange per task (§4.3).
+    b.bench("net/model_exchange_16MiB_k16", || {
+        net.model_exchange_cost(16 << 20, 16)
+    });
+
+    b.write_tsv("results/bench_chunks.tsv").unwrap();
+}

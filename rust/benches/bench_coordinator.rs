@@ -1,0 +1,94 @@
+//! Benchmarks: coordinator-side costs — weighted merge, policy decisions,
+//! chunk redistribution, projection model. These must stay off the
+//! critical path (target: ≪ one solver iteration).
+
+use std::time::Duration;
+
+use chicle::algos::{Algorithm, Backend, CocoaAlgo, LocalUpdate};
+use chicle::chunks::chunker::make_chunks;
+use chicle::chunks::NetworkModel;
+use chicle::cluster::NodeSpec;
+use chicle::config::CocoaConfig;
+use chicle::coordinator::policy::{
+    redistribute_for_new_tasks, Policy, PolicyCtx, RebalancePolicy,
+};
+use chicle::coordinator::TaskState;
+use chicle::data::synth;
+use chicle::sim::{makespan, microtask_iteration_time};
+use chicle::util::bench::Bencher;
+use chicle::util::Rng;
+
+fn tasks_with_chunks(k: usize, n_samples: usize) -> Vec<TaskState> {
+    let ds = synth::higgs_like(n_samples, 1);
+    let chunks = make_chunks(&ds, 16 * 1024);
+    let mut tasks: Vec<TaskState> = (0..k)
+        .map(|i| TaskState::new(NodeSpec::new(i as u32, 1.0), 3))
+        .collect();
+    for (i, c) in chunks.into_iter().enumerate() {
+        tasks[i % k].store.add(c);
+    }
+    for t in &mut tasks {
+        t.record_time(1e-6);
+    }
+    tasks
+}
+
+fn main() {
+    let mut b = Bencher::new(Duration::from_secs(2));
+
+    // --- weighted merge of K updates over a large model (CNN size) ---
+    let model_len = 876_714usize;
+    let algo = CocoaAlgo::new(CocoaConfig::default(), Backend::native_cocoa(), 16_000, model_len);
+    let updates: Vec<LocalUpdate> = (0..16)
+        .map(|i| LocalUpdate {
+            delta: vec![i as f32 * 1e-6; model_len],
+            samples: 1000,
+            loss_sum: 0.0,
+        })
+        .collect();
+    let mut model = vec![0.0f32; model_len];
+    b.bench("merge/16_updates_877k_params", || {
+        algo.merge(&mut model, &updates, 16);
+        model[0]
+    });
+
+    // --- rebalance decision over 16 tasks ---
+    b.bench("rebalance/decision_16_tasks", || {
+        let mut tasks = tasks_with_chunks(16, 16_000);
+        // Make task 0 look slow so there is a decision to make.
+        tasks[0].clear_history();
+        tasks[0].record_time(3e-6);
+        let net = NetworkModel::default();
+        let mut rng = Rng::seed_from_u64(0);
+        let mut p = RebalancePolicy::new(4);
+        let mut ctx = PolicyCtx {
+            tasks: &mut tasks,
+            iter: 1,
+            net: &net,
+            moved_bytes: 0,
+            moved_chunks: 0,
+            rng: &mut rng,
+        };
+        p.apply(&mut ctx).unwrap();
+        ctx.moved_chunks
+    });
+
+    // --- scale-out redistribution 8 → 16 tasks ---
+    b.bench("elastic/redistribute_8_to_16", || {
+        let mut tasks = tasks_with_chunks(8, 16_000);
+        for i in 8..16 {
+            tasks.push(TaskState::new(NodeSpec::new(i as u32, 1.0), 3));
+        }
+        let mut rng = Rng::seed_from_u64(1);
+        redistribute_for_new_tasks(&mut tasks, &mut rng)
+    });
+
+    // --- projection model ---
+    let hetero = NodeSpec::heterogeneous(8, 8, 1.5);
+    b.bench("projection/makespan_k64_16nodes", || makespan(64, 0.25, &hetero));
+    b.bench("projection/micro_iter_time_k64", || {
+        microtask_iteration_time(64, 16.0, &hetero)
+    });
+
+    b.write_tsv("results/bench_coordinator.tsv").unwrap();
+}

@@ -1,0 +1,82 @@
+//! Benchmarks: end-to-end training iterations through the full
+//! coordinator stack — one entry per paper-evaluation configuration
+//! family (CoCoA rigid/elastic/heterogeneous, lSGD, micro-task
+//! emulation). These are the numbers the §Perf optimization loop tracks.
+
+use std::time::Duration;
+
+use chicle::config::{AlgoConfig, ElasticSpec, ModelKind, SessionConfig};
+use chicle::coordinator::TrainingSession;
+use chicle::data::synth;
+use chicle::util::bench::Bencher;
+
+fn cocoa_iter_bench(name: &str, cfg_fn: impl Fn() -> SessionConfig, b: &mut Bencher) {
+    // Benchmark = construct once, then time per-iteration stepping.
+    let ds = synth::higgs_like(16_000, 1);
+    let mut session = TrainingSession::new(cfg_fn(), ds).expect(name);
+    let mut iter = 0usize;
+    b.bench(name, || {
+        session.step(iter).unwrap();
+        iter += 1;
+        iter
+    });
+}
+
+fn main() {
+    let mut b = Bencher::new(Duration::from_secs(3)).with_iters(5, 500);
+
+    // Table/Fig 4 family: rigid & elastic CoCoA.
+    cocoa_iter_bench(
+        "e2e/cocoa_rigid_16tasks_iter",
+        || {
+            let mut c = SessionConfig::cocoa("bench", 16);
+            c.chunk_bytes = 24 * 1024;
+            c.max_iters = usize::MAX;
+            c
+        },
+        &mut b,
+    );
+
+    // Fig 5 family: heterogeneous + rebalance.
+    cocoa_iter_bench(
+        "e2e/cocoa_hetero_rebalance_iter",
+        || {
+            let mut c = SessionConfig::cocoa("bench", 16);
+            c.chunk_bytes = 24 * 1024;
+            c.elastic = ElasticSpec::Heterogeneous { fast: 8, slow: 8, factor: 1.5 };
+            c.policies.rebalance = true;
+            c
+        },
+        &mut b,
+    );
+
+    // Micro-task emulation (K=64) — scheduling-side overhead.
+    cocoa_iter_bench(
+        "e2e/cocoa_micro64_iter",
+        || {
+            let mut c = SessionConfig::cocoa("bench", 16).with_microtasks(64);
+            c.chunk_bytes = 24 * 1024;
+            c
+        },
+        &mut b,
+    );
+
+    // Fig 7 family: lSGD MLP iteration (native backend).
+    {
+        let ds = synth::fmnist_like(4_000, 2);
+        let mut cfg = SessionConfig::lsgd("bench", ModelKind::Mlp, 8);
+        cfg.chunk_bytes = 48 * 1024;
+        if let AlgoConfig::Lsgd(l) = &mut cfg.algo {
+            l.eval_every = usize::MAX; // time pure training iterations
+        }
+        let mut session = TrainingSession::new(cfg, ds).unwrap();
+        let mut iter = 1usize; // skip iter 0 (iter % eval_every == 0)
+        b.bench("e2e/lsgd_mlp_8tasks_iter", || {
+            session.step(iter).unwrap();
+            iter += 1;
+            iter
+        });
+    }
+
+    b.write_tsv("results/bench_e2e.tsv").unwrap();
+}

@@ -1,0 +1,119 @@
+//! Benchmarks: the PJRT runtime hot path — HLO execution of the AOT
+//! artifacts, including host-tensor marshalling. Skips (with a notice)
+//! when artifacts are absent.
+
+use std::path::Path;
+use std::time::Duration;
+
+use chicle::runtime::{HloService, HostTensor};
+use chicle::util::bench::Bencher;
+use chicle::util::Rng;
+
+fn main() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        println!("bench_runtime: no artifacts (run `make artifacts`); skipping");
+        return;
+    }
+    let service = HloService::spawn(Path::new("artifacts")).expect("spawn service");
+    let mut rng = Rng::seed_from_u64(0);
+    let mut b = Bencher::new(Duration::from_secs(3)).with_iters(5, 10_000);
+
+    // --- SCD chunk kernel (S=256, F=28) ---
+    service.prepare("scd_chunk_s256_f28").unwrap();
+    let x: Vec<f32> = (0..256 * 28).map(|_| rng.normal_f32()).collect();
+    let y: Vec<f32> = (0..256).map(|_| if rng.bool(0.5) { 1.0 } else { -1.0 }).collect();
+    let order: Vec<i32> = (0..256).collect();
+    let alpha = vec![0.0f32; 256];
+    let v = vec![0.0f32; 28];
+    b.bench("hlo/scd_chunk_256x28", || {
+        service
+            .execute(
+                "scd_chunk_s256_f28",
+                vec![
+                    HostTensor::mat_f32(x.clone(), 256, 28),
+                    HostTensor::vec_f32(y.clone()),
+                    HostTensor::vec_i32(order.clone()),
+                    HostTensor::vec_f32(alpha.clone()),
+                    HostTensor::vec_f32(v.clone()),
+                    HostTensor::scalar_f32(0.01 * 256.0),
+                    HostTensor::scalar_f32(16.0),
+                ],
+            )
+            .unwrap()
+            .len()
+    });
+
+    // --- linear eval kernel ---
+    service.prepare("linear_eval_s256_f28").unwrap();
+    b.bench("hlo/linear_eval_256x28", || {
+        service
+            .execute(
+                "linear_eval_s256_f28",
+                vec![
+                    HostTensor::mat_f32(x.clone(), 256, 28),
+                    HostTensor::vec_f32(y.clone()),
+                    HostTensor::vec_f32(alpha.clone()),
+                    HostTensor::vec_f32(v.clone()),
+                ],
+            )
+            .unwrap()
+            .len()
+    });
+
+    // --- MLP grad (L=8) — the lSGD inner step ---
+    service.prepare("mlp_grad_l8").unwrap();
+    let params = service
+        .execute("mlp_init", vec![HostTensor::vec_i32(vec![0])])
+        .unwrap()
+        .remove(0)
+        .into_f32()
+        .unwrap();
+    let bx: Vec<f32> = (0..8 * 784).map(|_| rng.normal_f32()).collect();
+    let by: Vec<i32> = (0..8).map(|_| rng.below(10) as i32).collect();
+    b.bench("hlo/mlp_grad_L8", || {
+        service
+            .execute(
+                "mlp_grad_l8",
+                vec![
+                    HostTensor::vec_f32(params.clone()),
+                    HostTensor::mat_f32(bx.clone(), 8, 784),
+                    HostTensor::vec_i32(by.clone()),
+                ],
+            )
+            .unwrap()
+            .len()
+    });
+
+    // --- CNN grad (L=8) ---
+    service.prepare("cnn_grad_l8").unwrap();
+    let cparams = service
+        .execute("cnn_init", vec![HostTensor::vec_i32(vec![0])])
+        .unwrap()
+        .remove(0)
+        .into_f32()
+        .unwrap();
+    let cx: Vec<f32> = (0..8 * 3072).map(|_| rng.normal_f32()).collect();
+    let mut b_slow = Bencher::new(Duration::from_secs(4)).with_iters(3, 1000);
+    b_slow.bench("hlo/cnn_grad_L8", || {
+        service
+            .execute(
+                "cnn_grad_l8",
+                vec![
+                    HostTensor::vec_f32(cparams.clone()),
+                    HostTensor::mat_f32(cx.clone(), 8, 3072),
+                    HostTensor::vec_i32(by.clone()),
+                ],
+            )
+            .unwrap()
+            .len()
+    });
+
+    // --- marshalling overhead: a no-math round trip is not available, so
+    // measure tensor construction alone (the host-side share).
+    b.bench("marshal/build_877k_param_tensor", || {
+        HostTensor::vec_f32(cparams.clone()).element_count()
+    });
+
+    b.write_tsv("results/bench_runtime.tsv").unwrap();
+    b_slow.write_tsv("results/bench_runtime_cnn.tsv").unwrap();
+}

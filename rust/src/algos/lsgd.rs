@@ -1,0 +1,358 @@
+//! Synchronous local SGD (Lin et al. 2018; paper §2.2, §5.1).
+//!
+//! Per iteration each task runs H local steps of momentum SGD on
+//! mini-batches of L samples drawn from its local chunks, then ships the
+//! parameter delta. The driver acts as a synchronous parameter server and
+//! merges deltas weighted by samples processed (Stich 2018 — the paper's
+//! eq. 2 weighting). H = 1 degrades to mini-batch SGD, which is what the
+//! PyTorch baseline comparison uses (paper §A.1).
+//!
+//! Learning-rate scaling: α' = α·√K (paper §5.1 "according to best
+//! practice"). Local momentum state is task-local and reset at iteration
+//! boundaries (it cannot move with chunks, and tasks may appear/disappear
+//! under elasticity).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::chunks::{Chunk, Payload};
+use crate::config::LsgdConfig;
+use crate::metrics::Metric;
+use crate::util::Rng;
+
+use super::{Algorithm, Backend, LocalUpdate, ModelVec};
+
+/// Held-out test set for the convergence metric (paper: test accuracy).
+pub enum TestSet {
+    Classif { x: Vec<f32>, y: Vec<i32>, dim: usize },
+    Tokens { data: Vec<i32>, n_seqs: usize },
+}
+
+/// Local-SGD algorithm instance.
+pub struct LsgdAlgo {
+    cfg: LsgdConfig,
+    backend: Arc<Backend>,
+    param_count: usize,
+    input_dim: usize,
+    seq_len: usize,
+    is_lm: bool,
+    test: TestSet,
+    init_seed: u64,
+}
+
+impl LsgdAlgo {
+    /// Classification workload (MLP/CNN over dense-class chunks).
+    pub fn new_classif(
+        cfg: LsgdConfig,
+        backend: Backend,
+        input_dim: usize,
+        test_x: Vec<f32>,
+        test_y: Vec<i32>,
+        init_seed: u64,
+    ) -> Result<Self> {
+        if let Some(b) = backend.nn_grad_batch() {
+            if b != cfg.l {
+                bail!("HLO grad artifact batch {b} != configured L {}", cfg.l);
+            }
+        }
+        let param_count = backend.nn_param_count()?;
+        Ok(LsgdAlgo {
+            cfg,
+            backend: Arc::new(backend),
+            param_count,
+            input_dim,
+            seq_len: 0,
+            is_lm: false,
+            test: TestSet::Classif { x: test_x, y: test_y, dim: input_dim },
+            init_seed,
+        })
+    }
+
+    /// LM workload (transformer over token chunks; HLO backend only).
+    pub fn new_lm(
+        cfg: LsgdConfig,
+        backend: Backend,
+        seq_len: usize,
+        test_tokens: Vec<i32>,
+        init_seed: u64,
+    ) -> Result<Self> {
+        let param_count = backend.nn_param_count()?;
+        let n_seqs = test_tokens.len() / seq_len.max(1);
+        Ok(LsgdAlgo {
+            cfg,
+            backend: Arc::new(backend),
+            param_count,
+            input_dim: 0,
+            seq_len,
+            is_lm: true,
+            test: TestSet::Tokens { data: test_tokens, n_seqs },
+            init_seed,
+        })
+    }
+
+    pub fn config(&self) -> &LsgdConfig {
+        &self.cfg
+    }
+
+    /// Assemble one (x, y) mini-batch of `l` samples from local chunks.
+    fn sample_batch_classif(
+        &self,
+        chunks: &[Chunk],
+        rng: &mut Rng,
+        l: usize,
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        let total: usize = chunks.iter().map(|c| c.n_samples()).sum();
+        if total == 0 {
+            bail!("task has no local samples");
+        }
+        let mut x = Vec::with_capacity(l * self.input_dim);
+        let mut y = Vec::with_capacity(l);
+        for _ in 0..l {
+            let mut k = rng.below(total);
+            for chunk in chunks {
+                let n = chunk.n_samples();
+                if k < n {
+                    match &chunk.payload {
+                        Payload::DenseClass { x: cx, dim, y: cy } => {
+                            x.extend_from_slice(&cx[k * dim..(k + 1) * dim]);
+                            y.push(cy[k]);
+                        }
+                        _ => bail!("lSGD classif requires dense-class chunks"),
+                    }
+                    break;
+                }
+                k -= n;
+            }
+        }
+        Ok((x, y))
+    }
+
+    fn sample_batch_tokens(
+        &self,
+        chunks: &[Chunk],
+        rng: &mut Rng,
+        l: usize,
+    ) -> Result<Vec<i32>> {
+        let total: usize = chunks.iter().map(|c| c.n_samples()).sum();
+        if total == 0 {
+            bail!("task has no local samples");
+        }
+        let mut out = Vec::with_capacity(l * self.seq_len);
+        for _ in 0..l {
+            let mut k = rng.below(total);
+            for chunk in chunks {
+                let n = chunk.n_samples();
+                if k < n {
+                    match &chunk.payload {
+                        Payload::Tokens { data, seq_len } => {
+                            out.extend_from_slice(&data[k * seq_len..(k + 1) * seq_len]);
+                        }
+                        _ => bail!("lSGD LM requires token chunks"),
+                    }
+                    break;
+                }
+                k -= n;
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Algorithm for LsgdAlgo {
+    fn model_len(&self) -> usize {
+        self.param_count
+    }
+
+    fn init_model(&self) -> Result<ModelVec> {
+        self.backend.nn_init(self.init_seed)
+    }
+
+    fn task_iterate(
+        &self,
+        chunks: &mut [Chunk],
+        model: &ModelVec,
+        k_tasks: usize,
+        task_seed: u64,
+        budget_samples: Option<usize>,
+    ) -> Result<LocalUpdate> {
+        let mut rng = Rng::seed_from_u64(task_seed);
+        let lr = if self.cfg.scale_lr {
+            self.cfg.lr * (k_tasks.max(1) as f64).sqrt()
+        } else {
+            self.cfg.lr
+        } as f32;
+        let mu = self.cfg.momentum as f32;
+        let l = self.cfg.l;
+        let h = match budget_samples {
+            Some(b) => (b / l.max(1)).max(1),
+            None => self.cfg.h,
+        };
+
+        let mut params = model.clone();
+        let mut momentum = vec![0.0f32; self.param_count];
+        let mut loss_sum = 0.0f64;
+        for _ in 0..h {
+            let (grads, loss) = if self.is_lm {
+                let tokens = self.sample_batch_tokens(chunks, &mut rng, l)?;
+                let (g, loss) = self.backend.lm_grad(&params, &tokens, l)?;
+                (g, loss)
+            } else {
+                let (x, y) = self.sample_batch_classif(chunks, &mut rng, l)?;
+                let (g, loss, _correct) = self.backend.nn_grad(&params, &x, &y)?;
+                (g, loss)
+            };
+            loss_sum += loss;
+            for ((p, m), &g) in params.iter_mut().zip(&mut momentum).zip(&grads) {
+                *m = mu * *m + g;
+                *p -= lr * *m;
+            }
+        }
+        let delta: Vec<f32> = params
+            .iter()
+            .zip(model)
+            .map(|(p, m)| p - m)
+            .collect();
+        // Report the *mean* local-step loss (comparable across H values).
+        Ok(LocalUpdate { delta, samples: l * h, loss_sum: loss_sum / h as f64 })
+    }
+
+    fn merge(&self, model: &mut ModelVec, updates: &[LocalUpdate], _k_tasks: usize) {
+        // Weighted average by samples processed (eq. 2 / Stich'18).
+        let total: usize = updates.iter().map(|u| u.samples).sum();
+        if total == 0 {
+            return;
+        }
+        for u in updates {
+            let w = u.samples as f32 / total as f32;
+            for (m, &d) in model.iter_mut().zip(&u.delta) {
+                *m += w * d;
+            }
+        }
+    }
+
+    fn evaluate(&self, model: &ModelVec, _all_chunks: &[&Chunk]) -> Result<Metric> {
+        match &self.test {
+            TestSet::Classif { x, y, dim } => {
+                let (_loss, correct, n) = self.backend.nn_eval(model, x, y, *dim)?;
+                Ok(Metric::TestAccuracy(correct / n.max(1.0)))
+            }
+            TestSet::Tokens { data, n_seqs } => {
+                let loss = self.backend.lm_eval(model, data, *n_seqs)?;
+                Ok(Metric::EvalLoss(loss))
+            }
+        }
+    }
+
+    fn samples_per_iteration(&self, _local_samples: usize) -> usize {
+        self.cfg.l * self.cfg.h
+    }
+
+    fn unit_samples(&self, _n_total: usize, _ref_nodes: usize) -> f64 {
+        (self.cfg.l * self.cfg.h) as f64
+    }
+
+    fn target(&self) -> Option<f64> {
+        Some(self.cfg.target_acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::nn::NativeModel;
+    use crate::chunks::chunker::make_chunks;
+    use crate::config::ModelKind;
+    use crate::data::synth;
+
+    fn setup(k: usize) -> (LsgdAlgo, Vec<Vec<Chunk>>) {
+        let ds = synth::fmnist_like(1200, 11);
+        let (train, test) = ds.split_test(0.2);
+        let (tx, ty) = match (&test.features, &test.labels) {
+            (crate::data::FeatureMatrix::Dense { data, .. }, crate::data::Labels::Class(y)) => {
+                (data.clone(), y.clone())
+            }
+            _ => panic!(),
+        };
+        let mut cfg = LsgdConfig::paper_defaults(ModelKind::Mlp);
+        cfg.lr = 5e-3;
+        let algo = LsgdAlgo::new_classif(
+            cfg,
+            Backend::native_nn(NativeModel::mlp_default()),
+            784,
+            tx,
+            ty,
+            42,
+        )
+        .unwrap();
+        let chunks = make_chunks(&train, 64 * 1024);
+        let mut parts: Vec<Vec<Chunk>> = (0..k).map(|_| Vec::new()).collect();
+        for (i, c) in chunks.into_iter().enumerate() {
+            parts[i % k].push(c);
+        }
+        (algo, parts)
+    }
+
+    #[test]
+    fn local_steps_reduce_loss_and_accuracy_improves() {
+        let (algo, mut parts) = setup(2);
+        let mut model = algo.init_model().unwrap();
+        let acc0 = match algo.evaluate(&model, &[]).unwrap() {
+            Metric::TestAccuracy(a) => a,
+            _ => panic!(),
+        };
+        let mut first_loss = None;
+        let mut last_loss = 0.0;
+        for it in 0..30 {
+            let updates: Vec<LocalUpdate> = parts
+                .iter_mut()
+                .enumerate()
+                .map(|(t, chunks)| {
+                    algo.task_iterate(chunks, &model, 2, (it * 13 + t) as u64, None).unwrap()
+                })
+                .collect();
+            let mean_loss: f64 =
+                updates.iter().map(|u| u.loss_sum).sum::<f64>() / updates.len() as f64;
+            first_loss.get_or_insert(mean_loss);
+            last_loss = mean_loss;
+            algo.merge(&mut model, &updates, 2);
+        }
+        let acc = match algo.evaluate(&model, &[]).unwrap() {
+            Metric::TestAccuracy(a) => a,
+            _ => panic!(),
+        };
+        assert!(last_loss < first_loss.unwrap() * 0.9, "{first_loss:?} -> {last_loss}");
+        assert!(acc > acc0 + 0.2, "acc {acc0} -> {acc}");
+    }
+
+    #[test]
+    fn merge_weights_by_samples() {
+        let (algo, _) = setup(1);
+        let mut model = vec![0.0f32; algo.model_len()];
+        let u1 = LocalUpdate { delta: vec![1.0; algo.model_len()], samples: 300, loss_sum: 0.0 };
+        let u2 = LocalUpdate { delta: vec![-1.0; algo.model_len()], samples: 100, loss_sum: 0.0 };
+        algo.merge(&mut model, &[u1, u2], 2);
+        // 0.75*1 + 0.25*(-1) = 0.5
+        assert!((model[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn budget_controls_local_steps() {
+        let (algo, mut parts) = setup(2);
+        let model = algo.init_model().unwrap();
+        let u = algo
+            .task_iterate(&mut parts[0], &model, 2, 0, Some(3 * algo.config().l))
+            .unwrap();
+        assert_eq!(u.samples, 3 * algo.config().l);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (algo, mut parts) = setup(2);
+        let model = algo.init_model().unwrap();
+        let u1 = algo.task_iterate(&mut parts[0], &model, 2, 99, None).unwrap();
+        let u2 = algo.task_iterate(&mut parts[0], &model, 2, 99, None).unwrap();
+        assert_eq!(u1.delta, u2.delta);
+        assert!((u1.loss_sum - u2.loss_sum).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,86 @@
+//! Training algorithms: CoCoA/SCD for GLMs and local SGD for NNs
+//! (paper §2.2), over two interchangeable compute backends.
+//!
+//! * [`backend`] — the compute abstraction: `Native` (pure-rust math,
+//!   mirrors the L1/L2 graphs bit-for-bit in structure) and `Hlo`
+//!   (AOT-compiled JAX/Pallas artifacts via PJRT). Tests assert the two
+//!   agree numerically.
+//! * [`svm`] — hinge-loss SVM dual math: native SDCA over dense and sparse
+//!   chunks, duality gap.
+//! * [`nn`] — native NN substrate: fused linear, conv2d, maxpool,
+//!   softmax-CE, and the paper's CNN/MLP models over flat parameters.
+//! * [`cocoa`] / [`lsgd`] — the distributed algorithms proper: per-task
+//!   solver state and the trainer-side merge rules.
+
+pub mod backend;
+pub mod cocoa;
+pub mod lsgd;
+pub mod nn;
+pub mod svm;
+
+pub use backend::Backend;
+pub use cocoa::CocoaAlgo;
+pub use lsgd::LsgdAlgo;
+
+use crate::chunks::Chunk;
+use crate::metrics::Metric;
+use crate::Result;
+
+/// The shared model vector exchanged between driver and tasks each
+/// iteration (CoCoA: v = w; lSGD: flat NN parameters).
+pub type ModelVec = Vec<f32>;
+
+/// What one uni-task returns from one iteration.
+#[derive(Clone, Debug)]
+pub struct LocalUpdate {
+    /// Model delta to merge (same length as the shared model).
+    pub delta: ModelVec,
+    /// Samples this task processed this iteration (merge weight, Stich'18).
+    pub samples: usize,
+    /// Sum of local training losses (diagnostics).
+    pub loss_sum: f64,
+}
+
+/// A distributed training algorithm: how tasks compute and how the driver
+/// merges. Implementations are stateless aside from configuration; all
+/// mutable state lives in chunks (per-sample state) and the shared model.
+pub trait Algorithm: Send + Sync {
+    /// Length of the shared model vector.
+    fn model_len(&self) -> usize;
+
+    /// Initial shared model.
+    fn init_model(&self) -> Result<ModelVec>;
+
+    /// One task-local iteration over the task's chunks.
+    ///
+    /// `task_seed` makes sample orders deterministic per (task, iter);
+    /// `budget_samples` caps how many samples to process (None = the
+    /// algorithm's default, e.g. one local pass for CoCoA, L×H for lSGD).
+    fn task_iterate(
+        &self,
+        chunks: &mut [Chunk],
+        model: &ModelVec,
+        k_tasks: usize,
+        task_seed: u64,
+        budget_samples: Option<usize>,
+    ) -> Result<LocalUpdate>;
+
+    /// Merge task updates into the shared model (driver side).
+    fn merge(&self, model: &mut ModelVec, updates: &[LocalUpdate], k_tasks: usize);
+
+    /// Global convergence metric over all chunks (+ optional held-out set).
+    fn evaluate(&self, model: &ModelVec, all_chunks: &[&Chunk]) -> Result<Metric>;
+
+    /// Samples one task processes per iteration given its local count
+    /// (CoCoA: all local samples; lSGD: L×H regardless of locality).
+    fn samples_per_iteration(&self, local_samples: usize) -> usize;
+
+    /// The sample count that defines one normalized time unit for the
+    /// paper's projection model (§5.3): CoCoA normalizes to 1/16th of the
+    /// dataset on one node (`n_total / ref_nodes`); lSGD normalizes to one
+    /// task's L×H batch.
+    fn unit_samples(&self, n_total: usize, ref_nodes: usize) -> f64;
+
+    /// The configured convergence target (gap / accuracy), if any.
+    fn target(&self) -> Option<f64>;
+}

@@ -1,0 +1,273 @@
+//! 2-D convolution (SAME padding, stride 1, NHWC/HWIO) and 2×2 max-pool —
+//! the native mirror of the L2 CNN graph (`lax.conv_general_dilated` +
+//! `lax.reduce_window`), implemented via im2col + matmul.
+
+use super::linear::matmul;
+
+/// im2col for SAME padding, stride 1: output (n·h·w, ks·ks·c).
+pub fn im2col(x: &[f32], n: usize, h: usize, w: usize, c: usize, ks: usize) -> Vec<f32> {
+    let pad = ks / 2;
+    let cols = ks * ks * c;
+    let mut out = vec![0.0f32; n * h * w * cols];
+    for img in 0..n {
+        let base = img * h * w * c;
+        for oy in 0..h {
+            for ox in 0..w {
+                let row = ((img * h + oy) * w + ox) * cols;
+                for ky in 0..ks {
+                    let iy = oy as isize + ky as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..ks {
+                        let ix = ox as isize + kx as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = base + ((iy as usize * w) + ix as usize) * c;
+                        let dst = row + (ky * ks + kx) * c;
+                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Scatter-add of an im2col-shaped gradient back to image layout
+/// (the adjoint of [`im2col`]).
+pub fn col2im(
+    dcol: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    ks: usize,
+) -> Vec<f32> {
+    let pad = ks / 2;
+    let cols = ks * ks * c;
+    let mut out = vec![0.0f32; n * h * w * c];
+    for img in 0..n {
+        let base = img * h * w * c;
+        for oy in 0..h {
+            for ox in 0..w {
+                let row = ((img * h + oy) * w + ox) * cols;
+                for ky in 0..ks {
+                    let iy = oy as isize + ky as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..ks {
+                        let ix = ox as isize + kx as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let dst = base + ((iy as usize * w) + ix as usize) * c;
+                        let src = row + (ky * ks + kx) * c;
+                        for ch in 0..c {
+                            out[dst + ch] += dcol[src + ch];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// conv2d SAME/stride-1 forward: x (n,h,w,cin) · w (ks,ks,cin,cout) + b.
+/// Returns (y (n,h,w,cout), im2col matrix — kept as the backward residual).
+pub fn conv2d_fwd(
+    x: &[f32],
+    wk: &[f32],
+    b: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    ks: usize,
+    cout: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let col = im2col(x, n, h, w, cin, ks);
+    let rows = n * h * w;
+    let inner = ks * ks * cin;
+    let mut y = vec![0.0f32; rows * cout];
+    // wk is (ks,ks,cin,cout) = (inner, cout) row-major already.
+    matmul(&col, wk, &mut y, rows, inner, cout);
+    for r in 0..rows {
+        for (o, &bv) in b.iter().enumerate() {
+            y[r * cout + o] += bv;
+        }
+    }
+    (y, col)
+}
+
+/// conv2d backward: returns (dx, dw, db).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bwd(
+    col: &[f32],
+    wk: &[f32],
+    dy: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    ks: usize,
+    cout: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let rows = n * h * w;
+    let inner = ks * ks * cin;
+    // dW(inner, cout) = colᵀ(rows, inner)ᵀ · dy(rows, cout)
+    let mut dw = vec![0.0f32; inner * cout];
+    super::linear::matmul_at_b(col, dy, &mut dw, rows, inner, cout);
+    // dcol(rows, inner) = dy · wkᵀ
+    let mut dcol = vec![0.0f32; rows * inner];
+    super::linear::matmul_a_bt(dy, wk, &mut dcol, rows, cout, inner);
+    let dx = col2im(&dcol, n, h, w, cin, ks);
+    let mut db = vec![0.0f32; cout];
+    for r in 0..rows {
+        for (o, dbv) in db.iter_mut().enumerate() {
+            *dbv += dy[r * cout + o];
+        }
+    }
+    (dx, dw, db)
+}
+
+/// 2×2 max-pool, stride 2, VALID. Returns (y (n,h/2,w/2,c), argmax indices
+/// into the input for the backward pass).
+pub fn maxpool2_fwd(
+    x: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+) -> (Vec<f32>, Vec<u32>) {
+    let (oh, ow) = (h / 2, w / 2);
+    let mut y = vec![0.0f32; n * oh * ow * c];
+    let mut arg = vec![0u32; n * oh * ow * c];
+    for img in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_idx = 0u32;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let iy = oy * 2 + dy;
+                            let ix = ox * 2 + dx;
+                            let idx = ((img * h + iy) * w + ix) * c + ch;
+                            if x[idx] > best {
+                                best = x[idx];
+                                best_idx = idx as u32;
+                            }
+                        }
+                    }
+                    let o = ((img * oh + oy) * ow + ox) * c + ch;
+                    y[o] = best;
+                    arg[o] = best_idx;
+                }
+            }
+        }
+    }
+    (y, arg)
+}
+
+/// max-pool backward: route dy to the argmax inputs.
+pub fn maxpool2_bwd(dy: &[f32], arg: &[u32], input_len: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; input_len];
+    for (g, &a) in dy.iter().zip(arg) {
+        dx[a as usize] += g;
+    }
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randv(r: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| r.normal_f32()).collect()
+    }
+
+    #[test]
+    fn im2col_identity_kernel_1x1() {
+        let mut r = Rng::seed_from_u64(0);
+        let x = randv(&mut r, 2 * 3 * 3 * 2);
+        let col = im2col(&x, 2, 3, 3, 2, 1);
+        assert_eq!(col, x); // 1x1 im2col is the identity
+    }
+
+    #[test]
+    fn conv_identity_kernel_passes_through() {
+        // 3x3 kernel with only the center weight = 1 on one channel.
+        let mut r = Rng::seed_from_u64(1);
+        let (n, h, w, cin, ks, cout) = (1, 4, 4, 1, 3, 1);
+        let x = randv(&mut r, n * h * w * cin);
+        let mut wk = vec![0.0f32; ks * ks * cin * cout];
+        wk[(1 * 3 + 1) * cin * cout] = 1.0; // center tap
+        let b = vec![0.0f32];
+        let (y, _) = conv2d_fwd(&x, &wk, &b, n, h, w, cin, ks, cout);
+        for (a, bb) in x.iter().zip(&y) {
+            assert!((a - bb).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn conv_grads_match_finite_difference() {
+        let mut r = Rng::seed_from_u64(2);
+        let (n, h, w, cin, ks, cout) = (1, 4, 4, 2, 3, 2);
+        let x = randv(&mut r, n * h * w * cin);
+        let wk = randv(&mut r, ks * ks * cin * cout);
+        let b = randv(&mut r, cout);
+        let loss = |x: &[f32], wk: &[f32], b: &[f32]| -> f64 {
+            let (y, _) = conv2d_fwd(x, wk, b, n, h, w, cin, ks, cout);
+            y.iter().map(|&v| (v as f64).powi(2) / 2.0).sum()
+        };
+        let (y, col) = conv2d_fwd(&x, &wk, &b, n, h, w, cin, ks, cout);
+        let (dx, dw, db) = conv2d_bwd(&col, &wk, &y, n, h, w, cin, ks, cout);
+        let eps = 1e-3f32;
+        for idx in [0usize, 7, x.len() - 1] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let fd = (loss(&xp, &wk, &b) - loss(&x, &wk, &b)) / eps as f64;
+            assert!((fd - dx[idx] as f64).abs() < 3e-2 * (1.0 + fd.abs()), "dx[{idx}]");
+        }
+        for idx in [0usize, dw.len() / 2, dw.len() - 1] {
+            let mut wp = wk.to_vec();
+            wp[idx] += eps;
+            let fd = (loss(&x, &wp, &b) - loss(&x, &wk, &b)) / eps as f64;
+            assert!((fd - dw[idx] as f64).abs() < 3e-2 * (1.0 + fd.abs()), "dw[{idx}]");
+        }
+        let mut bp = b.clone();
+        bp[1] += eps;
+        let fd = (loss(&x, &wk, &bp) - loss(&x, &wk, &b)) / eps as f64;
+        assert!((fd - db[1] as f64).abs() < 3e-2 * (1.0 + fd.abs()), "db");
+    }
+
+    #[test]
+    fn maxpool_fwd_bwd() {
+        // 2x2 image, 1 channel: pool picks max; grad routes to argmax.
+        let x = vec![1.0f32, 3.0, 2.0, 0.5];
+        let (y, arg) = maxpool2_fwd(&x, 1, 2, 2, 1);
+        assert_eq!(y, vec![3.0]);
+        assert_eq!(arg, vec![1]);
+        let dx = maxpool2_bwd(&[2.0], &arg, 4);
+        assert_eq!(dx, vec![0.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn col2im_is_adjoint_of_im2col() {
+        // <im2col(x), y> == <x, col2im(y)> for random x, y.
+        let mut r = Rng::seed_from_u64(3);
+        let (n, h, w, c, ks) = (1, 3, 3, 2, 3);
+        let x = randv(&mut r, n * h * w * c);
+        let y = randv(&mut r, n * h * w * ks * ks * c);
+        let ax = im2col(&x, n, h, w, c, ks);
+        let aty = col2im(&y, n, h, w, c, ks);
+        let lhs: f64 = ax.iter().zip(&y).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let rhs: f64 = x.iter().zip(&aty).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * (1.0 + lhs.abs()));
+    }
+}

@@ -1,0 +1,265 @@
+//! Dense linear algebra: matmul variants and the fused linear layer
+//! (native mirror of the Pallas `fused_linear` kernel).
+
+/// Activation of a fused linear layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    Gelu,
+}
+
+impl Act {
+    #[inline]
+    fn apply(&self, v: f32) -> f32 {
+        match self {
+            Act::None => v,
+            Act::Relu => v.max(0.0),
+            Act::Gelu => gelu(v),
+        }
+    }
+}
+
+/// tanh-free exact GELU: x·Φ(x) with Φ via erf — matches jax.nn.gelu
+/// (approximate=True default uses tanh; jax default IS approximate).
+/// We mirror jax's default tanh approximation.
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/π)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[inline]
+fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.7978845608;
+    let x3 = x * x * x;
+    let t = (C * (x + 0.044715 * x3)).tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * C * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+/// C(m,n) = A(m,k) · B(k,n). Cache-friendly ikj loop; `c` is overwritten.
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// C(m,n) = Aᵀ(m,k stored k,m) · B(k,n) — i.e. A is (k, m) and we compute
+/// AᵀB. Used for dW = Xᵀ·dY.
+pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// C(m,k) = A(m,n) · Bᵀ(n,k stored k,n). Used for dX = dY·Wᵀ.
+pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * k);
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let crow = &mut c[i * k..(i + 1) * k];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            *cv = crate::algos::svm::dot(arow, &b[j * n..(j + 1) * n]);
+        }
+    }
+}
+
+/// Forward fused linear: y(m,n) = act(x(m,k)·w(k,n) + bias). Returns the
+/// pre-activation too (needed for gelu backward).
+pub fn fused_linear_fwd(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    act: Act,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut pre = vec![0.0f32; m * n];
+    matmul(x, w, &mut pre, m, k, n);
+    for row in 0..m {
+        for (j, &bv) in bias.iter().enumerate() {
+            pre[row * n + j] += bv;
+        }
+    }
+    let y: Vec<f32> = pre.iter().map(|&v| act.apply(v)).collect();
+    (y, pre)
+}
+
+/// Backward fused linear given upstream grad `dy`:
+/// returns (dx, dw, db). `pre` is the forward pre-activation.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_linear_bwd(
+    x: &[f32],
+    w: &[f32],
+    pre: &[f32],
+    dy: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    act: Act,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    // d(pre) = dy ⊙ act'(pre)
+    let dpre: Vec<f32> = match act {
+        Act::None => dy.to_vec(),
+        Act::Relu => dy
+            .iter()
+            .zip(pre)
+            .map(|(&g, &p)| if p > 0.0 { g } else { 0.0 })
+            .collect(),
+        Act::Gelu => dy.iter().zip(pre).map(|(&g, &p)| g * gelu_grad(p)).collect(),
+    };
+    let mut dx = vec![0.0f32; m * k];
+    matmul_a_bt(&dpre, w, &mut dx, m, n, k);
+    let mut dw = vec![0.0f32; k * n];
+    matmul_at_b(x, &dpre, &mut dw, m, k, n);
+    let mut db = vec![0.0f32; n];
+    for row in 0..m {
+        for (j, dbv) in db.iter_mut().enumerate() {
+            *dbv += dpre[row * n + j];
+        }
+    }
+    (dx, dw, db)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randv(r: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| r.normal_f32()).collect()
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        // [[1,2],[3,4]] @ [[1,0],[0,1]] = same
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![1.0, 0.0, 0.0, 1.0];
+        let mut c = vec![0.0; 4];
+        matmul(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn transposed_variants_agree_with_explicit_transpose() {
+        let mut r = Rng::seed_from_u64(0);
+        let (m, k, n) = (5, 7, 3);
+        let a = randv(&mut r, k * m); // (k, m)
+        let b = randv(&mut r, k * n); // (k, n)
+        let mut c1 = vec![0.0; m * n];
+        matmul_at_b(&a, &b, &mut c1, k, m, n);
+        // explicit transpose of a -> (m, k)
+        let mut at = vec![0.0f32; m * k];
+        for p in 0..k {
+            for i in 0..m {
+                at[i * k + p] = a[p * m + i];
+            }
+        }
+        let mut c2 = vec![0.0; m * n];
+        matmul(&at, &b, &mut c2, m, k, n);
+        for (x, y) in c1.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-4);
+        }
+
+        let x = randv(&mut r, m * n); // (m, n)
+        let w = randv(&mut r, k * n); // (k, n) -> wT is (n, k)
+        let mut d1 = vec![0.0; m * k];
+        matmul_a_bt(&x, &w, &mut d1, m, n, k);
+        let mut wt = vec![0.0f32; n * k];
+        for j in 0..k {
+            for p in 0..n {
+                wt[p * k + j] = w[j * n + p];
+            }
+        }
+        let mut d2 = vec![0.0; m * k];
+        matmul(&x, &wt, &mut d2, m, n, k);
+        for (p, q) in d1.iter().zip(&d2) {
+            assert!((p - q).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn fused_linear_grad_matches_finite_difference() {
+        let mut r = Rng::seed_from_u64(1);
+        let (m, k, n) = (3, 4, 2);
+        for act in [Act::None, Act::Relu, Act::Gelu] {
+            let x = randv(&mut r, m * k);
+            let w = randv(&mut r, k * n);
+            let b = randv(&mut r, n);
+            // loss = sum(y^2)/2
+            let loss = |x: &[f32], w: &[f32], b: &[f32]| -> f64 {
+                let (y, _) = fused_linear_fwd(x, w, b, m, k, n, act);
+                y.iter().map(|&v| (v as f64) * (v as f64) / 2.0).sum()
+            };
+            let (y, pre) = fused_linear_fwd(&x, &w, &b, m, k, n, act);
+            let dy = y.clone(); // d(sum y²/2)/dy = y
+            let (dx, dw, db) = fused_linear_bwd(&x, &w, &pre, &dy, m, k, n, act);
+            let eps = 1e-3f32;
+            // check a few coordinates of each grad
+            for idx in [0usize, m * k / 2, m * k - 1] {
+                let mut xp = x.clone();
+                xp[idx] += eps;
+                let fd = (loss(&xp, &w, &b) - loss(&x, &w, &b)) / eps as f64;
+                assert!(
+                    (fd - dx[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "{act:?} dx[{idx}]: fd={fd} an={}",
+                    dx[idx]
+                );
+            }
+            for idx in [0usize, k * n - 1] {
+                let mut wp = w.clone();
+                wp[idx] += eps;
+                let fd = (loss(&x, &wp, &b) - loss(&x, &w, &b)) / eps as f64;
+                assert!(
+                    (fd - dw[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "{act:?} dw[{idx}]: fd={fd} an={}",
+                    dw[idx]
+                );
+            }
+            let mut bp = b.clone();
+            bp[0] += eps;
+            let fd = (loss(&x, &w, &bp) - loss(&x, &w, &b)) / eps as f64;
+            assert!((fd - db[0] as f64).abs() < 2e-2 * (1.0 + fd.abs()), "{act:?} db");
+        }
+    }
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        // jax.nn.gelu(1.0) ≈ 0.841192, gelu(-1.0) ≈ -0.158808 (tanh approx)
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+        assert_eq!(gelu(0.0), 0.0);
+    }
+}

@@ -1,0 +1,106 @@
+//! Masked softmax cross-entropy (native mirror of `_softmax_xent` in
+//! python/compile/model.py): labels < 0 are padding and contribute
+//! nothing; loss is normalized by the number of valid rows.
+
+/// Forward + backward in one pass.
+///
+/// Returns (loss_mean, correct_count, n_valid, dlogits) where `dlogits`
+/// is ∂loss_mean/∂logits — i.e. (softmax − onehot) / n_valid on valid rows.
+pub fn softmax_xent(
+    logits: &[f32],
+    labels: &[i32],
+    n_classes: usize,
+) -> (f64, f64, f64, Vec<f32>) {
+    let rows = labels.len();
+    assert_eq!(logits.len(), rows * n_classes);
+    let n_valid = labels.iter().filter(|&&l| l >= 0).count().max(1) as f32;
+    let mut dlogits = vec![0.0f32; logits.len()];
+    let (mut loss_sum, mut correct) = (0.0f64, 0.0f64);
+    let mut actually_valid = 0.0f64;
+    for (i, &label) in labels.iter().enumerate() {
+        if label < 0 {
+            continue;
+        }
+        actually_valid += 1.0;
+        let row = &logits[i * n_classes..(i + 1) * n_classes];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for &v in row {
+            sum += (v - max).exp();
+        }
+        let log_sum = sum.ln() + max;
+        let li = label as usize;
+        loss_sum += (log_sum - row[li]) as f64;
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(j, _)| j)
+            .unwrap();
+        if argmax == li {
+            correct += 1.0;
+        }
+        let drow = &mut dlogits[i * n_classes..(i + 1) * n_classes];
+        for (j, dv) in drow.iter_mut().enumerate() {
+            let p = (row[j] - log_sum).exp();
+            *dv = (p - if j == li { 1.0 } else { 0.0 }) / n_valid;
+        }
+    }
+    let loss_mean = loss_sum / actually_valid.max(1.0);
+    (loss_mean, correct, actually_valid, dlogits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_logits_give_log_c() {
+        let logits = vec![0.0f32; 4 * 3];
+        let labels = vec![0, 1, 2, 0];
+        let (loss, _correct, n, d) = softmax_xent(&logits, &labels, 3);
+        assert!((loss - (3.0f64).ln()).abs() < 1e-6);
+        assert_eq!(n, 4.0);
+        // grads sum to zero per row
+        for i in 0..4 {
+            let s: f32 = d[i * 3..(i + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn confident_correct_prediction_low_loss() {
+        let logits = vec![10.0f32, -10.0, 0.0];
+        let (loss, correct, n, _) = softmax_xent(&logits, &[0], 3);
+        assert!(loss < 1e-3);
+        assert_eq!(correct, 1.0);
+        assert_eq!(n, 1.0);
+    }
+
+    #[test]
+    fn padding_rows_ignored() {
+        let logits = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let (loss_a, correct_a, n, d) = softmax_xent(&logits, &[2, -1], 3);
+        assert_eq!(n, 1.0);
+        let (loss_b, correct_b, _, _) = softmax_xent(&logits[..3], &[2], 3);
+        assert!((loss_a - loss_b).abs() < 1e-6);
+        assert_eq!(correct_a, correct_b);
+        assert!(d[3..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let logits = vec![0.3f32, -0.5, 1.2, 0.0, 0.7, -1.0];
+        let labels = vec![2, 0];
+        let (_, _, _, d) = softmax_xent(&logits, &labels, 3);
+        let eps = 1e-3f32;
+        for idx in 0..6 {
+            let mut lp = logits.clone();
+            lp[idx] += eps;
+            let (la, _, _, _) = softmax_xent(&lp, &labels, 3);
+            let (lb, _, _, _) = softmax_xent(&logits, &labels, 3);
+            let fd = (la - lb) / eps as f64;
+            assert!((fd - d[idx] as f64).abs() < 1e-3, "idx {idx}: {fd} vs {}", d[idx]);
+        }
+    }
+}

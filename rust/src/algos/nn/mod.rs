@@ -1,0 +1,14 @@
+//! Native (pure-rust) NN substrate — the fast mirror of the L2 JAX graphs.
+//!
+//! Implements exactly the computations the AOT artifacts perform (MLP and
+//! the paper's CNN over a flat f32 parameter vector with the manifest's
+//! layout), so the figure harnesses can run hundreds of trainings without
+//! queueing on the single PJRT engine. Equivalence against the HLO path is
+//! asserted by `rust/tests/hlo_native_equivalence.rs`.
+
+pub mod conv;
+pub mod linear;
+pub mod loss;
+pub mod model;
+
+pub use model::{CnnShape, NativeModel};

@@ -1,0 +1,407 @@
+//! Native NN models over flat parameter vectors.
+//!
+//! The flat layout matches `python/compile/model.py` exactly (same tensor
+//! order, row-major), so parameters produced by the HLO `*_init` artifacts
+//! are directly usable here and vice versa — verified by
+//! `rust/tests/hlo_native_equivalence.rs`.
+
+use crate::util::Rng;
+
+use super::conv::{conv2d_bwd, conv2d_fwd, maxpool2_bwd, maxpool2_fwd};
+use super::linear::{fused_linear_bwd, fused_linear_fwd, Act};
+use super::loss::softmax_xent;
+
+/// Geometry of the paper's CNN (§5.1): 2× [conv5x5 SAME + maxpool2 + relu]
+/// then 3 FC layers. Mirrors `CnnConfig` in model.py.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CnnShape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub conv1: usize,
+    pub conv2: usize,
+    pub ks: usize,
+    pub fc1: usize,
+    pub fc2: usize,
+    pub classes: usize,
+}
+
+impl Default for CnnShape {
+    fn default() -> Self {
+        // Must mirror CnnConfig in python/compile/model.py.
+        CnnShape { h: 32, w: 32, c: 3, conv1: 8, conv2: 16, ks: 5, fc1: 256, fc2: 128, classes: 10 }
+    }
+}
+
+impl CnnShape {
+    pub fn flat_after_conv(&self) -> usize {
+        (self.h / 4) * (self.w / 4) * self.conv2
+    }
+
+    pub fn input_dim(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+/// A natively-computable model over a flat f32 parameter vector.
+#[derive(Clone, Debug)]
+pub enum NativeModel {
+    /// `dims[0] → … → dims.last()`, relu between, none at the end.
+    Mlp { dims: Vec<usize> },
+    Cnn { shape: CnnShape },
+}
+
+impl NativeModel {
+    pub fn mlp_default() -> Self {
+        NativeModel::Mlp { dims: vec![784, 256, 128, 10] }
+    }
+
+    pub fn cnn_default() -> Self {
+        NativeModel::Cnn { shape: CnnShape::default() }
+    }
+
+    /// (name, element-count) pairs in flat order — mirrors model.py specs.
+    pub fn param_sizes(&self) -> Vec<(String, usize)> {
+        match self {
+            NativeModel::Mlp { dims } => {
+                let mut v = Vec::new();
+                for i in 0..dims.len() - 1 {
+                    v.push((format!("fc{i}.w"), dims[i] * dims[i + 1]));
+                    v.push((format!("fc{i}.b"), dims[i + 1]));
+                }
+                v
+            }
+            NativeModel::Cnn { shape: s } => vec![
+                ("conv1.w".into(), s.ks * s.ks * s.c * s.conv1),
+                ("conv1.b".into(), s.conv1),
+                ("conv2.w".into(), s.ks * s.ks * s.conv1 * s.conv2),
+                ("conv2.b".into(), s.conv2),
+                ("fc1.w".into(), s.flat_after_conv() * s.fc1),
+                ("fc1.b".into(), s.fc1),
+                ("fc2.w".into(), s.fc1 * s.fc2),
+                ("fc2.b".into(), s.fc2),
+                ("fc3.w".into(), s.fc2 * s.classes),
+                ("fc3.b".into(), s.classes),
+            ],
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.param_sizes().iter().map(|(_, s)| s).sum()
+    }
+
+    pub fn input_dim(&self) -> usize {
+        match self {
+            NativeModel::Mlp { dims } => dims[0],
+            NativeModel::Cnn { shape } => shape.input_dim(),
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            NativeModel::Mlp { dims } => *dims.last().unwrap(),
+            NativeModel::Cnn { shape } => shape.classes,
+        }
+    }
+
+    /// He-initialized flat parameters (weights ~ N(0, 2/fan_in), zero bias).
+    pub fn init(&self, seed: u64) -> Vec<f32> {
+        let mut r = Rng::seed_from_u64(seed);
+        let mut out = Vec::with_capacity(self.param_count());
+        for (name, size) in self.param_sizes() {
+            if name.ends_with(".b") {
+                out.extend(std::iter::repeat(0.0f32).take(size));
+            } else {
+                let fan_in = match self {
+                    NativeModel::Mlp { dims } => {
+                        let i: usize = name[2..3].parse().unwrap();
+                        dims[i]
+                    }
+                    NativeModel::Cnn { shape: s } => match name.as_str() {
+                        "conv1.w" => s.ks * s.ks * s.c,
+                        "conv2.w" => s.ks * s.ks * s.conv1,
+                        "fc1.w" => s.flat_after_conv(),
+                        "fc2.w" => s.fc1,
+                        "fc3.w" => s.fc2,
+                        _ => unreachable!(),
+                    },
+                };
+                let scale = (2.0 / fan_in as f64).sqrt() as f32;
+                out.extend((0..size).map(|_| r.normal_f32() * scale));
+            }
+        }
+        out
+    }
+
+    /// Forward pass: logits (batch × classes).
+    pub fn forward(&self, params: &[f32], x: &[f32], batch: usize) -> Vec<f32> {
+        self.forward_full(params, x, batch).0
+    }
+
+    /// Loss + grads on a batch. Returns (grads, loss_mean, correct, n_valid).
+    pub fn grad(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        labels: &[i32],
+    ) -> (Vec<f32>, f64, f64, f64) {
+        let batch = labels.len();
+        match self {
+            NativeModel::Mlp { dims } => {
+                // Forward, retaining residuals.
+                let n_layers = dims.len() - 1;
+                let mut offs = Vec::new();
+                let mut off = 0usize;
+                for i in 0..n_layers {
+                    offs.push(off);
+                    off += dims[i] * dims[i + 1] + dims[i + 1];
+                }
+                let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
+                let mut pres: Vec<Vec<f32>> = Vec::new();
+                for i in 0..n_layers {
+                    let (k, n) = (dims[i], dims[i + 1]);
+                    let w = &params[offs[i]..offs[i] + k * n];
+                    let b = &params[offs[i] + k * n..offs[i] + k * n + n];
+                    let act = if i == n_layers - 1 { Act::None } else { Act::Relu };
+                    let (y, pre) = fused_linear_fwd(acts[i].as_slice(), w, b, batch, k, n, act);
+                    acts.push(y);
+                    pres.push(pre);
+                }
+                let (loss, correct, n_valid, dlogits) =
+                    softmax_xent(acts.last().unwrap(), labels, dims[n_layers]);
+                // Backward.
+                let mut grads = vec![0.0f32; self.param_count()];
+                let mut dy = dlogits;
+                for i in (0..n_layers).rev() {
+                    let (k, n) = (dims[i], dims[i + 1]);
+                    let w = &params[offs[i]..offs[i] + k * n];
+                    let act = if i == n_layers - 1 { Act::None } else { Act::Relu };
+                    let (dx, dw, db) =
+                        fused_linear_bwd(&acts[i], w, &pres[i], &dy, batch, k, n, act);
+                    grads[offs[i]..offs[i] + k * n].copy_from_slice(&dw);
+                    grads[offs[i] + k * n..offs[i] + k * n + n].copy_from_slice(&db);
+                    dy = dx;
+                }
+                (grads, loss, correct, n_valid)
+            }
+            NativeModel::Cnn { shape: s } => {
+                let sizes = self.param_sizes();
+                let mut offs = Vec::new();
+                let mut off = 0usize;
+                for (_, sz) in &sizes {
+                    offs.push(off);
+                    off += sz;
+                }
+                let p = |i: usize| &params[offs[i]..offs[i] + sizes[i].1];
+                let (n, h, w, c) = (batch, s.h, s.w, s.c);
+                // conv1 + pool + relu
+                let (c1, col1) = conv2d_fwd(x, p(0), p(1), n, h, w, c, s.ks, s.conv1);
+                let (p1, arg1) = maxpool2_fwd(&c1, n, h, w, s.conv1);
+                let r1: Vec<f32> = p1.iter().map(|&v| v.max(0.0)).collect();
+                let (h2, w2) = (h / 2, w / 2);
+                // conv2 + pool + relu
+                let (c2, col2) = conv2d_fwd(&r1, p(2), p(3), n, h2, w2, s.conv1, s.ks, s.conv2);
+                let (p2, arg2) = maxpool2_fwd(&c2, n, h2, w2, s.conv2);
+                let r2: Vec<f32> = p2.iter().map(|&v| v.max(0.0)).collect();
+                let flat = s.flat_after_conv();
+                // fc1 relu, fc2 relu, fc3 none
+                let (f1, pre1) = fused_linear_fwd(&r2, p(4), p(5), n, flat, s.fc1, Act::Relu);
+                let (f2, pre2) = fused_linear_fwd(&f1, p(6), p(7), n, s.fc1, s.fc2, Act::Relu);
+                let (logits, pre3) =
+                    fused_linear_fwd(&f2, p(8), p(9), n, s.fc2, s.classes, Act::None);
+                let (loss, correct, n_valid, dlogits) =
+                    softmax_xent(&logits, labels, s.classes);
+                // Backward.
+                let mut grads = vec![0.0f32; self.param_count()];
+                let gslice = |grads: &mut Vec<f32>, i: usize, v: &[f32]| {
+                    grads[offs[i]..offs[i] + sizes[i].1].copy_from_slice(v);
+                };
+                let (d_f2, dw3, db3) =
+                    fused_linear_bwd(&f2, p(8), &pre3, &dlogits, n, s.fc2, s.classes, Act::None);
+                gslice(&mut grads, 8, &dw3);
+                gslice(&mut grads, 9, &db3);
+                let (d_f1, dw2, db2) =
+                    fused_linear_bwd(&f1, p(6), &pre2, &d_f2, n, s.fc1, s.fc2, Act::Relu);
+                gslice(&mut grads, 6, &dw2);
+                gslice(&mut grads, 7, &db2);
+                let (d_r2, dw1, db1) =
+                    fused_linear_bwd(&r2, p(4), &pre1, &d_f1, n, flat, s.fc1, Act::Relu);
+                gslice(&mut grads, 4, &dw1);
+                gslice(&mut grads, 5, &db1);
+                // relu' then unpool then conv2 backward
+                let d_p2: Vec<f32> = d_r2
+                    .iter()
+                    .zip(&p2)
+                    .map(|(&g, &v)| if v > 0.0 { g } else { 0.0 })
+                    .collect();
+                let d_c2 = maxpool2_bwd(&d_p2, &arg2, c2.len());
+                let (d_r1, dwc2, dbc2) =
+                    conv2d_bwd(&col2, p(2), &d_c2, n, h2, w2, s.conv1, s.ks, s.conv2);
+                gslice(&mut grads, 2, &dwc2);
+                gslice(&mut grads, 3, &dbc2);
+                let d_p1: Vec<f32> = d_r1
+                    .iter()
+                    .zip(&p1)
+                    .map(|(&g, &v)| if v > 0.0 { g } else { 0.0 })
+                    .collect();
+                let d_c1 = maxpool2_bwd(&d_p1, &arg1, c1.len());
+                let (_dx, dwc1, dbc1) = conv2d_bwd(&col1, p(0), &d_c1, n, h, w, c, s.ks, s.conv1);
+                gslice(&mut grads, 0, &dwc1);
+                gslice(&mut grads, 1, &dbc1);
+                (grads, loss, correct, n_valid)
+            }
+        }
+    }
+
+    /// Eval on a batch: (loss_mean, correct, n_valid).
+    pub fn eval(&self, params: &[f32], x: &[f32], labels: &[i32]) -> (f64, f64, f64) {
+        let batch = labels.len();
+        let logits = self.forward(params, x, batch);
+        let (loss, correct, n, _) = softmax_xent(&logits, labels, self.n_classes());
+        (loss, correct, n)
+    }
+
+    fn forward_full(&self, params: &[f32], x: &[f32], batch: usize) -> (Vec<f32>, ()) {
+        match self {
+            NativeModel::Mlp { dims } => {
+                let n_layers = dims.len() - 1;
+                let mut off = 0usize;
+                let mut cur = x.to_vec();
+                for i in 0..n_layers {
+                    let (k, n) = (dims[i], dims[i + 1]);
+                    let w = &params[off..off + k * n];
+                    let b = &params[off + k * n..off + k * n + n];
+                    off += k * n + n;
+                    let act = if i == n_layers - 1 { Act::None } else { Act::Relu };
+                    let (y, _) = fused_linear_fwd(&cur, w, b, batch, k, n, act);
+                    cur = y;
+                }
+                (cur, ())
+            }
+            NativeModel::Cnn { shape: s } => {
+                let sizes = self.param_sizes();
+                let mut offs = Vec::new();
+                let mut off = 0usize;
+                for (_, sz) in &sizes {
+                    offs.push(off);
+                    off += sz;
+                }
+                let p = |i: usize| &params[offs[i]..offs[i] + sizes[i].1];
+                let (n, h, w, c) = (batch, s.h, s.w, s.c);
+                let (c1, _) = conv2d_fwd(x, p(0), p(1), n, h, w, c, s.ks, s.conv1);
+                let (p1, _) = maxpool2_fwd(&c1, n, h, w, s.conv1);
+                let r1: Vec<f32> = p1.iter().map(|&v| v.max(0.0)).collect();
+                let (h2, w2) = (h / 2, w / 2);
+                let (c2, _) = conv2d_fwd(&r1, p(2), p(3), n, h2, w2, s.conv1, s.ks, s.conv2);
+                let (p2, _) = maxpool2_fwd(&c2, n, h2, w2, s.conv2);
+                let r2: Vec<f32> = p2.iter().map(|&v| v.max(0.0)).collect();
+                let flat = s.flat_after_conv();
+                let (f1, _) = fused_linear_fwd(&r2, p(4), p(5), n, flat, s.fc1, Act::Relu);
+                let (f2, _) = fused_linear_fwd(&f1, p(6), p(7), n, s.fc1, s.fc2, Act::Relu);
+                let (logits, _) =
+                    fused_linear_fwd(&f2, p(8), p(9), n, s.fc2, s.classes, Act::None);
+                (logits, ())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn param_counts_match_manifest_values() {
+        // Values recorded from `make artifacts` output.
+        assert_eq!(NativeModel::mlp_default().param_count(), 235_146);
+        assert_eq!(NativeModel::cnn_default().param_count(), 300_410);
+    }
+
+    #[test]
+    fn mlp_grad_matches_finite_difference() {
+        let m = NativeModel::Mlp { dims: vec![6, 5, 3] };
+        let params = m.init(0);
+        let mut r = Rng::seed_from_u64(1);
+        let x: Vec<f32> = (0..2 * 6).map(|_| r.normal_f32()).collect();
+        let y = vec![1i32, 2];
+        let (g, loss, _, n) = m.grad(&params, &x, &y);
+        assert_eq!(n, 2.0);
+        assert!(loss > 0.0);
+        let eps = 1e-3f32;
+        for idx in [0usize, 10, g.len() - 1, g.len() / 2] {
+            let mut pp = params.clone();
+            pp[idx] += eps;
+            let (_, lp, _, _) = m.grad(&pp, &x, &y);
+            let fd = (lp - loss) / eps as f64;
+            assert!(
+                (fd - g[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                "idx {idx}: fd={fd} an={}",
+                g[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn cnn_grad_matches_finite_difference_small() {
+        let shape = CnnShape { h: 8, w: 8, c: 1, conv1: 2, conv2: 3, ks: 3, fc1: 6, fc2: 4, classes: 3 };
+        let m = NativeModel::Cnn { shape };
+        let params = m.init(2);
+        let mut r = Rng::seed_from_u64(3);
+        let x: Vec<f32> = (0..2 * shape.input_dim()).map(|_| r.normal_f32()).collect();
+        let y = vec![0i32, 2];
+        let (g, loss, _, _) = m.grad(&params, &x, &y);
+        let eps = 1e-3f32;
+        // One index per tensor family.
+        let sizes = m.param_sizes();
+        let mut off = 0;
+        for (name, sz) in &sizes {
+            let idx = off + sz / 2;
+            let mut pp = params.clone();
+            pp[idx] += eps;
+            let (_, lp, _, _) = m.grad(&pp, &x, &y);
+            let fd = (lp - loss) / eps as f64;
+            assert!(
+                (fd - g[idx] as f64).abs() < 3e-2 * (1.0 + fd.abs()),
+                "{name}[{idx}]: fd={fd} an={}",
+                g[idx]
+            );
+            off += sz;
+        }
+    }
+
+    #[test]
+    fn mlp_learns_two_constant_classes() {
+        let m = NativeModel::Mlp { dims: vec![8, 16, 2] };
+        let mut params = m.init(4);
+        let x: Vec<f32> = (0..4 * 8)
+            .map(|i| if i < 2 * 8 { 0.5 } else { -0.5 })
+            .collect();
+        let y = vec![0i32, 0, 1, 1];
+        let mut last_loss = f64::MAX;
+        for _ in 0..50 {
+            let (g, loss, _, _) = m.grad(&params, &x, &y);
+            for (p, gv) in params.iter_mut().zip(&g) {
+                *p -= 0.5 * gv;
+            }
+            last_loss = loss;
+        }
+        let (_, correct, n) = m.eval(&params, &x, &y);
+        assert_eq!(correct, n);
+        assert!(last_loss < 0.1, "{last_loss}");
+    }
+
+    #[test]
+    fn eval_matches_grad_loss() {
+        let m = NativeModel::Mlp { dims: vec![4, 3] };
+        let params = m.init(5);
+        let x = vec![0.1f32; 2 * 4];
+        let y = vec![0i32, -1];
+        let (_, loss_g, correct_g, n_g) = m.grad(&params, &x, &y);
+        let (loss_e, correct_e, n_e) = m.eval(&params, &x, &y);
+        assert!((loss_g - loss_e).abs() < 1e-9);
+        assert_eq!(correct_g, correct_e);
+        assert_eq!(n_g, n_e);
+        assert_eq!(n_e, 1.0);
+    }
+}

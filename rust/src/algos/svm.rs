@@ -1,0 +1,271 @@
+//! Hinge-loss SVM dual math: native SDCA over chunks + duality gap.
+//!
+//! Mirrors the L1 Pallas kernel (`python/compile/kernels/scd.py`) exactly:
+//!
+//! ```text
+//! primal  P(w) = λ/2 ||w||² + 1/n Σ max(0, 1 − y_i x_i·w)
+//! dual    D(α) = 1/n Σ α_i − λ/2 ||w(α)||²,   α_i ∈ [0, 1]
+//! w(α)    = 1/(λn) Σ α_i y_i x_i
+//! step    Δ = (1 − y_i x_i·w_loc) / (σ'·‖x_i‖²/(λn)), α_i ← clip(α_i+Δ, 0, 1)
+//!          with w_loc = w + σ'·dv (CoCoA+ local subproblem view)
+//! gap     P − D = 1/n Σ (hinge_i − α_i) + λ‖w‖²
+//! ```
+
+use crate::chunks::{Chunk, Payload};
+
+/// One local SDCA pass over a dense chunk: visit rows in `order`, mutate
+/// `alpha` (chunk state) and `v` in place, and accumulate the delta in
+/// `dv`. Identical math to the Pallas kernel (incl. the zero-norm guard
+/// for padding rows).
+#[allow(clippy::too_many_arguments)]
+pub fn scd_pass_dense(
+    x: &[f32],
+    dim: usize,
+    y: &[f32],
+    order: &[usize],
+    alpha: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+    lam_n: f32,
+    sigma: f32,
+) {
+    for &i in order {
+        let xi = &x[i * dim..(i + 1) * dim];
+        let sq: f32 = xi.iter().map(|a| a * a).sum();
+        if sq <= 0.0 {
+            continue;
+        }
+        let margin = y[i] * dot(xi, v);
+        let step = (1.0 - margin) / (sigma * sq / lam_n);
+        let a_new = (alpha[i] + step).clamp(0.0, 1.0);
+        if a_new == alpha[i] {
+            // Clipped no-op (α pinned at its box bound) — skip the axpy.
+            continue;
+        }
+        let scale = (a_new - alpha[i]) * y[i] / lam_n;
+        alpha[i] = a_new;
+        // Bounds-check-free fused axpy into both v (σ'-scaled CoCoA+
+        // local view) and dv (raw delta for the global merge).
+        for ((vv, dvv), &xv) in v.iter_mut().zip(dv.iter_mut()).zip(xi) {
+            let u = scale * xv;
+            *vv += sigma * u;
+            *dvv += u;
+        }
+    }
+}
+
+/// Sparse-row variant (Criteo-like workload).
+#[allow(clippy::too_many_arguments)]
+pub fn scd_pass_sparse(
+    rows: &[crate::data::SparseVec],
+    y: &[f32],
+    order: &[usize],
+    alpha: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+    lam_n: f32,
+    sigma: f32,
+) {
+    for &i in order {
+        let row = &rows[i];
+        let sq = row.sq_norm();
+        if sq <= 0.0 {
+            continue;
+        }
+        let margin = y[i] * row.dot_dense(v);
+        let step = (1.0 - margin) / (sigma * sq / lam_n);
+        let a_new = (alpha[i] + step).clamp(0.0, 1.0);
+        let scale = (a_new - alpha[i]) * y[i] / lam_n;
+        alpha[i] = a_new;
+        for (&j, &xv) in row.indices.iter().zip(&row.values) {
+            let u = scale * xv;
+            // CoCoA+ local view: own updates enter scaled by sigma'.
+            v[j as usize] += sigma * u;
+            dv[j as usize] += u;
+        }
+    }
+}
+
+/// Per-chunk duality-gap contributions: (Σ hinge, Σ α, Σ correct, n).
+pub fn gap_contributions(chunk: &Chunk, w: &[f32]) -> (f64, f64, f64, usize) {
+    let (mut hinge, mut alpha_sum, mut correct) = (0.0f64, 0.0f64, 0.0f64);
+    let mut n = 0usize;
+    match &chunk.payload {
+        Payload::DenseBinary { x, dim, y } => {
+            for (i, &yi) in y.iter().enumerate() {
+                if yi == 0.0 {
+                    continue;
+                }
+                let margin = yi * dot(&x[i * dim..(i + 1) * dim], w);
+                hinge += (1.0 - margin).max(0.0) as f64;
+                alpha_sum += chunk.state[i] as f64;
+                if margin > 0.0 {
+                    correct += 1.0;
+                }
+                n += 1;
+            }
+        }
+        Payload::SparseBinary { rows, y, .. } => {
+            for (i, &yi) in y.iter().enumerate() {
+                if yi == 0.0 {
+                    continue;
+                }
+                let margin = yi * rows[i].dot_dense(w);
+                hinge += (1.0 - margin).max(0.0) as f64;
+                alpha_sum += chunk.state[i] as f64;
+                if margin > 0.0 {
+                    correct += 1.0;
+                }
+                n += 1;
+            }
+        }
+        _ => panic!("gap_contributions on non-binary chunk"),
+    }
+    (hinge, alpha_sum, correct, n)
+}
+
+/// Combine per-chunk contributions: gap = (Σhinge − Σα)/n + λ‖w‖².
+pub fn duality_gap(total_hinge: f64, total_alpha: f64, n: usize, w: &[f32], lambda: f64) -> f64 {
+    let w_sq: f64 = w.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    (total_hinge - total_alpha) / n as f64 + lambda * w_sq
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: autovectorizes well and is deterministic.
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 4..a.len() {
+        tail += a[i] * b[i];
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunks::chunker::make_chunks;
+    use crate::data::synth;
+    use crate::util::Rng;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..103).map(|i| i as f32 * 0.1).collect();
+        let b: Vec<f32> = (0..103).map(|i| (i % 7) as f32).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-2);
+    }
+
+    #[test]
+    fn scd_alpha_in_box_and_v_consistent() {
+        let mut r = Rng::seed_from_u64(0);
+        let (s, dim) = (64usize, 8usize);
+        let x: Vec<f32> = (0..s * dim).map(|_| r.normal_f32()).collect();
+        let y: Vec<f32> = (0..s).map(|_| if r.bool(0.5) { 1.0 } else { -1.0 }).collect();
+        let mut alpha = vec![0.0f32; s];
+        let mut v = vec![0.0f32; dim];
+        let mut dv = vec![0.0f32; dim];
+        let order: Vec<usize> = (0..s).collect();
+        let lam_n = 0.01 * s as f32;
+        scd_pass_dense(&x, dim, &y, &order, &mut alpha, &mut v, &mut dv, lam_n, 1.0);
+        assert!(alpha.iter().all(|&a| (0.0..=1.0).contains(&a)));
+        // v must equal w(alpha) = 1/(λn) Σ α_i y_i x_i after starting from 0.
+        let mut w = vec![0.0f32; dim];
+        for i in 0..s {
+            for j in 0..dim {
+                w[j] += alpha[i] * y[i] * x[i * dim + j] / lam_n;
+            }
+        }
+        for j in 0..dim {
+            assert!((w[j] - v[j]).abs() < 1e-4, "{} vs {}", w[j], v[j]);
+        }
+        assert_eq!(v, dv); // started from v = 0
+    }
+
+    #[test]
+    fn gap_decreases_and_reaches_zero_on_separable() {
+        let mut r = Rng::seed_from_u64(1);
+        let (s, dim) = (256usize, 8usize);
+        let w_true: Vec<f32> = (0..dim).map(|_| r.normal_f32()).collect();
+        let x: Vec<f32> = (0..s * dim).map(|_| r.normal_f32()).collect();
+        let y: Vec<f32> = (0..s)
+            .map(|i| if dot(&x[i * dim..(i + 1) * dim], &w_true) >= 0.0 { 1.0 } else { -1.0 })
+            .collect();
+        let lambda = 0.01f64;
+        let lam_n = (lambda * s as f64) as f32;
+        let mut alpha = vec![0.0f32; s];
+        let mut v = vec![0.0f32; dim];
+        let mut dv = vec![0.0f32; dim];
+        let mut order: Vec<usize> = (0..s).collect();
+        let mut gaps = Vec::new();
+        for _ in 0..40 {
+            r.shuffle(&mut order);
+            scd_pass_dense(&x, dim, &y, &order, &mut alpha, &mut v, &mut dv, lam_n, 1.0);
+            let mut hinge = 0.0;
+            let mut asum = 0.0;
+            for i in 0..s {
+                let m = y[i] * dot(&x[i * dim..(i + 1) * dim], &v);
+                hinge += (1.0 - m).max(0.0) as f64;
+                asum += alpha[i] as f64;
+            }
+            gaps.push(duality_gap(hinge, asum, s, &v, lambda));
+        }
+        assert!(gaps[39] < 0.05, "final gap {}", gaps[39]);
+        assert!(gaps[39] < gaps[0] * 0.1, "{} -> {}", gaps[0], gaps[39]);
+    }
+
+    #[test]
+    fn sparse_and_dense_passes_agree_on_densified_data() {
+        let ds = synth::criteo_like_with(128, 500, 10, 8, 2);
+        let chunks = make_chunks(&ds, usize::MAX);
+        let chunk = &chunks[0];
+        let (rows, dim, y) = match &chunk.payload {
+            Payload::SparseBinary { rows, dim, y } => (rows, *dim, y),
+            _ => panic!(),
+        };
+        let dense: Vec<f32> = rows.iter().flat_map(|r| r.to_dense(dim)).collect();
+        let order: Vec<usize> = (0..y.len()).collect();
+        let lam_n = 0.01 * y.len() as f32;
+
+        let mut a1 = vec![0.0f32; y.len()];
+        let mut v1 = vec![0.0f32; dim];
+        let mut dv1 = vec![0.0f32; dim];
+        scd_pass_sparse(rows, y, &order, &mut a1, &mut v1, &mut dv1, lam_n, 2.0);
+
+        let mut a2 = vec![0.0f32; y.len()];
+        let mut v2 = vec![0.0f32; dim];
+        let mut dv2 = vec![0.0f32; dim];
+        scd_pass_dense(&dense, dim, y, &order, &mut a2, &mut v2, &mut dv2, lam_n, 2.0);
+
+        for (p, q) in a1.iter().zip(&a2) {
+            assert!((p - q).abs() < 1e-5);
+        }
+        for (p, q) in v1.iter().zip(&v2) {
+            assert!((p - q).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gap_contributions_skip_padding() {
+        let ds = synth::higgs_like(10, 3);
+        let mut chunks = make_chunks(&ds, usize::MAX);
+        let chunk = &mut chunks[0];
+        if let Payload::DenseBinary { y, .. } = &mut chunk.payload {
+            y[0] = 0.0; // mark padding
+        }
+        let w = vec![0.0f32; 28];
+        let (h, a, _c, n) = gap_contributions(chunk, &w);
+        assert_eq!(n, 9);
+        assert!((h - 9.0).abs() < 1e-9); // w=0 → hinge=1 each
+        assert_eq!(a, 0.0);
+    }
+}

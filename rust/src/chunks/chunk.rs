@@ -1,0 +1,117 @@
+//! The chunk format: samples + per-sample state in flat, serialization-free
+//! arrays (paper §4.4).
+
+use crate::data::SparseVec;
+
+/// Globally unique chunk identifier (assigned once at chunking time).
+pub type ChunkId = u32;
+
+/// Sample payload of a chunk. Variants mirror [`crate::data::FeatureMatrix`]
+/// plus the label storage, so a chunk is self-contained and movable.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Dense features + binary (±1) labels — the GLM/SVM workloads.
+    DenseBinary { x: Vec<f32>, dim: usize, y: Vec<f32> },
+    /// Dense features + class labels — the NN workloads.
+    DenseClass { x: Vec<f32>, dim: usize, y: Vec<i32> },
+    /// Sparse features + binary labels — the Criteo-like workload.
+    SparseBinary { rows: Vec<SparseVec>, dim: usize, y: Vec<f32> },
+    /// Token sequences (one sample = one sequence) — the LM workload.
+    Tokens { data: Vec<i32>, seq_len: usize },
+}
+
+/// A mobile data chunk: fixed-capacity set of samples, their labels and
+/// their per-sample optimizer state. Chunks are the scheduling granularity;
+/// tasks are not (paper §3 "Core concepts").
+#[derive(Clone, Debug)]
+pub struct Chunk {
+    pub id: ChunkId,
+    pub payload: Payload,
+    /// Per-sample state co-located with the data (CoCoA's α). Empty when the
+    /// algorithm keeps no per-sample state (lSGD).
+    pub state: Vec<f32>,
+    /// Original dataset indices of the samples (diagnostics / shuffling).
+    pub global_ids: Vec<u32>,
+}
+
+impl Chunk {
+    pub fn n_samples(&self) -> usize {
+        match &self.payload {
+            Payload::DenseBinary { y, .. } => y.len(),
+            Payload::DenseClass { y, .. } => y.len(),
+            Payload::SparseBinary { y, .. } => y.len(),
+            Payload::Tokens { data, seq_len } => data.len() / seq_len.max(&1),
+        }
+    }
+
+    /// In-memory footprint in bytes — what the transfer cost model charges
+    /// when the scheduler moves this chunk (§4.3).
+    pub fn size_bytes(&self) -> usize {
+        let payload = match &self.payload {
+            Payload::DenseBinary { x, y, .. } => x.len() * 4 + y.len() * 4,
+            Payload::DenseClass { x, y, .. } => x.len() * 4 + y.len() * 4,
+            Payload::SparseBinary { rows, y, .. } => {
+                rows.iter().map(|r| r.size_bytes()).sum::<usize>() + y.len() * 4
+            }
+            Payload::Tokens { data, .. } => data.len() * 4,
+        };
+        payload + self.state.len() * 4 + self.global_ids.len() * 4
+    }
+
+    /// Feature dimension (or sequence length for token chunks).
+    pub fn dim(&self) -> usize {
+        match &self.payload {
+            Payload::DenseBinary { dim, .. } => *dim,
+            Payload::DenseClass { dim, .. } => *dim,
+            Payload::SparseBinary { dim, .. } => *dim,
+            Payload::Tokens { seq_len, .. } => *seq_len,
+        }
+    }
+
+    /// Reset per-sample state to zeros (length = n_samples).
+    pub fn init_state(&mut self) {
+        self.state = vec![0.0; self.n_samples()];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense_chunk(n: usize, dim: usize) -> Chunk {
+        Chunk {
+            id: 1,
+            payload: Payload::DenseBinary {
+                x: vec![0.5; n * dim],
+                dim,
+                y: vec![1.0; n],
+            },
+            state: vec![],
+            global_ids: (0..n as u32).collect(),
+        }
+    }
+
+    #[test]
+    fn sizes_and_counts() {
+        let mut c = dense_chunk(10, 4);
+        assert_eq!(c.n_samples(), 10);
+        assert_eq!(c.dim(), 4);
+        let base = 10 * 4 * 4 + 10 * 4 + 10 * 4;
+        assert_eq!(c.size_bytes(), base);
+        c.init_state();
+        assert_eq!(c.state.len(), 10);
+        assert_eq!(c.size_bytes(), base + 40);
+    }
+
+    #[test]
+    fn token_chunk_counts_sequences() {
+        let c = Chunk {
+            id: 2,
+            payload: Payload::Tokens { data: vec![0; 64 * 3], seq_len: 64 },
+            state: vec![],
+            global_ids: vec![0, 1, 2],
+        };
+        assert_eq!(c.n_samples(), 3);
+        assert_eq!(c.dim(), 64);
+    }
+}

@@ -1,0 +1,199 @@
+//! Dataset → chunks: split training data into fixed-size mobile chunks.
+//!
+//! The paper uses 1 MiB chunks for CoCoA and 200 KiB for lSGD (§5.1); the
+//! chunk size is a tunable (§4.4, "e.g. to the CPU cache size").
+
+use crate::data::{Dataset, FeatureMatrix, Labels};
+use crate::util::Rng;
+
+use super::{Chunk, Payload};
+
+/// Split `ds` into chunks of at most `chunk_bytes` bytes each, preserving
+/// sample order (contiguous chunking; pair with
+/// [`crate::coordinator::scheduler`]'s random assignment for the Chicle
+/// behaviour, or assign contiguously for the Snap-ML-style baseline).
+pub fn make_chunks(ds: &Dataset, chunk_bytes: usize) -> Vec<Chunk> {
+    let n = ds.n_samples();
+    let mut chunks = Vec::new();
+    let mut start = 0usize;
+    let mut next_id: u32 = 0;
+    while start < n {
+        let take = samples_for_budget(ds, start, chunk_bytes).max(1).min(n - start);
+        let end = start + take;
+        let payload = slice_payload(ds, start, end);
+        let mut chunk = Chunk {
+            id: next_id,
+            payload,
+            state: vec![],
+            global_ids: (start as u32..end as u32).collect(),
+        };
+        chunk.init_state();
+        chunks.push(chunk);
+        next_id += 1;
+        start = end;
+    }
+    chunks
+}
+
+/// Like [`make_chunks`] but with samples globally shuffled first (seeded).
+/// Random sample-to-chunk placement is what gives Chicle its partitioning
+/// advantage on session-correlated data (paper §A.1, Criteo).
+pub fn make_chunks_shuffled(ds: &Dataset, chunk_bytes: usize, seed: u64) -> Vec<Chunk> {
+    let mut order: Vec<usize> = (0..ds.n_samples()).collect();
+    Rng::seed_from_u64(seed).shuffle(&mut order);
+    let permuted = permute(ds, &order);
+    let mut chunks = make_chunks(&permuted, chunk_bytes);
+    // Rewrite global ids to the original dataset indices.
+    for c in &mut chunks {
+        for g in c.global_ids.iter_mut() {
+            *g = order[*g as usize] as u32;
+        }
+    }
+    chunks
+}
+
+fn per_sample_bytes(ds: &Dataset, i: usize) -> usize {
+    let feat = match &ds.features {
+        FeatureMatrix::Dense { dim, .. } => dim * 4,
+        FeatureMatrix::Sparse { rows, .. } => rows[i].size_bytes(),
+        FeatureMatrix::Tokens { seq_len, .. } => seq_len * 4,
+    };
+    feat + 4 /* label */ + 4 /* state */ + 4 /* global id */
+}
+
+fn samples_for_budget(ds: &Dataset, start: usize, budget: usize) -> usize {
+    let n = ds.n_samples();
+    let mut used = 0usize;
+    let mut count = 0usize;
+    while start + count < n {
+        let s = per_sample_bytes(ds, start + count);
+        if used + s > budget && count > 0 {
+            break;
+        }
+        used += s;
+        count += 1;
+        if used >= budget {
+            break;
+        }
+    }
+    count
+}
+
+fn slice_payload(ds: &Dataset, start: usize, end: usize) -> Payload {
+    match (&ds.features, &ds.labels) {
+        (FeatureMatrix::Dense { data, dim }, Labels::Binary(y)) => Payload::DenseBinary {
+            x: data[start * dim..end * dim].to_vec(),
+            dim: *dim,
+            y: y[start..end].to_vec(),
+        },
+        (FeatureMatrix::Dense { data, dim }, Labels::Class(y)) => Payload::DenseClass {
+            x: data[start * dim..end * dim].to_vec(),
+            dim: *dim,
+            y: y[start..end].to_vec(),
+        },
+        (FeatureMatrix::Sparse { rows, dim }, Labels::Binary(y)) => Payload::SparseBinary {
+            rows: rows[start..end].to_vec(),
+            dim: *dim,
+            y: y[start..end].to_vec(),
+        },
+        (FeatureMatrix::Tokens { data, seq_len }, _) => Payload::Tokens {
+            data: data[start * seq_len..end * seq_len].to_vec(),
+            seq_len: *seq_len,
+        },
+        _ => panic!("unsupported dataset/label combination for chunking"),
+    }
+}
+
+fn permute(ds: &Dataset, order: &[usize]) -> Dataset {
+    let features = match &ds.features {
+        FeatureMatrix::Dense { data, dim } => {
+            let mut out = Vec::with_capacity(data.len());
+            for &i in order {
+                out.extend_from_slice(&data[i * dim..(i + 1) * dim]);
+            }
+            FeatureMatrix::Dense { data: out, dim: *dim }
+        }
+        FeatureMatrix::Sparse { rows, dim } => FeatureMatrix::Sparse {
+            rows: order.iter().map(|&i| rows[i].clone()).collect(),
+            dim: *dim,
+        },
+        FeatureMatrix::Tokens { data, seq_len } => {
+            let mut out = Vec::with_capacity(data.len());
+            for &i in order {
+                out.extend_from_slice(&data[i * seq_len..(i + 1) * seq_len]);
+            }
+            FeatureMatrix::Tokens { data: out, seq_len: *seq_len }
+        }
+    };
+    let labels = match &ds.labels {
+        Labels::Binary(y) => Labels::Binary(order.iter().map(|&i| y[i]).collect()),
+        Labels::Class(y) => Labels::Class(order.iter().map(|&i| y[i]).collect()),
+        Labels::None => Labels::None,
+    };
+    Dataset { name: ds.name.clone(), features, labels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn chunks_cover_all_samples_exactly_once() {
+        let ds = synth::higgs_like(1000, 1);
+        let chunks = make_chunks(&ds, 8 * 1024);
+        let total: usize = chunks.iter().map(|c| c.n_samples()).sum();
+        assert_eq!(total, 1000);
+        let mut ids: Vec<u32> = chunks.iter().flat_map(|c| c.global_ids.clone()).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..1000).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn chunks_respect_size_budget() {
+        let ds = synth::higgs_like(1000, 2);
+        let budget = 4 * 1024;
+        let chunks = make_chunks(&ds, budget);
+        assert!(chunks.len() > 1);
+        for c in &chunks {
+            // +1 sample of slack: budget is a target, samples are atomic.
+            assert!(c.size_bytes() <= budget + 28 * 4 + 12, "{}", c.size_bytes());
+        }
+    }
+
+    #[test]
+    fn sparse_chunking_uses_actual_row_sizes() {
+        let ds = synth::criteo_like_with(500, 10_000, 20, 16, 3);
+        let chunks = make_chunks(&ds, 2 * 1024);
+        let total: usize = chunks.iter().map(|c| c.n_samples()).sum();
+        assert_eq!(total, 500);
+        assert!(chunks.len() > 5);
+    }
+
+    #[test]
+    fn shuffled_chunks_break_session_locality() {
+        let ds = synth::criteo_like_with(512, 10_000, 20, 16, 4);
+        let chunks = make_chunks_shuffled(&ds, 4 * 1024, 7);
+        let total: usize = chunks.iter().map(|c| c.n_samples()).sum();
+        assert_eq!(total, 512);
+        // global ids within a chunk should NOT be contiguous
+        let ids = &chunks[0].global_ids;
+        let contiguous = ids.windows(2).filter(|w| w[1] == w[0] + 1).count();
+        assert!(contiguous < ids.len() / 2, "still contiguous: {contiguous}");
+        // all ids still covered exactly once
+        let mut all: Vec<u32> = chunks.iter().flat_map(|c| c.global_ids.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..512).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn token_dataset_chunks_by_sequence() {
+        let ds = synth::token_corpus(64, 32, 128, 5);
+        let chunks = make_chunks(&ds, 1024);
+        let total: usize = chunks.iter().map(|c| c.n_samples()).sum();
+        assert_eq!(total, 64);
+        for c in &chunks {
+            assert_eq!(c.dim(), 32);
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Mobile data chunks — the scheduling currency of uni-tasks (paper §3, §4.4).
+//!
+//! All training samples live in small fixed-size *stateful* chunks that the
+//! scheduler moves between tasks in-between iterations. A chunk bundles its
+//! samples with their per-sample optimizer state (CoCoA's dual variables α),
+//! "ensuring that state and the data it correlates to are always moved
+//! together" (§4.4). The in-memory layout is flat arrays — nothing needs
+//! serialization, mirroring the paper's one-sided-RDMA constraint.
+
+pub mod chunk;
+pub mod chunker;
+pub mod store;
+pub mod transfer;
+
+pub use chunk::{Chunk, ChunkId, Payload};
+pub use chunker::make_chunks;
+pub use store::ChunkStore;
+pub use transfer::NetworkModel;

@@ -1,0 +1,145 @@
+//! Per-task chunk store.
+//!
+//! Each uni-task owns the set of chunks currently assigned to it and has
+//! full random access to every sample across all local chunks (paper §3,
+//! core concept 2). The ownership contract is enforced by the coordinator:
+//! chunks are only added/removed between iterations.
+
+use super::{Chunk, ChunkId};
+
+/// The set of chunks local to one uni-task.
+#[derive(Debug, Default)]
+pub struct ChunkStore {
+    chunks: Vec<Chunk>,
+}
+
+impl ChunkStore {
+    pub fn new() -> Self {
+        ChunkStore { chunks: Vec::new() }
+    }
+
+    pub fn from_chunks(chunks: Vec<Chunk>) -> Self {
+        ChunkStore { chunks }
+    }
+
+    pub fn add(&mut self, chunk: Chunk) {
+        debug_assert!(
+            !self.chunks.iter().any(|c| c.id == chunk.id),
+            "duplicate chunk {}",
+            chunk.id
+        );
+        self.chunks.push(chunk);
+    }
+
+    /// Remove and return a chunk by id (None if not local).
+    pub fn remove(&mut self, id: ChunkId) -> Option<Chunk> {
+        let pos = self.chunks.iter().position(|c| c.id == id)?;
+        Some(self.chunks.swap_remove(pos))
+    }
+
+    /// Drain all chunks (task termination on scale-in).
+    pub fn drain(&mut self) -> Vec<Chunk> {
+        std::mem::take(&mut self.chunks)
+    }
+
+    pub fn chunk_ids(&self) -> Vec<ChunkId> {
+        self.chunks.iter().map(|c| c.id).collect()
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.chunks.iter().map(|c| c.n_samples()).sum()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.chunks.iter().map(|c| c.size_bytes()).sum()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Chunk> {
+        self.chunks.iter()
+    }
+
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = &mut Chunk> {
+        self.chunks.iter_mut()
+    }
+
+    pub fn get(&self, id: ChunkId) -> Option<&Chunk> {
+        self.chunks.iter().find(|c| c.id == id)
+    }
+
+    pub fn get_mut(&mut self, id: ChunkId) -> Option<&mut Chunk> {
+        self.chunks.iter_mut().find(|c| c.id == id)
+    }
+
+    /// Locate sample `k` (in local flat order) as (chunk index, row in chunk).
+    pub fn locate(&self, k: usize) -> Option<(usize, usize)> {
+        let mut rem = k;
+        for (ci, c) in self.chunks.iter().enumerate() {
+            let n = c.n_samples();
+            if rem < n {
+                return Some((ci, rem));
+            }
+            rem -= n;
+        }
+        None
+    }
+
+    pub fn chunks(&self) -> &[Chunk] {
+        &self.chunks
+    }
+
+    pub fn chunks_mut(&mut self) -> &mut [Chunk] {
+        &mut self.chunks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunks::Payload;
+
+    fn chunk(id: ChunkId, n: usize) -> Chunk {
+        Chunk {
+            id,
+            payload: Payload::DenseBinary { x: vec![0.0; n * 2], dim: 2, y: vec![1.0; n] },
+            state: vec![0.0; n],
+            global_ids: (0..n as u32).collect(),
+        }
+    }
+
+    #[test]
+    fn add_remove_roundtrip() {
+        let mut s = ChunkStore::new();
+        s.add(chunk(1, 3));
+        s.add(chunk(2, 5));
+        assert_eq!(s.n_chunks(), 2);
+        assert_eq!(s.n_samples(), 8);
+        let c = s.remove(1).unwrap();
+        assert_eq!(c.n_samples(), 3);
+        assert_eq!(s.n_samples(), 5);
+        assert!(s.remove(1).is_none());
+    }
+
+    #[test]
+    fn locate_flat_sample_index() {
+        let mut s = ChunkStore::new();
+        s.add(chunk(1, 3));
+        s.add(chunk(2, 5));
+        assert_eq!(s.locate(0), Some((0, 0)));
+        assert_eq!(s.locate(2), Some((0, 2)));
+        assert_eq!(s.locate(3), Some((1, 0)));
+        assert_eq!(s.locate(7), Some((1, 4)));
+        assert_eq!(s.locate(8), None);
+    }
+
+    #[test]
+    fn drain_empties_store() {
+        let mut s = ChunkStore::from_chunks(vec![chunk(1, 2), chunk(2, 2)]);
+        let all = s.drain();
+        assert_eq!(all.len(), 2);
+        assert_eq!(s.n_chunks(), 0);
+    }
+}

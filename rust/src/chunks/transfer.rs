@@ -1,0 +1,92 @@
+//! Chunk-transfer cost model — the RDMA substitute.
+//!
+//! The paper moves chunks with one-sided RDMA reads over 56 Gbit/s
+//! Infiniband (§4.3). In this reproduction chunks move between in-process
+//! stores by pointer, and this model charges the *virtual* time a real
+//! transfer would take, so scheduler decisions (e.g. rebalancing
+//! granularity, scale-in drain cost) see the same trade-offs.
+
+use std::time::Duration;
+
+/// Bandwidth/latency model of the cluster interconnect.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkModel {
+    /// Link bandwidth in bytes/second (default: 56 Gbit/s IB ≈ 7e9 B/s).
+    pub bandwidth_bps: f64,
+    /// Per-operation latency (RDMA read setup + completion).
+    pub latency: Duration,
+    /// Effective utilization factor (protocol overheads, 0 < f <= 1).
+    pub efficiency: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        NetworkModel {
+            bandwidth_bps: 56.0e9 / 8.0,
+            latency: Duration::from_micros(3),
+            efficiency: 0.9,
+        }
+    }
+}
+
+impl NetworkModel {
+    /// Cost of moving `bytes` in one RDMA-style transfer.
+    pub fn transfer_cost(&self, bytes: usize) -> Duration {
+        let secs = bytes as f64 / (self.bandwidth_bps * self.efficiency);
+        self.latency + Duration::from_secs_f64(secs)
+    }
+
+    /// Cost of moving a set of chunks sequentially over one link.
+    pub fn bulk_cost(&self, chunk_bytes: &[usize]) -> Duration {
+        chunk_bytes
+            .iter()
+            .map(|&b| self.transfer_cost(b))
+            .sum()
+    }
+
+    /// Cost of an allreduce-style model exchange: each of `k` tasks sends
+    /// and receives `bytes` (the paper's ≈16 MiB/task Criteo example, §4.3).
+    pub fn model_exchange_cost(&self, bytes: usize, k: usize) -> Duration {
+        if k <= 1 {
+            return Duration::ZERO;
+        }
+        // Simple synchronous parameter-server model: driver receives k
+        // updates then broadcasts; link serialized at the driver.
+        let one = self.transfer_cost(bytes);
+        one * (2 * k) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_scales_with_bytes() {
+        let m = NetworkModel::default();
+        let small = m.transfer_cost(1024);
+        let big = m.transfer_cost(1024 * 1024);
+        assert!(big > small);
+        // 1 MiB over ~6.3 GB/s effective ≈ 166 µs + 3 µs latency.
+        assert!(big < Duration::from_millis(1));
+        assert!(big > Duration::from_micros(100));
+    }
+
+    #[test]
+    fn latency_dominates_tiny_transfers() {
+        let m = NetworkModel::default();
+        let c = m.transfer_cost(1);
+        assert!(c >= m.latency);
+        assert!(c < m.latency * 2);
+    }
+
+    #[test]
+    fn bulk_and_exchange() {
+        let m = NetworkModel::default();
+        let bulk = m.bulk_cost(&[1024, 1024, 1024]);
+        assert_eq!(bulk, m.transfer_cost(1024) * 3);
+        assert_eq!(m.model_exchange_cost(16 << 20, 1), Duration::ZERO);
+        let x16 = m.model_exchange_cost(16 << 20, 16);
+        assert!(x16 > m.transfer_cost(16 << 20) * 16);
+    }
+}

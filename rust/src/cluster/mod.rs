@@ -1,0 +1,8 @@
+//! Simulated cluster: nodes with speed factors and a trace-driven
+//! resource manager (the YARN substitute — DESIGN.md §Substitutions).
+
+pub mod node;
+pub mod rm;
+
+pub use node::{NodeId, NodeSpec};
+pub use rm::{ResourceEvent, ResourceManager, TraceResourceManager};

@@ -1,0 +1,70 @@
+//! Cluster nodes.
+//!
+//! The paper's testbed mixes Xeon E5-2630/40/50 v2/v3 generations and, for
+//! some experiments, down-clocks four nodes from 2.6 to 1.2 GHz (§5.1,
+//! §5.4). Heterogeneity is expressed here as a per-node `speed` factor
+//! relative to the fastest node: a task processing S samples on node n
+//! takes `S * per_sample_cost / speed(n)` virtual time.
+
+pub type NodeId = u32;
+
+/// Static description of one cluster node.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeSpec {
+    pub id: NodeId,
+    /// Relative speed: 1.0 = fast baseline; the paper's down-clocked nodes
+    /// run at 1.2/2.6 ≈ 0.46, the "1.5× slower" scenario at 1/1.5 ≈ 0.67.
+    pub speed: f64,
+}
+
+impl NodeSpec {
+    pub fn new(id: NodeId, speed: f64) -> Self {
+        assert!(speed > 0.0, "node speed must be positive");
+        NodeSpec { id, speed }
+    }
+
+    /// A homogeneous cluster of `n` unit-speed nodes.
+    pub fn homogeneous(n: usize) -> Vec<NodeSpec> {
+        (0..n as u32).map(|id| NodeSpec::new(id, 1.0)).collect()
+    }
+
+    /// The paper's §5.4 scenario-1 cluster: `n_fast` unit-speed nodes and
+    /// `n_slow` nodes slower by `factor` (factor = 1.5 → speed 0.667).
+    pub fn heterogeneous(n_fast: usize, n_slow: usize, factor: f64) -> Vec<NodeSpec> {
+        let mut v = Vec::with_capacity(n_fast + n_slow);
+        for id in 0..n_fast as u32 {
+            v.push(NodeSpec::new(id, 1.0));
+        }
+        for id in 0..n_slow as u32 {
+            v.push(NodeSpec::new(n_fast as u32 + id, 1.0 / factor));
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn homogeneous_all_unit_speed() {
+        let nodes = NodeSpec::homogeneous(4);
+        assert_eq!(nodes.len(), 4);
+        assert!(nodes.iter().all(|n| n.speed == 1.0));
+        assert_eq!(nodes[3].id, 3);
+    }
+
+    #[test]
+    fn heterogeneous_speeds() {
+        let nodes = NodeSpec::heterogeneous(8, 8, 1.5);
+        assert_eq!(nodes.len(), 16);
+        assert_eq!(nodes[0].speed, 1.0);
+        assert!((nodes[8].speed - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_speed_rejected() {
+        NodeSpec::new(0, 0.0);
+    }
+}

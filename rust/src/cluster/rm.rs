@@ -1,0 +1,184 @@
+//! Resource manager simulation (the YARN substitute).
+//!
+//! Chicle's elastic scaling policy "interfaces with the resource manager
+//! ... to make resource requests and get resource assignment and revocation
+//! notices", with advance notice before revocation (paper §4.5). Here the
+//! RM is driven by a timestamped trace of node-availability events, which
+//! lets the harness replay the paper's scenarios (±2 nodes every 20 s)
+//! deterministically.
+
+use std::time::Duration;
+
+use super::node::{NodeId, NodeSpec};
+
+/// An availability change the RM reports to the elastic policy.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ResourceEvent {
+    /// New nodes were assigned to the application.
+    Assigned(Vec<NodeSpec>),
+    /// These nodes will be revoked; the application must drain them now
+    /// (the paper's advance-notice contract, §4.5).
+    RevokeNotice(Vec<NodeId>),
+}
+
+/// Interface the elastic policy programs against.
+pub trait ResourceManager: Send {
+    /// Poll for events up to virtual time `now`.
+    fn poll(&mut self, now: Duration) -> Vec<ResourceEvent>;
+    /// Nodes currently assigned (after all events up to the last poll).
+    fn assigned(&self) -> &[NodeSpec];
+}
+
+/// One trace entry: at `at`, the application's allocation becomes `nodes`.
+#[derive(Clone, Debug)]
+pub struct TracePoint {
+    pub at: Duration,
+    pub nodes: Vec<NodeSpec>,
+}
+
+/// Trace-driven RM: replays a list of target allocations.
+pub struct TraceResourceManager {
+    trace: Vec<TracePoint>,
+    next: usize,
+    current: Vec<NodeSpec>,
+}
+
+impl TraceResourceManager {
+    pub fn new(mut trace: Vec<TracePoint>) -> Self {
+        trace.sort_by_key(|p| p.at);
+        assert!(!trace.is_empty(), "trace must have an initial allocation");
+        assert_eq!(trace[0].at, Duration::ZERO, "trace must start at t=0");
+        let current = trace[0].nodes.clone();
+        TraceResourceManager { trace, next: 1, current }
+    }
+
+    /// Fixed allocation of `nodes` for the whole run (rigid mode).
+    pub fn rigid(nodes: Vec<NodeSpec>) -> Self {
+        TraceResourceManager::new(vec![TracePoint { at: Duration::ZERO, nodes }])
+    }
+
+    /// The paper's elastic scenarios (§5.3): start at `from` nodes and step
+    /// by ±2 every `interval` until `to` nodes, from a homogeneous pool.
+    pub fn gradual(from: usize, to: usize, interval: Duration) -> Self {
+        let pool = NodeSpec::homogeneous(from.max(to));
+        let mut trace = vec![TracePoint { at: Duration::ZERO, nodes: pool[..from].to_vec() }];
+        let mut cur = from as i64;
+        let step: i64 = if to >= from { 2 } else { -2 };
+        let mut t = Duration::ZERO;
+        while cur != to as i64 {
+            cur = (cur + step).clamp(to.min(from) as i64, to.max(from) as i64);
+            t += interval;
+            trace.push(TracePoint { at: t, nodes: pool[..cur as usize].to_vec() });
+        }
+        TraceResourceManager::new(trace)
+    }
+
+    /// The full trace (for harness introspection / projections).
+    pub fn trace(&self) -> &[TracePoint] {
+        &self.trace
+    }
+
+    /// Target allocation at time `t` (ignoring poll state).
+    pub fn allocation_at(&self, t: Duration) -> &[NodeSpec] {
+        let mut cur = &self.trace[0].nodes;
+        for p in &self.trace {
+            if p.at <= t {
+                cur = &p.nodes;
+            } else {
+                break;
+            }
+        }
+        cur
+    }
+}
+
+impl ResourceManager for TraceResourceManager {
+    fn poll(&mut self, now: Duration) -> Vec<ResourceEvent> {
+        let mut events = Vec::new();
+        while self.next < self.trace.len() && self.trace[self.next].at <= now {
+            let target = self.trace[self.next].nodes.clone();
+            let added: Vec<NodeSpec> = target
+                .iter()
+                .filter(|n| !self.current.iter().any(|c| c.id == n.id))
+                .cloned()
+                .collect();
+            let removed: Vec<NodeId> = self
+                .current
+                .iter()
+                .filter(|c| !target.iter().any(|n| n.id == c.id))
+                .map(|c| c.id)
+                .collect();
+            if !removed.is_empty() {
+                events.push(ResourceEvent::RevokeNotice(removed));
+            }
+            if !added.is_empty() {
+                events.push(ResourceEvent::Assigned(added));
+            }
+            self.current = target;
+            self.next += 1;
+        }
+        events
+    }
+
+    fn assigned(&self) -> &[NodeSpec] {
+        &self.current
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn secs(s: u64) -> Duration {
+        Duration::from_secs(s)
+    }
+
+    #[test]
+    fn rigid_never_changes() {
+        let mut rm = TraceResourceManager::rigid(NodeSpec::homogeneous(4));
+        assert!(rm.poll(secs(100)).is_empty());
+        assert_eq!(rm.assigned().len(), 4);
+    }
+
+    #[test]
+    fn gradual_scale_out_2_to_16() {
+        let rm = TraceResourceManager::gradual(2, 16, secs(20));
+        // 7 steps of +2 after the initial point.
+        assert_eq!(rm.trace().len(), 8);
+        assert_eq!(rm.allocation_at(secs(0)).len(), 2);
+        assert_eq!(rm.allocation_at(secs(20)).len(), 4);
+        assert_eq!(rm.allocation_at(secs(139)).len(), 14);
+        assert_eq!(rm.allocation_at(secs(140)).len(), 16);
+        assert_eq!(rm.allocation_at(secs(10_000)).len(), 16);
+    }
+
+    #[test]
+    fn gradual_scale_in_16_to_2() {
+        let mut rm = TraceResourceManager::gradual(16, 2, secs(20));
+        assert_eq!(rm.assigned().len(), 16);
+        let ev = rm.poll(secs(20));
+        assert_eq!(ev.len(), 1);
+        match &ev[0] {
+            ResourceEvent::RevokeNotice(ids) => assert_eq!(ids.len(), 2),
+            _ => panic!("expected revoke"),
+        }
+        assert_eq!(rm.assigned().len(), 14);
+        // Polling far ahead drains the rest of the trace.
+        rm.poll(secs(10_000));
+        assert_eq!(rm.assigned().len(), 2);
+    }
+
+    #[test]
+    fn poll_emits_assign_and_revoke_together_on_swap() {
+        let a = NodeSpec::homogeneous(2);
+        let b = vec![NodeSpec::new(5, 1.0), NodeSpec::new(6, 1.0)];
+        let mut rm = TraceResourceManager::new(vec![
+            TracePoint { at: secs(0), nodes: a },
+            TracePoint { at: secs(10), nodes: b },
+        ]);
+        let ev = rm.poll(secs(10));
+        assert_eq!(ev.len(), 2);
+        assert!(matches!(ev[0], ResourceEvent::RevokeNotice(_)));
+        assert!(matches!(ev[1], ResourceEvent::Assigned(_)));
+    }
+}

@@ -1,0 +1,615 @@
+//! Configuration system: everything a training session needs, loadable
+//! from JSON (the launcher's input) or built programmatically.
+//!
+//! (De)serialization is hand-rolled over [`crate::util::json`] — this
+//! repo builds fully offline without serde; see `util` module docs.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::rm::TracePoint;
+use crate::cluster::{NodeSpec, TraceResourceManager};
+use crate::util::Json;
+
+/// How iteration time is charged (DESIGN.md §Substitutions).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TimeModel {
+    /// The paper's normalized projection (§5.3): per-iteration time from
+    /// the wave/balance model, 1 unit = 1/16 of data on a unit-speed node.
+    #[default]
+    Projected,
+    /// Wallclock compute time divided by node speed (swimlane experiments).
+    Measured,
+}
+
+/// Which compute path the solvers use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ComputeBackend {
+    /// Pure-rust math (fast; verified against the HLO path by tests).
+    #[default]
+    Native,
+    /// AOT-compiled HLO executed via PJRT (the production path).
+    Hlo,
+}
+
+/// Uni-tasks (the paper's contribution) or emulated micro-tasks (§5.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskModel {
+    /// K always equals the number of currently-assigned nodes.
+    UniTasks,
+    /// K fixed regardless of node count (micro-task emulation; time is
+    /// projected with the wave model).
+    MicroTasks { k: usize },
+}
+
+/// Sample→chunk placement (paper §A.1: Snap ML splits contiguously, Chicle
+/// assigns randomly — this is the Criteo difference).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Partitioning {
+    #[default]
+    RandomChunks,
+    Contiguous,
+}
+
+/// Node-availability schedule, serializable for JSON configs.
+#[derive(Clone, Debug)]
+pub enum ElasticSpec {
+    /// Fixed homogeneous allocation.
+    Rigid { nodes: usize },
+    /// Fixed heterogeneous allocation: (fast, slow, slowdown factor).
+    Heterogeneous { fast: usize, slow: usize, factor: f64 },
+    /// The paper's ±2-nodes-every-`interval_s` scenario (§5.3).
+    Gradual { from: usize, to: usize, interval_s: f64 },
+    /// Arbitrary trace: (at_seconds, node speeds).
+    Trace { points: Vec<(f64, Vec<f64>)> },
+}
+
+impl ElasticSpec {
+    /// Materialize the trace-driven resource manager.
+    pub fn build_rm(&self) -> TraceResourceManager {
+        match self {
+            ElasticSpec::Rigid { nodes } => {
+                TraceResourceManager::rigid(NodeSpec::homogeneous(*nodes))
+            }
+            ElasticSpec::Heterogeneous { fast, slow, factor } => {
+                TraceResourceManager::rigid(NodeSpec::heterogeneous(*fast, *slow, *factor))
+            }
+            ElasticSpec::Gradual { from, to, interval_s } => {
+                TraceResourceManager::gradual(*from, *to, Duration::from_secs_f64(*interval_s))
+            }
+            ElasticSpec::Trace { points } => {
+                let trace = points
+                    .iter()
+                    .map(|(at, speeds)| TracePoint {
+                        at: Duration::from_secs_f64(*at),
+                        nodes: speeds
+                            .iter()
+                            .enumerate()
+                            .map(|(i, s)| NodeSpec::new(i as u32, *s))
+                            .collect(),
+                    })
+                    .collect();
+                TraceResourceManager::new(trace)
+            }
+        }
+    }
+
+    /// Maximum concurrent node count over the whole schedule.
+    pub fn max_nodes(&self) -> usize {
+        match self {
+            ElasticSpec::Rigid { nodes } => *nodes,
+            ElasticSpec::Heterogeneous { fast, slow, .. } => fast + slow,
+            ElasticSpec::Gradual { from, to, .. } => (*from).max(*to),
+            ElasticSpec::Trace { points } => {
+                points.iter().map(|(_, s)| s.len()).max().unwrap_or(0)
+            }
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            ElasticSpec::Rigid { nodes } => Json::obj(vec![
+                ("kind", Json::str("rigid")),
+                ("nodes", Json::num(*nodes as f64)),
+            ]),
+            ElasticSpec::Heterogeneous { fast, slow, factor } => Json::obj(vec![
+                ("kind", Json::str("heterogeneous")),
+                ("fast", Json::num(*fast as f64)),
+                ("slow", Json::num(*slow as f64)),
+                ("factor", Json::num(*factor)),
+            ]),
+            ElasticSpec::Gradual { from, to, interval_s } => Json::obj(vec![
+                ("kind", Json::str("gradual")),
+                ("from", Json::num(*from as f64)),
+                ("to", Json::num(*to as f64)),
+                ("interval_s", Json::num(*interval_s)),
+            ]),
+            ElasticSpec::Trace { points } => Json::obj(vec![
+                ("kind", Json::str("trace")),
+                (
+                    "points",
+                    Json::Arr(
+                        points
+                            .iter()
+                            .map(|(at, speeds)| {
+                                Json::Arr(vec![
+                                    Json::num(*at),
+                                    Json::Arr(speeds.iter().map(|s| Json::num(*s)).collect()),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(match v.get("kind")?.as_str()? {
+            "rigid" => ElasticSpec::Rigid { nodes: v.get("nodes")?.as_usize()? },
+            "heterogeneous" => ElasticSpec::Heterogeneous {
+                fast: v.get("fast")?.as_usize()?,
+                slow: v.get("slow")?.as_usize()?,
+                factor: v.get("factor")?.as_f64()?,
+            },
+            "gradual" => ElasticSpec::Gradual {
+                from: v.get("from")?.as_usize()?,
+                to: v.get("to")?.as_usize()?,
+                interval_s: v.get("interval_s")?.as_f64()?,
+            },
+            "trace" => {
+                let points = v
+                    .get("points")?
+                    .as_arr()?
+                    .iter()
+                    .map(|p| {
+                        let pair = p.as_arr()?;
+                        let at = pair[0].as_f64()?;
+                        let speeds = pair[1]
+                            .as_arr()?
+                            .iter()
+                            .map(|s| s.as_f64())
+                            .collect::<Result<Vec<f64>>>()?;
+                        Ok((at, speeds))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                ElasticSpec::Trace { points }
+            }
+            other => bail!("unknown elastic kind {other:?}"),
+        })
+    }
+}
+
+/// NN architectures with AOT artifacts (prefixes must match the manifest).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Mlp,
+    Cnn,
+    TfmSmall,
+    TfmE2e,
+}
+
+impl ModelKind {
+    pub fn artifact_prefix(&self) -> &'static str {
+        match self {
+            ModelKind::Mlp => "mlp",
+            ModelKind::Cnn => "cnn",
+            ModelKind::TfmSmall => "tfm_small",
+            ModelKind::TfmE2e => "tfm_e2e",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "mlp" => ModelKind::Mlp,
+            "cnn" => ModelKind::Cnn,
+            "tfm_small" => ModelKind::TfmSmall,
+            "tfm_e2e" => ModelKind::TfmE2e,
+            other => bail!("unknown model kind {other:?}"),
+        })
+    }
+}
+
+/// CoCoA hyper-parameters (paper §5.1). The objective is the *normalized*
+/// SVM primal `lambda/2 ||w||^2 + 1/n sum hinge_i`; the paper's
+/// "λ = #samples × 0.01" refers to the unnormalized objective and maps to
+/// `lambda = 0.01` here (DESIGN.md §Substitutions).
+#[derive(Clone, Debug)]
+pub struct CocoaConfig {
+    pub lambda: f64,
+    /// Fraction of each task's local samples visited per iteration
+    /// (paper: H = |local samples| → 1.0).
+    pub local_passes: f64,
+    /// Convergence target on the duality gap.
+    pub target_gap: f64,
+}
+
+impl Default for CocoaConfig {
+    fn default() -> Self {
+        CocoaConfig { lambda: 0.01, local_passes: 1.0, target_gap: 1e-3 }
+    }
+}
+
+/// Local-SGD hyper-parameters (paper §5.1: L=8, H=16, momentum 0.9,
+/// lr scaled by sqrt(K)).
+#[derive(Clone, Debug)]
+pub struct LsgdConfig {
+    pub model: ModelKind,
+    /// Mini-batch size of one local step.
+    pub l: usize,
+    /// Local steps per iteration (H=1 degrades to mSGD).
+    pub h: usize,
+    /// Base learning rate α; effective α' = α·√K when `scale_lr` is set.
+    pub lr: f64,
+    pub momentum: f64,
+    pub scale_lr: bool,
+    /// Convergence target on test accuracy.
+    pub target_acc: f64,
+    /// Evaluate the test metric every this many iterations.
+    pub eval_every: usize,
+}
+
+impl LsgdConfig {
+    pub fn paper_defaults(model: ModelKind) -> Self {
+        LsgdConfig {
+            model,
+            l: 8,
+            h: 16,
+            lr: 1e-4,
+            momentum: 0.9,
+            scale_lr: true,
+            target_acc: 0.55,
+            eval_every: 10,
+        }
+    }
+}
+
+/// Which training algorithm a session runs.
+#[derive(Clone, Debug)]
+pub enum AlgoConfig {
+    Cocoa(CocoaConfig),
+    Lsgd(LsgdConfig),
+}
+
+/// Policy toggles (paper §4.5).
+#[derive(Clone, Debug)]
+pub struct PolicyConfig {
+    /// Move chunks from slow to fast nodes based on learned task runtimes.
+    pub rebalance: bool,
+    /// Iterations of history for the runtime estimate (paper's `I`).
+    pub rebalance_window: usize,
+    /// Max chunks moved per task per iteration ("gradually, across
+    /// multiple iterations").
+    pub rebalance_step: usize,
+    /// Background global shuffling of chunks between tasks.
+    pub shuffle: bool,
+    pub shuffle_every: usize,
+    /// Straggler mitigation: flag tasks slower than median × factor.
+    pub straggler: bool,
+    pub straggler_factor: f64,
+}
+
+impl Default for PolicyConfig {
+    fn default() -> Self {
+        PolicyConfig {
+            rebalance: true,
+            rebalance_window: 3,
+            rebalance_step: 4,
+            shuffle: false,
+            shuffle_every: 10,
+            straggler: false,
+            straggler_factor: 2.0,
+        }
+    }
+}
+
+/// Full session description.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    pub name: String,
+    pub algo: AlgoConfig,
+    pub elastic: ElasticSpec,
+    pub task_model: TaskModel,
+    pub partitioning: Partitioning,
+    pub backend: ComputeBackend,
+    pub time_model: TimeModel,
+    pub policies: PolicyConfig,
+    /// Chunk size budget in bytes (paper: 1 MiB CoCoA, 200 KiB lSGD).
+    pub chunk_bytes: usize,
+    pub seed: u64,
+    /// Stop conditions (whichever hits first).
+    pub max_iters: usize,
+    pub max_epochs: f64,
+    /// Normalization constant for projected time (the paper's 16).
+    pub ref_nodes: usize,
+    /// Where the AOT artifacts live (HLO backend only).
+    pub artifacts_dir: PathBuf,
+    /// Held-out fraction for test metrics (lSGD).
+    pub test_frac: f64,
+}
+
+impl SessionConfig {
+    /// A rigid CoCoA session on `nodes` homogeneous nodes.
+    pub fn cocoa(name: &str, nodes: usize) -> Self {
+        SessionConfig {
+            name: name.into(),
+            algo: AlgoConfig::Cocoa(CocoaConfig::default()),
+            elastic: ElasticSpec::Rigid { nodes },
+            task_model: TaskModel::UniTasks,
+            partitioning: Partitioning::RandomChunks,
+            backend: ComputeBackend::Native,
+            time_model: TimeModel::Projected,
+            policies: PolicyConfig::default(),
+            chunk_bytes: 1 << 20,
+            seed: 42,
+            max_iters: 200,
+            max_epochs: f64::INFINITY,
+            ref_nodes: 16,
+            artifacts_dir: PathBuf::from("artifacts"),
+            test_frac: 0.0,
+        }
+    }
+
+    /// A rigid lSGD session with the paper's hyper-parameters.
+    pub fn lsgd(name: &str, model: ModelKind, nodes: usize) -> Self {
+        SessionConfig {
+            name: name.into(),
+            algo: AlgoConfig::Lsgd(LsgdConfig::paper_defaults(model)),
+            elastic: ElasticSpec::Rigid { nodes },
+            task_model: TaskModel::UniTasks,
+            partitioning: Partitioning::RandomChunks,
+            backend: ComputeBackend::Native,
+            time_model: TimeModel::Projected,
+            policies: PolicyConfig::default(),
+            chunk_bytes: 200 * 1024,
+            seed: 42,
+            max_iters: 500,
+            max_epochs: f64::INFINITY,
+            ref_nodes: 16,
+            artifacts_dir: PathBuf::from("artifacts"),
+            test_frac: 0.15,
+        }
+    }
+
+    pub fn with_elastic(mut self, spec: ElasticSpec) -> Self {
+        self.elastic = spec;
+        self
+    }
+
+    pub fn with_microtasks(mut self, k: usize) -> Self {
+        self.task_model = TaskModel::MicroTasks { k };
+        self
+    }
+
+    pub fn with_backend(mut self, backend: ComputeBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    // ---------------------------------------------------------------- JSON
+
+    pub fn to_json(&self) -> Json {
+        let algo = match &self.algo {
+            AlgoConfig::Cocoa(c) => Json::obj(vec![
+                ("kind", Json::str("cocoa")),
+                ("lambda", Json::num(c.lambda)),
+                ("local_passes", Json::num(c.local_passes)),
+                ("target_gap", Json::num(c.target_gap)),
+            ]),
+            AlgoConfig::Lsgd(c) => Json::obj(vec![
+                ("kind", Json::str("lsgd")),
+                ("model", Json::str(c.model.artifact_prefix())),
+                ("l", Json::num(c.l as f64)),
+                ("h", Json::num(c.h as f64)),
+                ("lr", Json::num(c.lr)),
+                ("momentum", Json::num(c.momentum)),
+                ("scale_lr", Json::Bool(c.scale_lr)),
+                ("target_acc", Json::num(c.target_acc)),
+                ("eval_every", Json::num(c.eval_every as f64)),
+            ]),
+        };
+        let task_model = match self.task_model {
+            TaskModel::UniTasks => Json::str("uni"),
+            TaskModel::MicroTasks { k } => Json::obj(vec![
+                ("kind", Json::str("micro")),
+                ("k", Json::num(k as f64)),
+            ]),
+        };
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("algo", algo),
+            ("elastic", self.elastic.to_json()),
+            ("task_model", task_model),
+            (
+                "partitioning",
+                Json::str(match self.partitioning {
+                    Partitioning::RandomChunks => "random_chunks",
+                    Partitioning::Contiguous => "contiguous",
+                }),
+            ),
+            (
+                "backend",
+                Json::str(match self.backend {
+                    ComputeBackend::Native => "native",
+                    ComputeBackend::Hlo => "hlo",
+                }),
+            ),
+            (
+                "time_model",
+                Json::str(match self.time_model {
+                    TimeModel::Projected => "projected",
+                    TimeModel::Measured => "measured",
+                }),
+            ),
+            (
+                "policies",
+                Json::obj(vec![
+                    ("rebalance", Json::Bool(self.policies.rebalance)),
+                    ("rebalance_window", Json::num(self.policies.rebalance_window as f64)),
+                    ("rebalance_step", Json::num(self.policies.rebalance_step as f64)),
+                    ("shuffle", Json::Bool(self.policies.shuffle)),
+                    ("shuffle_every", Json::num(self.policies.shuffle_every as f64)),
+                    ("straggler", Json::Bool(self.policies.straggler)),
+                    ("straggler_factor", Json::num(self.policies.straggler_factor)),
+                ]),
+            ),
+            ("chunk_bytes", Json::num(self.chunk_bytes as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("max_iters", Json::num(self.max_iters as f64)),
+            (
+                "max_epochs",
+                if self.max_epochs.is_finite() {
+                    Json::num(self.max_epochs)
+                } else {
+                    Json::Null
+                },
+            ),
+            ("ref_nodes", Json::num(self.ref_nodes as f64)),
+            ("artifacts_dir", Json::str(&self.artifacts_dir.to_string_lossy())),
+            ("test_frac", Json::num(self.test_frac)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let algo_v = v.get("algo")?;
+        let algo = match algo_v.get("kind")?.as_str()? {
+            "cocoa" => AlgoConfig::Cocoa(CocoaConfig {
+                lambda: algo_v.get("lambda")?.as_f64()?,
+                local_passes: algo_v.get("local_passes")?.as_f64()?,
+                target_gap: algo_v.get("target_gap")?.as_f64()?,
+            }),
+            "lsgd" => AlgoConfig::Lsgd(LsgdConfig {
+                model: ModelKind::parse(algo_v.get("model")?.as_str()?)?,
+                l: algo_v.get("l")?.as_usize()?,
+                h: algo_v.get("h")?.as_usize()?,
+                lr: algo_v.get("lr")?.as_f64()?,
+                momentum: algo_v.get("momentum")?.as_f64()?,
+                scale_lr: algo_v.get("scale_lr")?.as_bool()?,
+                target_acc: algo_v.get("target_acc")?.as_f64()?,
+                eval_every: algo_v.get("eval_every")?.as_usize()?,
+            }),
+            other => bail!("unknown algo kind {other:?}"),
+        };
+        let task_model = match v.get("task_model")? {
+            Json::Str(s) if s == "uni" => TaskModel::UniTasks,
+            tm => TaskModel::MicroTasks { k: tm.get("k")?.as_usize()? },
+        };
+        let p = v.get("policies")?;
+        Ok(SessionConfig {
+            name: v.get("name")?.as_str()?.to_string(),
+            algo,
+            elastic: ElasticSpec::from_json(v.get("elastic")?)?,
+            task_model,
+            partitioning: match v.get("partitioning")?.as_str()? {
+                "random_chunks" => Partitioning::RandomChunks,
+                "contiguous" => Partitioning::Contiguous,
+                other => bail!("unknown partitioning {other:?}"),
+            },
+            backend: match v.get("backend")?.as_str()? {
+                "native" => ComputeBackend::Native,
+                "hlo" => ComputeBackend::Hlo,
+                other => bail!("unknown backend {other:?}"),
+            },
+            time_model: match v.get("time_model")?.as_str()? {
+                "projected" => TimeModel::Projected,
+                "measured" => TimeModel::Measured,
+                other => bail!("unknown time model {other:?}"),
+            },
+            policies: PolicyConfig {
+                rebalance: p.get("rebalance")?.as_bool()?,
+                rebalance_window: p.get("rebalance_window")?.as_usize()?,
+                rebalance_step: p.get("rebalance_step")?.as_usize()?,
+                shuffle: p.get("shuffle")?.as_bool()?,
+                shuffle_every: p.get("shuffle_every")?.as_usize()?,
+                straggler: p.get("straggler")?.as_bool()?,
+                straggler_factor: p.get("straggler_factor")?.as_f64()?,
+            },
+            chunk_bytes: v.get("chunk_bytes")?.as_usize()?,
+            seed: v.get("seed")?.as_f64()? as u64,
+            max_iters: v.get("max_iters")?.as_usize()?,
+            max_epochs: match v.get("max_epochs")? {
+                Json::Null => f64::INFINITY,
+                n => n.as_f64()?,
+            },
+            ref_nodes: v.get("ref_nodes")?.as_usize()?,
+            artifacts_dir: PathBuf::from(v.get("artifacts_dir")?.as_str()?),
+            test_frac: v.get("test_frac")?.as_f64()?,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ResourceManager as _;
+
+    #[test]
+    fn json_roundtrip_cocoa() {
+        let cfg = SessionConfig::cocoa("t", 4);
+        let back = SessionConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back.name, "t");
+        assert!(matches!(back.algo, AlgoConfig::Cocoa(_)));
+        assert!(matches!(back.elastic, ElasticSpec::Rigid { nodes: 4 }));
+        assert!(back.max_epochs.is_infinite());
+    }
+
+    #[test]
+    fn json_roundtrip_lsgd_micro() {
+        let cfg = SessionConfig::lsgd("x", ModelKind::Cnn, 16).with_microtasks(32);
+        let back =
+            SessionConfig::from_json(&Json::parse(&cfg.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert!(matches!(back.task_model, TaskModel::MicroTasks { k: 32 }));
+        if let AlgoConfig::Lsgd(l) = &back.algo {
+            assert_eq!((l.l, l.h), (8, 16));
+            assert_eq!(l.model, ModelKind::Cnn);
+        } else {
+            panic!();
+        }
+    }
+
+    #[test]
+    fn elastic_specs_build_rms() {
+        let rm = ElasticSpec::Gradual { from: 2, to: 8, interval_s: 20.0 }.build_rm();
+        assert_eq!(rm.allocation_at(Duration::ZERO).len(), 2);
+        assert_eq!(rm.allocation_at(Duration::from_secs(100)).len(), 8);
+        let het = ElasticSpec::Heterogeneous { fast: 2, slow: 2, factor: 1.5 }.build_rm();
+        assert_eq!(het.assigned().len(), 4);
+        assert!(het.assigned()[3].speed < 1.0);
+    }
+
+    #[test]
+    fn elastic_trace_json_roundtrip() {
+        let spec = ElasticSpec::Trace {
+            points: vec![(0.0, vec![1.0, 0.5]), (10.0, vec![1.0, 0.5, 1.0])],
+        };
+        let back = ElasticSpec::from_json(&spec.to_json()).unwrap();
+        match back {
+            ElasticSpec::Trace { points } => {
+                assert_eq!(points.len(), 2);
+                assert_eq!(points[1].1.len(), 3);
+            }
+            _ => panic!(),
+        }
+        assert_eq!(spec.max_nodes(), 3);
+    }
+}

@@ -1,0 +1,24 @@
+//! The Chicle coordinator — the paper's system contribution (§4).
+//!
+//! A driver ("trainer") orchestrates K uni-tasks over mobile data chunks:
+//!
+//! * [`trainer`] — the iteration loop: barrier-synchronous task execution,
+//!   weighted model merge, virtual-time accounting (projected per §5.3 or
+//!   measured), metric evaluation, swimlane recording.
+//! * [`task`] — per-task state: the chunk store (ownership contract: the
+//!   scheduler only touches it between iterations) and the learned runtime
+//!   history the rebalancer uses.
+//! * [`policy`] — the event-driven policy framework (§4.5): elastic
+//!   scaling against the resource-manager trace, load rebalancing,
+//!   background shuffling, straggler mitigation.
+//! * [`session`] — the user-facing entry point: build a full session from
+//!   a [`crate::config::SessionConfig`] + dataset, run it, get metrics.
+
+pub mod policy;
+pub mod session;
+pub mod task;
+pub mod trainer;
+
+pub use session::TrainingSession;
+pub use task::TaskState;
+pub use trainer::Trainer;

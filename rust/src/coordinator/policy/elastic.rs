@@ -1,0 +1,174 @@
+//! Elastic scaling support (paper §4.5, "Elastic scaling policy").
+//!
+//! The trainer handles the resource-manager events directly (it owns the
+//! task list); this module provides the chunk-redistribution primitives:
+//!
+//! * on **scale-out**, chunks move from old tasks to newly spawned ones,
+//!   picked randomly from each donor — the random pick is what shuffles
+//!   samples and lets CoCoA's local solver find new correlations (§5.3
+//!   "Results", scale-out discussion);
+//! * on **scale-in** (revocation), the departing tasks' chunks are dealt
+//!   round-robin to the survivors.
+//!
+//! Both target a speed-proportional sample share per task, which is also
+//! what the rebalance policy maintains steady-state.
+
+use crate::chunks::Chunk;
+use crate::coordinator::task::TaskState;
+use crate::util::Rng;
+
+/// Deal `chunks` (from revoked tasks) round-robin onto the remaining
+/// tasks (paper: "redistributes data chunks from to-be freed workers to
+/// remaining ones in a round robin fashion"). Returns bytes moved.
+pub fn deal_round_robin(tasks: &mut [TaskState], chunks: Vec<Chunk>) -> usize {
+    if tasks.is_empty() {
+        return 0;
+    }
+    let mut bytes = 0usize;
+    for (i, chunk) in chunks.into_iter().enumerate() {
+        bytes += chunk.size_bytes();
+        tasks[i % tasks.len()].store.add(chunk);
+    }
+    bytes
+}
+
+/// After scale-out: move randomly-picked chunks from donor tasks to the
+/// new (empty or light) tasks until every task holds approximately a
+/// speed-proportional share of samples. Returns bytes moved.
+pub fn redistribute_for_new_tasks(tasks: &mut [TaskState], rng: &mut Rng) -> usize {
+    if tasks.len() < 2 {
+        return 0;
+    }
+    let total_samples: usize = tasks.iter().map(|t| t.n_samples()).sum();
+    let total_speed: f64 = tasks.iter().map(|t| t.node.speed).sum();
+    if total_samples == 0 || total_speed <= 0.0 {
+        return 0;
+    }
+    let target: Vec<f64> = tasks
+        .iter()
+        .map(|t| total_samples as f64 * t.node.speed / total_speed)
+        .collect();
+    let mut bytes = 0usize;
+    // Repeatedly move one random chunk from the most-over-target donor to
+    // the most-under-target receiver while it reduces total imbalance.
+    loop {
+        let over: Vec<f64> = tasks
+            .iter()
+            .zip(&target)
+            .map(|(t, &tg)| t.n_samples() as f64 - tg)
+            .collect();
+        let donor = over
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap();
+        let recv = over
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap();
+        if donor == recv || tasks[donor].store.n_chunks() <= 1 {
+            break;
+        }
+        let ids = tasks[donor].store.chunk_ids();
+        let cid = ids[rng.below(ids.len())];
+        let chunk_samples =
+            tasks[donor].store.get(cid).map(|c| c.n_samples()).unwrap_or(0) as f64;
+        // Only move if it strictly reduces the donor's overshoot without
+        // overshooting the receiver by more.
+        if over[donor] < chunk_samples / 2.0 || -over[recv] < chunk_samples / 2.0 {
+            break;
+        }
+        let chunk = tasks[donor].store.remove(cid).unwrap();
+        bytes += chunk.size_bytes();
+        tasks[recv].store.add(chunk);
+    }
+    bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunks::Payload;
+    use crate::cluster::NodeSpec;
+
+    fn chunk(id: u32, n: usize) -> Chunk {
+        Chunk {
+            id,
+            payload: Payload::DenseBinary { x: vec![0.0; n * 2], dim: 2, y: vec![1.0; n] },
+            state: vec![0.0; n],
+            global_ids: vec![0; n],
+        }
+    }
+
+    fn task_with(node: NodeSpec, ids: std::ops::Range<u32>, n: usize) -> TaskState {
+        let mut t = TaskState::new(node, 3);
+        for id in ids {
+            t.store.add(chunk(id, n));
+        }
+        t
+    }
+
+    #[test]
+    fn round_robin_deal_covers_all() {
+        let mut tasks = vec![
+            task_with(NodeSpec::new(0, 1.0), 0..2, 10),
+            task_with(NodeSpec::new(1, 1.0), 2..4, 10),
+        ];
+        let orphans: Vec<Chunk> = (10..15).map(|i| chunk(i, 10)).collect();
+        let bytes = deal_round_robin(&mut tasks, orphans);
+        assert!(bytes > 0);
+        assert_eq!(tasks[0].n_chunks() + tasks[1].n_chunks(), 9);
+        // Round-robin: first task gets 3, second 2.
+        assert_eq!(tasks[0].n_chunks(), 5);
+        assert_eq!(tasks[1].n_chunks(), 4);
+    }
+
+    #[test]
+    fn redistribute_fills_empty_new_task() {
+        let mut tasks = vec![
+            task_with(NodeSpec::new(0, 1.0), 0..16, 10),
+            TaskState::new(NodeSpec::new(1, 1.0), 3),
+        ];
+        let mut rng = Rng::seed_from_u64(1);
+        let bytes = redistribute_for_new_tasks(&mut tasks, &mut rng);
+        assert!(bytes > 0);
+        let (a, b) = (tasks[0].n_samples(), tasks[1].n_samples());
+        assert!((a as i64 - b as i64).abs() <= 10, "{a} vs {b}");
+    }
+
+    #[test]
+    fn redistribute_respects_speed_proportional_share() {
+        let mut tasks = vec![
+            task_with(NodeSpec::new(0, 1.0), 0..30, 10),
+            TaskState::new(NodeSpec::new(1, 0.5), 3),
+        ];
+        let mut rng = Rng::seed_from_u64(2);
+        redistribute_for_new_tasks(&mut tasks, &mut rng);
+        let (a, b) = (tasks[0].n_samples() as f64, tasks[1].n_samples() as f64);
+        // fast node should hold ~2× the slow node's samples
+        assert!(a / b > 1.5 && a / b < 3.0, "ratio {}", a / b);
+    }
+
+    #[test]
+    fn chunk_conservation() {
+        let mut tasks = vec![
+            task_with(NodeSpec::new(0, 1.0), 0..9, 7),
+            TaskState::new(NodeSpec::new(1, 1.0), 3),
+            TaskState::new(NodeSpec::new(2, 1.0), 3),
+        ];
+        let before: usize = tasks.iter().map(|t| t.n_samples()).sum();
+        let mut rng = Rng::seed_from_u64(3);
+        redistribute_for_new_tasks(&mut tasks, &mut rng);
+        let after: usize = tasks.iter().map(|t| t.n_samples()).sum();
+        assert_eq!(before, after);
+        let mut all_ids: Vec<u32> = tasks
+            .iter()
+            .flat_map(|t| t.store.chunk_ids())
+            .collect();
+        all_ids.sort_unstable();
+        assert_eq!(all_ids, (0..9).collect::<Vec<u32>>());
+    }
+}

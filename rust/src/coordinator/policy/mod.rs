@@ -1,0 +1,55 @@
+//! The policy framework (paper §4.5).
+//!
+//! Policies run *between* iterations — the window in which the scheduler
+//! owns the data chunks (the uni-tasks ownership contract, §3) — and may
+//! move chunks between tasks through [`PolicyCtx`]. Each enabled policy is
+//! consulted every iteration in registration order.
+
+pub mod elastic;
+pub mod rebalance;
+pub mod shuffle;
+pub mod straggler;
+
+pub use elastic::{deal_round_robin, redistribute_for_new_tasks};
+pub use rebalance::RebalancePolicy;
+pub use shuffle::ShufflePolicy;
+pub use straggler::StragglerPolicy;
+
+use crate::chunks::NetworkModel;
+use crate::coordinator::task::TaskState;
+use crate::Result;
+
+/// What policies see and mutate between iterations.
+pub struct PolicyCtx<'a> {
+    pub tasks: &'a mut Vec<TaskState>,
+    pub iter: usize,
+    pub net: &'a NetworkModel,
+    /// Bytes moved between tasks this boundary (the trainer charges the
+    /// transfer model for them in measured-time mode).
+    pub moved_bytes: usize,
+    /// Chunks moved this boundary (diagnostics).
+    pub moved_chunks: usize,
+    /// Deterministic per-boundary randomness.
+    pub rng: &'a mut crate::util::Rng,
+}
+
+impl<'a> PolicyCtx<'a> {
+    /// Move one chunk `cid` from task `from` to task `to`, charging the
+    /// transfer accounting.
+    pub fn move_chunk(&mut self, from: usize, to: usize, cid: crate::chunks::ChunkId) -> Result<()> {
+        let chunk = self.tasks[from]
+            .store
+            .remove(cid)
+            .ok_or_else(|| anyhow::anyhow!("chunk {cid} not on task {from}"))?;
+        self.moved_bytes += chunk.size_bytes();
+        self.moved_chunks += 1;
+        self.tasks[to].store.add(chunk);
+        Ok(())
+    }
+}
+
+/// A between-iterations scheduling policy.
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+    fn apply(&mut self, ctx: &mut PolicyCtx) -> Result<()>;
+}

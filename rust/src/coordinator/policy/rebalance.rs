@@ -1,0 +1,178 @@
+//! Rebalancing policy (paper §4.5): learn per-sample runtimes, move
+//! chunks gradually from slower to faster tasks until iteration runtimes
+//! align.
+//!
+//! Tasks are ranked by their median per-sample time over the last `I`
+//! iterations; each boundary at most `step` chunks move from the slowest
+//! to the fastest task, stopping when the projected runtime difference is
+//! smaller than the estimated processing time of a single chunk.
+
+use anyhow::Result;
+
+use super::{Policy, PolicyCtx};
+
+pub struct RebalancePolicy {
+    /// Max chunks moved per boundary ("gradually, across multiple
+    /// iterations").
+    step: usize,
+}
+
+impl RebalancePolicy {
+    pub fn new(step: usize) -> Self {
+        RebalancePolicy { step: step.max(1) }
+    }
+}
+
+impl Policy for RebalancePolicy {
+    fn name(&self) -> &'static str {
+        "rebalance"
+    }
+
+    fn apply(&mut self, ctx: &mut PolicyCtx) -> Result<()> {
+        if ctx.tasks.len() < 2 {
+            return Ok(());
+        }
+        for _ in 0..self.step {
+            // Projected runtime of each task = local samples × per-sample.
+            let mut projections: Vec<(usize, f64, f64)> = Vec::new(); // (idx, time, per_sample)
+            for (i, t) in ctx.tasks.iter().enumerate() {
+                let Some(ps) = t.est_per_sample() else {
+                    return Ok(()); // not enough history yet
+                };
+                projections.push((i, ps * t.n_samples() as f64, ps));
+            }
+            let (slow_idx, slow_time, slow_ps) = *projections
+                .iter()
+                .max_by(|a, b| a.1.total_cmp(&b.1))
+                .unwrap();
+            let (fast_idx, fast_time, fast_ps) = *projections
+                .iter()
+                .min_by(|a, b| a.1.total_cmp(&b.1))
+                .unwrap();
+            if slow_idx == fast_idx {
+                return Ok(());
+            }
+            // Candidate: a random chunk on the slow task.
+            let ids = ctx.tasks[slow_idx].store.chunk_ids();
+            if ids.len() <= 1 {
+                return Ok(()); // never strip a task bare
+            }
+            let cid = ids[ctx.rng.below(ids.len())];
+            let chunk_samples =
+                ctx.tasks[slow_idx].store.get(cid).map(|c| c.n_samples()).unwrap_or(0) as f64;
+            // Stop when the gap is already smaller than one chunk's cost
+            // on the slow task (paper: "until performance differences are
+            // smaller than the estimated processing time of a single
+            // chunk").
+            let chunk_cost = chunk_samples * slow_ps;
+            if slow_time - fast_time <= chunk_cost {
+                return Ok(());
+            }
+            // Don't overshoot: moving must not make the fast task the new
+            // bottleneck worse than the current gap.
+            if fast_time + chunk_samples * fast_ps >= slow_time {
+                return Ok(());
+            }
+            ctx.move_chunk(slow_idx, fast_idx, cid)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunks::{Chunk, NetworkModel, Payload};
+    use crate::cluster::NodeSpec;
+    use crate::coordinator::task::TaskState;
+    use crate::util::Rng;
+
+    fn chunk(id: u32, n: usize) -> Chunk {
+        Chunk {
+            id,
+            payload: Payload::DenseBinary { x: vec![0.0; n * 4], dim: 4, y: vec![1.0; n] },
+            state: vec![0.0; n],
+            global_ids: vec![0; n],
+        }
+    }
+
+    fn setup(chunks_a: usize, chunks_b: usize, speed_b: f64) -> Vec<TaskState> {
+        let mut a = TaskState::new(NodeSpec::new(0, 1.0), 3);
+        let mut b = TaskState::new(NodeSpec::new(1, speed_b), 3);
+        let mut id = 0;
+        for _ in 0..chunks_a {
+            a.store.add(chunk(id, 100));
+            id += 1;
+        }
+        for _ in 0..chunks_b {
+            b.store.add(chunk(id, 100));
+            id += 1;
+        }
+        // Histories reflecting node speeds: per-sample time = 1/speed ms.
+        for _ in 0..3 {
+            a.record_time(0.001);
+            b.record_time(0.001 / speed_b);
+        }
+        vec![a, b]
+    }
+
+    fn run_policy(tasks: &mut Vec<TaskState>, iters: usize, step: usize) -> usize {
+        let net = NetworkModel::default();
+        let mut rng = Rng::seed_from_u64(0);
+        let mut policy = RebalancePolicy::new(step);
+        let mut moved = 0;
+        for iter in 0..iters {
+            let mut ctx = PolicyCtx {
+                tasks,
+                iter,
+                net: &net,
+                moved_bytes: 0,
+                moved_chunks: 0,
+                rng: &mut rng,
+            };
+            policy.apply(&mut ctx).unwrap();
+            moved += ctx.moved_chunks;
+        }
+        moved
+    }
+
+    #[test]
+    fn moves_load_from_slow_to_fast() {
+        // Equal chunks, but task 1 runs at half speed → chunks should flow
+        // toward task 0 until runtimes align (≈ 2:1 chunk split).
+        let mut tasks = setup(8, 8, 0.5);
+        run_policy(&mut tasks, 20, 2);
+        let (a, b) = (tasks[0].n_samples() as f64, tasks[1].n_samples() as f64);
+        // projected times: a*0.001 vs b*0.002 — should be within one chunk.
+        let ta = a * 0.001;
+        let tb = b * 0.002;
+        assert!((ta - tb).abs() <= 100.0 * 0.002 + 1e-9, "ta={ta} tb={tb}");
+        assert!(a > b, "fast node should hold more samples: {a} vs {b}");
+    }
+
+    #[test]
+    fn balanced_tasks_stay_put() {
+        let mut tasks = setup(8, 8, 1.0);
+        let moved = run_policy(&mut tasks, 10, 2);
+        assert_eq!(moved, 0);
+        assert_eq!(tasks[0].n_chunks(), 8);
+    }
+
+    #[test]
+    fn never_strips_a_task_bare() {
+        let mut tasks = setup(1, 1, 0.01);
+        run_policy(&mut tasks, 50, 4);
+        assert!(tasks[1].n_chunks() >= 1);
+    }
+
+    #[test]
+    fn no_history_no_moves() {
+        let mut a = TaskState::new(NodeSpec::new(0, 1.0), 3);
+        a.store.add(chunk(0, 100));
+        a.store.add(chunk(1, 100));
+        let b = TaskState::new(NodeSpec::new(1, 0.5), 3);
+        let mut tasks = vec![a, b];
+        let moved = run_policy(&mut tasks, 5, 2);
+        assert_eq!(moved, 0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Background global shuffling policy (paper §4.5 "Other policies").
+//!
+//! Every `every` iterations, each task donates a few randomly-picked
+//! chunks to randomly-picked peers. This continuously re-mixes sample
+//! placement, which helps local solvers (CoCoA) discover correlations
+//! beyond their initial partition without a global reshuffle barrier.
+
+use anyhow::Result;
+
+use super::{Policy, PolicyCtx};
+
+pub struct ShufflePolicy {
+    every: usize,
+    /// Chunks each task donates per shuffle round.
+    per_task: usize,
+}
+
+impl ShufflePolicy {
+    pub fn new(every: usize, per_task: usize) -> Self {
+        ShufflePolicy { every: every.max(1), per_task: per_task.max(1) }
+    }
+}
+
+impl Policy for ShufflePolicy {
+    fn name(&self) -> &'static str {
+        "shuffle"
+    }
+
+    fn apply(&mut self, ctx: &mut PolicyCtx) -> Result<()> {
+        if ctx.tasks.len() < 2 || ctx.iter == 0 || ctx.iter % self.every != 0 {
+            return Ok(());
+        }
+        let n = ctx.tasks.len();
+        // Collect (from, chunk) donations first to avoid borrow juggling.
+        let mut moves = Vec::new();
+        for from in 0..n {
+            for _ in 0..self.per_task {
+                let ids = ctx.tasks[from].store.chunk_ids();
+                if ids.len() <= 1 {
+                    break;
+                }
+                let cid = ids[ctx.rng.below(ids.len())];
+                let mut to = ctx.rng.below(n - 1);
+                if to >= from {
+                    to += 1;
+                }
+                moves.push((from, to, cid));
+                // Mark as moved by actually moving now (ids refresh above).
+                ctx.move_chunk(from, to, cid)?;
+            }
+        }
+        let _ = moves;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunks::{Chunk, NetworkModel, Payload};
+    use crate::cluster::NodeSpec;
+    use crate::coordinator::task::TaskState;
+    use crate::util::Rng;
+
+    fn tasks(n_tasks: usize, chunks_each: usize) -> Vec<TaskState> {
+        let mut id = 0u32;
+        (0..n_tasks)
+            .map(|i| {
+                let mut t = TaskState::new(NodeSpec::new(i as u32, 1.0), 3);
+                for _ in 0..chunks_each {
+                    t.store.add(Chunk {
+                        id,
+                        payload: Payload::DenseBinary {
+                            x: vec![0.0; 8],
+                            dim: 2,
+                            y: vec![1.0; 4],
+                        },
+                        state: vec![0.0; 4],
+                        global_ids: vec![0; 4],
+                    });
+                    id += 1;
+                }
+                t
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shuffles_on_schedule_and_conserves_chunks() {
+        let mut ts = tasks(4, 5);
+        let net = NetworkModel::default();
+        let mut rng = Rng::seed_from_u64(0);
+        let mut p = ShufflePolicy::new(3, 1);
+        let mut total_moved = 0;
+        for iter in 0..7 {
+            let mut ctx = PolicyCtx {
+                tasks: &mut ts,
+                iter,
+                net: &net,
+                moved_bytes: 0,
+                moved_chunks: 0,
+                rng: &mut rng,
+            };
+            p.apply(&mut ctx).unwrap();
+            if iter % 3 == 0 && iter > 0 {
+                assert!(ctx.moved_chunks > 0, "iter {iter} should shuffle");
+            } else {
+                assert_eq!(ctx.moved_chunks, 0, "iter {iter} should not shuffle");
+            }
+            total_moved += ctx.moved_chunks;
+        }
+        assert!(total_moved >= 8, "{total_moved}");
+        let total: usize = ts.iter().map(|t| t.n_chunks()).sum();
+        assert_eq!(total, 20);
+        let mut ids: Vec<u32> = ts.iter().flat_map(|t| t.store.chunk_ids()).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..20).collect::<Vec<u32>>());
+    }
+}

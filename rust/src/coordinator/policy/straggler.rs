@@ -1,0 +1,150 @@
+//! Straggler mitigation policy (paper §4.5 "Other policies").
+//!
+//! Distinct from rebalancing (which tracks *persistent* speed differences
+//! via the median), this policy reacts to *acute* stragglers: a task whose
+//! latest iteration ran slower than `factor` × the median task time sheds
+//! one chunk immediately to the currently fastest task. Transient blips
+//! are tolerated by requiring the condition to hold `patience` times in a
+//! row.
+
+use anyhow::Result;
+
+use super::{Policy, PolicyCtx};
+
+pub struct StragglerPolicy {
+    factor: f64,
+    patience: usize,
+    /// Consecutive straggler observations per task index.
+    strikes: Vec<usize>,
+    /// Total mitigations applied (diagnostics / tests).
+    pub mitigations: usize,
+}
+
+impl StragglerPolicy {
+    pub fn new(factor: f64, patience: usize) -> Self {
+        StragglerPolicy {
+            factor: factor.max(1.0),
+            patience: patience.max(1),
+            strikes: Vec::new(),
+            mitigations: 0,
+        }
+    }
+}
+
+impl Policy for StragglerPolicy {
+    fn name(&self) -> &'static str {
+        "straggler"
+    }
+
+    fn apply(&mut self, ctx: &mut PolicyCtx) -> Result<()> {
+        let n = ctx.tasks.len();
+        self.strikes.resize(n, 0);
+        if n < 2 {
+            return Ok(());
+        }
+        // Latest projected per-task time.
+        let times: Vec<Option<f64>> = ctx
+            .tasks
+            .iter()
+            .map(|t| t.est_per_sample().map(|ps| ps * t.n_samples() as f64))
+            .collect();
+        if times.iter().any(|t| t.is_none()) {
+            return Ok(());
+        }
+        let mut sorted: Vec<f64> = times.iter().map(|t| t.unwrap()).collect();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let median = sorted[n / 2];
+        if median <= 0.0 {
+            return Ok(());
+        }
+        let fastest = times
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.unwrap().total_cmp(&b.1.unwrap()))
+            .map(|(i, _)| i)
+            .unwrap();
+        for i in 0..n {
+            if times[i].unwrap() > self.factor * median {
+                self.strikes[i] += 1;
+                if self.strikes[i] >= self.patience && i != fastest {
+                    let ids = ctx.tasks[i].store.chunk_ids();
+                    if ids.len() > 1 {
+                        let cid = ids[ctx.rng.below(ids.len())];
+                        ctx.move_chunk(i, fastest, cid)?;
+                        self.mitigations += 1;
+                    }
+                    self.strikes[i] = 0;
+                }
+            } else {
+                self.strikes[i] = 0;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunks::{Chunk, NetworkModel, Payload};
+    use crate::cluster::NodeSpec;
+    use crate::coordinator::task::TaskState;
+    use crate::util::Rng;
+
+    fn task(id: u32, n_chunks: usize, per_sample: f64) -> TaskState {
+        let mut t = TaskState::new(NodeSpec::new(id, 1.0), 3);
+        for c in 0..n_chunks {
+            t.store.add(Chunk {
+                id: id * 100 + c as u32,
+                payload: Payload::DenseBinary { x: vec![0.0; 20], dim: 2, y: vec![1.0; 10] },
+                state: vec![0.0; 10],
+                global_ids: vec![0; 10],
+            });
+        }
+        t.record_time(per_sample);
+        t
+    }
+
+    fn apply_n(tasks: &mut Vec<TaskState>, p: &mut StragglerPolicy, iters: usize) {
+        let net = NetworkModel::default();
+        let mut rng = Rng::seed_from_u64(0);
+        for iter in 0..iters {
+            let mut ctx = PolicyCtx {
+                tasks,
+                iter,
+                net: &net,
+                moved_bytes: 0,
+                moved_chunks: 0,
+                rng: &mut rng,
+            };
+            p.apply(&mut ctx).unwrap();
+        }
+    }
+
+    #[test]
+    fn persistent_straggler_sheds_chunks() {
+        let mut tasks = vec![task(0, 4, 0.001), task(1, 4, 0.001), task(2, 4, 0.010)];
+        let mut p = StragglerPolicy::new(2.0, 2);
+        apply_n(&mut tasks, &mut p, 5);
+        assert!(p.mitigations >= 1);
+        assert!(tasks[2].n_chunks() < 4);
+    }
+
+    #[test]
+    fn uniform_cluster_untouched() {
+        let mut tasks = vec![task(0, 4, 0.002), task(1, 4, 0.002), task(2, 4, 0.002)];
+        let mut p = StragglerPolicy::new(2.0, 1);
+        apply_n(&mut tasks, &mut p, 5);
+        assert_eq!(p.mitigations, 0);
+    }
+
+    #[test]
+    fn patience_filters_transients() {
+        // Straggler condition must persist `patience` consecutive rounds;
+        // with patience 3 and only 2 rounds, nothing moves.
+        let mut tasks = vec![task(0, 4, 0.001), task(1, 4, 0.001), task(2, 4, 0.010)];
+        let mut p = StragglerPolicy::new(2.0, 3);
+        apply_n(&mut tasks, &mut p, 2);
+        assert_eq!(p.mitigations, 0);
+    }
+}

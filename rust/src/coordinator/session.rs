@@ -1,0 +1,228 @@
+//! Training sessions: the user-facing assembly of config + dataset →
+//! algorithm + backend + trainer.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::algos::lsgd::LsgdAlgo;
+use crate::algos::nn::NativeModel;
+use crate::algos::{Algorithm, Backend, CocoaAlgo};
+use crate::chunks::chunker::make_chunks;
+use crate::config::{AlgoConfig, ComputeBackend, ModelKind, SessionConfig};
+use crate::data::{Dataset, FeatureMatrix, Labels};
+use crate::metrics::{MetricsLog, SwimlaneRecorder};
+use crate::runtime::{HloService, Manifest};
+
+use super::trainer::Trainer;
+
+/// A fully-assembled training session.
+pub struct TrainingSession {
+    trainer: Trainer,
+    pub name: String,
+}
+
+impl TrainingSession {
+    /// Build a session. For lSGD workloads a held-out test split is taken
+    /// from the dataset per `cfg.test_frac`.
+    pub fn new(cfg: SessionConfig, dataset: Dataset) -> Result<Self> {
+        let name = cfg.name.clone();
+
+        // HLO plumbing if requested (one engine service per session).
+        let hlo: Option<(HloService, Manifest)> = if cfg.backend == ComputeBackend::Hlo {
+            let service = HloService::spawn(&cfg.artifacts_dir)?;
+            let manifest = Manifest::load(&cfg.artifacts_dir)?;
+            Some((service, manifest))
+        } else {
+            None
+        };
+
+        let (algo, train): (Arc<dyn Algorithm>, Dataset) = match &cfg.algo {
+            AlgoConfig::Cocoa(ccfg) => {
+                if !matches!(dataset.labels, Labels::Binary(_)) {
+                    bail!("CoCoA requires binary (±1) labels");
+                }
+                let backend = match &hlo {
+                    None => Backend::native_cocoa(),
+                    Some((service, manifest)) => Backend::hlo_cocoa(
+                        service.clone(),
+                        manifest,
+                        256,
+                        dataset.dim(),
+                    )
+                    .context("HLO CoCoA backend (is the feature width lowered?)")?,
+                };
+                let algo: Arc<dyn Algorithm> = Arc::new(CocoaAlgo::new(
+                    ccfg.clone(),
+                    backend,
+                    dataset.n_samples(),
+                    dataset.dim(),
+                ));
+                (algo, dataset)
+            }
+            AlgoConfig::Lsgd(lcfg) => {
+                match (&dataset.features, &dataset.labels) {
+                    (_, Labels::Class(_)) => {
+                        let (train, test) = dataset.split_test(cfg.test_frac);
+                        let (tx, ty) = match (&test.features, &test.labels) {
+                            (FeatureMatrix::Dense { data, .. }, Labels::Class(y)) => {
+                                (data.clone(), y.clone())
+                            }
+                            _ => bail!("lSGD classif requires dense features"),
+                        };
+                        let backend = match &hlo {
+                            None => {
+                                let model = match lcfg.model {
+                                    ModelKind::Mlp => NativeModel::mlp_default(),
+                                    ModelKind::Cnn => NativeModel::cnn_default(),
+                                    other => bail!(
+                                        "{other:?} has no native backend; use backend=hlo"
+                                    ),
+                                };
+                                if model.input_dim() != train.dim() {
+                                    bail!(
+                                        "model expects input dim {}, dataset has {}",
+                                        model.input_dim(),
+                                        train.dim()
+                                    );
+                                }
+                                Backend::native_nn(model)
+                            }
+                            Some((service, manifest)) => Backend::hlo_nn(
+                                service.clone(),
+                                manifest,
+                                lcfg.model.artifact_prefix(),
+                            )?,
+                        };
+                        let algo: Arc<dyn Algorithm> = Arc::new(LsgdAlgo::new_classif(
+                            lcfg.clone(),
+                            backend,
+                            train.dim(),
+                            tx,
+                            ty,
+                            cfg.seed,
+                        )?);
+                        (algo, train)
+                    }
+                    (FeatureMatrix::Tokens { seq_len, .. }, Labels::None) => {
+                        let seq_len = *seq_len;
+                        let (train, test) = dataset.split_test(cfg.test_frac.max(0.05));
+                        let test_tokens = match &test.features {
+                            FeatureMatrix::Tokens { data, .. } => data.clone(),
+                            _ => unreachable!(),
+                        };
+                        let (service, manifest) = hlo
+                            .as_ref()
+                            .context("LM workloads require backend=hlo")?;
+                        let backend = Backend::hlo_nn(
+                            service.clone(),
+                            manifest,
+                            lcfg.model.artifact_prefix(),
+                        )?;
+                        let algo: Arc<dyn Algorithm> = Arc::new(LsgdAlgo::new_lm(
+                            lcfg.clone(),
+                            backend,
+                            seq_len,
+                            test_tokens,
+                            cfg.seed,
+                        )?);
+                        (algo, train)
+                    }
+                    _ => bail!("lSGD requires class labels or token sequences"),
+                }
+            }
+        };
+
+        let chunks = make_chunks(&train, cfg.chunk_bytes);
+        anyhow::ensure!(
+            chunks.len() >= cfg.elastic.max_nodes(),
+            "only {} chunks for up to {} nodes — reduce chunk_bytes",
+            chunks.len(),
+            cfg.elastic.max_nodes()
+        );
+        let trainer = Trainer::new(cfg, algo, chunks)?;
+        Ok(TrainingSession { trainer, name })
+    }
+
+    /// Run to completion and return the metrics log.
+    pub fn run(&mut self) -> Result<MetricsLog> {
+        self.trainer.run()?;
+        Ok(self.trainer.metrics.clone())
+    }
+
+    /// Execute a single iteration (benchmarks / custom loops).
+    pub fn step(&mut self, iter: usize) -> Result<Option<crate::metrics::Metric>> {
+        self.trainer.step(iter)
+    }
+
+    /// Run exactly `iters` iterations (ignores targets).
+    pub fn run_iters(&mut self, iters: usize) -> Result<MetricsLog> {
+        for i in 0..iters {
+            self.trainer.step(i)?;
+        }
+        Ok(self.trainer.metrics.clone())
+    }
+
+    pub fn trainer(&self) -> &Trainer {
+        &self.trainer
+    }
+
+    pub fn swimlanes(&self) -> &SwimlaneRecorder {
+        &self.trainer.swimlanes
+    }
+
+    pub fn metrics(&self) -> &MetricsLog {
+        &self.trainer.metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ElasticSpec;
+    use crate::data::synth;
+
+    #[test]
+    fn quickstart_cocoa_session() {
+        let ds = synth::higgs_like(2000, 42);
+        let mut cfg = SessionConfig::cocoa("quickstart", 4);
+        cfg.chunk_bytes = 8 * 1024;
+        cfg.max_iters = 60;
+        let mut s = TrainingSession::new(cfg, ds).unwrap();
+        let log = s.run().unwrap();
+        assert!(log.last_gap().unwrap() < 0.01, "gap {:?}", log.last_gap());
+    }
+
+    #[test]
+    fn lsgd_mlp_session_improves_accuracy() {
+        let ds = synth::fmnist_like(1500, 7);
+        let mut cfg = SessionConfig::lsgd("mlp", ModelKind::Mlp, 2);
+        cfg.chunk_bytes = 32 * 1024;
+        cfg.max_iters = 40;
+        if let AlgoConfig::Lsgd(l) = &mut cfg.algo {
+            l.lr = 5e-3;
+            l.eval_every = 10;
+            l.target_acc = 2.0; // unreachable: run all iters
+        }
+        let mut s = TrainingSession::new(cfg, ds).unwrap();
+        let log = s.run().unwrap();
+        let acc = log.last_accuracy().unwrap();
+        assert!(acc > 0.5, "accuracy {acc}");
+    }
+
+    #[test]
+    fn session_rejects_label_mismatch() {
+        let ds = synth::fmnist_like(100, 1);
+        let cfg = SessionConfig::cocoa("bad", 2);
+        assert!(TrainingSession::new(cfg, ds).is_err());
+    }
+
+    #[test]
+    fn session_requires_enough_chunks() {
+        let ds = synth::higgs_like(100, 1);
+        let mut cfg = SessionConfig::cocoa("tiny", 2);
+        cfg.chunk_bytes = usize::MAX; // 1 chunk
+        cfg.elastic = ElasticSpec::Rigid { nodes: 4 };
+        assert!(TrainingSession::new(cfg, ds).is_err());
+    }
+}

@@ -1,0 +1,82 @@
+//! Per-task state owned by the trainer.
+
+use std::collections::VecDeque;
+
+use crate::chunks::ChunkStore;
+use crate::cluster::NodeSpec;
+
+/// One uni-task: the node it runs on, its local chunks, and the runtime
+/// history the rebalance policy learns from (paper §4.5: "observes
+/// iteration runtimes over multiple iterations to learn the per-sample
+/// runtime of each task").
+#[derive(Debug)]
+pub struct TaskState {
+    pub node: NodeSpec,
+    pub store: ChunkStore,
+    /// Recent per-sample task times in seconds (virtual or measured).
+    history: VecDeque<f64>,
+    history_cap: usize,
+}
+
+impl TaskState {
+    pub fn new(node: NodeSpec, history_cap: usize) -> Self {
+        TaskState {
+            node,
+            store: ChunkStore::new(),
+            history: VecDeque::new(),
+            history_cap: history_cap.max(1),
+        }
+    }
+
+    /// Record one iteration's per-sample time.
+    pub fn record_time(&mut self, secs_per_sample: f64) {
+        if self.history.len() == self.history_cap {
+            self.history.pop_front();
+        }
+        self.history.push_back(secs_per_sample);
+    }
+
+    /// Median per-sample time over the window (None until one iteration
+    /// has run). The median gives robustness to runtime fluctuations —
+    /// the paper's tunable `I`.
+    pub fn est_per_sample(&self) -> Option<f64> {
+        if self.history.is_empty() {
+            return None;
+        }
+        let mut v: Vec<f64> = self.history.iter().copied().collect();
+        v.sort_by(|a, b| a.total_cmp(b));
+        Some(v[v.len() / 2])
+    }
+
+    /// Forget learned timings (e.g. after this task's load changed a lot).
+    pub fn clear_history(&mut self) {
+        self.history.clear();
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.store.n_samples()
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.store.n_chunks()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn history_is_windowed_median() {
+        let mut t = TaskState::new(NodeSpec::new(0, 1.0), 3);
+        assert_eq!(t.est_per_sample(), None);
+        t.record_time(1.0);
+        t.record_time(100.0);
+        t.record_time(2.0);
+        assert_eq!(t.est_per_sample(), Some(2.0)); // median of {1,100,2}
+        t.record_time(3.0); // evicts 1.0 → {100,2,3}
+        assert_eq!(t.est_per_sample(), Some(3.0));
+        t.clear_history();
+        assert_eq!(t.est_per_sample(), None);
+    }
+}

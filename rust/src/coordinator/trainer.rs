@@ -1,0 +1,508 @@
+//! The trainer: Chicle's central driver (paper §4.1–§4.2).
+//!
+//! Each iteration is barrier-synchronous:
+//!
+//! 1. Poll the resource manager at the current virtual time and apply
+//!    elastic events (uni-tasks mode): spawn tasks on newly assigned
+//!    nodes, drain and redistribute chunks from revoked ones.
+//! 2. Run the between-iteration policies (rebalance / shuffle /
+//!    straggler) — the window where the scheduler owns the chunks.
+//! 3. Execute one solver iteration on every task concurrently.
+//! 4. Merge task updates into the shared model (weighted per eq. 2).
+//! 5. Account time: the paper's projection model (§5.3) or measured
+//!    wallclock scaled by node speed; record swimlane spans.
+//! 6. Evaluate the convergence metric on schedule and log the iteration.
+//!
+//! Micro-task emulation (§5.1 "Micro-tasks") keeps K fixed task states
+//! regardless of node count and projects iteration time with the wave
+//! model; convergence per epoch then only depends on K, exactly as the
+//! paper argues.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::algos::{Algorithm, LocalUpdate, ModelVec};
+use crate::chunks::{Chunk, NetworkModel};
+use crate::cluster::{NodeSpec, ResourceEvent, ResourceManager, TraceResourceManager};
+use crate::config::{SessionConfig, TaskModel, TimeModel};
+use crate::metrics::{IterationRecord, Metric, MetricsLog, SwimlaneRecorder, TaskSpan};
+use crate::sim::{microtask_iteration_time, VirtualClock};
+use crate::util::Rng;
+
+use super::policy::{
+    deal_round_robin, redistribute_for_new_tasks, Policy, PolicyCtx, RebalancePolicy,
+    ShufflePolicy, StragglerPolicy,
+};
+use super::task::TaskState;
+
+/// The central driver.
+pub struct Trainer {
+    cfg: SessionConfig,
+    algo: Arc<dyn Algorithm>,
+    tasks: Vec<TaskState>,
+    rm: TraceResourceManager,
+    clock: VirtualClock,
+    net: NetworkModel,
+    policies: Vec<Box<dyn Policy>>,
+    rng: Rng,
+    n_total: usize,
+    cum_samples: usize,
+    eval_every: usize,
+    pub metrics: MetricsLog,
+    pub swimlanes: SwimlaneRecorder,
+    model: ModelVec,
+}
+
+impl Trainer {
+    /// Build a trainer from config + algorithm + the dataset's chunks.
+    pub fn new(
+        cfg: SessionConfig,
+        algo: Arc<dyn Algorithm>,
+        mut chunks: Vec<Chunk>,
+    ) -> Result<Self> {
+        let rm = cfg.elastic.build_rm();
+        let mut rng = Rng::seed_from_u64(cfg.seed);
+        let n_total: usize = chunks.iter().map(|c| c.n_samples()).sum();
+
+        // Initial task set.
+        let window = cfg.policies.rebalance_window;
+        let mut tasks: Vec<TaskState> = match cfg.task_model {
+            TaskModel::UniTasks => rm
+                .assigned()
+                .iter()
+                .map(|n| TaskState::new(n.clone(), window))
+                .collect(),
+            TaskModel::MicroTasks { k } => (0..k)
+                .map(|i| TaskState::new(NodeSpec::new(i as u32, 1.0), window))
+                .collect(),
+        };
+        anyhow::ensure!(!tasks.is_empty(), "no tasks at t=0");
+
+        // Initial chunk placement. RandomChunks = Chicle's random
+        // assignment; Contiguous = the Snap-ML-style split (paper §A.1).
+        match cfg.partitioning {
+            crate::config::Partitioning::RandomChunks => rng.shuffle(&mut chunks),
+            crate::config::Partitioning::Contiguous => {
+                chunks.sort_by_key(|c| c.id);
+            }
+        }
+        let k = tasks.len();
+        match cfg.partitioning {
+            crate::config::Partitioning::RandomChunks => {
+                // Random chunk→task placement, balanced by sample count:
+                // each (shuffled) chunk goes to the task currently holding
+                // the fewest samples. Deliberately speed-agnostic — node
+                // speeds are unknown a priori; the rebalance policy learns
+                // them from iteration timings (paper §4.5).
+                for chunk in chunks {
+                    let t = tasks
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|(_, task)| task.n_samples())
+                        .map(|(i, _)| i)
+                        .unwrap();
+                    tasks[t].store.add(chunk);
+                }
+            }
+            crate::config::Partitioning::Contiguous => {
+                let n = chunks.len();
+                for (i, chunk) in chunks.into_iter().enumerate() {
+                    // Contiguous blocks of ceil(n/k) chunks per task.
+                    let per = n.div_ceil(k);
+                    tasks[(i / per).min(k - 1)].store.add(chunk);
+                }
+            }
+        }
+
+        let mut policies: Vec<Box<dyn Policy>> = Vec::new();
+        if matches!(cfg.task_model, TaskModel::UniTasks) {
+            if cfg.policies.rebalance {
+                policies.push(Box::new(RebalancePolicy::new(cfg.policies.rebalance_step)));
+            }
+            if cfg.policies.shuffle {
+                policies.push(Box::new(ShufflePolicy::new(cfg.policies.shuffle_every, 1)));
+            }
+            if cfg.policies.straggler {
+                policies.push(Box::new(StragglerPolicy::new(cfg.policies.straggler_factor, 2)));
+            }
+        }
+
+        let eval_every = match &cfg.algo {
+            crate::config::AlgoConfig::Cocoa(_) => 1,
+            crate::config::AlgoConfig::Lsgd(l) => l.eval_every.max(1),
+        };
+
+        let model = algo.init_model()?;
+        Ok(Trainer {
+            cfg,
+            algo,
+            tasks,
+            rm,
+            clock: VirtualClock::new(),
+            net: NetworkModel::default(),
+            policies,
+            rng,
+            n_total,
+            cum_samples: 0,
+            eval_every,
+            metrics: MetricsLog::new(),
+            swimlanes: SwimlaneRecorder::new(),
+            model,
+        })
+    }
+
+    pub fn model(&self) -> &ModelVec {
+        &self.model
+    }
+
+    pub fn tasks(&self) -> &[TaskState] {
+        &self.tasks
+    }
+
+    pub fn epochs(&self) -> f64 {
+        self.cum_samples as f64 / self.n_total.max(1) as f64
+    }
+
+    /// Current active node set (for projections): assigned nodes in
+    /// uni-tasks mode, the RM's current allocation in micro-task mode.
+    fn current_nodes(&self) -> Vec<NodeSpec> {
+        match self.cfg.task_model {
+            TaskModel::UniTasks => self.tasks.iter().map(|t| t.node.clone()).collect(),
+            TaskModel::MicroTasks { .. } => self.rm.assigned().to_vec(),
+        }
+    }
+
+    /// Apply pending resource-manager events (uni-tasks only). Returns
+    /// bytes moved for transfer accounting.
+    fn handle_elasticity(&mut self) -> Result<usize> {
+        if !matches!(self.cfg.task_model, TaskModel::UniTasks) {
+            return Ok(0);
+        }
+        let events = self.rm.poll(self.clock.now());
+        if events.is_empty() {
+            return Ok(0);
+        }
+        let mut moved = 0usize;
+        for ev in events {
+            match ev {
+                ResourceEvent::RevokeNotice(ids) => {
+                    let mut orphans: Vec<Chunk> = Vec::new();
+                    self.tasks.retain_mut(|t| {
+                        if ids.contains(&t.node.id) {
+                            orphans.extend(t.store.drain());
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                    anyhow::ensure!(!self.tasks.is_empty(), "all nodes revoked");
+                    moved += deal_round_robin(&mut self.tasks, orphans);
+                }
+                ResourceEvent::Assigned(nodes) => {
+                    let window = self.cfg.policies.rebalance_window;
+                    for n in nodes {
+                        self.tasks.push(TaskState::new(n, window));
+                    }
+                    moved += redistribute_for_new_tasks(&mut self.tasks, &mut self.rng);
+                }
+            }
+        }
+        // Loads changed; learned runtimes are stale.
+        for t in &mut self.tasks {
+            t.clear_history();
+        }
+        Ok(moved)
+    }
+
+    /// Execute one full training iteration. Returns the evaluated metric
+    /// if this iteration was an evaluation point.
+    pub fn step(&mut self, iter: usize) -> Result<Option<Metric>> {
+        // 1. Elasticity.
+        let mut moved_bytes = self.handle_elasticity()?;
+
+        // 2. Policies (scheduler owns chunks between iterations).
+        for p in &mut self.policies {
+            let mut ctx = PolicyCtx {
+                tasks: &mut self.tasks,
+                iter,
+                net: &self.net,
+                moved_bytes: 0,
+                moved_chunks: 0,
+                rng: &mut self.rng,
+            };
+            p.apply(&mut ctx)?;
+            moved_bytes += ctx.moved_bytes;
+        }
+
+        // 3. Execute all tasks concurrently (barrier at scope end).
+        let k = self.tasks.len();
+        let algo = Arc::clone(&self.algo);
+        let model_ref = &self.model;
+        let base_seed = self
+            .cfg
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(iter as u64);
+        let results: Vec<Result<(LocalUpdate, Duration)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .tasks
+                .iter_mut()
+                .enumerate()
+                .map(|(t, task)| {
+                    let algo = Arc::clone(&algo);
+                    scope.spawn(move || -> Result<(LocalUpdate, Duration)> {
+                        if task.store.n_samples() == 0 {
+                            return Ok((
+                                LocalUpdate {
+                                    delta: vec![0.0; algo.model_len()],
+                                    samples: 0,
+                                    loss_sum: 0.0,
+                                },
+                                Duration::ZERO,
+                            ));
+                        }
+                        let t0 = Instant::now();
+                        let upd = algo.task_iterate(
+                            task.store.chunks_mut(),
+                            model_ref,
+                            k,
+                            base_seed.wrapping_add((t as u64) << 32),
+                            None,
+                        )?;
+                        Ok((upd, t0.elapsed()))
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("task thread panicked"))
+                .collect()
+        });
+        let mut updates = Vec::with_capacity(k);
+        let mut walls = Vec::with_capacity(k);
+        for r in results {
+            let (u, w) = r?;
+            walls.push(w);
+            updates.push(u);
+        }
+
+        // 4. Merge.
+        self.algo.merge(&mut self.model, &updates, k);
+
+        // 5. Time accounting.
+        let unit = self.algo.unit_samples(self.n_total, self.cfg.ref_nodes);
+        let nodes = self.current_nodes();
+        let start = self.clock.now();
+        let mut task_times: Vec<f64> = Vec::with_capacity(k);
+        for ((task, upd), wall) in self.tasks.iter_mut().zip(&updates).zip(&walls) {
+            let t = match self.cfg.time_model {
+                TimeModel::Projected => (upd.samples as f64 / unit) / task.node.speed,
+                TimeModel::Measured => wall.as_secs_f64() / task.node.speed,
+            };
+            task_times.push(t);
+            if upd.samples > 0 {
+                task.record_time(t / upd.samples as f64);
+            }
+        }
+        let iteration_time = match self.cfg.task_model {
+            TaskModel::UniTasks => task_times.iter().cloned().fold(0.0, f64::max),
+            TaskModel::MicroTasks { k } => {
+                // Wave model over the *current* node allocation: each task
+                // is one unit of work of the largest observed size.
+                let task_units = task_times.iter().cloned().fold(0.0, f64::max);
+                microtask_iteration_time(k, task_units * k as f64, &nodes)
+            }
+        };
+        let transfer_time = match self.cfg.time_model {
+            // The paper's projections exclude transfer overheads
+            // (§5.3: "this favors micro-tasks").
+            TimeModel::Projected => 0.0,
+            TimeModel::Measured => self.net.transfer_cost(moved_bytes).as_secs_f64(),
+        };
+
+        // 6. Swimlanes (uni-tasks; micro-task waves aren't per-node).
+        if matches!(self.cfg.task_model, TaskModel::UniTasks) {
+            for (task, (t, upd)) in self
+                .tasks
+                .iter()
+                .zip(task_times.iter().zip(&updates))
+            {
+                self.swimlanes.record(TaskSpan {
+                    node: task.node.id,
+                    iter,
+                    start,
+                    end: start + Duration::from_secs_f64(*t),
+                    n_chunks: task.n_chunks(),
+                    n_samples: upd.samples,
+                });
+            }
+        }
+
+        self.clock
+            .advance(Duration::from_secs_f64(iteration_time + transfer_time));
+        let iter_samples: usize = updates.iter().map(|u| u.samples).sum();
+        self.cum_samples += iter_samples;
+
+        // 7. Evaluate + record.
+        let metric = if iter % self.eval_every == 0 {
+            let all: Vec<&Chunk> = self
+                .tasks
+                .iter()
+                .flat_map(|t| t.store.iter())
+                .collect();
+            Some(self.algo.evaluate(&self.model, &all)?)
+        } else {
+            None
+        };
+        let loss_sum: f64 = updates.iter().map(|u| u.loss_sum).sum();
+        let steps: usize = updates.iter().filter(|u| u.samples > 0).count();
+        self.metrics.push(IterationRecord {
+            iter,
+            epochs: self.epochs(),
+            metric,
+            vtime: self.clock.now(),
+            wall: walls.iter().copied().max().unwrap_or(Duration::ZERO),
+            n_tasks: k,
+            samples: iter_samples,
+            train_loss: if steps > 0 { Some(loss_sum / steps as f64) } else { None },
+        });
+        Ok(metric)
+    }
+
+    /// Run to completion: stops at `max_iters`, `max_epochs`, or when the
+    /// algorithm's convergence target is reached.
+    pub fn run(&mut self) -> Result<&MetricsLog> {
+        let target = self.algo.target();
+        for iter in 0..self.cfg.max_iters {
+            let metric = self.step(iter)?;
+            if self.epochs() >= self.cfg.max_epochs {
+                break;
+            }
+            if let (Some(m), Some(t)) = (metric, target) {
+                if m.reached(t) {
+                    break;
+                }
+            }
+        }
+        Ok(&self.metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::{Backend, CocoaAlgo};
+    use crate::chunks::chunker::make_chunks;
+    use crate::config::{CocoaConfig, ElasticSpec, SessionConfig};
+    use crate::data::synth;
+
+    fn cocoa_trainer(cfg: SessionConfig, n: usize) -> Trainer {
+        let ds = synth::higgs_like(n, 5);
+        let chunks = make_chunks(&ds, 8 * 1024);
+        let algo = Arc::new(CocoaAlgo::new(
+            CocoaConfig::default(),
+            Backend::native_cocoa(),
+            ds.n_samples(),
+            ds.dim(),
+        ));
+        Trainer::new(cfg, algo, chunks).unwrap()
+    }
+
+    #[test]
+    fn rigid_cocoa_converges() {
+        let mut cfg = SessionConfig::cocoa("t", 4);
+        cfg.max_iters = 30;
+        let mut tr = cocoa_trainer(cfg, 2000);
+        tr.run().unwrap();
+        let gap = tr.metrics.last_gap().unwrap();
+        assert!(gap < 0.01, "gap {gap}");
+        // One full local pass per task per iteration → 1 epoch/iteration.
+        assert!((tr.metrics.records[0].epochs - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn projected_time_matches_wave_model_rigid() {
+        let mut cfg = SessionConfig::cocoa("t", 4);
+        cfg.ref_nodes = 16;
+        cfg.max_iters = 3;
+        let mut tr = cocoa_trainer(cfg, 1600);
+        tr.run().unwrap();
+        // 4 nodes, 16-node normalization → 16/4 = 4 units/iteration,
+        // up to one chunk (~66 samples / 100 units) of placement slack.
+        let t0 = tr.metrics.records[0].vtime.as_secs_f64();
+        assert!(t0 >= 4.0 - 1e-9 && t0 < 4.8, "{t0}");
+    }
+
+    #[test]
+    fn elastic_scale_out_adds_tasks() {
+        let mut cfg = SessionConfig::cocoa("t", 2).with_elastic(ElasticSpec::Gradual {
+            from: 2,
+            to: 8,
+            interval_s: 10.0,
+        });
+        cfg.max_iters = 20;
+        cfg.policies.rebalance = true;
+        let mut tr = cocoa_trainer(cfg, 2000);
+        tr.run().unwrap();
+        assert_eq!(tr.tasks().len(), 8);
+        // Chunks conserved across all the redistribution.
+        let total: usize = tr.tasks().iter().map(|t| t.n_samples()).sum();
+        assert_eq!(total, 2000);
+        // n_tasks in the log should be non-decreasing 2 → 8.
+        let firsts = tr.metrics.records.first().unwrap().n_tasks;
+        let lasts = tr.metrics.records.last().unwrap().n_tasks;
+        assert_eq!(firsts, 2);
+        assert_eq!(lasts, 8);
+    }
+
+    #[test]
+    fn elastic_scale_in_removes_tasks_conserving_chunks() {
+        let mut cfg = SessionConfig::cocoa("t", 8).with_elastic(ElasticSpec::Gradual {
+            from: 8,
+            to: 2,
+            interval_s: 5.0,
+        });
+        cfg.max_iters = 25;
+        let mut tr = cocoa_trainer(cfg, 2000);
+        tr.run().unwrap();
+        assert_eq!(tr.tasks().len(), 2);
+        let total: usize = tr.tasks().iter().map(|t| t.n_samples()).sum();
+        assert_eq!(total, 2000);
+    }
+
+    #[test]
+    fn microtask_mode_keeps_k_constant() {
+        let mut cfg = SessionConfig::cocoa("t", 4)
+            .with_microtasks(16)
+            .with_elastic(ElasticSpec::Gradual { from: 8, to: 2, interval_s: 5.0 });
+        cfg.max_iters = 10;
+        let mut tr = cocoa_trainer(cfg, 2000);
+        tr.run().unwrap();
+        assert_eq!(tr.tasks().len(), 16);
+        assert!(tr.metrics.records.iter().all(|r| r.n_tasks == 16));
+    }
+
+    #[test]
+    fn heterogeneous_rebalance_aligns_runtimes() {
+        let mut cfg = SessionConfig::cocoa("t", 4).with_elastic(ElasticSpec::Heterogeneous {
+            fast: 2,
+            slow: 2,
+            factor: 2.0,
+        });
+        cfg.max_iters = 25;
+        cfg.policies.rebalance = true;
+        cfg.policies.rebalance_step = 8;
+        let mut tr = cocoa_trainer(cfg, 4000);
+        tr.run().unwrap();
+        // After rebalancing, the last iteration should be far better
+        // balanced than the first.
+        let first = tr.swimlanes.imbalance(0).unwrap();
+        let last_iter = tr.swimlanes.n_iterations() - 1;
+        let last = tr.swimlanes.imbalance(last_iter).unwrap();
+        assert!(first > 1.8, "first iteration imbalance {first}");
+        assert!(last < first, "imbalance {first} -> {last}");
+        assert!(last < 1.4, "final imbalance {last}");
+    }
+}

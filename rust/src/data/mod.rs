@@ -1,0 +1,176 @@
+//! Training data: in-memory datasets, sparse vectors, synthetic generators.
+//!
+//! The paper evaluates on HIGGS, Criteo, CIFAR-10 and Fashion-MNIST
+//! (Table 1). Those corpora are not redistributable here, so [`synth`]
+//! provides synthetic equivalents that preserve the properties the
+//! evaluation depends on (dense vs. sparse access, partitioning
+//! sensitivity, convergence-vs-batch-size degradation) — see
+//! DESIGN.md §Substitutions.
+
+pub mod sparse;
+pub mod synth;
+
+pub use sparse::SparseVec;
+
+/// A labelled in-memory training set. Feature storage is columnar per
+/// sample ("row major"): the layouts mirror Chicle's chunk format so
+/// chunking is a cheap copy (paper §4.4).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub features: FeatureMatrix,
+    pub labels: Labels,
+}
+
+/// Sample payloads. `Tokens` covers the LM end-to-end workload where a
+/// "sample" is one sequence.
+#[derive(Clone, Debug)]
+pub enum FeatureMatrix {
+    /// Row-major dense matrix: `data[i*dim..(i+1)*dim]` is sample `i`.
+    Dense { data: Vec<f32>, dim: usize },
+    /// One sparse vector per sample.
+    Sparse { rows: Vec<SparseVec>, dim: usize },
+    /// Fixed-length token sequences: `data[i*seq_len..]` is sequence `i`.
+    Tokens { data: Vec<i32>, seq_len: usize },
+}
+
+/// Labels: `Binary` (±1) for GLM/SVM workloads, `Class` for NN
+/// classification, `None` for self-supervised LM sequences.
+#[derive(Clone, Debug)]
+pub enum Labels {
+    Binary(Vec<f32>),
+    Class(Vec<i32>),
+    None,
+}
+
+impl Dataset {
+    pub fn n_samples(&self) -> usize {
+        match &self.features {
+            FeatureMatrix::Dense { data, dim } => data.len() / dim.max(&1),
+            FeatureMatrix::Sparse { rows, .. } => rows.len(),
+            FeatureMatrix::Tokens { data, seq_len } => data.len() / seq_len.max(&1),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match &self.features {
+            FeatureMatrix::Dense { dim, .. } => *dim,
+            FeatureMatrix::Sparse { dim, .. } => *dim,
+            FeatureMatrix::Tokens { seq_len, .. } => *seq_len,
+        }
+    }
+
+    /// Approximate in-memory size (Table 1's "Size" column).
+    pub fn size_bytes(&self) -> usize {
+        let feat = match &self.features {
+            FeatureMatrix::Dense { data, .. } => data.len() * 4,
+            FeatureMatrix::Sparse { rows, .. } => {
+                rows.iter().map(|r| r.nnz() * 8).sum()
+            }
+            FeatureMatrix::Tokens { data, .. } => data.len() * 4,
+        };
+        let lab = match &self.labels {
+            Labels::Binary(v) => v.len() * 4,
+            Labels::Class(v) => v.len() * 4,
+            Labels::None => 0,
+        };
+        feat + lab
+    }
+
+    /// Number of distinct classes (0 for binary/LM workloads).
+    pub fn n_classes(&self) -> usize {
+        match &self.labels {
+            Labels::Class(v) => v.iter().copied().max().map_or(0, |m| m as usize + 1),
+            _ => 0,
+        }
+    }
+
+    /// Binary label of sample `i` (panics for non-binary datasets).
+    pub fn binary_label(&self, i: usize) -> f32 {
+        match &self.labels {
+            Labels::Binary(v) => v[i],
+            _ => panic!("dataset {} has no binary labels", self.name),
+        }
+    }
+
+    /// Split off the last `frac` of samples as a held-out test set.
+    pub fn split_test(mut self, frac: f64) -> (Dataset, Dataset) {
+        let n = self.n_samples();
+        let n_test = ((n as f64) * frac).round() as usize;
+        let n_train = n - n_test;
+        let test_features = match &mut self.features {
+            FeatureMatrix::Dense { data, dim } => {
+                let tail = data.split_off(n_train * *dim);
+                FeatureMatrix::Dense { data: tail, dim: *dim }
+            }
+            FeatureMatrix::Sparse { rows, dim } => {
+                let tail = rows.split_off(n_train);
+                FeatureMatrix::Sparse { rows: tail, dim: *dim }
+            }
+            FeatureMatrix::Tokens { data, seq_len } => {
+                let tail = data.split_off(n_train * *seq_len);
+                FeatureMatrix::Tokens { data: tail, seq_len: *seq_len }
+            }
+        };
+        let test_labels = match &mut self.labels {
+            Labels::Binary(v) => Labels::Binary(v.split_off(n_train)),
+            Labels::Class(v) => Labels::Class(v.split_off(n_train)),
+            Labels::None => Labels::None,
+        };
+        let test = Dataset {
+            name: format!("{}-test", self.name),
+            features: test_features,
+            labels: test_labels,
+        };
+        (self, test)
+    }
+
+    /// Dense row accessor (panics for sparse/token datasets).
+    pub fn dense_row(&self, i: usize) -> &[f32] {
+        match &self.features {
+            FeatureMatrix::Dense { data, dim } => &data[i * dim..(i + 1) * dim],
+            _ => panic!("dataset {} is not dense", self.name),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            name: "tiny".into(),
+            features: FeatureMatrix::Dense { data: (0..20).map(|v| v as f32).collect(), dim: 2 },
+            labels: Labels::Binary(vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0]),
+        }
+    }
+
+    #[test]
+    fn counts_and_rows() {
+        let d = tiny();
+        assert_eq!(d.n_samples(), 10);
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.dense_row(3), &[6.0, 7.0]);
+        assert_eq!(d.size_bytes(), 20 * 4 + 10 * 4);
+    }
+
+    #[test]
+    fn split_test_partitions_samples() {
+        let (train, test) = tiny().split_test(0.2);
+        assert_eq!(train.n_samples(), 8);
+        assert_eq!(test.n_samples(), 2);
+        assert_eq!(test.dense_row(0), &[16.0, 17.0]);
+        assert_eq!(test.binary_label(1), -1.0);
+    }
+
+    #[test]
+    fn n_classes_from_class_labels() {
+        let d = Dataset {
+            name: "c".into(),
+            features: FeatureMatrix::Dense { data: vec![0.0; 12], dim: 4 },
+            labels: Labels::Class(vec![0, 2, 1]),
+        };
+        assert_eq!(d.n_classes(), 3);
+    }
+}

@@ -1,0 +1,98 @@
+//! Sparse sample vectors (the Criteo-like workload).
+//!
+//! Stored per sample as parallel `(indices, values)` arrays, which is also
+//! the wire layout inside data chunks: serialization-free, as required for
+//! one-sided RDMA-style chunk moves (paper §4.4).
+
+/// A sparse feature vector with sorted, unique indices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseVec {
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn new(mut pairs: Vec<(u32, f32)>) -> Self {
+        pairs.sort_unstable_by_key(|p| p.0);
+        pairs.dedup_by_key(|p| p.0);
+        SparseVec {
+            indices: pairs.iter().map(|p| p.0).collect(),
+            values: pairs.iter().map(|p| p.1).collect(),
+        }
+    }
+
+    pub fn empty() -> Self {
+        SparseVec { indices: Vec::new(), values: Vec::new() }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Squared L2 norm.
+    pub fn sq_norm(&self) -> f32 {
+        self.values.iter().map(|v| v * v).sum()
+    }
+
+    /// Dot product against a dense vector.
+    #[inline]
+    pub fn dot_dense(&self, dense: &[f32]) -> f32 {
+        let mut acc = 0.0f32;
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            acc += v * dense[i as usize];
+        }
+        acc
+    }
+
+    /// `dense[i] += scale * self[i]` for all stored entries.
+    #[inline]
+    pub fn axpy_into(&self, scale: f32, dense: &mut [f32]) {
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            dense[i as usize] += scale * v;
+        }
+    }
+
+    /// Densify into a freshly allocated vector of length `dim`.
+    pub fn to_dense(&self, dim: usize) -> Vec<f32> {
+        let mut out = vec![0.0; dim];
+        self.axpy_into(1.0, &mut out);
+        out
+    }
+
+    /// Approximate in-memory footprint in bytes (u32 index + f32 value).
+    pub fn size_bytes(&self) -> usize {
+        self.nnz() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_sorts_and_dedups() {
+        let v = SparseVec::new(vec![(5, 1.0), (1, 2.0), (5, 9.0), (3, 4.0)]);
+        assert_eq!(v.indices, vec![1, 3, 5]);
+        assert_eq!(v.values, vec![2.0, 4.0, 1.0]); // first occurrence wins
+    }
+
+    #[test]
+    fn dot_and_axpy_match_dense() {
+        let v = SparseVec::new(vec![(0, 2.0), (3, -1.0)]);
+        let dense = vec![1.0, 10.0, 10.0, 4.0];
+        assert_eq!(v.dot_dense(&dense), 2.0 - 4.0);
+        let mut acc = vec![0.0; 4];
+        v.axpy_into(0.5, &mut acc);
+        assert_eq!(acc, vec![1.0, 0.0, 0.0, -0.5]);
+        assert_eq!(v.to_dense(4), vec![2.0, 0.0, 0.0, -1.0]);
+    }
+
+    #[test]
+    fn norms_and_sizes() {
+        let v = SparseVec::new(vec![(2, 3.0), (7, 4.0)]);
+        assert_eq!(v.sq_norm(), 25.0);
+        assert_eq!(v.nnz(), 2);
+        assert_eq!(v.size_bytes(), 16);
+        assert_eq!(SparseVec::empty().nnz(), 0);
+    }
+}

@@ -1,0 +1,325 @@
+//! Synthetic dataset generators standing in for the paper's corpora.
+//!
+//! Each generator preserves the properties the evaluation depends on
+//! (DESIGN.md §Substitutions):
+//!
+//! * [`higgs_like`] — dense, 28 features, binary: a partially overlapping
+//!   Gaussian mixture, so SVM training has a non-trivial optimum.
+//! * [`criteo_like`] — sparse, power-law feature frequencies, binary, with
+//!   *correlated contiguous blocks*: consecutive samples share "session"
+//!   features, which reproduces Criteo's sensitivity to contiguous
+//!   partitioning (paper §A.1: Snap ML's contiguous split converges slower
+//!   than Chicle's random chunk assignment).
+//! * [`cifar_like`] / [`fmnist_like`] — 10-class template images + noise,
+//!   so mSGD shows the convergence-vs-batch-size degradation of Fig 1a.
+//! * [`token_corpus`] — a noisy affine Markov chain over the vocabulary:
+//!   learnable next-token structure for the transformer e2e workload.
+
+use crate::util::Rng;
+
+use super::{Dataset, FeatureMatrix, Labels, SparseVec};
+
+fn rng(seed: u64) -> Rng {
+    Rng::seed_from_u64(seed)
+}
+
+/// HIGGS-like: `n` dense samples, 28 features, labels ±1.
+///
+/// Two Gaussian clusters at ±mu with unit noise; `sep` controls class
+/// overlap (default gives ~90% linear separability, similar in difficulty
+/// to HIGGS for a linear SVM).
+pub fn higgs_like(n: usize, seed: u64) -> Dataset {
+    higgs_like_with(n, 28, 1.0, seed)
+}
+
+pub fn higgs_like_with(n: usize, dim: usize, sep: f32, seed: u64) -> Dataset {
+    let mut r = rng(seed);
+    // Class-mean direction, normalized.
+    let mut mu: Vec<f32> = (0..dim).map(|_| r.normal_f32()).collect();
+    let norm = mu.iter().map(|v| v * v).sum::<f32>().sqrt().max(1e-6);
+    mu.iter_mut().for_each(|v| *v = *v / norm * sep);
+
+    let mut data = Vec::with_capacity(n * dim);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let y: f32 = if r.bool(0.5) { 1.0 } else { -1.0 };
+        for j in 0..dim {
+            data.push(mu[j] * y + r.normal_f32());
+        }
+        labels.push(y);
+    }
+    Dataset {
+        name: "higgs_like".into(),
+        features: FeatureMatrix::Dense { data, dim },
+        labels: Labels::Binary(labels),
+    }
+}
+
+/// Criteo-like: `n` sparse samples over `dim` hash buckets, ~`nnz` non-zeros
+/// each, labels ±1, generated in correlated "sessions" of consecutive
+/// samples sharing a session feature set.
+pub fn criteo_like(n: usize, seed: u64) -> Dataset {
+    criteo_like_with(n, 50_000, 30, 16, seed)
+}
+
+pub fn criteo_like_with(n: usize, dim: usize, nnz: usize, session: usize, seed: u64) -> Dataset {
+    let mut r = rng(seed);
+    // Ground-truth weight vector spanning the whole feature space.
+    let mut w_true = vec![0.0f32; dim];
+    for w in w_true.iter_mut() {
+        *w = r.normal_f32();
+    }
+
+    // Temporal drift: the active feature region rotates across the
+    // dataset (CTR logs drift over time). Contiguous partitioning gives
+    // each worker only its region's coordinates — exactly the Snap-ML
+    // sensitivity the paper reports on Criteo (SSA.1).
+    let n_regions = 8usize;
+    let region_stride = (dim / n_regions).max(2);
+
+    let mut rows = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    let mut session_feats: Vec<u32> = Vec::new();
+    for i in 0..n {
+        let region_offset = ((i * n_regions) / n.max(1)) * region_stride;
+        let mut draw = |r: &mut Rng| -> u32 {
+            let z = (r.zipf(region_stride as u64, 1.1) as usize - 1).min(region_stride - 1);
+            ((z + region_offset) % dim) as u32
+        };
+        if i % session == 0 {
+            // New session: a shared set of features for the next `session`
+            // consecutive samples.
+            session_feats = (0..nnz / 2).map(|_| draw(&mut r)).collect();
+        }
+        let mut pairs: Vec<(u32, f32)> =
+            session_feats.iter().map(|&f| (f, 1.0f32)).collect();
+        for _ in 0..(nnz - session_feats.len()).max(1) {
+            let f = draw(&mut r);
+            pairs.push((f, 1.0));
+        }
+        let row = SparseVec::new(pairs);
+        let score: f32 = row.dot_dense(&w_true) + r.normal_f32() * 0.5;
+        labels.push(if score >= 0.0 { 1.0 } else { -1.0 });
+        rows.push(row);
+    }
+    Dataset {
+        name: "criteo_like".into(),
+        features: FeatureMatrix::Sparse { rows, dim },
+        labels: Labels::Binary(labels),
+    }
+}
+
+/// Shared implementation for the template-image generators.
+fn template_images(
+    name: &str,
+    n: usize,
+    dim: usize,
+    n_classes: usize,
+    noise: f32,
+    seed: u64,
+) -> Dataset {
+    let mut r = rng(seed);
+    // Smooth-ish class templates: random low-frequency signal per class.
+    let mut templates = vec![vec![0.0f32; dim]; n_classes];
+    for t in templates.iter_mut() {
+        let k = 8;
+        let coefs: Vec<(f32, f32, f32)> = (0..k)
+            .map(|_| {
+                (
+                    r.normal_f32(),
+                    r.range(0.5, 8.0) as f32,
+                    r.range(0.0, std::f64::consts::TAU) as f32,
+                )
+            })
+            .collect();
+        for (j, v) in t.iter_mut().enumerate() {
+            let x = j as f32 / dim as f32;
+            *v = coefs
+                .iter()
+                .map(|(a, f, p)| a * (f * std::f32::consts::TAU * x + p).sin())
+                .sum::<f32>()
+                / (k as f32).sqrt();
+        }
+    }
+
+    let mut data = Vec::with_capacity(n * dim);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let y = r.below(n_classes);
+        for j in 0..dim {
+            data.push(templates[y][j] + r.normal_f32() * noise);
+        }
+        labels.push(y as i32);
+    }
+    Dataset {
+        name: name.into(),
+        features: FeatureMatrix::Dense { data, dim },
+        labels: Labels::Class(labels),
+    }
+}
+
+/// CIFAR-10-like: 32x32x3 flattened images, 10 classes.
+pub fn cifar_like(n: usize, seed: u64) -> Dataset {
+    template_images("cifar_like", n, 32 * 32 * 3, 10, 1.0, seed)
+}
+
+/// Fashion-MNIST-like: 28x28 flattened images, 10 classes.
+pub fn fmnist_like(n: usize, seed: u64) -> Dataset {
+    template_images("fmnist_like", n, 28 * 28, 10, 0.8, seed)
+}
+
+/// Token sequences from a noisy affine Markov chain:
+/// `t_{i+1} = (a * t_i + b) mod vocab` with probability `1 - eps`, else
+/// uniform. Learnable by a small LM; loss floor ≈ entropy of the mix.
+pub fn token_corpus(n_seqs: usize, seq_len: usize, vocab: i32, seed: u64) -> Dataset {
+    let mut r = rng(seed);
+    let (a, b) = (31i64, 17i64);
+    let mut data = Vec::with_capacity(n_seqs * seq_len);
+    for _ in 0..n_seqs {
+        let mut t = r.below(vocab as usize) as i64;
+        data.push(t as i32);
+        for _ in 1..seq_len {
+            t = if r.bool(0.9) {
+                (a * t + b).rem_euclid(vocab as i64)
+            } else {
+                r.below(vocab as usize) as i64
+            };
+            data.push(t as i32);
+        }
+    }
+    Dataset {
+        name: "token_corpus".into(),
+        features: FeatureMatrix::Tokens { data, seq_len },
+        labels: Labels::None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn higgs_like_shapes_and_balance() {
+        let d = higgs_like(2000, 1);
+        assert_eq!(d.n_samples(), 2000);
+        assert_eq!(d.dim(), 28);
+        if let Labels::Binary(y) = &d.labels {
+            let pos = y.iter().filter(|&&v| v > 0.0).count();
+            assert!(pos > 700 && pos < 1300, "unbalanced: {pos}");
+        } else {
+            panic!("wrong labels");
+        }
+    }
+
+    #[test]
+    fn higgs_like_is_mostly_separable() {
+        // The generating direction itself should classify most samples.
+        let d = higgs_like_with(4000, 28, 1.5, 7);
+        // Estimate mu from class means.
+        let mut mu = vec![0.0f64; 28];
+        for i in 0..d.n_samples() {
+            let y = d.binary_label(i) as f64;
+            for (m, &x) in mu.iter_mut().zip(d.dense_row(i)) {
+                *m += y * x as f64;
+            }
+        }
+        let correct = (0..d.n_samples())
+            .filter(|&i| {
+                let s: f64 = mu
+                    .iter()
+                    .zip(d.dense_row(i))
+                    .map(|(m, &x)| m * x as f64)
+                    .sum();
+                (s >= 0.0) == (d.binary_label(i) > 0.0)
+            })
+            .count();
+        assert!(correct as f64 / 4000.0 > 0.85, "{correct}");
+    }
+
+    #[test]
+    fn criteo_like_is_sparse_and_sessioned() {
+        let d = criteo_like_with(256, 10_000, 20, 16, 3);
+        assert_eq!(d.n_samples(), 256);
+        if let FeatureMatrix::Sparse { rows, .. } = &d.features {
+            assert!(rows.iter().all(|r| r.nnz() <= 30 && r.nnz() >= 5));
+            // Consecutive samples within a session share features...
+            let shared = rows[0]
+                .indices
+                .iter()
+                .filter(|i| rows[1].indices.contains(i))
+                .count();
+            assert!(shared >= 5, "sessions not correlated: {shared}");
+            // ...while samples from different sessions share almost none.
+            let cross = rows[0]
+                .indices
+                .iter()
+                .filter(|i| rows[200].indices.contains(i))
+                .count();
+            assert!(cross < shared, "cross={cross} shared={shared}");
+        } else {
+            panic!("not sparse");
+        }
+    }
+
+    #[test]
+    fn images_have_class_structure() {
+        let d = cifar_like(300, 5);
+        assert_eq!(d.dim(), 3072);
+        assert_eq!(d.n_classes(), 10);
+        // Same-class samples must be closer than cross-class on average.
+        let (mut same, mut cross, mut ns, mut nc) = (0.0f64, 0.0f64, 0, 0);
+        if let Labels::Class(y) = &d.labels {
+            for i in 0..40 {
+                for j in (i + 1)..40 {
+                    let dist: f64 = d
+                        .dense_row(i)
+                        .iter()
+                        .zip(d.dense_row(j))
+                        .map(|(a, b)| ((a - b) as f64).powi(2))
+                        .sum();
+                    if y[i] == y[j] {
+                        same += dist;
+                        ns += 1;
+                    } else {
+                        cross += dist;
+                        nc += 1;
+                    }
+                }
+            }
+        }
+        if ns > 0 && nc > 0 {
+            assert!(same / (ns as f64) < cross / (nc as f64));
+        }
+    }
+
+    #[test]
+    fn token_corpus_follows_chain() {
+        let d = token_corpus(10, 64, 256, 9);
+        assert_eq!(d.n_samples(), 10);
+        if let FeatureMatrix::Tokens { data, seq_len } = &d.features {
+            let mut hits = 0;
+            let mut total = 0;
+            for s in 0..10 {
+                for t in 0..seq_len - 1 {
+                    let cur = data[s * seq_len + t] as i64;
+                    let nxt = data[s * seq_len + t + 1] as i64;
+                    if (31 * cur + 17).rem_euclid(256) == nxt {
+                        hits += 1;
+                    }
+                    total += 1;
+                }
+            }
+            // ~90% of transitions follow the chain.
+            assert!(hits as f64 / total as f64 > 0.8, "{hits}/{total}");
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = higgs_like(100, 42);
+        let b = higgs_like(100, 42);
+        assert_eq!(a.dense_row(7), b.dense_row(7));
+        let c = higgs_like(100, 43);
+        assert_ne!(a.dense_row(7), c.dense_row(7));
+    }
+}

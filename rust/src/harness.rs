@@ -1,0 +1,238 @@
+//! Experiment-harness utilities shared by the `examples/` figure
+//! regenerators: result files, table rendering, and scenario presets
+//! matching the paper's evaluation setup (§5.1).
+
+use std::path::PathBuf;
+
+use crate::config::{
+    AlgoConfig, ElasticSpec, ModelKind, PolicyConfig, SessionConfig, TaskModel,
+};
+use crate::data::{synth, Dataset};
+use crate::metrics::MetricsLog;
+use crate::Result;
+
+/// Where figure TSVs land (`results/`).
+pub fn results_dir() -> PathBuf {
+    let dir = PathBuf::from("results");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Write a TSV under results/ and echo the path.
+pub fn write_tsv(name: &str, content: &str) -> Result<PathBuf> {
+    let path = results_dir().join(name);
+    std::fs::write(&path, content)?;
+    println!("  wrote {}", path.display());
+    Ok(path)
+}
+
+/// Quick-run mode: `CHICLE_FAST=1` shrinks datasets/iterations so every
+/// figure harness finishes in seconds (used by CI and smoke tests).
+pub fn fast_mode() -> bool {
+    std::env::var("CHICLE_FAST").map_or(false, |v| v != "0" && !v.is_empty())
+}
+
+/// Scale a sample count down in fast mode.
+pub fn scaled(n: usize) -> usize {
+    if fast_mode() {
+        (n / 8).max(200)
+    } else {
+        n
+    }
+}
+
+/// Render an aligned text table.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let line = |cells: Vec<String>| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(headers.iter().map(|h| h.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for row in rows {
+        line(row.clone());
+    }
+}
+
+/// The paper's four workloads (Table 1), synthesized at a scale this
+/// testbed trains in minutes. `seed` controls generation.
+pub enum Workload {
+    HiggsLike,
+    CriteoLike,
+    CifarLike,
+    FmnistLike,
+}
+
+impl Workload {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::HiggsLike => "higgs_like",
+            Workload::CriteoLike => "criteo_like",
+            Workload::CifarLike => "cifar_like",
+            Workload::FmnistLike => "fmnist_like",
+        }
+    }
+
+    /// Default evaluation-scale dataset.
+    pub fn dataset(&self, seed: u64) -> Dataset {
+        match self {
+            Workload::HiggsLike => synth::higgs_like(scaled(24_000), seed),
+            Workload::CriteoLike => synth::criteo_like(scaled(24_000), seed),
+            Workload::CifarLike => synth::cifar_like(scaled(4_000), seed),
+            Workload::FmnistLike => synth::fmnist_like(scaled(6_000), seed),
+        }
+    }
+
+    /// Session config with the paper's hyper-parameters for this
+    /// workload (rigid `nodes`-node cluster; callers override elasticity
+    /// and task model).
+    pub fn session(&self, name: &str, nodes: usize) -> SessionConfig {
+        match self {
+            Workload::HiggsLike | Workload::CriteoLike => {
+                let mut cfg = SessionConfig::cocoa(name, nodes);
+                // Evaluation-scale chunks: plenty of chunks per task.
+                cfg.chunk_bytes = 24 * 1024;
+                cfg.max_iters = if fast_mode() { 15 } else { 60 };
+                cfg
+            }
+            Workload::CifarLike | Workload::FmnistLike => {
+                let model = if matches!(self, Workload::CifarLike) {
+                    ModelKind::Cnn
+                } else {
+                    ModelKind::Mlp
+                };
+                let mut cfg = SessionConfig::lsgd(name, model, nodes);
+                cfg.chunk_bytes = 48 * 1024;
+                cfg.max_iters = if fast_mode() { 60 } else { 1200 };
+                if let AlgoConfig::Lsgd(l) = &mut cfg.algo {
+                    l.lr = if matches!(self, Workload::CifarLike) { 2e-3 } else { 4e-3 };
+                    l.eval_every = 10;
+                    l.target_acc = if matches!(self, Workload::CifarLike) { 0.62 } else { 0.80 };
+                }
+                cfg
+            }
+        }
+    }
+
+    /// Epoch horizon for the convergence-curve figures, budgeted for the
+    /// 2-core testbed (CNN epochs are ~50× costlier than CoCoA epochs).
+    pub fn horizon_epochs(&self) -> f64 {
+        let full = match self {
+            Workload::HiggsLike | Workload::CriteoLike => 40.0,
+            Workload::CifarLike => 12.0,
+            Workload::FmnistLike => 20.0,
+        };
+        if fast_mode() {
+            6.0
+        } else {
+            full
+        }
+    }
+
+    /// The duality-gap / accuracy target used for "epochs to converge".
+    pub fn target(&self) -> f64 {
+        match self {
+            Workload::HiggsLike => 2e-3,
+            Workload::CriteoLike => 1e-2,
+            Workload::CifarLike => 0.62,
+            Workload::FmnistLike => 0.80,
+        }
+    }
+}
+
+/// A (label, config-mutator) pair describing a task-model variant: the
+/// uni-tasks system plus the paper's micro-task emulation points.
+pub fn task_model_variants(micro_ks: &[usize]) -> Vec<(String, TaskModel)> {
+    let mut v = vec![("uni".to_string(), TaskModel::UniTasks)];
+    for &k in micro_ks {
+        v.push((format!("micro({k})"), TaskModel::MicroTasks { k }));
+    }
+    v
+}
+
+/// Disable adaptive policies (rigid-framework emulation).
+pub fn rigid_policies() -> PolicyConfig {
+    PolicyConfig {
+        rebalance: false,
+        shuffle: false,
+        straggler: false,
+        ..PolicyConfig::default()
+    }
+}
+
+/// Summarize a run for comparison tables: epochs/time to target and
+/// final metric.
+pub fn summarize(log: &MetricsLog, target: f64) -> (String, String, String) {
+    let epochs = log
+        .epochs_to_target(target)
+        .map_or("—".into(), |e| format!("{e:.1}"));
+    let time = log
+        .time_to_target(target)
+        .map_or("—".into(), |t| format!("{:.1}", t.as_secs_f64()));
+    let last = log
+        .records
+        .iter()
+        .rev()
+        .find_map(|r| r.metric)
+        .map_or("—".into(), |m| format!("{:.4}", m.value()));
+    (epochs, time, last)
+}
+
+/// Convenience: elastic scenarios from the paper (§5.3).
+pub fn scale_in_spec() -> ElasticSpec {
+    ElasticSpec::Gradual { from: 16, to: 2, interval_s: 20.0 }
+}
+
+pub fn scale_out_spec() -> ElasticSpec {
+    ElasticSpec::Gradual { from: 2, to: 16, interval_s: 20.0 }
+}
+
+/// §5.4 scenario 1: 8 fast + 8 slow (1.5×).
+pub fn heterogeneous_spec() -> ElasticSpec {
+    ElasticSpec::Heterogeneous { fast: 8, slow: 8, factor: 1.5 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variants_include_uni_and_micros() {
+        let v = task_model_variants(&[16, 64]);
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[0].0, "uni");
+        assert!(matches!(v[2].1, TaskModel::MicroTasks { k: 64 }));
+    }
+
+    #[test]
+    fn workload_configs_match_paper_params() {
+        let cfg = Workload::CifarLike.session("x", 16);
+        if let AlgoConfig::Lsgd(l) = &cfg.algo {
+            assert_eq!((l.l, l.h, l.momentum), (8, 16, 0.9));
+            assert!(l.scale_lr);
+        } else {
+            panic!();
+        }
+        let c = Workload::HiggsLike.session("y", 4);
+        assert!(matches!(c.algo, AlgoConfig::Cocoa(_)));
+    }
+
+    #[test]
+    fn summarize_formats() {
+        let log = MetricsLog::new();
+        let (e, t, l) = summarize(&log, 0.5);
+        assert_eq!((e.as_str(), t.as_str(), l.as_str()), ("—", "—", "—"));
+    }
+}

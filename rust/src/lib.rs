@@ -1,0 +1,58 @@
+//! # Chicle — elastic distributed ML training with uni-tasks
+//!
+//! A reproduction of *"Addressing Algorithmic Bottlenecks in Elastic Machine
+//! Learning with Chicle"* (Kaufmann et al., MLSys 2019) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: a
+//!   driver/worker training runtime built on *uni-tasks* (exactly one
+//!   multi-threaded task per node) and *mobile data chunks*, with an
+//!   event-driven policy framework for elastic scaling, load rebalancing,
+//!   straggler mitigation and background shuffling
+//!   ([`coordinator`], [`chunks`], [`cluster`]).
+//! * **L2/L1 (build time)** — the compute graphs (CoCoA/SCD, the paper's CNN,
+//!   an MLP, a transformer LM) written in JAX calling Pallas kernels, lowered
+//!   once to HLO text by `python/compile/aot.py` and executed from the rust
+//!   hot path via PJRT ([`runtime`]). Python is never on the training path.
+//!
+//! The crate also ships the substrates the paper depends on: synthetic
+//! dataset generators standing in for HIGGS/Criteo/CIFAR-10/Fashion-MNIST
+//! ([`data`]), a native (pure-rust) compute backend mirroring the HLO math
+//! for fast figure regeneration ([`algos::nn`]), the paper's time-projection
+//! methodology ([`sim`]), and the evaluation harness behind every figure and
+//! table (`examples/`).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use chicle::prelude::*;
+//!
+//! let dataset = chicle::data::synth::higgs_like(20_000, 42);
+//! let cfg = SessionConfig::cocoa("quickstart", 4 /* nodes */);
+//! let mut session = TrainingSession::new(cfg, dataset).unwrap();
+//! let log = session.run().unwrap();
+//! println!("final duality gap: {:.4}", log.last_gap().unwrap());
+//! ```
+
+pub mod algos;
+pub mod chunks;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Convenience re-exports for the common entry points.
+pub mod prelude {
+    pub use crate::config::{AlgoConfig, SessionConfig, TimeModel};
+    pub use crate::coordinator::session::TrainingSession;
+    pub use crate::data::Dataset;
+    pub use crate::metrics::MetricsLog;
+}
+
+/// Crate-wide result type (wraps `anyhow`).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,237 @@
+//! Chicle launcher: run training sessions from JSON configs or built-in
+//! presets.
+//!
+//! ```text
+//! chicle train --config session.json            # JSON session config
+//! chicle train --preset cocoa-higgs [--nodes 4] [--backend hlo] ...
+//! chicle inspect --artifacts artifacts          # list AOT artifacts
+//! chicle emit-config --preset cocoa-higgs       # dump a config to edit
+//! ```
+//!
+//! (Arg parsing is hand-rolled: this repo builds fully offline without
+//! clap — see `util` module docs.)
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use chicle::config::{AlgoConfig, ComputeBackend, ElasticSpec, ModelKind, SessionConfig};
+use chicle::coordinator::TrainingSession;
+use chicle::data::{synth, Dataset};
+use chicle::runtime::Manifest;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run(args: &[String]) -> chicle::Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "train" => train(&flags),
+        "inspect" => inspect(&flags),
+        "emit-config" => emit_config(&flags),
+        "-h" | "--help" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?} (try --help)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "chicle — elastic distributed ML training with uni-tasks\n\n\
+         USAGE:\n  chicle train --config <file.json>\n  \
+         chicle train --preset <name> [--nodes N] [--backend native|hlo]\n                \
+         [--samples N] [--iters N] [--seed N] [--elastic from:to:interval]\n  \
+         chicle inspect [--artifacts DIR]\n  \
+         chicle emit-config --preset <name>\n\n\
+         PRESETS:\n  cocoa-higgs    CoCoA/SCD SVM on higgs_like (dense)\n  \
+         cocoa-criteo   CoCoA/SCD SVM on criteo_like (sparse)\n  \
+         lsgd-cifar     local SGD, paper CNN, cifar_like\n  \
+         lsgd-fmnist    local SGD, MLP, fmnist_like\n  \
+         lsgd-lm        local SGD, transformer LM, token corpus (hlo only)"
+    );
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+/// Build (config, dataset) for a named preset.
+fn preset(name: &str, flags: &HashMap<String, String>) -> chicle::Result<(SessionConfig, Dataset)> {
+    let samples: usize = flags
+        .get("samples")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(20_000);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+    let nodes: usize = flags.get("nodes").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let (mut cfg, ds) = match name {
+        "cocoa-higgs" => (
+            SessionConfig::cocoa("cocoa-higgs", nodes),
+            synth::higgs_like(samples, seed),
+        ),
+        "cocoa-criteo" => {
+            let mut c = SessionConfig::cocoa("cocoa-criteo", nodes);
+            c.chunk_bytes = 64 * 1024;
+            (c, synth::criteo_like(samples, seed))
+        }
+        "lsgd-cifar" => (
+            SessionConfig::lsgd("lsgd-cifar", ModelKind::Cnn, nodes),
+            synth::cifar_like(samples.min(8000), seed),
+        ),
+        "lsgd-fmnist" => (
+            SessionConfig::lsgd("lsgd-fmnist", ModelKind::Mlp, nodes),
+            synth::fmnist_like(samples.min(12_000), seed),
+        ),
+        "lsgd-lm" => {
+            let mut c = SessionConfig::lsgd("lsgd-lm", ModelKind::TfmSmall, nodes);
+            c.backend = ComputeBackend::Hlo;
+            c.chunk_bytes = 16 * 1024;
+            (c, synth::token_corpus(samples.min(2000), 64, 1024, seed))
+        }
+        other => anyhow::bail!("unknown preset {other:?}"),
+    };
+    cfg.seed = seed;
+    if let Some(b) = flags.get("backend") {
+        cfg.backend = match b.as_str() {
+            "native" => ComputeBackend::Native,
+            "hlo" => ComputeBackend::Hlo,
+            other => anyhow::bail!("unknown backend {other:?}"),
+        };
+    }
+    if let Some(it) = flags.get("iters") {
+        cfg.max_iters = it.parse()?;
+    }
+    if let Some(el) = flags.get("elastic") {
+        let parts: Vec<&str> = el.split(':').collect();
+        anyhow::ensure!(parts.len() == 3, "--elastic expects from:to:interval_s");
+        cfg.elastic = ElasticSpec::Gradual {
+            from: parts[0].parse()?,
+            to: parts[1].parse()?,
+            interval_s: parts[2].parse()?,
+        };
+    }
+    if let Some(dir) = flags.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(dir);
+    }
+    Ok((cfg, ds))
+}
+
+fn dataset_for(cfg: &SessionConfig, samples: usize) -> Dataset {
+    // Used for --config runs: pick the generator matching the algo/model.
+    match &cfg.algo {
+        AlgoConfig::Cocoa(_) => synth::higgs_like(samples, cfg.seed),
+        AlgoConfig::Lsgd(l) => match l.model {
+            ModelKind::Mlp => synth::fmnist_like(samples, cfg.seed),
+            ModelKind::Cnn => synth::cifar_like(samples, cfg.seed),
+            ModelKind::TfmSmall | ModelKind::TfmE2e => {
+                synth::token_corpus(samples, 64, 1024, cfg.seed)
+            }
+        },
+    }
+}
+
+fn train(flags: &HashMap<String, String>) -> chicle::Result<()> {
+    let (cfg, ds) = if let Some(path) = flags.get("config") {
+        let cfg = SessionConfig::load(Path::new(path))?;
+        let samples: usize = flags
+            .get("samples")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(20_000);
+        let ds = dataset_for(&cfg, samples);
+        (cfg, ds)
+    } else if let Some(name) = flags.get("preset") {
+        preset(name, flags)?
+    } else {
+        anyhow::bail!("train needs --config <file> or --preset <name>");
+    };
+
+    println!(
+        "session {:?}: {} samples ({}), backend {:?}",
+        cfg.name,
+        ds.n_samples(),
+        ds.name,
+        cfg.backend
+    );
+    let mut session = TrainingSession::new(cfg, ds)?;
+    let log = session.run()?;
+    print!("{}", log.to_tsv());
+    eprintln!(
+        "done: {} iterations, {:.2} epochs, vtime {:.2}s, wall {:.2}s",
+        log.records.len(),
+        log.total_epochs(),
+        log.total_vtime().as_secs_f64(),
+        log.total_wall().as_secs_f64()
+    );
+    if let Some(g) = log.last_gap() {
+        eprintln!("final duality gap: {g:.6}");
+    }
+    if let Some(a) = log.last_accuracy() {
+        eprintln!("final test accuracy: {a:.4}");
+    }
+    Ok(())
+}
+
+fn inspect(flags: &HashMap<String, String>) -> chicle::Result<()> {
+    let dir = flags
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+    let m = Manifest::load(&dir)?;
+    println!("{} artifacts in {}:", m.artifacts.len(), dir.display());
+    let mut names: Vec<&String> = m.artifacts.keys().collect();
+    names.sort();
+    for name in names {
+        let a = &m.artifacts[name];
+        println!(
+            "  {:<28} {} inputs -> {} outputs ({})",
+            name,
+            a.inputs.len(),
+            a.outputs.len(),
+            a.file
+        );
+    }
+    println!("{} models:", m.models.len());
+    for (name, model) in &m.models {
+        println!("  {:<28} {} params, {} tensors", name, model.param_count, model.params.len());
+    }
+    Ok(())
+}
+
+fn emit_config(flags: &HashMap<String, String>) -> chicle::Result<()> {
+    let name = flags
+        .get("preset")
+        .ok_or_else(|| anyhow::anyhow!("emit-config needs --preset"))?;
+    let (cfg, _) = preset(name, flags)?;
+    println!("{}", cfg.to_json().to_string_pretty());
+    Ok(())
+}

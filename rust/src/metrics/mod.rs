@@ -1,0 +1,206 @@
+//! Training metrics: per-iteration logs and swimlane recordings.
+
+pub mod swimlane;
+
+pub use swimlane::{SwimlaneRecorder, TaskSpan};
+
+use std::time::Duration;
+
+/// The convergence metric an algorithm reports each iteration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Metric {
+    /// CoCoA: duality gap (lower is better, → 0).
+    DualityGap(f64),
+    /// lSGD: test accuracy in [0, 1] (higher is better).
+    TestAccuracy(f64),
+    /// LM: eval loss (lower is better).
+    EvalLoss(f64),
+}
+
+impl Metric {
+    pub fn value(&self) -> f64 {
+        match self {
+            Metric::DualityGap(v) | Metric::TestAccuracy(v) | Metric::EvalLoss(v) => *v,
+        }
+    }
+
+    /// Has this metric reached `target`? (direction-aware)
+    pub fn reached(&self, target: f64) -> bool {
+        match self {
+            Metric::DualityGap(v) | Metric::EvalLoss(v) => *v <= target,
+            Metric::TestAccuracy(v) => *v >= target,
+        }
+    }
+}
+
+/// One trainer iteration as recorded by the coordinator.
+#[derive(Clone, Debug)]
+pub struct IterationRecord {
+    pub iter: usize,
+    /// Cumulative fraction of the dataset processed so far, in epochs.
+    pub epochs: f64,
+    /// Convergence metric after this iteration (None if not evaluated).
+    pub metric: Option<Metric>,
+    /// Virtual time at the *end* of this iteration (projected, paper §5.3).
+    pub vtime: Duration,
+    /// Wallclock compute time actually spent in this iteration.
+    pub wall: Duration,
+    /// Number of tasks/nodes active during this iteration.
+    pub n_tasks: usize,
+    /// Samples processed across all tasks this iteration.
+    pub samples: usize,
+    /// Training loss if the algorithm reports one.
+    pub train_loss: Option<f64>,
+}
+
+/// Full per-run log; everything the figure harnesses consume.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsLog {
+    pub records: Vec<IterationRecord>,
+}
+
+impl MetricsLog {
+    pub fn new() -> Self {
+        MetricsLog { records: Vec::new() }
+    }
+
+    pub fn push(&mut self, rec: IterationRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn last_gap(&self) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| match r.metric {
+            Some(Metric::DualityGap(g)) => Some(g),
+            _ => None,
+        })
+    }
+
+    pub fn last_accuracy(&self) -> Option<f64> {
+        self.records.iter().rev().find_map(|r| match r.metric {
+            Some(Metric::TestAccuracy(a)) => Some(a),
+            _ => None,
+        })
+    }
+
+    pub fn best_accuracy(&self) -> Option<f64> {
+        self.records
+            .iter()
+            .filter_map(|r| match r.metric {
+                Some(Metric::TestAccuracy(a)) => Some(a),
+                _ => None,
+            })
+            .fold(None, |acc, a| Some(acc.map_or(a, |b: f64| b.max(a))))
+    }
+
+    /// Epochs needed until the metric first reaches `target` (paper Fig 1 /
+    /// Fig 9/10). None if never reached.
+    pub fn epochs_to_target(&self, target: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.metric.map_or(false, |m| m.reached(target)))
+            .map(|r| r.epochs)
+    }
+
+    /// Projected time until the metric first reaches `target` (Fig 4/5).
+    pub fn time_to_target(&self, target: f64) -> Option<Duration> {
+        self.records
+            .iter()
+            .find(|r| r.metric.map_or(false, |m| m.reached(target)))
+            .map(|r| r.vtime)
+    }
+
+    pub fn total_epochs(&self) -> f64 {
+        self.records.last().map_or(0.0, |r| r.epochs)
+    }
+
+    pub fn total_vtime(&self) -> Duration {
+        self.records.last().map_or(Duration::ZERO, |r| r.vtime)
+    }
+
+    pub fn total_wall(&self) -> Duration {
+        self.records.iter().map(|r| r.wall).sum()
+    }
+
+    /// (vtime_secs, metric) convergence-over-time series.
+    pub fn time_series(&self) -> Vec<(f64, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.metric.map(|m| (r.vtime.as_secs_f64(), m.value())))
+            .collect()
+    }
+
+    /// (epochs, metric) convergence-per-epoch series.
+    pub fn epoch_series(&self) -> Vec<(f64, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.metric.map(|m| (r.epochs, m.value())))
+            .collect()
+    }
+
+    /// Tab-separated dump for the figure harnesses / plotting.
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::from("iter\tepochs\tvtime_s\twall_s\tn_tasks\tsamples\tmetric\ttrain_loss\n");
+        for r in &self.records {
+            out.push_str(&format!(
+                "{}\t{:.4}\t{:.4}\t{:.4}\t{}\t{}\t{}\t{}\n",
+                r.iter,
+                r.epochs,
+                r.vtime.as_secs_f64(),
+                r.wall.as_secs_f64(),
+                r.n_tasks,
+                r.samples,
+                r.metric.map_or("".into(), |m| format!("{:.6}", m.value())),
+                r.train_loss.map_or("".into(), |l| format!("{:.6}", l)),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(iter: usize, epochs: f64, gap: f64, vt: f64) -> IterationRecord {
+        IterationRecord {
+            iter,
+            epochs,
+            metric: Some(Metric::DualityGap(gap)),
+            vtime: Duration::from_secs_f64(vt),
+            wall: Duration::from_millis(5),
+            n_tasks: 4,
+            samples: 100,
+            train_loss: None,
+        }
+    }
+
+    #[test]
+    fn targets_are_direction_aware() {
+        assert!(Metric::DualityGap(0.01).reached(0.1));
+        assert!(!Metric::DualityGap(0.2).reached(0.1));
+        assert!(Metric::TestAccuracy(0.8).reached(0.6));
+        assert!(!Metric::TestAccuracy(0.5).reached(0.6));
+    }
+
+    #[test]
+    fn epochs_and_time_to_target() {
+        let mut log = MetricsLog::new();
+        log.push(rec(0, 1.0, 0.5, 1.0));
+        log.push(rec(1, 2.0, 0.05, 2.0));
+        log.push(rec(2, 3.0, 0.01, 3.0));
+        assert_eq!(log.epochs_to_target(0.1), Some(2.0));
+        assert_eq!(log.time_to_target(0.1), Some(Duration::from_secs(2)));
+        assert_eq!(log.epochs_to_target(0.001), None);
+        assert_eq!(log.last_gap(), Some(0.01));
+        assert_eq!(log.total_epochs(), 3.0);
+    }
+
+    #[test]
+    fn tsv_has_header_and_rows() {
+        let mut log = MetricsLog::new();
+        log.push(rec(0, 1.0, 0.5, 1.0));
+        let tsv = log.to_tsv();
+        assert!(tsv.starts_with("iter\t"));
+        assert_eq!(tsv.lines().count(), 2);
+    }
+}

@@ -1,0 +1,214 @@
+//! Swimlane recording: per-task, per-iteration execution spans
+//! (paper Fig 6 / Fig 11).
+//!
+//! The recorder collects one span per (task, iteration) with the task's
+//! busy window and workload, and renders the paper's three diagrams:
+//! task runtimes without/with load balancing and relative workload bars.
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+use crate::cluster::NodeId;
+
+/// One task's execution within one iteration.
+#[derive(Clone, Debug)]
+pub struct TaskSpan {
+    pub node: NodeId,
+    pub iter: usize,
+    /// Virtual time when the task started computing this iteration.
+    pub start: Duration,
+    /// Virtual time when the task finished its local work.
+    pub end: Duration,
+    pub n_chunks: usize,
+    pub n_samples: usize,
+}
+
+impl TaskSpan {
+    pub fn busy(&self) -> Duration {
+        self.end.saturating_sub(self.start)
+    }
+}
+
+/// Collects spans across a run and renders swimlane diagrams.
+#[derive(Clone, Debug, Default)]
+pub struct SwimlaneRecorder {
+    pub spans: Vec<TaskSpan>,
+}
+
+impl SwimlaneRecorder {
+    pub fn new() -> Self {
+        SwimlaneRecorder { spans: Vec::new() }
+    }
+
+    pub fn record(&mut self, span: TaskSpan) {
+        self.spans.push(span);
+    }
+
+    pub fn n_iterations(&self) -> usize {
+        self.spans.iter().map(|s| s.iter + 1).max().unwrap_or(0)
+    }
+
+    pub fn nodes(&self) -> Vec<NodeId> {
+        let mut v: Vec<NodeId> = self.spans.iter().map(|s| s.node).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Iteration duration = latest task end − earliest task start.
+    pub fn iteration_duration(&self, iter: usize) -> Option<Duration> {
+        let spans: Vec<&TaskSpan> = self.spans.iter().filter(|s| s.iter == iter).collect();
+        if spans.is_empty() {
+            return None;
+        }
+        let start = spans.iter().map(|s| s.start).min().unwrap();
+        let end = spans.iter().map(|s| s.end).max().unwrap();
+        Some(end - start)
+    }
+
+    /// Max/min busy-time ratio within an iteration (1.0 = perfectly
+    /// balanced); the rebalance policy drives this toward 1.
+    pub fn imbalance(&self, iter: usize) -> Option<f64> {
+        let busys: Vec<f64> = self
+            .spans
+            .iter()
+            .filter(|s| s.iter == iter)
+            .map(|s| s.busy().as_secs_f64())
+            .collect();
+        if busys.is_empty() {
+            return None;
+        }
+        let max = busys.iter().cloned().fold(f64::MIN, f64::max);
+        let min = busys.iter().cloned().fold(f64::MAX, f64::min);
+        if min <= 0.0 {
+            return None;
+        }
+        Some(max / min)
+    }
+
+    /// ASCII rendering of task busy-bars per node over iterations
+    /// (one row per node, `width` chars across the full time range).
+    pub fn render_ascii(&self, width: usize) -> String {
+        let mut out = String::new();
+        let t_end = self
+            .spans
+            .iter()
+            .map(|s| s.end)
+            .max()
+            .unwrap_or(Duration::ZERO)
+            .as_secs_f64();
+        if t_end <= 0.0 {
+            return out;
+        }
+        let scale = width as f64 / t_end;
+        for node in self.nodes() {
+            let mut row = vec![' '; width];
+            for s in self.spans.iter().filter(|s| s.node == node) {
+                let a = (s.start.as_secs_f64() * scale) as usize;
+                let b = ((s.end.as_secs_f64() * scale) as usize).min(width);
+                for c in row.iter_mut().take(b).skip(a.min(width)) {
+                    *c = '█';
+                }
+            }
+            let _ = writeln!(out, "node {:>2} |{}|", node, row.iter().collect::<String>());
+        }
+        out
+    }
+
+    /// Relative per-task workload bars (Fig 6 bottom): for the final
+    /// iteration, each node's chunk count relative to the busiest node.
+    pub fn render_workload(&self) -> String {
+        let mut out = String::new();
+        let last = match self.n_iterations().checked_sub(1) {
+            Some(i) => i,
+            None => return out,
+        };
+        let max_chunks = self
+            .spans
+            .iter()
+            .filter(|s| s.iter == last)
+            .map(|s| s.n_chunks)
+            .max()
+            .unwrap_or(0)
+            .max(1);
+        for node in self.nodes() {
+            if let Some(s) = self
+                .spans
+                .iter()
+                .find(|s| s.node == node && s.iter == last)
+            {
+                let bar = "▇".repeat(s.n_chunks * 40 / max_chunks);
+                let _ = writeln!(out, "node {:>2} |{:<40}| {} chunks", node, bar, s.n_chunks);
+            }
+        }
+        out
+    }
+
+    /// TSV dump: node, iter, start_s, end_s, busy_s, chunks, samples.
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::from("node\titer\tstart_s\tend_s\tbusy_s\tchunks\tsamples\n");
+        for s in &self.spans {
+            let _ = writeln!(
+                out,
+                "{}\t{}\t{:.6}\t{:.6}\t{:.6}\t{}\t{}",
+                s.node,
+                s.iter,
+                s.start.as_secs_f64(),
+                s.end.as_secs_f64(),
+                s.busy().as_secs_f64(),
+                s.n_chunks,
+                s.n_samples
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(node: NodeId, iter: usize, start: f64, end: f64, chunks: usize) -> TaskSpan {
+        TaskSpan {
+            node,
+            iter,
+            start: Duration::from_secs_f64(start),
+            end: Duration::from_secs_f64(end),
+            n_chunks: chunks,
+            n_samples: chunks * 100,
+        }
+    }
+
+    #[test]
+    fn durations_and_imbalance() {
+        let mut r = SwimlaneRecorder::new();
+        r.record(span(0, 0, 0.0, 1.0, 4));
+        r.record(span(1, 0, 0.0, 2.0, 4));
+        assert_eq!(r.iteration_duration(0), Some(Duration::from_secs(2)));
+        assert_eq!(r.imbalance(0), Some(2.0));
+        assert_eq!(r.n_iterations(), 1);
+        assert_eq!(r.nodes(), vec![0, 1]);
+        assert!(r.iteration_duration(5).is_none());
+    }
+
+    #[test]
+    fn ascii_renders_rows() {
+        let mut r = SwimlaneRecorder::new();
+        r.record(span(0, 0, 0.0, 1.0, 1));
+        r.record(span(1, 0, 0.0, 0.5, 1));
+        let art = r.render_ascii(20);
+        assert_eq!(art.lines().count(), 2);
+        assert!(art.contains("node  0"));
+    }
+
+    #[test]
+    fn tsv_roundtrip_columns() {
+        let mut r = SwimlaneRecorder::new();
+        r.record(span(3, 1, 1.0, 2.5, 7));
+        let tsv = r.to_tsv();
+        let row = tsv.lines().nth(1).unwrap();
+        let cols: Vec<&str> = row.split('\t').collect();
+        assert_eq!(cols[0], "3");
+        assert_eq!(cols[5], "7");
+    }
+}

@@ -1,0 +1,129 @@
+//! The PJRT engine: compile HLO-text artifacts once, execute many times.
+//!
+//! Single-threaded by construction (the `xla` crate's client is `Rc`-based);
+//! wrap in [`super::HloService`] for multi-worker access.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::Result;
+
+use super::manifest::{Manifest, TensorMeta};
+use super::tensor::HostTensor;
+
+/// Owns the PJRT client, the manifest and the compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU-PJRT engine over an artifact directory. Compilation is
+    /// lazy: each artifact is compiled on first execution.
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT init: {e}"))?;
+        Ok(Engine { client, manifest, executables: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Eagerly compile one artifact (idempotent).
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with host tensors, returning host tensors.
+    ///
+    /// Inputs are validated against the manifest signature. Outputs are
+    /// decoded using the manifest's output dtypes (the lowered modules
+    /// return one flat tuple — `return_tuple=True` in aot.py).
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.prepare(name)?;
+        let meta = self.manifest.artifact(name)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            anyhow::bail!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, sig)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if t.element_count() != sig.element_count() {
+                anyhow::bail!(
+                    "{name}: input {i} has {} elements, signature wants {:?}",
+                    t.element_count(),
+                    sig.shape
+                );
+            }
+            literals.push(to_literal(t, sig)?);
+        }
+        let exe = self.executables.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch {name}: {e}"))?;
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e}"))?;
+        if parts.len() != meta.outputs.len() {
+            anyhow::bail!(
+                "{name}: got {} outputs, manifest says {}",
+                parts.len(),
+                meta.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&meta.outputs)
+            .map(|(lit, sig)| from_literal(lit, sig))
+            .collect()
+    }
+
+    /// Names of all loadable artifacts.
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.artifacts.keys().cloned().collect()
+    }
+}
+
+fn to_literal(t: &HostTensor, sig: &TensorMeta) -> Result<xla::Literal> {
+    let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+    let lit = match t {
+        HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+        HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+    };
+    lit.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape to {dims:?}: {e}"))
+}
+
+fn from_literal(lit: xla::Literal, sig: &TensorMeta) -> Result<HostTensor> {
+    let shape = sig.shape.clone();
+    match sig.dtype.as_str() {
+        "float32" => Ok(HostTensor::F32 {
+            data: lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec f32: {e}"))?,
+            shape,
+        }),
+        "int32" => Ok(HostTensor::I32 {
+            data: lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("to_vec i32: {e}"))?,
+            shape,
+        }),
+        other => anyhow::bail!("unsupported output dtype {other}"),
+    }
+}

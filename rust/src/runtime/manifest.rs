@@ -1,0 +1,262 @@
+//! artifacts/manifest.json — the contract between the AOT compiler
+//! (python/compile/aot.py) and the rust runtime.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// Tensor signature of one artifact input/output.
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(TensorMeta {
+            shape: v
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: v.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    pub meta: HashMap<String, Json>,
+}
+
+/// Layout of one tensor inside a model's flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// A model family: flat-parameter layout + free-form config.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub params: Vec<ParamMeta>,
+    pub param_count: usize,
+    pub extra: HashMap<String, Json>,
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactMeta>,
+    pub models: HashMap<String, ModelMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} (run `make artifacts` first)",
+                path.display()
+            )
+        })?;
+        let mut m = Self::from_json(&Json::parse(&text)?)?;
+        m.dir = dir.to_path_buf();
+        Ok(m)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mut artifacts = HashMap::new();
+        for (name, a) in v.get("artifacts")?.as_obj()? {
+            let inputs = a
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<_>>()?;
+            let outputs = a
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<_>>()?;
+            let meta = match a.opt("meta") {
+                Some(m) => m.as_obj()?.clone().into_iter().collect(),
+                None => HashMap::new(),
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    file: a.get("file")?.as_str()?.to_string(),
+                    inputs,
+                    outputs,
+                    meta,
+                },
+            );
+        }
+        let mut models = HashMap::new();
+        for (name, mv) in v.get("models")?.as_obj()? {
+            let params = mv
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok(ParamMeta {
+                        name: p.get("name")?.as_str()?.to_string(),
+                        shape: p
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|d| d.as_usize())
+                            .collect::<Result<_>>()?,
+                        offset: p.get("offset")?.as_usize()?,
+                        size: p.get("size")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let extra = mv
+                .as_obj()?
+                .iter()
+                .filter(|(k, _)| k.as_str() != "params" && k.as_str() != "param_count")
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect();
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    params,
+                    param_count: mv.get("param_count")?.as_usize()?,
+                    extra,
+                },
+            );
+        }
+        Ok(Manifest { artifacts, models, dir: PathBuf::new() })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Find the grad artifact for a model prefix, e.g. "cnn" →
+    /// ("cnn_grad_l8", batch 8).
+    pub fn grad_artifact(&self, model_prefix: &str) -> Result<(String, usize)> {
+        self.find_kind(model_prefix, "grad")
+    }
+
+    /// Find the eval artifact for a model prefix.
+    pub fn eval_artifact(&self, model_prefix: &str) -> Result<(String, usize)> {
+        self.find_kind(model_prefix, "eval")
+    }
+
+    /// Find the init artifact for a model prefix.
+    pub fn init_artifact(&self, model_prefix: &str) -> Result<String> {
+        self.find_kind(model_prefix, "init").map(|(n, _)| n)
+    }
+
+    fn find_kind(&self, model_prefix: &str, kind: &str) -> Result<(String, usize)> {
+        for (name, a) in &self.artifacts {
+            let model = a.meta.get("model").and_then(|v| v.as_str().ok());
+            let k = a.meta.get("kind").and_then(|v| v.as_str().ok());
+            if model == Some(model_prefix) && k == Some(kind) {
+                let batch = a
+                    .meta
+                    .get("batch")
+                    .and_then(|v| v.as_usize().ok())
+                    .unwrap_or(0);
+                return Ok((name.clone(), batch));
+            }
+        }
+        bail!("no {kind} artifact for model {model_prefix:?}")
+    }
+}
+
+impl ModelMeta {
+    /// Look up a tensor's slice bounds in the flat parameter vector.
+    pub fn param_range(&self, name: &str) -> Option<std::ops::Range<usize>> {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .map(|p| p.offset..p.offset + p.size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        // Integration check against the artifacts built by `make artifacts`;
+        // skipped when artifacts are absent (pure-unit CI).
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        let scd = m.artifact("scd_chunk_s256_f28").unwrap();
+        assert_eq!(scd.inputs.len(), 7);
+        assert_eq!(scd.outputs.len(), 2);
+        assert_eq!(scd.inputs[0].shape, vec![256, 28]);
+        let mlp = m.model("mlp").unwrap();
+        assert_eq!(
+            mlp.param_count,
+            mlp.params.iter().map(|p| p.size).sum::<usize>()
+        );
+        let r = mlp.param_range("fc0.w").unwrap();
+        assert_eq!(r.start, 0);
+        assert_eq!(r.len(), 784 * 256);
+        let (g, b) = m.grad_artifact("mlp").unwrap();
+        assert_eq!(g, "mlp_grad_l8");
+        assert_eq!(b, 8);
+        assert_eq!(m.init_artifact("mlp").unwrap(), "mlp_init");
+    }
+
+    #[test]
+    fn manifest_from_inline_json() {
+        let json = r#"{
+            "artifacts": {
+                "f": {"file": "f.hlo.txt",
+                       "inputs": [{"shape": [2, 2], "dtype": "float32"}],
+                       "outputs": [{"shape": [], "dtype": "float32"}],
+                       "meta": {"kind": "grad", "model": "m", "batch": 4}}
+            },
+            "models": {
+                "m": {"params": [{"name": "w", "shape": [2, 2], "offset": 0, "size": 4}],
+                       "param_count": 4}
+            }
+        }"#;
+        let m = Manifest::from_json(&Json::parse(json).unwrap()).unwrap();
+        assert_eq!(m.artifact("f").unwrap().inputs[0].element_count(), 4);
+        assert_eq!(m.grad_artifact("m").unwrap(), ("f".into(), 4));
+        assert!(m.artifact("missing").is_err());
+        assert!(m.eval_artifact("m").is_err());
+        assert_eq!(m.model("m").unwrap().param_range("w").unwrap(), 0..4);
+    }
+}

@@ -1,0 +1,19 @@
+//! The PJRT runtime: load AOT HLO artifacts and execute them from rust.
+//!
+//! This is the only place the `xla` crate is touched. The interchange is
+//! HLO *text* (see `python/compile/aot.py` for why), compiled once per
+//! artifact by [`engine::Engine`] on the PJRT CPU client. Because the
+//! crate's client types are `Rc`-based (not `Send`), the engine lives on a
+//! dedicated service thread ([`service::HloService`]) and worker tasks
+//! talk to it with plain-data [`tensor::HostTensor`] messages — analogous
+//! to host↔device transfers on a real accelerator node.
+
+pub mod engine;
+pub mod manifest;
+pub mod service;
+pub mod tensor;
+
+pub use engine::Engine;
+pub use manifest::Manifest;
+pub use service::HloService;
+pub use tensor::HostTensor;

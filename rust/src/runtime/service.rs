@@ -1,0 +1,113 @@
+//! HLO execution service: a dedicated thread owning the [`Engine`],
+//! reachable from any worker via a cloneable handle.
+//!
+//! PJRT's CPU executor parallelizes *within* one execution (intra-op
+//! thread pool), so serializing executions at the service is analogous to
+//! each node owning a single device queue. For multi-node scaling studies
+//! the solvers' native backend avoids this shared queue entirely.
+
+use std::path::Path;
+use std::sync::mpsc::{sync_channel, Sender, SyncSender};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use super::engine::Engine;
+use super::tensor::HostTensor;
+
+enum Request {
+    Execute {
+        artifact: String,
+        inputs: Vec<HostTensor>,
+        reply: SyncSender<Result<Vec<HostTensor>>>,
+    },
+    Prepare {
+        artifact: String,
+        reply: SyncSender<Result<()>>,
+    },
+}
+
+/// Cloneable, thread-safe handle to the engine thread.
+///
+/// `std::sync::mpsc::Sender` is `Send` but not `Sync`; a tiny mutex around
+/// it gives a shareable handle (send is effectively instant — the engine
+/// queue is unbounded).
+pub struct HloService {
+    tx: Mutex<Sender<Request>>,
+}
+
+impl Clone for HloService {
+    fn clone(&self) -> Self {
+        HloService { tx: Mutex::new(self.tx.lock().unwrap().clone()) }
+    }
+}
+
+impl HloService {
+    /// Spawn the engine thread over `artifacts_dir`. The thread exits when
+    /// every `HloService` clone has been dropped.
+    pub fn spawn(artifacts_dir: &Path) -> Result<HloService> {
+        let (tx, rx) = std::sync::mpsc::channel::<Request>();
+        let dir = artifacts_dir.to_path_buf();
+        // Engine creation happens on the service thread (the client is not
+        // Send); surface init errors through a one-shot channel.
+        let (init_tx, init_rx) = sync_channel::<Result<()>>(1);
+        std::thread::Builder::new()
+            .name("hlo-engine".into())
+            .spawn(move || {
+                let mut engine = match Engine::new(&dir) {
+                    Ok(e) => {
+                        let _ = init_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Execute { artifact, inputs, reply } => {
+                            let _ = reply.send(engine.execute(&artifact, &inputs));
+                        }
+                        Request::Prepare { artifact, reply } => {
+                            let _ = reply.send(engine.prepare(&artifact));
+                        }
+                    }
+                }
+            })?;
+        init_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during init"))??;
+        Ok(HloService { tx: Mutex::new(tx) })
+    }
+
+    /// Blocking execute on the engine thread.
+    pub fn execute(&self, artifact: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::Execute {
+                artifact: artifact.to_string(),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread dropped request"))?
+    }
+
+    /// Pre-compile an artifact (warm-up before timed runs).
+    pub fn prepare(&self, artifact: &str) -> Result<()> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.tx
+            .lock()
+            .unwrap()
+            .send(Request::Prepare { artifact: artifact.to_string(), reply: reply_tx })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread dropped request"))?
+    }
+}

@@ -1,0 +1,117 @@
+//! Plain-data tensors that cross the worker↔engine thread boundary.
+//!
+//! The `xla` crate's `Literal` wraps raw C pointers (not `Send`), so
+//! workers exchange `HostTensor`s with the engine service instead — the
+//! in-process analogue of a host→device transfer.
+
+/// A host-side tensor: flat data + shape.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl HostTensor {
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn vec_f32(data: Vec<f32>) -> Self {
+        let n = data.len();
+        HostTensor::F32 { data, shape: vec![n] }
+    }
+
+    pub fn vec_i32(data: Vec<i32>) -> Self {
+        let n = data.len();
+        HostTensor::I32 { data, shape: vec![n] }
+    }
+
+    pub fn mat_f32(data: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        HostTensor::F32 { data, shape: vec![rows, cols] }
+    }
+
+    pub fn mat_i32(data: Vec<i32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        HostTensor::I32 { data, shape: vec![rows, cols] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    /// Borrow f32 contents (error for i32 tensors).
+    pub fn as_f32(&self) -> crate::Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => anyhow::bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> crate::Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            HostTensor::F32 { .. } => anyhow::bail!("expected i32 tensor, got f32"),
+        }
+    }
+
+    /// Consume into f32 data (error for i32 tensors).
+    pub fn into_f32(self) -> crate::Result<Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            HostTensor::I32 { .. } => anyhow::bail!("expected f32 tensor, got i32"),
+        }
+    }
+
+    /// First element as f64 (scalar outputs like loss/counters).
+    pub fn scalar_value(&self) -> crate::Result<f64> {
+        match self {
+            HostTensor::F32 { data, .. } => data
+                .first()
+                .map(|v| *v as f64)
+                .ok_or_else(|| anyhow::anyhow!("empty tensor")),
+            HostTensor::I32 { data, .. } => data
+                .first()
+                .map(|v| *v as f64)
+                .ok_or_else(|| anyhow::anyhow!("empty tensor")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_accessors() {
+        let t = HostTensor::mat_f32(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.element_count(), 4);
+        assert_eq!(t.as_f32().unwrap()[3], 4.0);
+        assert!(t.as_i32().is_err());
+        assert_eq!(t.scalar_value().unwrap(), 1.0);
+
+        let s = HostTensor::scalar_i32(7);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(s.scalar_value().unwrap(), 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mat_shape_mismatch_panics() {
+        HostTensor::mat_f32(vec![1.0; 3], 2, 2);
+    }
+}

@@ -1,0 +1,52 @@
+//! Virtual clock for deterministic, trace-driven experiments.
+//!
+//! The evaluation projects convergence over time from per-epoch
+//! measurements plus a schedule model (paper §5.3 "Methodology") — the
+//! clock is advanced by the model, not by wallclock.
+
+use std::time::Duration;
+
+/// Monotonic virtual clock.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VirtualClock {
+    now: Duration,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { now: Duration::ZERO }
+    }
+
+    pub fn now(&self) -> Duration {
+        self.now
+    }
+
+    pub fn advance(&mut self, by: Duration) {
+        self.now += by;
+    }
+
+    pub fn advance_secs(&mut self, by: f64) {
+        assert!(by >= 0.0, "cannot advance clock backwards ({by})");
+        self.now += Duration::from_secs_f64(by);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_monotonically() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.advance(Duration::from_secs(2));
+        c.advance_secs(0.5);
+        assert_eq!(c.now(), Duration::from_millis(2500));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_negative_advance() {
+        VirtualClock::new().advance_secs(-1.0);
+    }
+}

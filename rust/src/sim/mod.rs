@@ -1,0 +1,7 @@
+//! Time simulation: virtual clock + the paper's projection methodology.
+
+pub mod clock;
+pub mod projection;
+
+pub use clock::VirtualClock;
+pub use projection::{makespan, microtask_iteration_time, uni_iteration_time};

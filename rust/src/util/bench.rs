@@ -1,0 +1,157 @@
+//! Micro-benchmark harness (offline substitute for criterion).
+//!
+//! Warms up, runs timed batches until a time budget or iteration cap,
+//! reports mean / p50 / p95 and throughput. Used by `rust/benches/*.rs`
+//! (declared `harness = false` in Cargo.toml).
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} iters   mean {:>12}   p50 {:>12}   p95 {:>12}   min {:>12}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+            fmt_dur(self.min),
+        );
+    }
+
+    /// Mean-based ops/sec.
+    pub fn ops_per_sec(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64()
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns} ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2} µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2} ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3} s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark runner with a total time budget per benchmark.
+pub struct Bencher {
+    budget: Duration,
+    min_iters: usize,
+    max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher::new(Duration::from_secs(2))
+    }
+}
+
+impl Bencher {
+    pub fn new(budget: Duration) -> Self {
+        // CHICLE_BENCH_BUDGET_MS overrides (used by `make bench` in CI).
+        let budget = std::env::var("CHICLE_BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(Duration::from_millis)
+            .unwrap_or(budget);
+        Bencher { budget, min_iters: 10, max_iters: 100_000, results: Vec::new() }
+    }
+
+    pub fn with_iters(mut self, min: usize, max: usize) -> Self {
+        self.min_iters = min;
+        self.max_iters = max;
+        self
+    }
+
+    /// Run `f` repeatedly; `f` returns a value to keep it un-optimized.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // Warm-up: one call (compilation, caches).
+        std::hint::black_box(f());
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.budget || samples.len() < self.min_iters)
+            && samples.len() < self.max_iters
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort_unstable();
+        let iters = samples.len();
+        let total: Duration = samples.iter().sum();
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: total / iters as u32,
+            p50: samples[iters / 2],
+            p95: samples[(iters * 95 / 100).min(iters - 1)],
+            min: samples[0],
+        };
+        result.report();
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Write a TSV summary next to the bench binary (results/bench_*.tsv).
+    pub fn write_tsv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = String::from("name\titers\tmean_ns\tp50_ns\tp95_ns\tmin_ns\n");
+        for r in &self.results {
+            out.push_str(&format!(
+                "{}\t{}\t{}\t{}\t{}\t{}\n",
+                r.name,
+                r.iters,
+                r.mean.as_nanos(),
+                r.p50.as_nanos(),
+                r.p95.as_nanos(),
+                r.min.as_nanos()
+            ));
+        }
+        std::fs::write(path, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut b = Bencher::new(Duration::from_millis(50)).with_iters(5, 1000);
+        let r = b.bench("noop", || 1 + 1);
+        assert!(r.iters >= 5);
+        assert!(r.min <= r.p50 && r.p50 <= r.p95);
+        assert!(b.results().len() == 1);
+    }
+
+    #[test]
+    fn fmt_covers_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(5)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains("s"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Self-contained utility substrates.
+//!
+//! This reproduction builds fully offline against a minimal vendored crate
+//! set (xla + anyhow), so the usual ecosystem crates are reimplemented here
+//! as small, tested substrates: a seeded RNG ([`rng`]), a JSON
+//! parser/writer ([`json`]), and a micro-benchmark harness ([`bench`]).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,198 @@
+//! Integration: the HLO (JAX/Pallas via PJRT) and native-rust compute
+//! paths must agree numerically on identical inputs.
+//!
+//! This is the keystone test of the three-layer architecture: the Pallas
+//! kernels were validated against pure-jnp oracles by pytest; here the
+//! rust mirror is validated against the lowered HLO, closing the loop
+//! rust ≡ HLO ≡ pallas ≡ jnp.
+//!
+//! Requires `make artifacts`; each test skips gracefully when the
+//! artifact directory is absent so unit CI stays hermetic.
+
+use std::path::Path;
+
+use chicle::algos::nn::NativeModel;
+use chicle::algos::{svm, Backend};
+use chicle::chunks::chunker::make_chunks;
+use chicle::data::synth;
+use chicle::runtime::{HloService, Manifest};
+use chicle::util::Rng;
+
+fn hlo() -> Option<(HloService, Manifest)> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    let service = HloService::spawn(dir).expect("spawn HLO service");
+    let manifest = Manifest::load(dir).expect("load manifest");
+    Some((service, manifest))
+}
+
+#[test]
+fn scd_chunk_hlo_matches_native() {
+    let Some((service, manifest)) = hlo() else { return };
+    let ds = synth::higgs_like(700, 3);
+    // Two chunk sizes: below and above the artifact's S=256 window.
+    for chunk_bytes in [16 * 1024usize, 64 * 1024] {
+        let chunks_a = make_chunks(&ds, chunk_bytes);
+        let mut chunks_b = chunks_a.clone();
+        let mut chunks_a = chunks_a;
+
+        let native = Backend::native_cocoa();
+        let hlo = Backend::hlo_cocoa(service.clone(), &manifest, 256, 28).unwrap();
+
+        let lam_n = 0.01f32 * 700.0;
+        let mut v_a = vec![0.0f32; 28];
+        let mut v_b = vec![0.0f32; 28];
+        for ci in 0..chunks_a.len() {
+            let n = chunks_a[ci].n_samples();
+            let order: Vec<usize> = (0..n).collect();
+            let dv_a = native
+                .scd_chunk(&mut chunks_a[ci], &order, &mut v_a, lam_n, 4.0)
+                .unwrap();
+            let dv_b = hlo
+                .scd_chunk(&mut chunks_b[ci], &order, &mut v_b, lam_n, 4.0)
+                .unwrap();
+            for (x, y) in dv_a.iter().zip(&dv_b) {
+                assert!((x - y).abs() < 1e-4, "dv mismatch: {x} vs {y}");
+            }
+            for (x, y) in chunks_a[ci].state.iter().zip(&chunks_b[ci].state) {
+                assert!((x - y).abs() < 1e-4, "alpha mismatch: {x} vs {y}");
+            }
+        }
+        for (x, y) in v_a.iter().zip(&v_b) {
+            assert!((x - y).abs() < 1e-3, "v mismatch: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn gap_contributions_hlo_matches_native() {
+    let Some((service, manifest)) = hlo() else { return };
+    let ds = synth::higgs_like(600, 4);
+    let mut chunks = make_chunks(&ds, 24 * 1024);
+    let mut rng = Rng::seed_from_u64(0);
+    // Random alpha state + weight vector.
+    for c in &mut chunks {
+        for a in c.state.iter_mut() {
+            *a = rng.f32();
+        }
+    }
+    let w: Vec<f32> = (0..28).map(|_| rng.normal_f32() * 0.1).collect();
+
+    let native = Backend::native_cocoa();
+    let hlo = Backend::hlo_cocoa(service, &manifest, 256, 28).unwrap();
+    for chunk in &chunks {
+        let (h1, a1, c1, n1) = native.gap_contributions(chunk, &w).unwrap();
+        let (h2, a2, c2, n2) = hlo.gap_contributions(chunk, &w).unwrap();
+        assert_eq!(n1, n2);
+        assert!((h1 - h2).abs() < 1e-2 * (1.0 + h1.abs()), "hinge {h1} vs {h2}");
+        assert!((a1 - a2).abs() < 1e-3 * (1.0 + a1.abs()), "alpha {a1} vs {a2}");
+        assert!((c1 - c2).abs() < 0.5, "correct {c1} vs {c2}");
+    }
+}
+
+#[test]
+fn mlp_grad_hlo_matches_native() {
+    let Some((service, manifest)) = hlo() else { return };
+    let native = Backend::native_nn(NativeModel::mlp_default());
+    let hlo = Backend::hlo_nn(service, &manifest, "mlp").unwrap();
+
+    // Same params for both: use the HLO init artifact (jax-side RNG).
+    let params = hlo.nn_init(7).unwrap();
+    assert_eq!(params.len(), NativeModel::mlp_default().param_count());
+
+    let mut rng = Rng::seed_from_u64(1);
+    let l = hlo.nn_grad_batch().unwrap();
+    let x: Vec<f32> = (0..l * 784).map(|_| rng.normal_f32()).collect();
+    let y: Vec<i32> = (0..l).map(|_| rng.below(10) as i32).collect();
+
+    let (g_n, loss_n, corr_n) = native.nn_grad(&params, &x, &y).unwrap();
+    let (g_h, loss_h, corr_h) = hlo.nn_grad(&params, &x, &y).unwrap();
+    assert!((loss_n - loss_h).abs() < 1e-3 * (1.0 + loss_n.abs()), "{loss_n} vs {loss_h}");
+    assert_eq!(corr_n, corr_h);
+    let mut max_err = 0.0f64;
+    for (a, b) in g_n.iter().zip(&g_h) {
+        max_err = max_err.max((a - b).abs() as f64);
+    }
+    assert!(max_err < 5e-4, "max grad error {max_err}");
+}
+
+#[test]
+fn cnn_grad_hlo_matches_native() {
+    let Some((service, manifest)) = hlo() else { return };
+    let native = Backend::native_nn(NativeModel::cnn_default());
+    let hlo = Backend::hlo_nn(service, &manifest, "cnn").unwrap();
+
+    let params = hlo.nn_init(9).unwrap();
+    assert_eq!(params.len(), NativeModel::cnn_default().param_count());
+
+    let mut rng = Rng::seed_from_u64(2);
+    let l = hlo.nn_grad_batch().unwrap();
+    let x: Vec<f32> = (0..l * 3072).map(|_| rng.normal_f32()).collect();
+    let y: Vec<i32> = (0..l).map(|_| rng.below(10) as i32).collect();
+
+    let (g_n, loss_n, _) = native.nn_grad(&params, &x, &y).unwrap();
+    let (g_h, loss_h, _) = hlo.nn_grad(&params, &x, &y).unwrap();
+    assert!(
+        (loss_n - loss_h).abs() < 1e-3 * (1.0 + loss_n.abs()),
+        "loss {loss_n} vs {loss_h}"
+    );
+    let mut max_err = 0.0f64;
+    for (a, b) in g_n.iter().zip(&g_h) {
+        max_err = max_err.max((a - b).abs() as f64);
+    }
+    assert!(max_err < 1e-3, "max grad error {max_err}");
+}
+
+#[test]
+fn nn_eval_hlo_matches_native_with_padding() {
+    let Some((service, manifest)) = hlo() else { return };
+    let native = Backend::native_nn(NativeModel::mlp_default());
+    let hlo = Backend::hlo_nn(service, &manifest, "mlp").unwrap();
+
+    let params = hlo.nn_init(3).unwrap();
+    let mut rng = Rng::seed_from_u64(4);
+    // 300 samples: exercises one full HLO eval batch (256) + padding.
+    let n = 300;
+    let x: Vec<f32> = (0..n * 784).map(|_| rng.normal_f32()).collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.below(10) as i32).collect();
+
+    let (loss_n, corr_n, nn) = native.nn_eval(&params, &x, &y, 784).unwrap();
+    let (loss_h, corr_h, nh) = hlo.nn_eval(&params, &x, &y, 784).unwrap();
+    assert_eq!(nn, nh);
+    assert_eq!(nn, n as f64);
+    assert!((loss_n - loss_h).abs() < 1e-3 * (1.0 + loss_n.abs()));
+    assert_eq!(corr_n, corr_h);
+}
+
+#[test]
+fn lm_grad_runs_and_learns() {
+    let Some((service, manifest)) = hlo() else { return };
+    if manifest.grad_artifact("tfm_small").is_err() {
+        eprintln!("skipping: no transformer artifacts");
+        return;
+    }
+    let hlo = Backend::hlo_nn(service, &manifest, "tfm_small").unwrap();
+    let mut params = hlo.nn_init(5).unwrap();
+    let ds = synth::token_corpus(8, 64, 1024, 6);
+    let tokens = match &ds.features {
+        chicle::data::FeatureMatrix::Tokens { data, .. } => data.clone(),
+        _ => unreachable!(),
+    };
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..8 {
+        let (g, loss) = hlo.lm_grad(&params, &tokens, 8).unwrap();
+        first.get_or_insert(loss);
+        last = loss;
+        for (p, gv) in params.iter_mut().zip(&g) {
+            *p -= 0.5 * gv;
+        }
+    }
+    assert!(
+        last < first.unwrap() * 0.9,
+        "LM loss should drop: {first:?} -> {last}"
+    );
+}

@@ -1,0 +1,206 @@
+//! Integration: full training sessions across the evaluation matrix reach
+//! their convergence targets (native backend; the HLO path is covered by
+//! hlo_native_equivalence.rs plus the quickstart example).
+
+use chicle::config::{
+    AlgoConfig, ElasticSpec, ModelKind, Partitioning, SessionConfig, TaskModel,
+};
+use chicle::coordinator::TrainingSession;
+use chicle::data::synth;
+use chicle::metrics::Metric;
+
+fn cocoa_cfg(name: &str, nodes: usize) -> SessionConfig {
+    let mut cfg = SessionConfig::cocoa(name, nodes);
+    cfg.chunk_bytes = 8 * 1024;
+    cfg.max_iters = 80;
+    cfg
+}
+
+#[test]
+fn cocoa_higgs_rigid_reaches_target_gap() {
+    let ds = synth::higgs_like(4000, 1);
+    let mut s = TrainingSession::new(cocoa_cfg("it-rigid", 8), ds).unwrap();
+    let log = s.run().unwrap();
+    assert!(log.last_gap().unwrap() < 1e-3, "gap {:?}", log.last_gap());
+}
+
+#[test]
+fn cocoa_criteo_sparse_reaches_target_gap() {
+    let ds = synth::criteo_like_with(4000, 20_000, 20, 16, 2);
+    let mut cfg = cocoa_cfg("it-sparse", 8);
+    cfg.max_iters = 120;
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    let log = s.run().unwrap();
+    assert!(log.last_gap().unwrap() < 1e-2, "gap {:?}", log.last_gap());
+}
+
+#[test]
+fn cocoa_elastic_scale_in_still_converges() {
+    let ds = synth::higgs_like(4000, 3);
+    let mut cfg = cocoa_cfg("it-elastic", 16);
+    cfg.elastic = ElasticSpec::Gradual { from: 16, to: 2, interval_s: 8.0 };
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    let log = s.run().unwrap();
+    assert!(log.last_gap().unwrap() < 1e-3, "gap {:?}", log.last_gap());
+    // Scale-in happened during the run.
+    assert!(log.records.iter().any(|r| r.n_tasks == 16));
+    assert!(log.records.last().unwrap().n_tasks < 16);
+}
+
+#[test]
+fn cocoa_heterogeneous_with_rebalance_converges() {
+    let ds = synth::higgs_like(4000, 4);
+    let mut cfg = cocoa_cfg("it-hetero", 8);
+    cfg.elastic = ElasticSpec::Heterogeneous { fast: 4, slow: 4, factor: 1.5 };
+    cfg.policies.rebalance = true;
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    let log = s.run().unwrap();
+    assert!(log.last_gap().unwrap() < 1e-3, "gap {:?}", log.last_gap());
+}
+
+#[test]
+fn microtask_emulation_tracks_k_not_nodes() {
+    // K=32 micro-tasks on an 8-node rigid cluster: per-epoch convergence
+    // must match K=32 on 16 nodes; projected time must not.
+    let run = |nodes: usize| {
+        let ds = synth::higgs_like(3000, 5);
+        let mut cfg = cocoa_cfg("it-micro", nodes).with_microtasks(32);
+        cfg.max_iters = 10;
+        let mut s = TrainingSession::new(cfg, ds).unwrap();
+        s.run_iters(10).unwrap()
+    };
+    let a = run(8);
+    let b = run(16);
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.metric.unwrap().value(), rb.metric.unwrap().value());
+    }
+    assert!(a.total_vtime() > b.total_vtime(), "8 nodes must be slower");
+}
+
+#[test]
+fn contiguous_partitioning_hurts_sessioned_data() {
+    // The Fig 8 mechanism as a test: on session-correlated sparse data,
+    // contiguous (Snap-ML-style) partitioning converges slower per epoch
+    // than random chunk assignment.
+    let run = |partitioning: Partitioning| {
+        let ds = synth::criteo_like_with(6000, 20_000, 20, 16, 6);
+        let mut cfg = cocoa_cfg("it-part", 16);
+        cfg.partitioning = partitioning;
+        cfg.max_iters = 8;
+        let mut s = TrainingSession::new(cfg, ds).unwrap();
+        let log = s.run_iters(8).unwrap();
+        log.last_gap().unwrap()
+    };
+    let random = run(Partitioning::RandomChunks);
+    let contiguous = run(Partitioning::Contiguous);
+    assert!(
+        random < contiguous,
+        "random {random} should beat contiguous {contiguous}"
+    );
+}
+
+#[test]
+fn lsgd_mlp_reaches_target_accuracy() {
+    let ds = synth::fmnist_like(2500, 7);
+    let mut cfg = SessionConfig::lsgd("it-mlp", ModelKind::Mlp, 4);
+    cfg.chunk_bytes = 48 * 1024;
+    cfg.max_iters = 150;
+    if let AlgoConfig::Lsgd(l) = &mut cfg.algo {
+        l.lr = 4e-3;
+        l.eval_every = 10;
+        l.target_acc = 0.75;
+    }
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    let log = s.run().unwrap();
+    assert!(
+        log.last_accuracy().unwrap() >= 0.75,
+        "acc {:?}",
+        log.last_accuracy()
+    );
+}
+
+#[test]
+fn lsgd_uni_tasks_track_node_count() {
+    let ds = synth::fmnist_like(2500, 8);
+    let mut cfg = SessionConfig::lsgd("it-elastic-mlp", ModelKind::Mlp, 2);
+    cfg.chunk_bytes = 32 * 1024;
+    cfg.elastic = ElasticSpec::Gradual { from: 2, to: 6, interval_s: 5.0 };
+    cfg.max_iters = 40;
+    if let AlgoConfig::Lsgd(l) = &mut cfg.algo {
+        l.lr = 4e-3;
+        l.eval_every = 40; // focus on mechanics, not metric
+        l.target_acc = 2.0;
+    }
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    let log = s.run_iters(40).unwrap();
+    // Global batch K·L·H grows with the node count.
+    let first = &log.records[0];
+    let last = log.records.last().unwrap();
+    assert_eq!(first.n_tasks, 2);
+    assert_eq!(last.n_tasks, 6);
+    assert_eq!(first.samples, 2 * 8 * 16);
+    assert_eq!(last.samples, 6 * 8 * 16);
+}
+
+#[test]
+fn lsgd_msgd_mode_matches_h1() {
+    // H=1 must process exactly K·L samples per iteration (mSGD).
+    let ds = synth::fmnist_like(1500, 9);
+    let mut cfg = SessionConfig::lsgd("it-msgd", ModelKind::Mlp, 4);
+    cfg.chunk_bytes = 32 * 1024;
+    if let AlgoConfig::Lsgd(l) = &mut cfg.algo {
+        l.h = 1;
+        l.eval_every = 100;
+        l.target_acc = 2.0;
+    }
+    cfg.max_iters = 3;
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    let log = s.run_iters(3).unwrap();
+    assert_eq!(log.records[0].samples, 4 * 8);
+}
+
+#[test]
+fn straggler_policy_mitigates_acute_slowdown() {
+    // A 4-node cluster where one node is 4x slow: with the straggler
+    // policy the slow node shed chunks within a few iterations.
+    let ds = synth::higgs_like(3000, 10);
+    let mut cfg = cocoa_cfg("it-straggler", 4);
+    cfg.elastic = ElasticSpec::Trace { points: vec![(0.0, vec![1.0, 1.0, 1.0, 0.25])] };
+    cfg.policies.rebalance = false;
+    cfg.policies.straggler = true;
+    cfg.policies.straggler_factor = 1.5;
+    cfg.max_iters = 12;
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    s.run_iters(12).unwrap();
+    let samples: Vec<usize> = s.trainer().tasks().iter().map(|t| t.n_samples()).collect();
+    let slow = samples[3];
+    let fast_avg = (samples[0] + samples[1] + samples[2]) / 3;
+    assert!(slow < fast_avg, "straggler should shed load: {samples:?}");
+}
+
+#[test]
+fn shuffle_policy_preserves_convergence() {
+    let ds = synth::higgs_like(3000, 11);
+    let mut cfg = cocoa_cfg("it-shuffle", 4);
+    cfg.policies.shuffle = true;
+    cfg.policies.shuffle_every = 2;
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    let log = s.run().unwrap();
+    assert!(log.last_gap().unwrap() < 1e-3);
+}
+
+#[test]
+fn metric_series_records_epochs_and_time() {
+    let ds = synth::higgs_like(2000, 12);
+    let mut s = TrainingSession::new(cocoa_cfg("it-metrics", 4), ds).unwrap();
+    let log = s.run_iters(5).unwrap();
+    assert_eq!(log.records.len(), 5);
+    // CoCoA: one epoch per iteration.
+    assert!((log.records[4].epochs - 5.0).abs() < 1e-9);
+    assert!(log.records.iter().all(|r| matches!(
+        r.metric,
+        Some(Metric::DualityGap(_))
+    )));
+    let tsv = log.to_tsv();
+    assert_eq!(tsv.lines().count(), 6);
+}

@@ -1,0 +1,351 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! proptest is not available in the offline crate set, so properties are
+//! checked over many seeded random cases (the seeds are fixed →
+//! deterministic, reproducible failures).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use chicle::algos::{Algorithm, Backend, CocoaAlgo, LocalUpdate};
+use chicle::chunks::chunker::{make_chunks, make_chunks_shuffled};
+use chicle::cluster::NodeSpec;
+use chicle::config::{CocoaConfig, ElasticSpec, LsgdConfig, ModelKind, SessionConfig};
+use chicle::coordinator::{TrainingSession, Trainer};
+use chicle::data::synth;
+use chicle::sim::{makespan, microtask_iteration_time, uni_iteration_time};
+use chicle::util::Rng;
+
+const CASES: usize = 30;
+
+/// Property: chunking never loses or duplicates samples, for arbitrary
+/// dataset sizes, chunk budgets and shuffling.
+#[test]
+fn prop_chunking_conserves_samples() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(case as u64);
+        let n = 50 + rng.below(3000);
+        let budget = 512 + rng.below(32 * 1024);
+        let ds = if rng.bool(0.5) {
+            synth::higgs_like(n, case as u64)
+        } else {
+            synth::criteo_like_with(n, 5_000, 5 + rng.below(30), 8, case as u64)
+        };
+        let chunks = if rng.bool(0.5) {
+            make_chunks(&ds, budget)
+        } else {
+            make_chunks_shuffled(&ds, budget, case as u64 + 1)
+        };
+        let total: usize = chunks.iter().map(|c| c.n_samples()).sum();
+        assert_eq!(total, n, "case {case}: lost samples");
+        let mut ids: Vec<u32> = chunks.iter().flat_map(|c| c.global_ids.clone()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "case {case}: duplicate/missing ids");
+        // Per-sample state co-allocated.
+        for c in &chunks {
+            assert_eq!(c.state.len(), c.n_samples(), "case {case}: state len");
+        }
+    }
+}
+
+/// Property: an arbitrary elastic trace never loses a chunk — the trainer
+/// ends with exactly the initial sample count distributed over the final
+/// node set, with no chunk on two tasks.
+#[test]
+fn prop_elastic_traces_conserve_chunks() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(1000 + case as u64);
+        let n = 2000;
+        let ds = synth::higgs_like(n, case as u64);
+        // Random trace: 3-6 allocation points, 1-8 nodes each, random speeds.
+        let n_points = 3 + rng.below(4);
+        let mut points = vec![];
+        for p in 0..n_points {
+            let k = 1 + rng.below(8);
+            let speeds: Vec<f64> = (0..k).map(|_| 0.25 + rng.f64()).collect();
+            points.push((p as f64 * (1.0 + rng.f64() * 5.0), speeds));
+        }
+        points[0].0 = 0.0;
+        let mut cfg = SessionConfig::cocoa(&format!("prop{case}"), 1);
+        cfg.elastic = ElasticSpec::Trace { points };
+        cfg.chunk_bytes = 4 * 1024;
+        cfg.max_iters = 12;
+        cfg.seed = case as u64;
+        cfg.policies.rebalance = rng.bool(0.5);
+        cfg.policies.shuffle = rng.bool(0.3);
+        let mut s = TrainingSession::new(cfg, ds).unwrap();
+        s.run_iters(12).unwrap();
+        let total: usize = s.trainer().tasks().iter().map(|t| t.n_samples()).sum();
+        assert_eq!(total, n, "case {case}: chunk loss under elastic trace");
+        let mut ids: Vec<u32> = s
+            .trainer()
+            .tasks()
+            .iter()
+            .flat_map(|t| t.store.chunk_ids())
+            .collect();
+        let before = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), before, "case {case}: duplicated chunk");
+    }
+}
+
+/// Property: lSGD merge is a convex combination — if every task returns
+/// the same delta, the merged model moves by exactly that delta; weights
+/// are proportional to samples processed (eq. 2 / Stich'18).
+#[test]
+fn prop_merge_is_weighted_convex_combination() {
+    let ds = synth::fmnist_like(600, 0);
+    let (_train, test) = ds.split_test(0.2);
+    let (tx, ty) = match (&test.features, &test.labels) {
+        (chicle::data::FeatureMatrix::Dense { data, .. }, chicle::data::Labels::Class(y)) => {
+            (data.clone(), y.clone())
+        }
+        _ => unreachable!(),
+    };
+    let algo = chicle::algos::lsgd::LsgdAlgo::new_classif(
+        LsgdConfig::paper_defaults(ModelKind::Mlp),
+        Backend::native_nn(chicle::algos::nn::NativeModel::mlp_default()),
+        784,
+        tx,
+        ty,
+        0,
+    )
+    .unwrap();
+    let len = algo.model_len();
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(2000 + case as u64);
+        let k = 1 + rng.below(8);
+        let delta_val = rng.normal_f32();
+        let updates: Vec<LocalUpdate> = (0..k)
+            .map(|_| LocalUpdate {
+                delta: vec![delta_val; len],
+                samples: 1 + rng.below(500),
+                loss_sum: 0.0,
+            })
+            .collect();
+        let mut model = vec![0.0f32; len];
+        algo.merge(&mut model, &updates, k);
+        assert!(
+            (model[0] - delta_val).abs() < 1e-5,
+            "case {case}: equal deltas must merge to the same delta"
+        );
+    }
+    // Proportionality: one task with 3× the samples gets 3× the weight.
+    let u = vec![
+        LocalUpdate { delta: vec![1.0; len], samples: 300, loss_sum: 0.0 },
+        LocalUpdate { delta: vec![-1.0; len], samples: 100, loss_sum: 0.0 },
+    ];
+    let mut m2 = vec![0.0f32; len];
+    algo.merge(&mut m2, &u, 2);
+    assert!((m2[0] - 0.5).abs() < 1e-6);
+}
+
+/// Property: CoCoA keeps v consistent with w(α):
+/// model == (1/λn) Σ_i α_i y_i x_i after any number of merges.
+#[test]
+fn prop_cocoa_v_equals_w_of_alpha() {
+    for case in 0..8u64 {
+        let n = 1200;
+        let ds = synth::higgs_like(n, case);
+        let chunks = make_chunks(&ds, 8 * 1024);
+        let algo =
+            CocoaAlgo::new(CocoaConfig::default(), Backend::native_cocoa(), n, ds.dim());
+        let mut rng = Rng::seed_from_u64(case);
+        let k = 1 + rng.below(6);
+        let mut parts: Vec<Vec<chicle::chunks::Chunk>> = (0..k).map(|_| vec![]).collect();
+        for (i, c) in chunks.into_iter().enumerate() {
+            parts[i % k].push(c);
+        }
+        let mut model = algo.init_model().unwrap();
+        for it in 0..3 {
+            let updates: Vec<LocalUpdate> = parts
+                .iter_mut()
+                .enumerate()
+                .map(|(t, ch)| {
+                    algo.task_iterate(ch, &model, k, (it * 7 + t) as u64, None).unwrap()
+                })
+                .collect();
+            algo.merge(&mut model, &updates, k);
+        }
+        // Reconstruct w(α) from chunk state.
+        let lam_n = 0.01f32 * n as f32;
+        let mut w = vec![0.0f32; ds.dim()];
+        for part in &parts {
+            for c in part {
+                if let chicle::chunks::Payload::DenseBinary { x, dim, y } = &c.payload {
+                    for i in 0..y.len() {
+                        let scale = c.state[i] * y[i] / lam_n;
+                        for j in 0..*dim {
+                            w[j] += scale * x[i * dim + j];
+                        }
+                    }
+                }
+            }
+        }
+        for (a, b) in w.iter().zip(&model) {
+            assert!(
+                (a - b).abs() < 2e-3 * (1.0 + a.abs()),
+                "case {case}: v {b} != w(alpha) {a}"
+            );
+        }
+    }
+}
+
+/// Property: projection-model identities — uni ≤ best micro schedule,
+/// extra nodes never hurt, k=1 makespan = fastest node's task time.
+#[test]
+fn prop_projection_model_identities() {
+    for case in 0..CASES {
+        let mut rng = Rng::seed_from_u64(3000 + case as u64);
+        let n = 1 + rng.below(24);
+        let nodes: Vec<NodeSpec> = (0..n)
+            .map(|i| NodeSpec::new(i as u32, 0.25 + rng.f64() * 1.5))
+            .collect();
+        let k = 1 + rng.below(128);
+        let micro = microtask_iteration_time(k, 16.0, &nodes);
+        let uni = uni_iteration_time(16.0, &nodes);
+        assert!(uni <= micro + 1e-9, "case {case}: uni {uni} > micro {micro}");
+        let mut more = nodes.clone();
+        more.push(NodeSpec::new(99, 1.0));
+        let micro_more = microtask_iteration_time(k, 16.0, &more);
+        assert!(micro_more <= micro + 1e-9, "case {case}: extra node hurt");
+        let fastest = nodes.iter().map(|nd| nd.speed).fold(0.0, f64::max);
+        let m1 = makespan(1, 1.0, &nodes);
+        assert!((m1 - 1.0 / fastest).abs() < 1e-9, "case {case}");
+    }
+}
+
+/// Property: rebalancing monotonically reduces (projected) imbalance on a
+/// static heterogeneous cluster, and never loses chunks.
+#[test]
+fn prop_rebalance_reduces_imbalance() {
+    for case in 0..10u64 {
+        let mut rng = Rng::seed_from_u64(4000 + case);
+        let fast = 2 + rng.below(4);
+        let slow = 1 + rng.below(4);
+        let factor = 1.3 + rng.f64();
+        let n = 4000;
+        let ds = synth::higgs_like(n, case);
+        let chunks = make_chunks(&ds, 4 * 1024);
+        let algo: Arc<dyn Algorithm> = Arc::new(CocoaAlgo::new(
+            CocoaConfig::default(),
+            Backend::native_cocoa(),
+            n,
+            ds.dim(),
+        ));
+        let mut cfg = SessionConfig::cocoa(&format!("rb{case}"), fast + slow);
+        cfg.elastic = ElasticSpec::Heterogeneous { fast, slow, factor };
+        cfg.chunk_bytes = 4 * 1024;
+        cfg.policies.rebalance = true;
+        cfg.policies.rebalance_step = 4;
+        cfg.max_iters = 20;
+        let mut tr = Trainer::new(cfg, algo, chunks).unwrap();
+        for it in 0..20 {
+            tr.step(it).unwrap();
+        }
+        let first = tr.swimlanes.imbalance(0).unwrap();
+        let last = tr.swimlanes.imbalance(19).unwrap();
+        assert!(
+            last <= first + 1e-9,
+            "case {case}: imbalance grew {first} -> {last}"
+        );
+        assert!(last < factor, "case {case}: no improvement ({last} vs {factor})");
+        let total: usize = tr.tasks().iter().map(|t| t.n_samples()).sum();
+        assert_eq!(total, n);
+    }
+}
+
+/// Property: micro-task emulation convergence per epoch is independent of
+/// the node schedule — the claim that justifies the paper's methodology
+/// (§5.1 "Micro-tasks").
+#[test]
+fn prop_micro_convergence_node_independent() {
+    let n = 2000;
+    for case in 0..5u64 {
+        let ds = synth::higgs_like(n, case);
+        let run = |elastic: ElasticSpec| {
+            let mut cfg = SessionConfig::cocoa("micro", 4).with_microtasks(16);
+            cfg.elastic = elastic;
+            cfg.chunk_bytes = 4 * 1024;
+            cfg.max_iters = 6;
+            cfg.seed = case;
+            let mut s = TrainingSession::new(cfg, ds.clone()).unwrap();
+            s.run_iters(6).unwrap()
+        };
+        let a = run(ElasticSpec::Rigid { nodes: 4 });
+        let b = run(ElasticSpec::Gradual { from: 16, to: 2, interval_s: 3.0 });
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            let (ga, gb) = (ra.metric.unwrap().value(), rb.metric.unwrap().value());
+            assert!(
+                (ga - gb).abs() < 1e-9,
+                "case {case}: per-epoch convergence depended on nodes: {ga} vs {gb}"
+            );
+        }
+        assert!(a.total_vtime() != b.total_vtime(), "time axes should differ");
+    }
+}
+
+/// Failure injection: revoking every node must error, not hang or panic.
+#[test]
+fn revoking_all_nodes_errors_cleanly() {
+    let ds = synth::higgs_like(500, 0);
+    let mut cfg = SessionConfig::cocoa("fail", 2);
+    cfg.chunk_bytes = 2 * 1024;
+    cfg.elastic = ElasticSpec::Trace {
+        points: vec![(0.0, vec![1.0, 1.0]), (1.0, vec![])],
+    };
+    cfg.max_iters = 10;
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    let mut failed = false;
+    for it in 0..10 {
+        if s.step(it).is_err() {
+            failed = true;
+            break;
+        }
+    }
+    assert!(failed, "all-nodes revocation should surface an error");
+}
+
+/// Determinism: identical configs + seeds give identical metric series.
+#[test]
+fn prop_runs_are_deterministic() {
+    let run = |seed: u64| {
+        let ds = synth::higgs_like(1500, 9);
+        let mut cfg = SessionConfig::cocoa("det", 4).with_seed(seed);
+        cfg.chunk_bytes = 4 * 1024;
+        cfg.max_iters = 8;
+        let mut s = TrainingSession::new(cfg, ds).unwrap();
+        s.run_iters(8).unwrap()
+    };
+    let a = run(5);
+    let b = run(5);
+    let c = run(6);
+    let gaps = |log: &chicle::metrics::MetricsLog| -> Vec<f64> {
+        log.records.iter().filter_map(|r| r.metric.map(|m| m.value())).collect()
+    };
+    assert_eq!(gaps(&a), gaps(&b), "same seed must reproduce exactly");
+    assert_ne!(gaps(&a), gaps(&c), "different seed should differ");
+}
+
+/// Virtual time is monotone under elasticity, and scale-out shortens
+/// iterations.
+#[test]
+fn vtime_is_monotone_under_elasticity() {
+    let ds = synth::higgs_like(2000, 1);
+    let mut cfg = SessionConfig::cocoa("mono", 2);
+    cfg.elastic = ElasticSpec::Gradual { from: 2, to: 12, interval_s: 4.0 };
+    cfg.chunk_bytes = 4 * 1024;
+    cfg.max_iters = 20;
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    let log = s.run_iters(20).unwrap();
+    let mut prev = Duration::ZERO;
+    for r in &log.records {
+        assert!(r.vtime >= prev, "vtime went backwards");
+        prev = r.vtime;
+    }
+    let d_first = log.records[0].vtime;
+    let d_last = log.records[19].vtime - log.records[18].vtime;
+    assert!(d_last < d_first, "{d_last:?} !< {d_first:?}");
+}
