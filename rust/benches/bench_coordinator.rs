@@ -2,11 +2,13 @@
 //! chunk redistribution, projection model. These must stay off the
 //! critical path (target: ≪ one solver iteration).
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use chicle::algos::{Algorithm, Backend, CocoaAlgo, LocalUpdate};
 use chicle::chunks::chunker::make_chunks;
-use chicle::chunks::NetworkModel;
+use chicle::chunks::{NetworkModel, SharedStore};
+use chicle::exec::WorkerPool;
 use chicle::cluster::NodeSpec;
 use chicle::config::CocoaConfig;
 use chicle::coordinator::policy::{
@@ -88,6 +90,36 @@ fn main() {
     b.bench("projection/makespan_k64_16nodes", || makespan(64, 0.25, &hetero));
     b.bench("projection/micro_iter_time_k64", || {
         microtask_iteration_time(64, 16.0, &hetero)
+    });
+
+    // --- per-iteration dispatch overhead: the seed's spawn-per-iteration
+    // scheme (spawn + join K threads every iteration) vs one command
+    // round-trip through the persistent worker pool. Both run a no-op
+    // task body so only the lifecycle/dispatch machinery is timed. ---
+    let k = 16usize;
+    b.bench("dispatch/spawn_per_iteration_16tasks", || {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..k).map(|i| scope.spawn(move || i)).collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
+        })
+    });
+    let algo: Arc<dyn Algorithm> = Arc::new(CocoaAlgo::new(
+        CocoaConfig::default(),
+        Backend::native_cocoa(),
+        1000,
+        28,
+    ));
+    let mut pool = WorkerPool::new(Arc::clone(&algo));
+    for i in 0..k {
+        // Empty stores: workers take the zero-sample fast path.
+        pool.spawn_worker(i as u32, SharedStore::new());
+    }
+    let model = Arc::new(vec![0.0f32; 28]);
+    let plan: Vec<(u32, u64)> = (0..k).map(|i| (i as u32, i as u64)).collect();
+    b.bench("dispatch/persistent_pool_16tasks", || {
+        pool.run_iteration(&plan, Arc::clone(&model), k, None)
+            .unwrap()
+            .len()
     });
 
     b.write_tsv("results/bench_coordinator.tsv").unwrap();

@@ -177,11 +177,11 @@ impl Algorithm for LsgdAlgo {
         budget_samples: Option<usize>,
     ) -> Result<LocalUpdate> {
         let mut rng = Rng::seed_from_u64(task_seed);
-        let lr = if self.cfg.scale_lr {
+        let lr = (if self.cfg.scale_lr {
             self.cfg.lr * (k_tasks.max(1) as f64).sqrt()
         } else {
             self.cfg.lr
-        } as f32;
+        }) as f32;
         let mu = self.cfg.momentum as f32;
         let l = self.cfg.l;
         let h = match budget_samples {

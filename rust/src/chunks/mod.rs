@@ -14,5 +14,5 @@ pub mod transfer;
 
 pub use chunk::{Chunk, ChunkId, Payload};
 pub use chunker::make_chunks;
-pub use store::ChunkStore;
+pub use store::{ChunkStore, SharedStore};
 pub use transfer::NetworkModel;

@@ -5,6 +5,8 @@
 //! core concept 2). The ownership contract is enforced by the coordinator:
 //! chunks are only added/removed between iterations.
 
+use std::sync::{Arc, Mutex, MutexGuard};
+
 use super::{Chunk, ChunkId};
 
 /// The set of chunks local to one uni-task.
@@ -96,6 +98,69 @@ impl ChunkStore {
     }
 }
 
+/// Shared handle to one uni-task's chunk store.
+///
+/// The coordinator-side [`crate::coordinator::TaskState`] and that task's
+/// persistent [`crate::exec`] worker hold clones of the same store. The
+/// uni-task ownership contract keeps the lock uncontended: the worker
+/// touches the store only while executing a `RunIteration` command, the
+/// scheduler/policies only between iterations.
+#[derive(Clone, Debug, Default)]
+pub struct SharedStore {
+    inner: Arc<Mutex<ChunkStore>>,
+}
+
+impl SharedStore {
+    pub fn new() -> Self {
+        SharedStore::default()
+    }
+
+    pub fn from_chunks(chunks: Vec<Chunk>) -> Self {
+        SharedStore { inner: Arc::new(Mutex::new(ChunkStore::from_chunks(chunks))) }
+    }
+
+    /// Lock the underlying store for direct access (e.g. iterating chunks
+    /// for evaluation, or the worker's in-iteration mutation).
+    pub fn lock(&self) -> MutexGuard<'_, ChunkStore> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    pub fn add(&self, chunk: Chunk) {
+        self.lock().add(chunk);
+    }
+
+    /// Remove and return a chunk by id (None if not local).
+    pub fn remove(&self, id: ChunkId) -> Option<Chunk> {
+        self.lock().remove(id)
+    }
+
+    /// Drain all chunks (task termination on scale-in).
+    pub fn drain(&self) -> Vec<Chunk> {
+        self.lock().drain()
+    }
+
+    pub fn chunk_ids(&self) -> Vec<ChunkId> {
+        self.lock().chunk_ids()
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.lock().n_chunks()
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.lock().n_samples()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.lock().size_bytes()
+    }
+
+    /// Sample count of a local chunk (None if not local).
+    pub fn chunk_samples(&self, id: ChunkId) -> Option<usize> {
+        self.lock().get(id).map(|c| c.n_samples())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,5 +206,22 @@ mod tests {
         let all = s.drain();
         assert_eq!(all.len(), 2);
         assert_eq!(s.n_chunks(), 0);
+    }
+
+    #[test]
+    fn shared_store_clones_alias_one_store() {
+        let a = SharedStore::new();
+        let b = a.clone();
+        a.add(chunk(1, 3));
+        b.add(chunk(2, 5));
+        assert_eq!(a.n_chunks(), 2);
+        assert_eq!(b.n_samples(), 8);
+        assert_eq!(a.chunk_samples(2), Some(5));
+        assert_eq!(a.chunk_samples(9), None);
+        let removed = b.remove(1).unwrap();
+        assert_eq!(removed.n_samples(), 3);
+        assert_eq!(a.n_chunks(), 1);
+        assert_eq!(b.drain().len(), 1);
+        assert_eq!(a.n_chunks(), 0);
     }
 }

@@ -1,13 +1,19 @@
 //! The Chicle coordinator — the paper's system contribution (§4).
 //!
-//! A driver ("trainer") orchestrates K uni-tasks over mobile data chunks:
+//! A driver ("trainer") orchestrates K uni-tasks over mobile data chunks,
+//! executing on the persistent worker runtime in [`crate::exec`]:
 //!
-//! * [`trainer`] — the iteration loop: barrier-synchronous task execution,
-//!   weighted model merge, virtual-time accounting (projected per §5.3 or
-//!   measured), metric evaluation, swimlane recording.
-//! * [`task`] — per-task state: the chunk store (ownership contract: the
-//!   scheduler only touches it between iterations) and the learned runtime
-//!   history the rebalancer uses.
+//! * [`trainer`] — the iteration loop as an explicit phase pipeline:
+//!   `elasticity → policies → execute → merge → account → evaluate`.
+//!   Execution dispatches to long-lived uni-task workers (no per-iteration
+//!   thread churn); elastic scale-in/out maps to executor spawn and
+//!   drain-then-shutdown commands.
+//! * [`task`] — per-task state: the shared chunk store (ownership
+//!   contract: the scheduler only touches it between iterations, the
+//!   resident worker only during one) and the learned runtime history the
+//!   rebalancer uses.
+//! * [`timing`] — iteration time accounting: the paper's projection model
+//!   (§5.3) or measured wallclock, factored out of the step loop.
 //! * [`policy`] — the event-driven policy framework (§4.5): elastic
 //!   scaling against the resource-manager trace, load rebalancing,
 //!   background shuffling, straggler mitigation.
@@ -17,6 +23,7 @@
 pub mod policy;
 pub mod session;
 pub mod task;
+pub mod timing;
 pub mod trainer;
 
 pub use session::TrainingSession;

@@ -74,8 +74,7 @@ pub fn redistribute_for_new_tasks(tasks: &mut [TaskState], rng: &mut Rng) -> usi
         }
         let ids = tasks[donor].store.chunk_ids();
         let cid = ids[rng.below(ids.len())];
-        let chunk_samples =
-            tasks[donor].store.get(cid).map(|c| c.n_samples()).unwrap_or(0) as f64;
+        let chunk_samples = tasks[donor].store.chunk_samples(cid).unwrap_or(0) as f64;
         // Only move if it strictly reduces the donor's overshoot without
         // overshooting the receiver by more.
         if over[donor] < chunk_samples / 2.0 || -over[recv] < chunk_samples / 2.0 {

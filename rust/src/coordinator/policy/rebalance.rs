@@ -59,7 +59,7 @@ impl Policy for RebalancePolicy {
             }
             let cid = ids[ctx.rng.below(ids.len())];
             let chunk_samples =
-                ctx.tasks[slow_idx].store.get(cid).map(|c| c.n_samples()).unwrap_or(0) as f64;
+                ctx.tasks[slow_idx].store.chunk_samples(cid).unwrap_or(0) as f64;
             // Stop when the gap is already smaller than one chunk's cost
             // on the slow task (paper: "until performance differences are
             // smaller than the estimated processing time of a single

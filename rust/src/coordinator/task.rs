@@ -2,17 +2,22 @@
 
 use std::collections::VecDeque;
 
-use crate::chunks::ChunkStore;
+use crate::chunks::SharedStore;
 use crate::cluster::NodeSpec;
 
 /// One uni-task: the node it runs on, its local chunks, and the runtime
 /// history the rebalance policy learns from (paper §4.5: "observes
 /// iteration runtimes over multiple iterations to learn the per-sample
 /// runtime of each task").
+///
+/// The chunk store is a [`SharedStore`]: the task's persistent
+/// [`crate::exec`] worker holds a clone of the same handle, so chunks the
+/// scheduler moves between iterations are immediately visible to the
+/// worker without tearing down its thread.
 #[derive(Debug)]
 pub struct TaskState {
     pub node: NodeSpec,
-    pub store: ChunkStore,
+    pub store: SharedStore,
     /// Recent per-sample task times in seconds (virtual or measured).
     history: VecDeque<f64>,
     history_cap: usize,
@@ -22,7 +27,7 @@ impl TaskState {
     pub fn new(node: NodeSpec, history_cap: usize) -> Self {
         TaskState {
             node,
-            store: ChunkStore::new(),
+            store: SharedStore::new(),
             history: VecDeque::new(),
             history_cap: history_cap.max(1),
         }

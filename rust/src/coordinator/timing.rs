@@ -1,0 +1,159 @@
+//! Iteration time accounting — the paper's projection methodology (§5.3)
+//! factored out of the trainer's step loop.
+//!
+//! Two time models:
+//!
+//! * **Projected** — per-task time is `samples / unit / speed`, where one
+//!   unit is the algorithm's normalization (CoCoA: 1/16th of the dataset
+//!   on a unit-speed node). Uni-task iterations take the slowest task's
+//!   time; micro-task iterations are projected with the wave model over
+//!   the current node allocation. Transfer overheads are excluded, as in
+//!   the paper ("this favors micro-tasks").
+//! * **Measured** — wallclock compute scaled by node speed, plus the
+//!   network model's cost for chunks moved this boundary.
+//!
+//! Accounting also feeds each task's learned per-sample runtime history,
+//! which the rebalance policy consumes (§4.5).
+
+use std::time::Duration;
+
+use crate::algos::{Algorithm, LocalUpdate};
+use crate::chunks::NetworkModel;
+use crate::cluster::NodeSpec;
+use crate::config::{SessionConfig, TaskModel, TimeModel};
+use crate::sim::microtask_iteration_time;
+
+use super::task::TaskState;
+
+/// Aggregate times of one iteration.
+#[derive(Clone, Debug)]
+pub struct IterationTiming {
+    /// Per-task (virtual) compute time, aligned with the task list.
+    pub task_times: Vec<f64>,
+    /// Barrier-to-barrier iteration time under the configured task model.
+    pub iteration_time: f64,
+    /// Chunk-transfer time charged this boundary (measured mode only).
+    pub transfer_time: f64,
+}
+
+/// Stateless time accountant configured from the session.
+#[derive(Clone, Copy, Debug)]
+pub struct TimeAccountant {
+    time_model: TimeModel,
+    task_model: TaskModel,
+    ref_nodes: usize,
+}
+
+impl TimeAccountant {
+    pub fn new(cfg: &SessionConfig) -> Self {
+        TimeAccountant {
+            time_model: cfg.time_model,
+            task_model: cfg.task_model,
+            ref_nodes: cfg.ref_nodes,
+        }
+    }
+
+    /// Charge one iteration: compute per-task and aggregate times and
+    /// record per-sample runtimes into the tasks' learning windows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn account(
+        &self,
+        algo: &dyn Algorithm,
+        tasks: &mut [TaskState],
+        updates: &[LocalUpdate],
+        walls: &[Duration],
+        nodes: &[NodeSpec],
+        net: &NetworkModel,
+        moved_bytes: usize,
+        n_total: usize,
+    ) -> IterationTiming {
+        let unit = algo.unit_samples(n_total, self.ref_nodes);
+        let mut task_times = Vec::with_capacity(updates.len());
+        for ((task, upd), wall) in tasks.iter_mut().zip(updates).zip(walls) {
+            let t = match self.time_model {
+                TimeModel::Projected => (upd.samples as f64 / unit) / task.node.speed,
+                TimeModel::Measured => wall.as_secs_f64() / task.node.speed,
+            };
+            task_times.push(t);
+            if upd.samples > 0 {
+                task.record_time(t / upd.samples as f64);
+            }
+        }
+        let iteration_time = match self.task_model {
+            TaskModel::UniTasks => task_times.iter().cloned().fold(0.0, f64::max),
+            TaskModel::MicroTasks { k } => {
+                // Wave model over the *current* node allocation: each task
+                // is one unit of work of the largest observed size.
+                let task_units = task_times.iter().cloned().fold(0.0, f64::max);
+                microtask_iteration_time(k, task_units * k as f64, nodes)
+            }
+        };
+        let transfer_time = match self.time_model {
+            // The paper's projections exclude transfer overheads
+            // (§5.3: "this favors micro-tasks").
+            TimeModel::Projected => 0.0,
+            TimeModel::Measured => net.transfer_cost(moved_bytes).as_secs_f64(),
+        };
+        IterationTiming { task_times, iteration_time, transfer_time }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::{Backend, CocoaAlgo};
+    use crate::config::CocoaConfig;
+
+    fn upd(samples: usize) -> LocalUpdate {
+        LocalUpdate { delta: vec![], samples, loss_sum: 0.0 }
+    }
+
+    #[test]
+    fn projected_uni_time_is_slowest_task() {
+        let cfg = SessionConfig::cocoa("t", 2);
+        let acct = TimeAccountant::new(&cfg);
+        let algo = CocoaAlgo::new(CocoaConfig::default(), Backend::native_cocoa(), 1600, 4);
+        let mut tasks = vec![
+            TaskState::new(NodeSpec::new(0, 1.0), 3),
+            TaskState::new(NodeSpec::new(1, 0.5), 3),
+        ];
+        let nodes: Vec<NodeSpec> = tasks.iter().map(|t| t.node.clone()).collect();
+        let updates = vec![upd(100), upd(100)];
+        let walls = vec![Duration::from_millis(1); 2];
+        let timing = acct.account(
+            &algo,
+            &mut tasks,
+            &updates,
+            &walls,
+            &nodes,
+            &NetworkModel::default(),
+            0,
+            1600,
+        );
+        // unit = 1600/16 = 100 samples → 1.0 on the fast node, 2.0 on the
+        // half-speed node; the iteration is pinned to the slow task.
+        assert!((timing.task_times[0] - 1.0).abs() < 1e-12);
+        assert!((timing.task_times[1] - 2.0).abs() < 1e-12);
+        assert!((timing.iteration_time - 2.0).abs() < 1e-12);
+        assert_eq!(timing.transfer_time, 0.0);
+        // History recorded for both tasks.
+        assert!(tasks.iter().all(|t| t.est_per_sample().is_some()));
+    }
+
+    #[test]
+    fn measured_mode_charges_transfers() {
+        let mut cfg = SessionConfig::cocoa("t", 2);
+        cfg.time_model = TimeModel::Measured;
+        let acct = TimeAccountant::new(&cfg);
+        let algo = CocoaAlgo::new(CocoaConfig::default(), Backend::native_cocoa(), 1600, 4);
+        let mut tasks = vec![TaskState::new(NodeSpec::new(0, 1.0), 3)];
+        let nodes: Vec<NodeSpec> = tasks.iter().map(|t| t.node.clone()).collect();
+        let updates = vec![upd(50)];
+        let walls = vec![Duration::from_millis(50)];
+        let net = NetworkModel::default();
+        let timing =
+            acct.account(&algo, &mut tasks, &updates, &walls, &nodes, &net, 1 << 20, 1600);
+        assert!((timing.transfer_time - net.transfer_cost(1 << 20).as_secs_f64()).abs() < 1e-12);
+        assert!(timing.iteration_time > 0.0);
+    }
+}

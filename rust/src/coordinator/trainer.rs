@@ -1,34 +1,44 @@
 //! The trainer: Chicle's central driver (paper §4.1–§4.2).
 //!
-//! Each iteration is barrier-synchronous:
+//! Each iteration is barrier-synchronous and runs as an explicit phase
+//! pipeline over the persistent [`crate::exec`] worker runtime:
 //!
-//! 1. Poll the resource manager at the current virtual time and apply
-//!    elastic events (uni-tasks mode): spawn tasks on newly assigned
-//!    nodes, drain and redistribute chunks from revoked ones.
-//! 2. Run the between-iteration policies (rebalance / shuffle /
-//!    straggler) — the window where the scheduler owns the chunks.
-//! 3. Execute one solver iteration on every task concurrently.
-//! 4. Merge task updates into the shared model (weighted per eq. 2).
-//! 5. Account time: the paper's projection model (§5.3) or measured
-//!    wallclock scaled by node speed; record swimlane spans.
-//! 6. Evaluate the convergence metric on schedule and log the iteration.
+//! 1. **elasticity** — poll the resource manager at the current virtual
+//!    time and apply elastic events (uni-tasks mode): spawn a persistent
+//!    worker on each newly assigned node, drain-then-shutdown revoked
+//!    workers through the executor's command protocol and redistribute
+//!    their chunks.
+//! 2. **policies** — run the between-iteration policies (rebalance /
+//!    shuffle / straggler) — the window where the scheduler owns the
+//!    chunks.
+//! 3. **execute** — dispatch one `RunIteration` command to every resident
+//!    worker and collect the `LocalUpdate`s in task order.
+//! 4. **merge** — fold task updates into the shared model (weighted per
+//!    eq. 2). The model is published to workers as an `Arc` snapshot and
+//!    merged in place via `Arc::make_mut`.
+//! 5. **account** — the paper's projection model (§5.3) or measured
+//!    wallclock scaled by node speed ([`super::timing`]); record swimlane
+//!    spans.
+//! 6. **evaluate** — compute the convergence metric on schedule and log
+//!    the iteration.
 //!
 //! Micro-task emulation (§5.1 "Micro-tasks") keeps K fixed task states
-//! regardless of node count and projects iteration time with the wave
-//! model; convergence per epoch then only depends on K, exactly as the
-//! paper argues.
+//! (each with its own resident worker) regardless of node count and
+//! projects iteration time with the wave model; convergence per epoch then
+//! only depends on K, exactly as the paper argues.
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::algos::{Algorithm, LocalUpdate, ModelVec};
 use crate::chunks::{Chunk, NetworkModel};
-use crate::cluster::{NodeSpec, ResourceEvent, ResourceManager, TraceResourceManager};
-use crate::config::{SessionConfig, TaskModel, TimeModel};
+use crate::cluster::{NodeId, NodeSpec, ResourceEvent, ResourceManager, TraceResourceManager};
+use crate::config::{Partitioning, SessionConfig, TaskModel};
+use crate::exec::{TaskRun, WorkerPool};
 use crate::metrics::{IterationRecord, Metric, MetricsLog, SwimlaneRecorder, TaskSpan};
-use crate::sim::{microtask_iteration_time, VirtualClock};
+use crate::sim::VirtualClock;
 use crate::util::Rng;
 
 use super::policy::{
@@ -36,23 +46,28 @@ use super::policy::{
     ShufflePolicy, StragglerPolicy,
 };
 use super::task::TaskState;
+use super::timing::{IterationTiming, TimeAccountant};
 
 /// The central driver.
 pub struct Trainer {
     cfg: SessionConfig,
     algo: Arc<dyn Algorithm>,
     tasks: Vec<TaskState>,
+    /// The persistent uni-task executor: one resident worker per task.
+    pool: WorkerPool,
     rm: TraceResourceManager,
     clock: VirtualClock,
     net: NetworkModel,
     policies: Vec<Box<dyn Policy>>,
+    timing: TimeAccountant,
     rng: Rng,
     n_total: usize,
     cum_samples: usize,
     eval_every: usize,
     pub metrics: MetricsLog,
     pub swimlanes: SwimlaneRecorder,
-    model: ModelVec,
+    /// Shared model, published to workers as a snapshot each iteration.
+    model: Arc<ModelVec>,
 }
 
 impl Trainer {
@@ -68,7 +83,7 @@ impl Trainer {
 
         // Initial task set.
         let window = cfg.policies.rebalance_window;
-        let mut tasks: Vec<TaskState> = match cfg.task_model {
+        let tasks: Vec<TaskState> = match cfg.task_model {
             TaskModel::UniTasks => rm
                 .assigned()
                 .iter()
@@ -82,15 +97,10 @@ impl Trainer {
 
         // Initial chunk placement. RandomChunks = Chicle's random
         // assignment; Contiguous = the Snap-ML-style split (paper §A.1).
-        match cfg.partitioning {
-            crate::config::Partitioning::RandomChunks => rng.shuffle(&mut chunks),
-            crate::config::Partitioning::Contiguous => {
-                chunks.sort_by_key(|c| c.id);
-            }
-        }
         let k = tasks.len();
         match cfg.partitioning {
-            crate::config::Partitioning::RandomChunks => {
+            Partitioning::RandomChunks => {
+                rng.shuffle(&mut chunks);
                 // Random chunk→task placement, balanced by sample count:
                 // each (shuffled) chunk goes to the task currently holding
                 // the fewest samples. Deliberately speed-agnostic — node
@@ -106,11 +116,11 @@ impl Trainer {
                     tasks[t].store.add(chunk);
                 }
             }
-            crate::config::Partitioning::Contiguous => {
-                let n = chunks.len();
+            Partitioning::Contiguous => {
+                chunks.sort_by_key(|c| c.id);
+                // Contiguous blocks of ceil(n/k) chunks per task.
+                let per = chunks.len().div_ceil(k);
                 for (i, chunk) in chunks.into_iter().enumerate() {
-                    // Contiguous blocks of ceil(n/k) chunks per task.
-                    let per = n.div_ceil(k);
                     tasks[(i / per).min(k - 1)].store.add(chunk);
                 }
             }
@@ -134,15 +144,25 @@ impl Trainer {
             crate::config::AlgoConfig::Lsgd(l) => l.eval_every.max(1),
         };
 
-        let model = algo.init_model()?;
+        // Bring up the persistent executor: one resident worker per task,
+        // sharing the task's chunk store.
+        let mut pool = WorkerPool::new(Arc::clone(&algo));
+        for task in &tasks {
+            pool.spawn_worker(task.node.id, task.store.clone());
+        }
+
+        let model = Arc::new(algo.init_model()?);
+        let timing = TimeAccountant::new(&cfg);
         Ok(Trainer {
             cfg,
             algo,
             tasks,
+            pool,
             rm,
             clock: VirtualClock::new(),
             net: NetworkModel::default(),
             policies,
+            timing,
             rng,
             n_total,
             cum_samples: 0,
@@ -154,7 +174,7 @@ impl Trainer {
     }
 
     pub fn model(&self) -> &ModelVec {
-        &self.model
+        &*self.model
     }
 
     pub fn tasks(&self) -> &[TaskState] {
@@ -174,23 +194,48 @@ impl Trainer {
         }
     }
 
-    /// Apply pending resource-manager events (uni-tasks only). Returns
-    /// bytes moved for transfer accounting.
-    fn handle_elasticity(&mut self) -> Result<usize> {
+    /// Phase 1 — apply pending resource-manager events (uni-tasks only):
+    /// spawn a worker per assigned node, drain-then-shutdown revoked ones
+    /// through the executor. Returns bytes moved for transfer accounting.
+    fn phase_elasticity(&mut self) -> Result<usize> {
         if !matches!(self.cfg.task_model, TaskModel::UniTasks) {
+            // Micro-task emulation keeps K fixed, but the RM must still
+            // advance so the wave model projects over the *current* node
+            // allocation rather than the t=0 snapshot.
+            let _ = self.rm.poll(self.clock.now());
             return Ok(0);
         }
         let events = self.rm.poll(self.clock.now());
         if events.is_empty() {
             return Ok(0);
         }
+        // Snapshot loads so only tasks whose load actually changes lose
+        // their learned runtimes (tasks untouched by the event keep them,
+        // letting the rebalance policy re-converge faster).
+        let before: Vec<(NodeId, usize)> =
+            self.tasks.iter().map(|t| (t.node.id, t.n_samples())).collect();
         let mut moved = 0usize;
         for ev in events {
             match ev {
                 ResourceEvent::RevokeNotice(ids) => {
+                    // Shut down every revoked worker before surfacing any
+                    // failure: aborting halfway would drop the chunks
+                    // already drained into `orphans`.
                     let mut orphans: Vec<Chunk> = Vec::new();
-                    self.tasks.retain_mut(|t| {
+                    let mut shutdown_err = None;
+                    for id in &ids {
+                        if self.pool.has_worker(*id) {
+                            match self.pool.shutdown_worker(*id) {
+                                Ok(chunks) => orphans.extend(chunks),
+                                Err(e) => shutdown_err = shutdown_err.or(Some(e)),
+                            }
+                        }
+                    }
+                    self.tasks.retain(|t| {
                         if ids.contains(&t.node.id) {
+                            // The worker drain above already emptied the
+                            // store; draining again conserves chunks even
+                            // when the worker was gone or its drain failed.
                             orphans.extend(t.store.drain());
                             false
                         } else {
@@ -199,30 +244,40 @@ impl Trainer {
                     });
                     anyhow::ensure!(!self.tasks.is_empty(), "all nodes revoked");
                     moved += deal_round_robin(&mut self.tasks, orphans);
+                    if let Some(e) = shutdown_err {
+                        return Err(e);
+                    }
                 }
                 ResourceEvent::Assigned(nodes) => {
                     let window = self.cfg.policies.rebalance_window;
                     for n in nodes {
-                        self.tasks.push(TaskState::new(n, window));
+                        let task = TaskState::new(n, window);
+                        self.pool.spawn_worker(task.node.id, task.store.clone());
+                        self.tasks.push(task);
                     }
                     moved += redistribute_for_new_tasks(&mut self.tasks, &mut self.rng);
                 }
             }
         }
-        // Loads changed; learned runtimes are stale.
+        // Loads changed on these tasks; their learned runtimes are stale.
+        // (A task whose chunks net out to the same sample count keeps its
+        // history — the per-sample estimate is still valid.)
         for t in &mut self.tasks {
-            t.clear_history();
+            let prev = before
+                .iter()
+                .find(|(id, _)| *id == t.node.id)
+                .map(|(_, n)| *n);
+            if prev != Some(t.n_samples()) {
+                t.clear_history();
+            }
         }
         Ok(moved)
     }
 
-    /// Execute one full training iteration. Returns the evaluated metric
-    /// if this iteration was an evaluation point.
-    pub fn step(&mut self, iter: usize) -> Result<Option<Metric>> {
-        // 1. Elasticity.
-        let mut moved_bytes = self.handle_elasticity()?;
-
-        // 2. Policies (scheduler owns chunks between iterations).
+    /// Phase 2 — between-iteration policies (scheduler owns the chunks).
+    /// Returns bytes moved.
+    fn phase_policies(&mut self, iter: usize) -> Result<usize> {
+        let mut moved_bytes = 0usize;
         for p in &mut self.policies {
             let mut ctx = PolicyCtx {
                 tasks: &mut self.tasks,
@@ -235,99 +290,72 @@ impl Trainer {
             p.apply(&mut ctx)?;
             moved_bytes += ctx.moved_bytes;
         }
+        Ok(moved_bytes)
+    }
 
-        // 3. Execute all tasks concurrently (barrier at scope end).
+    /// Phase 3 — dispatch the iteration to every resident worker and
+    /// collect updates in task order (the barrier).
+    fn phase_execute(&mut self, iter: usize) -> Result<Vec<TaskRun>> {
         let k = self.tasks.len();
-        let algo = Arc::clone(&self.algo);
-        let model_ref = &self.model;
         let base_seed = self
             .cfg
             .seed
             .wrapping_mul(0x9E3779B97F4A7C15)
             .wrapping_add(iter as u64);
-        let results: Vec<Result<(LocalUpdate, Duration)>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = self
-                .tasks
-                .iter_mut()
-                .enumerate()
-                .map(|(t, task)| {
-                    let algo = Arc::clone(&algo);
-                    scope.spawn(move || -> Result<(LocalUpdate, Duration)> {
-                        if task.store.n_samples() == 0 {
-                            return Ok((
-                                LocalUpdate {
-                                    delta: vec![0.0; algo.model_len()],
-                                    samples: 0,
-                                    loss_sum: 0.0,
-                                },
-                                Duration::ZERO,
-                            ));
-                        }
-                        let t0 = Instant::now();
-                        let upd = algo.task_iterate(
-                            task.store.chunks_mut(),
-                            model_ref,
-                            k,
-                            base_seed.wrapping_add((t as u64) << 32),
-                            None,
-                        )?;
-                        Ok((upd, t0.elapsed()))
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("task thread panicked"))
-                .collect()
-        });
-        let mut updates = Vec::with_capacity(k);
-        let mut walls = Vec::with_capacity(k);
-        for r in results {
-            let (u, w) = r?;
-            walls.push(w);
-            updates.push(u);
-        }
+        let plan: Vec<(NodeId, u64)> = self
+            .tasks
+            .iter()
+            .enumerate()
+            .map(|(t, task)| (task.node.id, base_seed.wrapping_add((t as u64) << 32)))
+            .collect();
+        self.pool
+            .run_iteration(&plan, Arc::clone(&self.model), k, None)
+    }
 
-        // 4. Merge.
-        self.algo.merge(&mut self.model, &updates, k);
+    /// Phase 4 — merge task updates into the shared model.
+    fn phase_merge(&mut self, updates: &[LocalUpdate]) {
+        // Workers dropped their snapshots before completing, so this is an
+        // in-place merge, not a copy.
+        let model = Arc::make_mut(&mut self.model);
+        self.algo.merge(model, updates, updates.len());
+    }
 
-        // 5. Time accounting.
-        let unit = self.algo.unit_samples(self.n_total, self.cfg.ref_nodes);
+    /// Phase 5 — time accounting over the configured model.
+    fn phase_account(
+        &mut self,
+        updates: &[LocalUpdate],
+        walls: &[Duration],
+        moved_bytes: usize,
+    ) -> IterationTiming {
         let nodes = self.current_nodes();
-        let start = self.clock.now();
-        let mut task_times: Vec<f64> = Vec::with_capacity(k);
-        for ((task, upd), wall) in self.tasks.iter_mut().zip(&updates).zip(&walls) {
-            let t = match self.cfg.time_model {
-                TimeModel::Projected => (upd.samples as f64 / unit) / task.node.speed,
-                TimeModel::Measured => wall.as_secs_f64() / task.node.speed,
-            };
-            task_times.push(t);
-            if upd.samples > 0 {
-                task.record_time(t / upd.samples as f64);
-            }
-        }
-        let iteration_time = match self.cfg.task_model {
-            TaskModel::UniTasks => task_times.iter().cloned().fold(0.0, f64::max),
-            TaskModel::MicroTasks { k } => {
-                // Wave model over the *current* node allocation: each task
-                // is one unit of work of the largest observed size.
-                let task_units = task_times.iter().cloned().fold(0.0, f64::max);
-                microtask_iteration_time(k, task_units * k as f64, &nodes)
-            }
-        };
-        let transfer_time = match self.cfg.time_model {
-            // The paper's projections exclude transfer overheads
-            // (§5.3: "this favors micro-tasks").
-            TimeModel::Projected => 0.0,
-            TimeModel::Measured => self.net.transfer_cost(moved_bytes).as_secs_f64(),
-        };
+        self.timing.account(
+            self.algo.as_ref(),
+            &mut self.tasks,
+            updates,
+            walls,
+            &nodes,
+            &self.net,
+            moved_bytes,
+            self.n_total,
+        )
+    }
 
-        // 6. Swimlanes (uni-tasks; micro-task waves aren't per-node).
+    /// Phase 6 — swimlanes, clock advance, metric evaluation + logging.
+    fn phase_record(
+        &mut self,
+        iter: usize,
+        updates: &[LocalUpdate],
+        walls: &[Duration],
+        timing: IterationTiming,
+    ) -> Result<Option<Metric>> {
+        let k = updates.len();
+        let start = self.clock.now();
+        // Swimlanes (uni-tasks; micro-task waves aren't per-node).
         if matches!(self.cfg.task_model, TaskModel::UniTasks) {
             for (task, (t, upd)) in self
                 .tasks
                 .iter()
-                .zip(task_times.iter().zip(&updates))
+                .zip(timing.task_times.iter().zip(updates))
             {
                 self.swimlanes.record(TaskSpan {
                     node: task.node.id,
@@ -339,19 +367,15 @@ impl Trainer {
                 });
             }
         }
-
-        self.clock
-            .advance(Duration::from_secs_f64(iteration_time + transfer_time));
+        self.clock.advance(Duration::from_secs_f64(
+            timing.iteration_time + timing.transfer_time,
+        ));
         let iter_samples: usize = updates.iter().map(|u| u.samples).sum();
         self.cum_samples += iter_samples;
 
-        // 7. Evaluate + record.
         let metric = if iter % self.eval_every == 0 {
-            let all: Vec<&Chunk> = self
-                .tasks
-                .iter()
-                .flat_map(|t| t.store.iter())
-                .collect();
+            let guards: Vec<_> = self.tasks.iter().map(|t| t.store.lock()).collect();
+            let all: Vec<&Chunk> = guards.iter().flat_map(|g| g.iter()).collect();
             Some(self.algo.evaluate(&self.model, &all)?)
         } else {
             None
@@ -369,6 +393,19 @@ impl Trainer {
             train_loss: if steps > 0 { Some(loss_sum / steps as f64) } else { None },
         });
         Ok(metric)
+    }
+
+    /// Execute one full training iteration. Returns the evaluated metric
+    /// if this iteration was an evaluation point.
+    pub fn step(&mut self, iter: usize) -> Result<Option<Metric>> {
+        let mut moved_bytes = self.phase_elasticity()?;
+        moved_bytes += self.phase_policies(iter)?;
+        let runs = self.phase_execute(iter)?;
+        let (updates, walls): (Vec<LocalUpdate>, Vec<Duration>) =
+            runs.into_iter().map(|r| (r.update, r.wall)).unzip();
+        self.phase_merge(&updates);
+        let timing = self.phase_account(&updates, &walls, moved_bytes);
+        self.phase_record(iter, &updates, &walls, timing)
     }
 
     /// Run to completion: stops at `max_iters`, `max_epochs`, or when the
@@ -504,5 +541,42 @@ mod tests {
         assert!(first > 1.8, "first iteration imbalance {first}");
         assert!(last < first, "imbalance {first} -> {last}");
         assert!(last < 1.4, "final imbalance {last}");
+    }
+
+    #[test]
+    fn selective_history_clear_after_scale_event() {
+        // 8 tasks holding ~1 chunk each; revoking 2 nodes deals 2 orphan
+        // chunks round-robin, so most survivors' loads are untouched —
+        // they must keep their learned runtimes (no blanket clear).
+        let ds = synth::higgs_like(2000, 5);
+        let chunks = make_chunks(&ds, 32 * 1024);
+        let algo = Arc::new(CocoaAlgo::new(
+            CocoaConfig::default(),
+            Backend::native_cocoa(),
+            ds.n_samples(),
+            ds.dim(),
+        ));
+        let mut cfg = SessionConfig::cocoa("t", 8).with_elastic(ElasticSpec::Gradual {
+            from: 8,
+            to: 6,
+            interval_s: 6.0,
+        });
+        cfg.policies.rebalance = false;
+        cfg.max_iters = 10;
+        let mut tr = Trainer::new(cfg, algo, chunks).unwrap();
+        // Build runtime history before the t=6 event (2 units/iteration).
+        for iter in 0..3 {
+            tr.step(iter).unwrap();
+        }
+        assert!(tr.tasks().iter().all(|t| t.est_per_sample().is_some()));
+        tr.phase_elasticity().unwrap();
+        assert_eq!(tr.tasks().len(), 6, "scale-in should have fired");
+        let kept = tr
+            .tasks()
+            .iter()
+            .filter(|t| t.est_per_sample().is_some())
+            .count();
+        assert!(kept >= 1, "survivors untouched by the deal must keep history");
+        assert!(kept < 6, "tasks that gained chunks must lose history");
     }
 }

@@ -1,0 +1,57 @@
+//! The persistent uni-task executor.
+//!
+//! Chicle's core architectural claim is that elasticity should be built on
+//! *uni-tasks*: exactly one long-lived, multi-threaded task per node that
+//! survives across iterations, with only data (chunks) and roles moving on
+//! scaling events (paper §3). This module is that runtime:
+//!
+//! * [`worker`] — one OS thread per uni-task, spawned once when the node is
+//!   assigned and alive until revocation or session end. The thread owns a
+//!   handle to the task's [`crate::chunks::SharedStore`] and executes
+//!   solver iterations against it.
+//! * [`pool`] — the coordinator-side [`WorkerPool`]: spawns workers, routes
+//!   commands, and collects completions in a deterministic order.
+//!
+//! ## Command protocol
+//!
+//! Each worker is driven by a command channel and answers on its own
+//! completion channel (one pair per worker, so collection order is fixed
+//! by the coordinator, not by which worker finishes first):
+//!
+//! | command                                      | reply                |
+//! |----------------------------------------------|----------------------|
+//! | `RunIteration { model, k_tasks, seed, budget }` | `Iteration(TaskRun)` |
+//! | `InstallChunks(chunks)`                      | — (fire and forget)  |
+//! | `DrainChunks`                                | `Drained(chunks)`    |
+//! | `Shutdown`                                   | — (thread exits)     |
+//!
+//! The trainer itself moves chunks by writing the task's shared store
+//! directly between iterations (the scheduler's ownership window), so
+//! `InstallChunks` is the channel-only alternative for coordinators that
+//! do not hold a store handle; `DrainChunks`/`Shutdown` are the
+//! revocation path either way.
+//!
+//! The shared model is published to workers as an `Arc<ModelVec>` snapshot
+//! per iteration; workers drop their reference before signalling
+//! completion, so the driver's `Arc::make_mut` merge never copies.
+//!
+//! ## Lifecycle under elasticity
+//!
+//! On a resource-manager `Assigned` event the trainer spawns a worker for
+//! the new node; on a `RevokeNotice` it issues `DrainChunks` followed by
+//! `Shutdown` — the drained chunks (with their per-sample optimizer state)
+//! are redistributed to the survivors, whose compute state is untouched.
+//!
+//! ## Determinism
+//!
+//! Task execution is deterministic regardless of worker scheduling: each
+//! task's RNG stream is keyed by `(seed, task index, iteration)`, chunk
+//! stores are only mutated by their own worker during an iteration, and
+//! results are merged in task order. Two runs with the same seed produce
+//! identical `MetricsLog` records (modulo measured wallclock).
+
+pub mod pool;
+pub mod worker;
+
+pub use pool::WorkerPool;
+pub use worker::{Command, Reply, TaskRun};

@@ -1,0 +1,228 @@
+//! The coordinator-side worker pool: spawn, command and collect from the
+//! persistent uni-task workers.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::algos::{Algorithm, ModelVec};
+use crate::chunks::{Chunk, SharedStore};
+use crate::cluster::NodeId;
+
+use super::worker::{worker_loop, Command, Reply, TaskRun};
+
+/// Channels + join handle of one resident worker.
+struct WorkerHandle {
+    node: NodeId,
+    commands: Sender<Command>,
+    replies: Receiver<Reply>,
+    thread: Option<JoinHandle<()>>,
+}
+
+/// One long-lived worker per uni-task, addressed by node id.
+///
+/// All methods are called from the coordinator thread between iterations;
+/// the pool never exposes worker internals, only the command protocol.
+pub struct WorkerPool {
+    algo: Arc<dyn Algorithm>,
+    workers: Vec<WorkerHandle>,
+}
+
+impl WorkerPool {
+    pub fn new(algo: Arc<dyn Algorithm>) -> Self {
+        WorkerPool { algo, workers: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    pub fn has_worker(&self, node: NodeId) -> bool {
+        self.workers.iter().any(|w| w.node == node)
+    }
+
+    /// Spawn the persistent worker thread for one uni-task. `store` is the
+    /// same shared handle the coordinator's `TaskState` keeps, so chunks
+    /// installed by policies between iterations are immediately visible.
+    pub fn spawn_worker(&mut self, node: NodeId, store: SharedStore) {
+        assert!(!self.has_worker(node), "worker for node {node} already exists");
+        let (cmd_tx, cmd_rx) = channel();
+        let (reply_tx, reply_rx) = channel();
+        let algo = Arc::clone(&self.algo);
+        let thread = std::thread::Builder::new()
+            .name(format!("uni-task-{node}"))
+            .spawn(move || worker_loop(algo, store, cmd_rx, reply_tx))
+            .expect("spawn uni-task worker thread");
+        self.workers.push(WorkerHandle {
+            node,
+            commands: cmd_tx,
+            replies: reply_rx,
+            thread: Some(thread),
+        });
+    }
+
+    /// Install chunks into a worker's store through the command channel.
+    pub fn install_chunks(&self, node: NodeId, chunks: Vec<Chunk>) -> Result<()> {
+        self.worker(node)?
+            .commands
+            .send(Command::InstallChunks(chunks))
+            .map_err(|_| anyhow!("worker for node {node} is gone"))
+    }
+
+    /// Drain a worker's chunks and shut it down (the revocation path):
+    /// the chunks — with their per-sample optimizer state — survive, the
+    /// thread exits, and every other worker's compute state is untouched.
+    pub fn shutdown_worker(&mut self, node: NodeId) -> Result<Vec<Chunk>> {
+        let idx = self
+            .workers
+            .iter()
+            .position(|w| w.node == node)
+            .ok_or_else(|| anyhow!("no worker for node {node}"))?;
+        // Remove the handle up front: whatever the drain outcome, this
+        // worker must stop being addressable (a dead entry would collide
+        // with a future re-assignment of the same node id).
+        let mut w = self.workers.remove(idx);
+        let result = match w.commands.send(Command::DrainChunks) {
+            Err(_) => Err(anyhow!("worker for node {node} is gone")),
+            Ok(()) => match w.replies.recv() {
+                Ok(Reply::Drained(chunks)) => Ok(chunks),
+                Ok(Reply::Iteration(_)) => {
+                    Err(anyhow!("unexpected iteration reply during drain"))
+                }
+                Err(_) => Err(anyhow!("worker {node} died during drain")),
+            },
+        };
+        let _ = w.commands.send(Command::Shutdown);
+        if let Some(t) = w.thread.take() {
+            let _ = t.join();
+        }
+        result
+    }
+
+    /// Dispatch one iteration to every worker in `plan` order — each entry
+    /// is `(node, task_seed)` — then collect results in the same order.
+    /// Per-worker completion channels make collection deterministic
+    /// regardless of which worker finishes first.
+    pub fn run_iteration(
+        &self,
+        plan: &[(NodeId, u64)],
+        model: Arc<ModelVec>,
+        k_tasks: usize,
+        budget: Option<usize>,
+    ) -> Result<Vec<TaskRun>> {
+        // Resolve every worker before dispatching anything: an unknown
+        // node must not leave part of the pool mid-iteration.
+        let handles = plan
+            .iter()
+            .map(|(node, _)| self.worker(*node))
+            .collect::<Result<Vec<_>>>()?;
+        // A failed send means that worker's thread is gone; remember it
+        // and keep dispatching so every live worker still gets exactly
+        // one command this round.
+        let mut dispatched = vec![false; plan.len()];
+        for (i, (handle, (_, seed))) in handles.iter().zip(plan).enumerate() {
+            dispatched[i] = handle
+                .commands
+                .send(Command::RunIteration {
+                    model: Arc::clone(&model),
+                    k_tasks,
+                    seed: *seed,
+                    budget,
+                })
+                .is_ok();
+        }
+        drop(model);
+        // Collect every reply before surfacing any error — returning
+        // early would leave replies queued and desync the per-worker
+        // command/reply protocol for later calls.
+        let mut results = Vec::with_capacity(plan.len());
+        for (i, (handle, (node, _))) in handles.iter().zip(plan).enumerate() {
+            results.push(if !dispatched[i] {
+                Err(anyhow!("worker for node {node} is gone"))
+            } else {
+                match handle.replies.recv() {
+                    Ok(Reply::Iteration(result)) => result,
+                    Ok(Reply::Drained(_)) => {
+                        Err(anyhow!("unexpected drain reply from worker {node}"))
+                    }
+                    Err(_) => Err(anyhow!("worker for node {node} died mid-iteration")),
+                }
+            });
+        }
+        results.into_iter().collect()
+    }
+
+    fn worker(&self, node: NodeId) -> Result<&WorkerHandle> {
+        self.workers
+            .iter()
+            .find(|w| w.node == node)
+            .ok_or_else(|| anyhow!("no worker for node {node}"))
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.commands.send(Command::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(t) = w.thread.take() {
+                let _ = t.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::{Backend, CocoaAlgo};
+    use crate::config::CocoaConfig;
+
+    fn pool() -> WorkerPool {
+        let algo: Arc<dyn Algorithm> = Arc::new(CocoaAlgo::new(
+            CocoaConfig::default(),
+            Backend::native_cocoa(),
+            100,
+            4,
+        ));
+        WorkerPool::new(algo)
+    }
+
+    #[test]
+    fn empty_store_yields_zero_update() {
+        let mut p = pool();
+        p.spawn_worker(3, SharedStore::new());
+        assert!(p.has_worker(3));
+        assert_eq!(p.len(), 1);
+        let model = Arc::new(vec![0.0f32; 4]);
+        let runs = p.run_iteration(&[(3, 1)], model, 1, None).unwrap();
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].update.samples, 0);
+        assert_eq!(runs[0].update.delta, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn unknown_node_errors() {
+        let p = pool();
+        let model = Arc::new(vec![0.0f32; 4]);
+        assert!(p.run_iteration(&[(9, 0)], model, 1, None).is_err());
+        assert!(p.install_chunks(9, vec![]).is_err());
+    }
+
+    #[test]
+    fn shutdown_removes_worker() {
+        let mut p = pool();
+        p.spawn_worker(0, SharedStore::new());
+        let drained = p.shutdown_worker(0).unwrap();
+        assert!(drained.is_empty());
+        assert!(!p.has_worker(0));
+        assert!(p.is_empty());
+    }
+}

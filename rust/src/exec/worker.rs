@@ -1,0 +1,110 @@
+//! The uni-task worker loop: one persistent thread per task.
+//!
+//! A worker is spawned once (node assignment or session start) and then
+//! processes [`Command`]s until `Shutdown` or channel disconnect. It holds
+//! a clone of the task's [`SharedStore`] and locks it only while running
+//! an iteration — the ownership window the coordinator grants it.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::algos::{Algorithm, LocalUpdate, ModelVec};
+use crate::chunks::{Chunk, SharedStore};
+
+/// Commands the coordinator sends a uni-task worker.
+pub enum Command {
+    /// Run one solver iteration against the published model snapshot.
+    RunIteration {
+        model: Arc<ModelVec>,
+        k_tasks: usize,
+        seed: u64,
+        budget: Option<usize>,
+    },
+    /// Add chunks to the worker's store over the channel. The trainer
+    /// installs chunks by writing the shared store directly between
+    /// iterations; this command serves coordinators without a store
+    /// handle.
+    InstallChunks(Vec<Chunk>),
+    /// Hand every local chunk back to the coordinator (revocation drain).
+    DrainChunks,
+    /// Exit the worker loop.
+    Shutdown,
+}
+
+/// Replies a worker sends on its completion channel.
+pub enum Reply {
+    Iteration(Result<TaskRun>),
+    Drained(Vec<Chunk>),
+}
+
+/// One completed task iteration.
+#[derive(Clone, Debug)]
+pub struct TaskRun {
+    pub update: LocalUpdate,
+    /// Wallclock compute time of the task body.
+    pub wall: Duration,
+}
+
+/// The long-lived worker loop (runs on the worker's own thread).
+pub(crate) fn worker_loop(
+    algo: Arc<dyn Algorithm>,
+    store: SharedStore,
+    commands: Receiver<Command>,
+    replies: Sender<Reply>,
+) {
+    while let Ok(cmd) = commands.recv() {
+        match cmd {
+            Command::RunIteration { model, k_tasks, seed, budget } => {
+                let result = run_iteration(algo.as_ref(), &store, &model, k_tasks, seed, budget);
+                // Release the model snapshot before signalling completion so
+                // the driver's Arc::make_mut merge never needs a copy.
+                drop(model);
+                if replies.send(Reply::Iteration(result)).is_err() {
+                    break;
+                }
+            }
+            Command::InstallChunks(chunks) => {
+                let mut store = store.lock();
+                for chunk in chunks {
+                    store.add(chunk);
+                }
+            }
+            Command::DrainChunks => {
+                let drained = store.lock().drain();
+                if replies.send(Reply::Drained(drained)).is_err() {
+                    break;
+                }
+            }
+            Command::Shutdown => break,
+        }
+    }
+}
+
+fn run_iteration(
+    algo: &dyn Algorithm,
+    store: &SharedStore,
+    model: &ModelVec,
+    k_tasks: usize,
+    seed: u64,
+    budget: Option<usize>,
+) -> Result<TaskRun> {
+    let mut store = store.lock();
+    if store.n_samples() == 0 {
+        // A task without chunks contributes a zero update (it can receive
+        // chunks next boundary — e.g. a freshly assigned node).
+        return Ok(TaskRun {
+            update: LocalUpdate {
+                delta: vec![0.0; algo.model_len()],
+                samples: 0,
+                loss_sum: 0.0,
+            },
+            wall: Duration::ZERO,
+        });
+    }
+    let t0 = Instant::now();
+    let update = algo.task_iterate(store.chunks_mut(), model, k_tasks, seed, budget)?;
+    Ok(TaskRun { update, wall: t0.elapsed() })
+}

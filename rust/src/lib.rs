@@ -9,7 +9,10 @@
 //!   multi-threaded task per node) and *mobile data chunks*, with an
 //!   event-driven policy framework for elastic scaling, load rebalancing,
 //!   straggler mitigation and background shuffling
-//!   ([`coordinator`], [`chunks`], [`cluster`]).
+//!   ([`coordinator`], [`chunks`], [`cluster`]). Task execution runs on a
+//!   persistent worker runtime ([`exec`]): one long-lived thread per
+//!   uni-task, driven by channel commands and surviving across iterations,
+//!   so elasticity moves only data and roles — never compute state.
 //! * **L2/L1 (build time)** — the compute graphs (CoCoA/SCD, the paper's CNN,
 //!   an MLP, a transformer LM) written in JAX calling Pallas kernels, lowered
 //!   once to HLO text by `python/compile/aot.py` and executed from the rust
@@ -40,6 +43,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod harness;
 pub mod metrics;
 pub mod runtime;

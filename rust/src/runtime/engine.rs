@@ -10,6 +10,10 @@ use crate::Result;
 
 use super::manifest::{Manifest, TensorMeta};
 use super::tensor::HostTensor;
+// The real `xla` crate (PJRT bindings) is not in the offline crate set;
+// the stub mirrors the API surface used below and errors at client
+// construction. Point this import at the real crate to enable PJRT.
+use super::xla_stub as xla;
 
 /// Owns the PJRT client, the manifest and the compiled executables.
 pub struct Engine {

@@ -12,6 +12,7 @@ pub mod engine;
 pub mod manifest;
 pub mod service;
 pub mod tensor;
+mod xla_stub;
 
 pub use engine::Engine;
 pub use manifest::Manifest;

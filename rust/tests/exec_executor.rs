@@ -1,0 +1,156 @@
+//! Integration tests for the persistent uni-task executor: determinism of
+//! the full trainer on top of it, chunk conservation through the
+//! drain-on-revoke protocol, and the worker command protocol itself.
+
+use std::sync::Arc;
+
+use chicle::algos::{Algorithm, Backend, CocoaAlgo};
+use chicle::chunks::chunker::make_chunks;
+use chicle::chunks::SharedStore;
+use chicle::config::{CocoaConfig, ElasticSpec, SessionConfig};
+use chicle::coordinator::TrainingSession;
+use chicle::data::synth;
+use chicle::exec::WorkerPool;
+use chicle::metrics::MetricsLog;
+
+fn elastic_log(seed: u64) -> MetricsLog {
+    let ds = synth::higgs_like(2000, 5);
+    let mut cfg = SessionConfig::cocoa("exec-det", 8).with_seed(seed);
+    cfg.chunk_bytes = 4 * 1024;
+    cfg.elastic = ElasticSpec::Gradual { from: 8, to: 2, interval_s: 5.0 };
+    cfg.policies.rebalance = true;
+    cfg.max_iters = 15;
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    s.run_iters(15).unwrap()
+}
+
+/// Two runs with the same seed must produce identical `MetricsLog`
+/// records regardless of how the OS schedules the worker threads. `wall`
+/// is measured wallclock and is the one deliberately excluded field.
+#[test]
+fn determinism_identical_metrics_log_across_runs() {
+    let a = elastic_log(11);
+    let b = elastic_log(11);
+    assert_eq!(a.records.len(), b.records.len());
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.iter, rb.iter);
+        assert_eq!(ra.epochs, rb.epochs);
+        assert_eq!(ra.metric, rb.metric);
+        assert_eq!(ra.vtime, rb.vtime);
+        assert_eq!(ra.n_tasks, rb.n_tasks);
+        assert_eq!(ra.samples, rb.samples);
+        assert_eq!(ra.train_loss, rb.train_loss);
+    }
+    // And a different seed must actually change the trajectory.
+    let c = elastic_log(12);
+    let gaps = |log: &MetricsLog| -> Vec<f64> {
+        log.records
+            .iter()
+            .filter_map(|r| r.metric.map(|m| m.value()))
+            .collect()
+    };
+    assert_ne!(gaps(&a), gaps(&c), "different seeds should differ");
+}
+
+/// Scale-in drains every revoked worker through the executor's
+/// DrainChunks→Shutdown path; no chunk (or duplicate) may result.
+#[test]
+fn drain_on_revoke_conserves_chunks_mid_session() {
+    let ds = synth::higgs_like(2000, 3);
+    let mut cfg = SessionConfig::cocoa("exec-drain", 8);
+    cfg.chunk_bytes = 4 * 1024;
+    cfg.elastic = ElasticSpec::Gradual { from: 8, to: 2, interval_s: 4.0 };
+    cfg.max_iters = 20;
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    s.run_iters(20).unwrap();
+    assert_eq!(s.trainer().tasks().len(), 2, "scale-in should complete");
+    let total: usize = s.trainer().tasks().iter().map(|t| t.n_samples()).sum();
+    assert_eq!(total, 2000, "no samples lost through worker shutdown");
+    let mut ids: Vec<u32> = s
+        .trainer()
+        .tasks()
+        .iter()
+        .flat_map(|t| t.store.chunk_ids())
+        .collect();
+    let n = ids.len();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "no chunk may land on two tasks");
+}
+
+/// Exercise the raw worker command protocol: install chunks, run an
+/// iteration against them, then drain-and-shutdown and verify the chunks
+/// come back intact with their per-sample optimizer state.
+#[test]
+fn worker_protocol_install_run_drain_shutdown() {
+    let ds = synth::higgs_like(400, 1);
+    let chunks = make_chunks(&ds, 4 * 1024);
+    let n_chunks = chunks.len();
+    let algo: Arc<dyn Algorithm> = Arc::new(CocoaAlgo::new(
+        CocoaConfig::default(),
+        Backend::native_cocoa(),
+        ds.n_samples(),
+        ds.dim(),
+    ));
+    let model = Arc::new(algo.init_model().unwrap());
+    let mut pool = WorkerPool::new(Arc::clone(&algo));
+    pool.spawn_worker(7, SharedStore::new());
+    pool.install_chunks(7, chunks).unwrap();
+
+    // The iteration runs against the installed chunks (commands are FIFO).
+    let runs = pool
+        .run_iteration(&[(7, 99)], Arc::clone(&model), 1, None)
+        .unwrap();
+    assert_eq!(runs.len(), 1);
+    assert_eq!(runs[0].update.samples, 400, "one full local pass");
+
+    // Drain-then-shutdown returns every chunk, state included.
+    let drained = pool.shutdown_worker(7).unwrap();
+    assert_eq!(drained.len(), n_chunks);
+    let total: usize = drained.iter().map(|c| c.n_samples()).sum();
+    assert_eq!(total, 400);
+    assert!(
+        drained.iter().any(|c| c.state.iter().any(|&a| a != 0.0)),
+        "per-sample dual state should move with the chunks"
+    );
+    assert!(!pool.has_worker(7));
+}
+
+/// The same seeds through the pool produce bit-identical updates — the
+/// worker runtime adds no nondeterminism over direct task_iterate calls.
+#[test]
+fn pool_updates_match_direct_task_iterate() {
+    let ds = synth::higgs_like(600, 2);
+    let chunks = make_chunks(&ds, 8 * 1024);
+    let algo: Arc<dyn Algorithm> = Arc::new(CocoaAlgo::new(
+        CocoaConfig::default(),
+        Backend::native_cocoa(),
+        ds.n_samples(),
+        ds.dim(),
+    ));
+    let model = Arc::new(algo.init_model().unwrap());
+
+    // Direct execution on a private copy of the chunks.
+    let mut direct_chunks = chunks.clone();
+    let direct = algo
+        .task_iterate(&mut direct_chunks, &model, 2, 1234, None)
+        .unwrap();
+
+    // Pool execution against the same inputs.
+    let store = SharedStore::from_chunks(chunks);
+    let mut pool = WorkerPool::new(Arc::clone(&algo));
+    pool.spawn_worker(0, store.clone());
+    let runs = pool
+        .run_iteration(&[(0, 1234)], Arc::clone(&model), 2, None)
+        .unwrap();
+
+    assert_eq!(runs[0].update.samples, direct.samples);
+    assert_eq!(runs[0].update.delta, direct.delta);
+    let pooled_state: Vec<f32> = store
+        .lock()
+        .iter()
+        .flat_map(|c| c.state.clone())
+        .collect();
+    let direct_state: Vec<f32> = direct_chunks.iter().flat_map(|c| c.state.clone()).collect();
+    assert_eq!(pooled_state, direct_state);
+}
