@@ -39,8 +39,9 @@ fn main() {
     let sizes: Vec<usize> = chunks.iter().map(|c| c.size_bytes()).collect();
     b.bench("net/bulk_cost_all_chunks", || net.bulk_cost(&sizes));
 
-    // The cost the paper quotes: ~16 MiB model exchange per task (§4.3).
-    b.bench("net/model_exchange_16MiB_k16", || {
+    // The cost the paper quotes: ~16 MiB model exchange per task (§4.3),
+    // now charged as a tree reduce (2·⌈log2 k⌉ rounds, not 2k).
+    b.bench("net/model_exchange_tree_16MiB_k16", || {
         net.model_exchange_cost(16 << 20, 16)
     });
 

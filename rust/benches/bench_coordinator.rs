@@ -54,6 +54,33 @@ fn main() {
         model[0]
     });
 
+    // --- merge phase: serial fold vs sharded parallel reduction through
+    // the worker pool (same updates, same model size). The pool path
+    // should win from 4 workers up; the CI bench gate pins each row's
+    // median against the committed baseline so neither path regresses
+    // silently (the serial-vs-pool comparison itself is read off the
+    // bench output / TSV artifact). ---
+    let merge_algo: Arc<dyn Algorithm> = Arc::new(CocoaAlgo::new(
+        CocoaConfig::default(),
+        Backend::native_cocoa(),
+        16_000,
+        model_len,
+    ));
+    let updates_arc = Arc::new(updates.clone());
+    let model_arc = Arc::new(vec![0.0f32; model_len]);
+    for w in [2usize, 4, 8] {
+        let mut reduce_pool = WorkerPool::new(Arc::clone(&merge_algo));
+        for i in 0..w {
+            reduce_pool.spawn_worker(1000 + i as u32, SharedStore::new());
+        }
+        b.bench(&format!("merge/pool_reduce_{w}w_16upd_877k"), || {
+            reduce_pool
+                .reduce_model(&model_arc, Arc::clone(&updates_arc), 16)
+                .unwrap()
+                .len()
+        });
+    }
+
     // --- rebalance decision over 16 tasks ---
     b.bench("rebalance/decision_16_tasks", || {
         let mut tasks = tasks_with_chunks(16, 16_000);

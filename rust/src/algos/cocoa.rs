@@ -101,10 +101,18 @@ impl Algorithm for CocoaAlgo {
         Ok(LocalUpdate { delta, samples: processed, loss_sum: 0.0 })
     }
 
-    fn merge(&self, model: &mut ModelVec, updates: &[LocalUpdate], _k_tasks: usize) {
+    fn merge_shard(
+        &self,
+        shard: &mut [f32],
+        offset: usize,
+        updates: &[LocalUpdate],
+        _k_tasks: usize,
+    ) {
         // CoCoA+ γ=1: add deltas (σ' = K damping already applied locally).
+        // Pure elementwise sum in update order — shard-composable.
+        let end = offset + shard.len();
         for u in updates {
-            for (m, &d) in model.iter_mut().zip(&u.delta) {
+            for (m, &d) in shard.iter_mut().zip(&u.delta[offset..end]) {
                 *m += d;
             }
         }

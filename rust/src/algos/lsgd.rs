@@ -217,15 +217,24 @@ impl Algorithm for LsgdAlgo {
         Ok(LocalUpdate { delta, samples: l * h, loss_sum: loss_sum / h as f64 })
     }
 
-    fn merge(&self, model: &mut ModelVec, updates: &[LocalUpdate], _k_tasks: usize) {
-        // Weighted average by samples processed (eq. 2 / Stich'18).
+    fn merge_shard(
+        &self,
+        shard: &mut [f32],
+        offset: usize,
+        updates: &[LocalUpdate],
+        _k_tasks: usize,
+    ) {
+        // Weighted average by samples processed (eq. 2 / Stich'18). The
+        // weights depend only on the shard-independent sample totals, so
+        // every shard applies exactly the serial fold's arithmetic.
         let total: usize = updates.iter().map(|u| u.samples).sum();
         if total == 0 {
             return;
         }
+        let end = offset + shard.len();
         for u in updates {
             let w = u.samples as f32 / total as f32;
-            for (m, &d) in model.iter_mut().zip(&u.delta) {
+            for (m, &d) in shard.iter_mut().zip(&u.delta[offset..end]) {
                 *m += w * d;
             }
         }

@@ -65,8 +65,33 @@ pub trait Algorithm: Send + Sync {
         budget_samples: Option<usize>,
     ) -> Result<LocalUpdate>;
 
-    /// Merge task updates into the shared model (driver side).
-    fn merge(&self, model: &mut ModelVec, updates: &[LocalUpdate], k_tasks: usize);
+    /// Merge one contiguous model shard: fold the sub-range
+    /// `offset .. offset + shard.len()` of every task update into `shard`
+    /// (which aliases `model[offset ..]` on the caller's side).
+    ///
+    /// The contract that makes sharded reduction exact: the merge rule must
+    /// be *elementwise* — element `i` of the merged model may depend only
+    /// on element `i` of the inputs plus shard-independent scalars (e.g.
+    /// total sample counts), and updates must be folded in slice order.
+    /// Any partition of the model into contiguous shards then composes to
+    /// bit-identical results with the serial fold, for any shard count —
+    /// which is what lets the trainer fan the merge out across however
+    /// many workers the elastic schedule currently provides.
+    ///
+    /// Every update's `delta` must cover `offset + shard.len()` elements.
+    fn merge_shard(
+        &self,
+        shard: &mut [f32],
+        offset: usize,
+        updates: &[LocalUpdate],
+        k_tasks: usize,
+    );
+
+    /// Merge task updates into the shared model (driver side): the serial
+    /// fold — one shard spanning the whole model.
+    fn merge(&self, model: &mut ModelVec, updates: &[LocalUpdate], k_tasks: usize) {
+        self.merge_shard(&mut model[..], 0, updates, k_tasks);
+    }
 
     /// Global convergence metric over all chunks (+ optional held-out set).
     fn evaluate(&self, model: &ModelVec, all_chunks: &[&Chunk]) -> Result<Metric>;

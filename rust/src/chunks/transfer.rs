@@ -44,16 +44,26 @@ impl NetworkModel {
             .sum()
     }
 
+    /// Rounds of a binary tree reduce-then-broadcast over `k` participants:
+    /// `2·⌈log2 k⌉` (0 for a single participant).
+    pub fn reduce_rounds(k: usize) -> u32 {
+        if k <= 1 {
+            return 0;
+        }
+        2 * (usize::BITS - (k - 1).leading_zeros())
+    }
+
     /// Cost of an allreduce-style model exchange: each of `k` tasks sends
     /// and receives `bytes` (the paper's ≈16 MiB/task Criteo example, §4.3).
+    ///
+    /// Modeled as a binary tree reduce followed by a broadcast — the shape
+    /// of the sharded parallel merge in [`crate::exec`] — so the cost grows
+    /// with `2·⌈log2 k⌉` rounds, each moving the model once per link. (The
+    /// previous serialized-at-driver model charged `2k` full transfers,
+    /// which overcharges heavily at large `k` and no longer matches how the
+    /// reduction actually runs.)
     pub fn model_exchange_cost(&self, bytes: usize, k: usize) -> Duration {
-        if k <= 1 {
-            return Duration::ZERO;
-        }
-        // Simple synchronous parameter-server model: driver receives k
-        // updates then broadcasts; link serialized at the driver.
-        let one = self.transfer_cost(bytes);
-        one * (2 * k) as u32
+        self.transfer_cost(bytes) * Self::reduce_rounds(k)
     }
 }
 
@@ -86,7 +96,26 @@ mod tests {
         let bulk = m.bulk_cost(&[1024, 1024, 1024]);
         assert_eq!(bulk, m.transfer_cost(1024) * 3);
         assert_eq!(m.model_exchange_cost(16 << 20, 1), Duration::ZERO);
-        let x16 = m.model_exchange_cost(16 << 20, 16);
-        assert!(x16 > m.transfer_cost(16 << 20) * 16);
+        // Tree reduce + broadcast: 2·⌈log2 k⌉ full-model rounds.
+        let one = m.transfer_cost(16 << 20);
+        assert_eq!(m.model_exchange_cost(16 << 20, 2), one * 2);
+        assert_eq!(m.model_exchange_cost(16 << 20, 16), one * 8);
+        assert_eq!(m.model_exchange_cost(16 << 20, 17), one * 10);
+        // Logarithmic, not linear: far below the serialized-driver 2k.
+        assert!(m.model_exchange_cost(16 << 20, 64) < one * 16);
+    }
+
+    #[test]
+    fn reduce_rounds_are_ceil_log2() {
+        for (k, rounds) in [(0, 0), (1, 0), (2, 2), (3, 4), (4, 4), (5, 6), (8, 6), (9, 8)] {
+            assert_eq!(NetworkModel::reduce_rounds(k), rounds, "k={k}");
+        }
+        // Monotone non-decreasing in k.
+        let mut prev = 0;
+        for k in 1..200 {
+            let r = NetworkModel::reduce_rounds(k);
+            assert!(r >= prev, "k={k}");
+            prev = r;
+        }
     }
 }

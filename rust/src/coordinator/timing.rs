@@ -10,7 +10,9 @@
 //!   the current node allocation. Transfer overheads are excluded, as in
 //!   the paper ("this favors micro-tasks").
 //! * **Measured** — wallclock compute scaled by node speed, plus the
-//!   network model's cost for chunks moved this boundary.
+//!   network model's cost for chunks moved this boundary, plus the
+//!   merge phase charged as a tree reduce of the model over the active
+//!   tasks ([`crate::chunks::NetworkModel::model_exchange_cost`]).
 //!
 //! Accounting also feeds each task's learned per-sample runtime history,
 //! which the rebalance policy consumes (§4.5).
@@ -34,6 +36,9 @@ pub struct IterationTiming {
     pub iteration_time: f64,
     /// Chunk-transfer time charged this boundary (measured mode only).
     pub transfer_time: f64,
+    /// Model-exchange (merge-phase) time charged under the network model's
+    /// tree reduce (measured mode only; projections exclude it, §5.3).
+    pub exchange_time: f64,
 }
 
 /// Stateless time accountant configured from the session.
@@ -65,6 +70,7 @@ impl TimeAccountant {
         nodes: &[NodeSpec],
         net: &NetworkModel,
         moved_bytes: usize,
+        model_bytes: usize,
         n_total: usize,
     ) -> IterationTiming {
         let unit = algo.unit_samples(n_total, self.ref_nodes);
@@ -88,13 +94,16 @@ impl TimeAccountant {
                 microtask_iteration_time(k, task_units * k as f64, nodes)
             }
         };
-        let transfer_time = match self.time_model {
+        let (transfer_time, exchange_time) = match self.time_model {
             // The paper's projections exclude transfer overheads
             // (§5.3: "this favors micro-tasks").
-            TimeModel::Projected => 0.0,
-            TimeModel::Measured => net.transfer_cost(moved_bytes).as_secs_f64(),
+            TimeModel::Projected => (0.0, 0.0),
+            TimeModel::Measured => (
+                net.transfer_cost(moved_bytes).as_secs_f64(),
+                net.model_exchange_cost(model_bytes, updates.len()).as_secs_f64(),
+            ),
         };
-        IterationTiming { task_times, iteration_time, transfer_time }
+        IterationTiming { task_times, iteration_time, transfer_time, exchange_time }
     }
 }
 
@@ -128,6 +137,7 @@ mod tests {
             &nodes,
             &NetworkModel::default(),
             0,
+            16,
             1600,
         );
         // unit = 1600/16 = 100 samples → 1.0 on the fast node, 2.0 on the
@@ -136,6 +146,8 @@ mod tests {
         assert!((timing.task_times[1] - 2.0).abs() < 1e-12);
         assert!((timing.iteration_time - 2.0).abs() < 1e-12);
         assert_eq!(timing.transfer_time, 0.0);
+        // Projections exclude the model exchange too.
+        assert_eq!(timing.exchange_time, 0.0);
         // History recorded for both tasks.
         assert!(tasks.iter().all(|t| t.est_per_sample().is_some()));
     }
@@ -151,9 +163,35 @@ mod tests {
         let updates = vec![upd(50)];
         let walls = vec![Duration::from_millis(50)];
         let net = NetworkModel::default();
-        let timing =
-            acct.account(&algo, &mut tasks, &updates, &walls, &nodes, &net, 1 << 20, 1600);
+        let timing = acct.account(
+            &algo, &mut tasks, &updates, &walls, &nodes, &net, 1 << 20, 1 << 20, 1600,
+        );
         assert!((timing.transfer_time - net.transfer_cost(1 << 20).as_secs_f64()).abs() < 1e-12);
         assert!(timing.iteration_time > 0.0);
+        // A single task has nothing to exchange with.
+        assert_eq!(timing.exchange_time, 0.0);
+    }
+
+    #[test]
+    fn measured_mode_charges_model_exchange_tree() {
+        let mut cfg = SessionConfig::cocoa("t", 2);
+        cfg.time_model = TimeModel::Measured;
+        let acct = TimeAccountant::new(&cfg);
+        let algo = CocoaAlgo::new(CocoaConfig::default(), Backend::native_cocoa(), 1600, 4);
+        let mut tasks = vec![
+            TaskState::new(NodeSpec::new(0, 1.0), 3),
+            TaskState::new(NodeSpec::new(1, 1.0), 3),
+        ];
+        let nodes: Vec<NodeSpec> = tasks.iter().map(|t| t.node.clone()).collect();
+        let updates = vec![upd(50), upd(50)];
+        let walls = vec![Duration::from_millis(10); 2];
+        let net = NetworkModel::default();
+        let model_bytes = 16 << 20;
+        let timing = acct.account(
+            &algo, &mut tasks, &updates, &walls, &nodes, &net, 0, model_bytes, 1600,
+        );
+        let expect = net.model_exchange_cost(model_bytes, 2).as_secs_f64();
+        assert!(expect > 0.0);
+        assert!((timing.exchange_time - expect).abs() < 1e-12);
     }
 }

@@ -14,10 +14,14 @@
 //! 3. **execute** — dispatch one `RunIteration` command to every resident
 //!    worker and collect the `LocalUpdate`s in task order.
 //! 4. **merge** — fold task updates into the shared model (weighted per
-//!    eq. 2). The model is published to workers as an `Arc` snapshot and
-//!    merged in place via `Arc::make_mut`.
+//!    eq. 2). Small models are folded serially in place via
+//!    `Arc::make_mut`; large models are reduced *in parallel* by fanning
+//!    contiguous shards out over the same worker pool
+//!    (`WorkerPool::reduce_model`) — bit-identical to the serial fold by
+//!    the `Algorithm::merge_shard` elementwise contract.
 //! 5. **account** — the paper's projection model (§5.3) or measured
-//!    wallclock scaled by node speed ([`super::timing`]); record swimlane
+//!    wallclock scaled by node speed ([`super::timing`]); the merge phase
+//!    is charged as a tree reduce under the network model; record swimlane
 //!    spans.
 //! 6. **evaluate** — compute the convergence metric on schedule and log
 //!    the iteration.
@@ -28,7 +32,7 @@
 //! only depends on K, exactly as the paper argues.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -47,6 +51,13 @@ use super::policy::{
 };
 use super::task::TaskState;
 use super::timing::{IterationTiming, TimeAccountant};
+
+/// Minimum model length for fanning the merge out over the worker pool.
+/// Below this the serial fold wins: one `ReduceShard` round-trip costs
+/// tens of microseconds of dispatch, which only pays for itself once the
+/// per-shard arithmetic dominates (NN-scale models; CoCoA's GLM vectors
+/// stay serial).
+const PARALLEL_MERGE_MIN_LEN: usize = 1 << 15;
 
 /// The central driver.
 pub struct Trainer {
@@ -312,12 +323,26 @@ impl Trainer {
             .run_iteration(&plan, Arc::clone(&self.model), k, None)
     }
 
-    /// Phase 4 — merge task updates into the shared model.
-    fn phase_merge(&mut self, updates: &[LocalUpdate]) {
-        // Workers dropped their snapshots before completing, so this is an
-        // in-place merge, not a copy.
-        let model = Arc::make_mut(&mut self.model);
-        self.algo.merge(model, updates, updates.len());
+    /// Phase 4 — merge task updates into the shared model. Returns the
+    /// merge phase's wallclock.
+    ///
+    /// Models below [`PARALLEL_MERGE_MIN_LEN`] take the serial fold —
+    /// workers dropped their snapshots before completing, so
+    /// `Arc::make_mut` merges in place, not on a copy. Larger models are
+    /// reduced shard-parallel across the resident workers; the fixed
+    /// shard→offset order makes the result bit-identical to the serial
+    /// fold at any worker count, elastic resizes included.
+    fn phase_merge(&mut self, updates: &Arc<Vec<LocalUpdate>>) -> Result<Duration> {
+        let t0 = Instant::now();
+        let k = updates.len();
+        if self.pool.len() >= 2 && self.model.len() >= PARALLEL_MERGE_MIN_LEN {
+            let merged = self.pool.reduce_model(&self.model, Arc::clone(updates), k)?;
+            self.model = Arc::new(merged);
+        } else {
+            let model = Arc::make_mut(&mut self.model);
+            self.algo.merge(model, updates, k);
+        }
+        Ok(t0.elapsed())
     }
 
     /// Phase 5 — time accounting over the configured model.
@@ -328,6 +353,7 @@ impl Trainer {
         moved_bytes: usize,
     ) -> IterationTiming {
         let nodes = self.current_nodes();
+        let model_bytes = self.model.len() * std::mem::size_of::<f32>();
         self.timing.account(
             self.algo.as_ref(),
             &mut self.tasks,
@@ -336,6 +362,7 @@ impl Trainer {
             &nodes,
             &self.net,
             moved_bytes,
+            model_bytes,
             self.n_total,
         )
     }
@@ -346,6 +373,7 @@ impl Trainer {
         iter: usize,
         updates: &[LocalUpdate],
         walls: &[Duration],
+        merge_wall: Duration,
         timing: IterationTiming,
     ) -> Result<Option<Metric>> {
         let k = updates.len();
@@ -368,7 +396,7 @@ impl Trainer {
             }
         }
         self.clock.advance(Duration::from_secs_f64(
-            timing.iteration_time + timing.transfer_time,
+            timing.iteration_time + timing.transfer_time + timing.exchange_time,
         ));
         let iter_samples: usize = updates.iter().map(|u| u.samples).sum();
         self.cum_samples += iter_samples;
@@ -388,6 +416,7 @@ impl Trainer {
             metric,
             vtime: self.clock.now(),
             wall: walls.iter().copied().max().unwrap_or(Duration::ZERO),
+            merge_wall,
             n_tasks: k,
             samples: iter_samples,
             train_loss: if steps > 0 { Some(loss_sum / steps as f64) } else { None },
@@ -403,9 +432,11 @@ impl Trainer {
         let runs = self.phase_execute(iter)?;
         let (updates, walls): (Vec<LocalUpdate>, Vec<Duration>) =
             runs.into_iter().map(|r| (r.update, r.wall)).unzip();
-        self.phase_merge(&updates);
+        // Shared with the worker pool during the (possibly parallel) merge.
+        let updates = Arc::new(updates);
+        let merge_wall = self.phase_merge(&updates)?;
         let timing = self.phase_account(&updates, &walls, moved_bytes);
-        self.phase_record(iter, &updates, &walls, timing)
+        self.phase_record(iter, &updates, &walls, merge_wall, timing)
     }
 
     /// Run to completion: stops at `max_iters`, `max_epochs`, or when the

@@ -21,6 +21,7 @@
 //! | command                                      | reply                |
 //! |----------------------------------------------|----------------------|
 //! | `RunIteration { model, k_tasks, seed, budget }` | `Iteration(TaskRun)` |
+//! | `ReduceShard { model, updates, offset, len, k_tasks }` | `Shard { offset, data }` |
 //! | `InstallChunks(chunks)`                      | — (fire and forget)  |
 //! | `DrainChunks`                                | `Drained(chunks)`    |
 //! | `Shutdown`                                   | — (thread exits)     |
@@ -42,13 +43,24 @@
 //! `Shutdown` — the drained chunks (with their per-sample optimizer state)
 //! are redistributed to the survivors, whose compute state is untouched.
 //!
+//! ## Sharded model reduction
+//!
+//! The merge phase reuses the same pool: [`WorkerPool::reduce_model`]
+//! splits the model into contiguous shards, sends each resident worker one
+//! `ReduceShard` command, and reassembles the replies at their fixed
+//! offsets. The shard→slot order is a pure function of `(model_len,
+//! worker_count)` and `Algorithm::merge_shard` is elementwise, so the
+//! merged model is bit-identical to the serial fold for every worker
+//! count — including across elastic resizes mid-run.
+//!
 //! ## Determinism
 //!
 //! Task execution is deterministic regardless of worker scheduling: each
 //! task's RNG stream is keyed by `(seed, task index, iteration)`, chunk
 //! stores are only mutated by their own worker during an iteration, and
-//! results are merged in task order. Two runs with the same seed produce
-//! identical `MetricsLog` records (modulo measured wallclock).
+//! results are merged in task order (sharded reduction preserves this —
+//! see above). Two runs with the same seed produce identical `MetricsLog`
+//! records (modulo measured wallclock).
 
 pub mod pool;
 pub mod worker;

@@ -7,7 +7,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
 
-use crate::algos::{Algorithm, ModelVec};
+use crate::algos::{Algorithm, LocalUpdate, ModelVec};
 use crate::chunks::{Chunk, SharedStore};
 use crate::cluster::NodeId;
 
@@ -92,9 +92,7 @@ impl WorkerPool {
             Err(_) => Err(anyhow!("worker for node {node} is gone")),
             Ok(()) => match w.replies.recv() {
                 Ok(Reply::Drained(chunks)) => Ok(chunks),
-                Ok(Reply::Iteration(_)) => {
-                    Err(anyhow!("unexpected iteration reply during drain"))
-                }
+                Ok(_) => Err(anyhow!("unexpected reply during drain")),
                 Err(_) => Err(anyhow!("worker {node} died during drain")),
             },
         };
@@ -148,14 +146,94 @@ impl WorkerPool {
             } else {
                 match handle.replies.recv() {
                     Ok(Reply::Iteration(result)) => result,
-                    Ok(Reply::Drained(_)) => {
-                        Err(anyhow!("unexpected drain reply from worker {node}"))
-                    }
+                    Ok(_) => Err(anyhow!("unexpected reply from worker {node}")),
                     Err(_) => Err(anyhow!("worker for node {node} died mid-iteration")),
                 }
             });
         }
         results.into_iter().collect()
+    }
+
+    /// Sharded parallel model reduction: fan the merge of `updates` into
+    /// `model` out across the resident workers and reassemble the merged
+    /// model on the coordinator.
+    ///
+    /// The model is split into contiguous shards of `ceil(len / workers)`
+    /// elements; shard `i` always covers the fixed range
+    /// `[i·per, min((i+1)·per, len))` and is written back at exactly that
+    /// offset, and each worker receives at most one `ReduceShard` command
+    /// (so its private reply channel sees exactly one reply). Because
+    /// [`crate::algos::Algorithm::merge_shard`] is elementwise, the
+    /// reassembled model is bit-identical to the serial `merge` fold
+    /// regardless of worker count, OS scheduling, or an elastic resize
+    /// having changed the pool since the last iteration.
+    ///
+    /// A pool with fewer than two workers (or an empty model) reduces
+    /// inline — the same fold, without the dispatch round-trip.
+    pub fn reduce_model(
+        &self,
+        model: &Arc<ModelVec>,
+        updates: Arc<Vec<LocalUpdate>>,
+        k_tasks: usize,
+    ) -> Result<ModelVec> {
+        let len = model.len();
+        if self.workers.len() <= 1 || len == 0 {
+            let mut out = (**model).clone();
+            self.algo.merge_shard(&mut out, 0, &updates, k_tasks);
+            return Ok(out);
+        }
+        let per = len.div_ceil(self.workers.len().min(len));
+        let n_shards = len.div_ceil(per);
+        // Dispatch shard i to worker i. A failed send means that worker's
+        // thread is gone; remember it and keep going so the per-worker
+        // command/reply protocol stays in sync for every live worker.
+        let mut dispatched = vec![false; n_shards];
+        for (i, (w, d)) in self.workers.iter().zip(&mut dispatched).enumerate() {
+            let offset = i * per;
+            *d = w
+                .commands
+                .send(Command::ReduceShard {
+                    model: Arc::clone(model),
+                    updates: Arc::clone(&updates),
+                    offset,
+                    len: per.min(len - offset),
+                    k_tasks,
+                })
+                .is_ok();
+        }
+        drop(updates);
+        // Collect every reply before surfacing any error; shard offsets fix
+        // the slot each result lands in, so assembly order is irrelevant.
+        let mut merged = vec![0.0f32; len];
+        let mut first_err: Option<anyhow::Error> = None;
+        for (w, &ok) in self.workers.iter().zip(&dispatched) {
+            if !ok {
+                if first_err.is_none() {
+                    first_err = Some(anyhow!("worker for node {} is gone", w.node));
+                }
+                continue;
+            }
+            match w.replies.recv() {
+                Ok(Reply::Shard { offset, data }) => {
+                    merged[offset..offset + data.len()].copy_from_slice(&data);
+                }
+                Ok(_) => {
+                    if first_err.is_none() {
+                        first_err =
+                            Some(anyhow!("unexpected reply from worker {} during reduce", w.node));
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!("worker {} died during reduce", w.node));
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(merged),
+        }
     }
 
     fn worker(&self, node: NodeId) -> Result<&WorkerHandle> {
@@ -214,6 +292,33 @@ mod tests {
         let model = Arc::new(vec![0.0f32; 4]);
         assert!(p.run_iteration(&[(9, 0)], model, 1, None).is_err());
         assert!(p.install_chunks(9, vec![]).is_err());
+    }
+
+    #[test]
+    fn reduce_model_matches_serial_merge() {
+        let algo: Arc<dyn Algorithm> = Arc::new(CocoaAlgo::new(
+            CocoaConfig::default(),
+            Backend::native_cocoa(),
+            100,
+            5,
+        ));
+        let updates = Arc::new(vec![
+            LocalUpdate { delta: vec![0.5; 5], samples: 10, loss_sum: 0.0 },
+            LocalUpdate { delta: vec![-0.25; 5], samples: 5, loss_sum: 0.0 },
+        ]);
+        let model = Arc::new(vec![1.0f32, 2.0, 3.0, 4.0, 5.0]);
+        let mut serial = (*model).clone();
+        algo.merge(&mut serial, &updates, 2);
+        // More workers than elements, odd splits, single worker: all must
+        // reproduce the serial fold exactly.
+        for n_workers in [1usize, 2, 3, 7] {
+            let mut p = WorkerPool::new(Arc::clone(&algo));
+            for i in 0..n_workers {
+                p.spawn_worker(i as u32, SharedStore::new());
+            }
+            let merged = p.reduce_model(&model, Arc::clone(&updates), 2).unwrap();
+            assert_eq!(merged, serial, "{n_workers} workers");
+        }
     }
 
     #[test]

@@ -23,6 +23,17 @@ pub enum Command {
         seed: u64,
         budget: Option<usize>,
     },
+    /// Reduce one contiguous model shard: fold `updates[..]` restricted to
+    /// `offset .. offset + len` into that slice of the model snapshot and
+    /// reply with the merged values. The pool guarantees the range is in
+    /// bounds for the model and every update delta.
+    ReduceShard {
+        model: Arc<ModelVec>,
+        updates: Arc<Vec<LocalUpdate>>,
+        offset: usize,
+        len: usize,
+        k_tasks: usize,
+    },
     /// Add chunks to the worker's store over the channel. The trainer
     /// installs chunks by writing the shared store directly between
     /// iterations; this command serves coordinators without a store
@@ -37,6 +48,9 @@ pub enum Command {
 /// Replies a worker sends on its completion channel.
 pub enum Reply {
     Iteration(Result<TaskRun>),
+    /// One reduced model shard: the merged values for
+    /// `model[offset .. offset + data.len()]`.
+    Shard { offset: usize, data: Vec<f32> },
     Drained(Vec<Chunk>),
 }
 
@@ -63,6 +77,17 @@ pub(crate) fn worker_loop(
                 // the driver's Arc::make_mut merge never needs a copy.
                 drop(model);
                 if replies.send(Reply::Iteration(result)).is_err() {
+                    break;
+                }
+            }
+            Command::ReduceShard { model, updates, offset, len, k_tasks } => {
+                let mut data = model[offset..offset + len].to_vec();
+                algo.merge_shard(&mut data, offset, &updates, k_tasks);
+                // Release both snapshots before signalling completion so no
+                // worker-side reference outlives the merge phase.
+                drop(model);
+                drop(updates);
+                if replies.send(Reply::Shard { offset, data }).is_err() {
                     break;
                 }
             }

@@ -45,6 +45,8 @@ pub struct IterationRecord {
     pub vtime: Duration,
     /// Wallclock compute time actually spent in this iteration.
     pub wall: Duration,
+    /// Wallclock of the merge phase (serial fold or sharded pool reduce).
+    pub merge_wall: Duration,
     /// Number of tasks/nodes active during this iteration.
     pub n_tasks: usize,
     /// Samples processed across all tasks this iteration.
@@ -139,14 +141,17 @@ impl MetricsLog {
 
     /// Tab-separated dump for the figure harnesses / plotting.
     pub fn to_tsv(&self) -> String {
-        let mut out = String::from("iter\tepochs\tvtime_s\twall_s\tn_tasks\tsamples\tmetric\ttrain_loss\n");
+        let mut out = String::from(
+            "iter\tepochs\tvtime_s\twall_s\tmerge_wall_s\tn_tasks\tsamples\tmetric\ttrain_loss\n",
+        );
         for r in &self.records {
             out.push_str(&format!(
-                "{}\t{:.4}\t{:.4}\t{:.4}\t{}\t{}\t{}\t{}\n",
+                "{}\t{:.4}\t{:.4}\t{:.4}\t{:.6}\t{}\t{}\t{}\t{}\n",
                 r.iter,
                 r.epochs,
                 r.vtime.as_secs_f64(),
                 r.wall.as_secs_f64(),
+                r.merge_wall.as_secs_f64(),
                 r.n_tasks,
                 r.samples,
                 r.metric.map_or("".into(), |m| format!("{:.6}", m.value())),
@@ -168,6 +173,7 @@ mod tests {
             metric: Some(Metric::DualityGap(gap)),
             vtime: Duration::from_secs_f64(vt),
             wall: Duration::from_millis(5),
+            merge_wall: Duration::from_micros(50),
             n_tasks: 4,
             samples: 100,
             train_loss: None,

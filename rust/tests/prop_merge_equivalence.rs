@@ -1,0 +1,156 @@
+//! Property tests: the sharded parallel model reduction through the
+//! worker pool is *bit-identical* to the serial merge fold — for every
+//! algorithm family (CoCoA GLM, lSGD MLP, lSGD CNN), across 1–8 workers,
+//! odd shard splits, and an elastic resize mid-run. This is the
+//! determinism invariant the trainer's parallel merge phase rests on.
+//!
+//! proptest is not available in the offline crate set, so properties are
+//! checked over seeded random cases (deterministic, reproducible).
+
+use std::sync::Arc;
+
+use chicle::algos::nn::NativeModel;
+use chicle::algos::{Algorithm, Backend, CocoaAlgo, LocalUpdate, LsgdAlgo};
+use chicle::chunks::SharedStore;
+use chicle::config::{CocoaConfig, LsgdConfig, ModelKind};
+use chicle::exec::WorkerPool;
+use chicle::util::Rng;
+
+/// One representative of each algorithm family. The CoCoA dim is a prime
+/// so no worker count divides the model evenly; the NN models exercise
+/// real (large) parameter counts.
+fn families() -> Vec<(&'static str, Arc<dyn Algorithm>)> {
+    vec![
+        (
+            "cocoa",
+            Arc::new(CocoaAlgo::new(
+                CocoaConfig::default(),
+                Backend::native_cocoa(),
+                10_000,
+                4099,
+            )) as Arc<dyn Algorithm>,
+        ),
+        (
+            "lsgd-mlp",
+            Arc::new(
+                LsgdAlgo::new_classif(
+                    LsgdConfig::paper_defaults(ModelKind::Mlp),
+                    Backend::native_nn(NativeModel::mlp_default()),
+                    784,
+                    Vec::new(),
+                    Vec::new(),
+                    1,
+                )
+                .unwrap(),
+            ),
+        ),
+        (
+            "lsgd-cnn",
+            Arc::new(
+                LsgdAlgo::new_classif(
+                    LsgdConfig::paper_defaults(ModelKind::Cnn),
+                    Backend::native_nn(NativeModel::cnn_default()),
+                    3072,
+                    Vec::new(),
+                    Vec::new(),
+                    1,
+                )
+                .unwrap(),
+            ),
+        ),
+    ]
+}
+
+fn random_updates(rng: &mut Rng, k: usize, len: usize) -> Arc<Vec<LocalUpdate>> {
+    Arc::new(
+        (0..k)
+            .map(|_| LocalUpdate {
+                delta: (0..len).map(|_| rng.normal_f32()).collect(),
+                samples: 1 + rng.below(2000),
+                loss_sum: 0.0,
+            })
+            .collect(),
+    )
+}
+
+fn pool_of(algo: &Arc<dyn Algorithm>, n_workers: usize) -> WorkerPool {
+    let mut pool = WorkerPool::new(Arc::clone(algo));
+    for i in 0..n_workers {
+        pool.spawn_worker(i as u32, SharedStore::new());
+    }
+    pool
+}
+
+/// Parallel sharded merge == serial merge, bit for bit, for 1–8 workers
+/// and several update counts, on every algorithm family.
+#[test]
+fn prop_sharded_merge_matches_serial() {
+    for (name, algo) in families() {
+        let len = algo.model_len();
+        let mut rng = Rng::seed_from_u64(7);
+        let model = Arc::new(algo.init_model().unwrap());
+        for k_updates in [1usize, 3, 5] {
+            let updates = random_updates(&mut rng, k_updates, len);
+            let mut serial = (*model).clone();
+            algo.merge(&mut serial, &updates, k_updates);
+            for n_workers in 1..=8usize {
+                let pool = pool_of(&algo, n_workers);
+                let merged = pool
+                    .reduce_model(&model, Arc::clone(&updates), k_updates)
+                    .unwrap();
+                assert_eq!(
+                    merged, serial,
+                    "{name}: k={k_updates} workers={n_workers} diverged from serial fold"
+                );
+            }
+        }
+    }
+}
+
+/// The invariant holds across an elastic resize: merge at 4 workers,
+/// revoke two and assign one (4 → 3, with a fresh node id), merge again —
+/// both reductions must equal their serial folds exactly.
+#[test]
+fn prop_sharded_merge_survives_elastic_resize() {
+    for (name, algo) in families() {
+        let len = algo.model_len();
+        let mut rng = Rng::seed_from_u64(99);
+        let mut pool = pool_of(&algo, 4);
+        let model = Arc::new(algo.init_model().unwrap());
+
+        let u1 = random_updates(&mut rng, 4, len);
+        let mut serial = (*model).clone();
+        algo.merge(&mut serial, &u1, 4);
+        let merged = pool.reduce_model(&model, Arc::clone(&u1), 4).unwrap();
+        assert_eq!(merged, serial, "{name}: pre-resize merge diverged");
+        let model = Arc::new(merged);
+
+        // Elastic event between iterations: shard count and shard→worker
+        // assignment both change under the trainer's feet.
+        pool.shutdown_worker(1).unwrap();
+        pool.shutdown_worker(3).unwrap();
+        pool.spawn_worker(7, SharedStore::new());
+
+        let u2 = random_updates(&mut rng, 3, len);
+        let mut serial2 = (*model).clone();
+        algo.merge(&mut serial2, &u2, 3);
+        let merged2 = pool.reduce_model(&model, Arc::clone(&u2), 3).unwrap();
+        assert_eq!(merged2, serial2, "{name}: post-resize merge diverged");
+    }
+}
+
+/// lSGD's weighted merge with zero total samples is the identity — the
+/// sharded path must preserve that exactly (no NaNs from 0/0 weights).
+#[test]
+fn zero_sample_updates_leave_model_unchanged_under_sharding() {
+    let (_, algo) = families().remove(1);
+    let len = algo.model_len();
+    let model = Arc::new(algo.init_model().unwrap());
+    let updates = Arc::new(vec![
+        LocalUpdate { delta: vec![1.0; len], samples: 0, loss_sum: 0.0 };
+        3
+    ]);
+    let pool = pool_of(&algo, 4);
+    let merged = pool.reduce_model(&model, updates, 3).unwrap();
+    assert_eq!(merged, *model);
+}
