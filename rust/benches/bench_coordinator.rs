@@ -8,7 +8,7 @@ use std::time::Duration;
 use chicle::algos::{Algorithm, Backend, CocoaAlgo, LocalUpdate};
 use chicle::chunks::chunker::make_chunks;
 use chicle::chunks::{NetworkModel, SharedStore};
-use chicle::exec::WorkerPool;
+use chicle::exec::{ReduceOptions, WorkerPool};
 use chicle::cluster::NodeSpec;
 use chicle::config::CocoaConfig;
 use chicle::coordinator::policy::{
@@ -54,12 +54,12 @@ fn main() {
         model[0]
     });
 
-    // --- merge phase: serial fold vs sharded parallel reduction through
-    // the worker pool (same updates, same model size). The pool path
-    // should win from 4 workers up; the CI bench gate pins each row's
-    // median against the committed baseline so neither path regresses
-    // silently (the serial-vs-pool comparison itself is read off the
-    // bench output / TSV artifact). ---
+    // --- merge phase: serial fold vs work-stealing sharded reduction
+    // through the worker pool (same updates, same model size). The pool
+    // path should win from 4 workers up; the CI bench gate pins each
+    // row's median against the committed baseline so neither path
+    // regresses silently (the serial-vs-pool comparison itself is read
+    // off the bench output / TSV artifact). ---
     let merge_algo: Arc<dyn Algorithm> = Arc::new(CocoaAlgo::new(
         CocoaConfig::default(),
         Backend::native_cocoa(),
@@ -75,8 +75,34 @@ fn main() {
         }
         b.bench(&format!("merge/pool_reduce_{w}w_16upd_877k"), || {
             reduce_pool
-                .reduce_model(&model_arc, Arc::clone(&updates_arc), 16)
+                .reduce_model(&model_arc, Arc::clone(&updates_arc), 16, ReduceOptions::default())
                 .unwrap()
+                .0
+                .len()
+        });
+    }
+
+    // --- straggler resilience: one worker reduces 60 ns/element slower
+    // (a ~6× straggler: the 16-update fold itself costs ~10 ns/element).
+    // With the fixed one-shard-per-worker assignment it drags the whole
+    // barrier for its len/4 shard; with stealing (16 shards/worker) it
+    // holds at most a few small shards while the fast workers drain the
+    // rest. The steal row's median should sit ≥2× below the fixed row's —
+    // the gate pins both. ---
+    for (label, opts) in [
+        ("fixed", ReduceOptions { shards_per_worker: 1, stealing: false }),
+        ("steal", ReduceOptions { shards_per_worker: 16, stealing: true }),
+    ] {
+        let mut slow_pool = WorkerPool::new(Arc::clone(&merge_algo));
+        for i in 0..4u32 {
+            slow_pool.spawn_worker(2000 + i, SharedStore::new());
+        }
+        slow_pool.set_reduce_slowdown(2000, 60).unwrap();
+        b.bench(&format!("merge/slow1_4w_{label}_16upd_877k"), || {
+            slow_pool
+                .reduce_model(&model_arc, Arc::clone(&updates_arc), 16, opts)
+                .unwrap()
+                .0
                 .len()
         });
     }

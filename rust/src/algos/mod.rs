@@ -74,9 +74,12 @@ pub trait Algorithm: Send + Sync {
     /// on element `i` of the inputs plus shard-independent scalars (e.g.
     /// total sample counts), and updates must be folded in slice order.
     /// Any partition of the model into contiguous shards then composes to
-    /// bit-identical results with the serial fold, for any shard count —
-    /// which is what lets the trainer fan the merge out across however
-    /// many workers the elastic schedule currently provides.
+    /// bit-identical results with the serial fold, for any shard count
+    /// *and any shard→worker assignment* — which is what lets the trainer
+    /// fan the merge out across however many workers the elastic schedule
+    /// currently provides, and lets the work-stealing reducer hand shards
+    /// to whichever worker is free without perturbing the trajectory
+    /// (`tests/prop_merge_equivalence.rs` enforces this).
     ///
     /// Every update's `delta` must cover `offset + shard.len()` elements.
     fn merge_shard(

@@ -11,6 +11,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::cluster::rm::TracePoint;
 use crate::cluster::{NodeSpec, TraceResourceManager};
+use crate::exec::reduce::DEFAULT_SHARDS_PER_WORKER;
 use crate::util::Json;
 
 /// How iteration time is charged (DESIGN.md §Substitutions).
@@ -328,6 +329,13 @@ pub struct SessionConfig {
     pub artifacts_dir: PathBuf,
     /// Held-out fraction for test metrics (lSGD).
     pub test_frac: f64,
+    /// Pipeline the merge with the next iteration's dispatch on non-eval
+    /// iterations (reduce/dispatch overlap). Trajectory-identical to the
+    /// barriered schedule; disable to force a barrier after every merge.
+    pub overlap: bool,
+    /// Target shards per worker for the work-stealing pool reduction
+    /// (larger = finer stealing granules; 1 = fixed one-shard-per-worker).
+    pub shards_per_worker: usize,
 }
 
 impl SessionConfig {
@@ -349,6 +357,8 @@ impl SessionConfig {
             ref_nodes: 16,
             artifacts_dir: PathBuf::from("artifacts"),
             test_frac: 0.0,
+            overlap: true,
+            shards_per_worker: DEFAULT_SHARDS_PER_WORKER,
         }
     }
 
@@ -370,6 +380,8 @@ impl SessionConfig {
             ref_nodes: 16,
             artifacts_dir: PathBuf::from("artifacts"),
             test_frac: 0.15,
+            overlap: true,
+            shards_per_worker: DEFAULT_SHARDS_PER_WORKER,
         }
     }
 
@@ -390,6 +402,11 @@ impl SessionConfig {
 
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    pub fn with_overlap(mut self, overlap: bool) -> Self {
+        self.overlap = overlap;
         self
     }
 
@@ -474,6 +491,8 @@ impl SessionConfig {
             ("ref_nodes", Json::num(self.ref_nodes as f64)),
             ("artifacts_dir", Json::str(&self.artifacts_dir.to_string_lossy())),
             ("test_frac", Json::num(self.test_frac)),
+            ("overlap", Json::Bool(self.overlap)),
+            ("shards_per_worker", Json::num(self.shards_per_worker as f64)),
         ])
     }
 
@@ -541,6 +560,13 @@ impl SessionConfig {
             ref_nodes: v.get("ref_nodes")?.as_usize()?,
             artifacts_dir: PathBuf::from(v.get("artifacts_dir")?.as_str()?),
             test_frac: v.get("test_frac")?.as_f64()?,
+            // Absent in configs written before the overlap pipeline.
+            overlap: v.opt("overlap").map(Json::as_bool).transpose()?.unwrap_or(true),
+            shards_per_worker: v
+                .opt("shards_per_worker")
+                .map(Json::as_usize)
+                .transpose()?
+                .unwrap_or(DEFAULT_SHARDS_PER_WORKER),
         })
     }
 
@@ -570,6 +596,24 @@ mod tests {
         assert!(matches!(back.algo, AlgoConfig::Cocoa(_)));
         assert!(matches!(back.elastic, ElasticSpec::Rigid { nodes: 4 }));
         assert!(back.max_epochs.is_infinite());
+        assert!(back.overlap);
+        assert_eq!(back.shards_per_worker, DEFAULT_SHARDS_PER_WORKER);
+    }
+
+    #[test]
+    fn overlap_fields_default_when_absent_from_json() {
+        // Configs written before the overlap pipeline lack both keys.
+        let legacy = match SessionConfig::cocoa("legacy", 2).to_json() {
+            Json::Obj(mut o) => {
+                o.remove("overlap");
+                o.remove("shards_per_worker");
+                Json::Obj(o)
+            }
+            _ => unreachable!(),
+        };
+        let back = SessionConfig::from_json(&legacy).unwrap();
+        assert!(back.overlap, "missing key defaults to enabled");
+        assert_eq!(back.shards_per_worker, DEFAULT_SHARDS_PER_WORKER);
     }
 
     #[test]

@@ -150,15 +150,25 @@ impl TrainingSession {
         Ok(self.trainer.metrics.clone())
     }
 
-    /// Execute a single iteration (benchmarks / custom loops).
+    /// Execute a single iteration (benchmarks / custom loops), barriered:
+    /// no work is left in flight, so callers may stop after any step and
+    /// observe a consistent model/chunk state. The overlap pipeline is
+    /// exercised by `run`/`run_iters`, which know whether a next
+    /// iteration is coming.
     pub fn step(&mut self, iter: usize) -> Result<Option<crate::metrics::Metric>> {
-        self.trainer.step(iter)
+        self.trainer.step_barriered(iter)
     }
 
-    /// Run exactly `iters` iterations (ignores targets).
+    /// Run exactly `iters` iterations (ignores targets). The last
+    /// iteration is barriered so the overlap pipeline never dispatches an
+    /// iteration beyond the requested count.
     pub fn run_iters(&mut self, iters: usize) -> Result<MetricsLog> {
         for i in 0..iters {
-            self.trainer.step(i)?;
+            if i + 1 == iters {
+                self.trainer.step_barriered(i)?;
+            } else {
+                self.trainer.step(i)?;
+            }
         }
         Ok(self.trainer.metrics.clone())
     }

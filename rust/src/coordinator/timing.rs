@@ -16,6 +16,14 @@
 //!
 //! Accounting also feeds each task's learned per-sample runtime history,
 //! which the rebalance policy consumes (§4.5).
+//!
+//! Accounting is deliberately independent of the trainer's reduce/dispatch
+//! overlap: virtual time charges the same tree-reduce exchange cost whether
+//! the merge ran barriered or pipelined behind the next iteration's
+//! dispatch. Wallclock savings from the overlap show up in the measured
+//! `merge_wall`/`overlap_wall` TSV columns instead — folding them into
+//! virtual time would make the trajectory depend on host scheduling and
+//! break run-to-run determinism.
 
 use std::time::Duration;
 

@@ -15,16 +15,35 @@
 //!    worker and collect the `LocalUpdate`s in task order.
 //! 4. **merge** — fold task updates into the shared model (weighted per
 //!    eq. 2). Small models are folded serially in place via
-//!    `Arc::make_mut`; large models are reduced *in parallel* by fanning
-//!    contiguous shards out over the same worker pool
-//!    (`WorkerPool::reduce_model`) — bit-identical to the serial fold by
-//!    the `Algorithm::merge_shard` elementwise contract.
+//!    `Arc::make_mut`; large models are reduced *in parallel* by a
+//!    work-stealing sharded fan-out over the same worker pool
+//!    (`WorkerPool::begin_reduce`) — bit-identical to the serial fold by
+//!    the `Algorithm::merge_shard` elementwise contract, however the
+//!    shards interleave.
 //! 5. **account** — the paper's projection model (§5.3) or measured
 //!    wallclock scaled by node speed ([`super::timing`]); the merge phase
 //!    is charged as a tree reduce under the network model; record swimlane
 //!    spans.
 //! 6. **evaluate** — compute the convergence metric on schedule and log
 //!    the iteration.
+//!
+//! ## Reduce/dispatch overlap
+//!
+//! On iterations that need no evaluation, the trainer *pipelines* the
+//! merge with the next iteration: after accounting for iteration `i` it
+//! runs iteration `i+1`'s boundary phases (elasticity + policies — the
+//! workers are idle, so the scheduler owns the chunks), then enqueues the
+//! work-stealing reduction of `i`'s updates and, right behind it,
+//! iteration `i+1`'s `RunIteration` against the *pending* merge buffer
+//! ([`crate::exec::ModelRef::Pending`]). Each worker finishes its share
+//! of the merge and starts computing the instant the last shard lands —
+//! no coordinator round-trip on the critical path — while the coordinator
+//! logs iteration `i` in the shadow of the pipeline. The iterate
+//! trajectory is *identical* to the barriered schedule: the boundary
+//! phases run at the same virtual time, consume the RNG in the same
+//! order, and the merged model is bit-identical (see
+//! `tests/overlap_pipeline.rs`). Eval-point iterations stay barriered so
+//! the metric sees a consistent (model, chunk-state) snapshot.
 //!
 //! Micro-task emulation (§5.1 "Micro-tasks") keeps K fixed task states
 //! (each with its own resident worker) regardless of node count and
@@ -40,7 +59,7 @@ use crate::algos::{Algorithm, LocalUpdate, ModelVec};
 use crate::chunks::{Chunk, NetworkModel};
 use crate::cluster::{NodeId, NodeSpec, ResourceEvent, ResourceManager, TraceResourceManager};
 use crate::config::{Partitioning, SessionConfig, TaskModel};
-use crate::exec::{TaskRun, WorkerPool};
+use crate::exec::{ModelRef, PendingIteration, ReduceBuf, ReduceOptions, TaskRun, WorkerPool};
 use crate::metrics::{IterationRecord, Metric, MetricsLog, SwimlaneRecorder, TaskSpan};
 use crate::sim::VirtualClock;
 use crate::util::Rng;
@@ -53,11 +72,22 @@ use super::task::TaskState;
 use super::timing::{IterationTiming, TimeAccountant};
 
 /// Minimum model length for fanning the merge out over the worker pool.
-/// Below this the serial fold wins: one `ReduceShard` round-trip costs
+/// Below this the serial fold wins: one `ReduceShards` round-trip costs
 /// tens of microseconds of dispatch, which only pays for itself once the
 /// per-shard arithmetic dominates (NN-scale models; CoCoA's GLM vectors
 /// stay serial).
 const PARALLEL_MERGE_MIN_LEN: usize = 1 << 15;
+
+/// A pipelined iteration in flight: iteration `iter`'s `RunIteration`
+/// commands are queued behind the previous iteration's reduction.
+struct PendingStep {
+    iter: usize,
+    iteration: PendingIteration,
+    /// The merge output buffer iteration `iter` is running against.
+    buf: Arc<ReduceBuf>,
+    /// Boundary bytes (elasticity + policies) already moved for `iter`.
+    moved_bytes: usize,
+}
 
 /// The central driver.
 pub struct Trainer {
@@ -75,6 +105,8 @@ pub struct Trainer {
     n_total: usize,
     cum_samples: usize,
     eval_every: usize,
+    /// Overlapped next iteration, if the pipeline is engaged.
+    pending: Option<PendingStep>,
     pub metrics: MetricsLog,
     pub swimlanes: SwimlaneRecorder,
     /// Shared model, published to workers as a snapshot each iteration.
@@ -178,6 +210,7 @@ impl Trainer {
             n_total,
             cum_samples: 0,
             eval_every,
+            pending: None,
             metrics: MetricsLog::new(),
             swimlanes: SwimlaneRecorder::new(),
             model,
@@ -304,45 +337,56 @@ impl Trainer {
         Ok(moved_bytes)
     }
 
-    /// Phase 3 — dispatch the iteration to every resident worker and
-    /// collect updates in task order (the barrier).
-    fn phase_execute(&mut self, iter: usize) -> Result<Vec<TaskRun>> {
-        let k = self.tasks.len();
+    /// The per-task dispatch plan for one iteration: `(node, task_seed)`,
+    /// seeds keyed by `(session seed, iteration, task index)` so the
+    /// trajectory never depends on worker scheduling or pipelining.
+    fn iteration_plan(&self, iter: usize) -> Vec<(NodeId, u64)> {
         let base_seed = self
             .cfg
             .seed
             .wrapping_mul(0x9E3779B97F4A7C15)
             .wrapping_add(iter as u64);
-        let plan: Vec<(NodeId, u64)> = self
-            .tasks
+        self.tasks
             .iter()
             .enumerate()
             .map(|(t, task)| (task.node.id, base_seed.wrapping_add((t as u64) << 32)))
-            .collect();
+            .collect()
+    }
+
+    /// Phase 3 — dispatch the iteration to every resident worker and
+    /// collect updates in task order (the barrier).
+    fn phase_execute(&mut self, iter: usize) -> Result<Vec<TaskRun>> {
+        let k = self.tasks.len();
+        let plan = self.iteration_plan(iter);
         self.pool
             .run_iteration(&plan, Arc::clone(&self.model), k, None)
     }
 
-    /// Phase 4 — merge task updates into the shared model. Returns the
-    /// merge phase's wallclock.
+    /// Phase 4 — merge task updates into the shared model, barriered.
+    /// Returns the merge wallclock and the stealing reducer's steal count.
     ///
     /// Models below [`PARALLEL_MERGE_MIN_LEN`] take the serial fold —
     /// workers dropped their snapshots before completing, so
     /// `Arc::make_mut` merges in place, not on a copy. Larger models are
-    /// reduced shard-parallel across the resident workers; the fixed
-    /// shard→offset order makes the result bit-identical to the serial
-    /// fold at any worker count, elastic resizes included.
-    fn phase_merge(&mut self, updates: &Arc<Vec<LocalUpdate>>) -> Result<Duration> {
+    /// reduced by the work-stealing sharded fan-out across the resident
+    /// workers; fixed shard offsets make the result bit-identical to the
+    /// serial fold at any worker count, elastic resizes included.
+    fn phase_merge(&mut self, updates: &Arc<Vec<LocalUpdate>>) -> Result<(Duration, usize)> {
         let t0 = Instant::now();
         let k = updates.len();
-        if self.pool.len() >= 2 && self.model.len() >= PARALLEL_MERGE_MIN_LEN {
-            let merged = self.pool.reduce_model(&self.model, Arc::clone(updates), k)?;
+        let steals = if self.pool.len() >= 2 && self.model.len() >= PARALLEL_MERGE_MIN_LEN {
+            let opts = self.reduce_opts();
+            let (merged, stats) =
+                self.pool
+                    .reduce_model(&self.model, Arc::clone(updates), k, opts)?;
             self.model = Arc::new(merged);
+            stats.steals
         } else {
             let model = Arc::make_mut(&mut self.model);
             self.algo.merge(model, updates, k);
-        }
-        Ok(t0.elapsed())
+            0
+        };
+        Ok((t0.elapsed(), steals))
     }
 
     /// Phase 5 — time accounting over the configured model.
@@ -367,16 +411,9 @@ impl Trainer {
         )
     }
 
-    /// Phase 6 — swimlanes, clock advance, metric evaluation + logging.
-    fn phase_record(
-        &mut self,
-        iter: usize,
-        updates: &[LocalUpdate],
-        walls: &[Duration],
-        merge_wall: Duration,
-        timing: IterationTiming,
-    ) -> Result<Option<Metric>> {
-        let k = updates.len();
+    /// Phase 6a — swimlane spans, virtual-clock advance and epoch
+    /// bookkeeping for one accounted iteration.
+    fn phase_timeline(&mut self, iter: usize, updates: &[LocalUpdate], timing: &IterationTiming) {
         let start = self.clock.now();
         // Swimlanes (uni-tasks; micro-task waves aren't per-node).
         if matches!(self.cfg.task_model, TaskModel::UniTasks) {
@@ -398,16 +435,31 @@ impl Trainer {
         self.clock.advance(Duration::from_secs_f64(
             timing.iteration_time + timing.transfer_time + timing.exchange_time,
         ));
-        let iter_samples: usize = updates.iter().map(|u| u.samples).sum();
-        self.cum_samples += iter_samples;
+        self.cum_samples += updates.iter().map(|u| u.samples).sum::<usize>();
+    }
 
-        let metric = if iter % self.eval_every == 0 {
-            let guards: Vec<_> = self.tasks.iter().map(|t| t.store.lock()).collect();
-            let all: Vec<&Chunk> = guards.iter().flat_map(|g| g.iter()).collect();
-            Some(self.algo.evaluate(&self.model, &all)?)
-        } else {
-            None
-        };
+    /// Phase 6b — the convergence metric over the current model and every
+    /// task's chunks (barriered iterations only: needs a consistent
+    /// snapshot, so never runs while a pipelined iteration is in flight).
+    fn evaluate_now(&self) -> Result<Metric> {
+        let guards: Vec<_> = self.tasks.iter().map(|t| t.store.lock()).collect();
+        let all: Vec<&Chunk> = guards.iter().flat_map(|g| g.iter()).collect();
+        self.algo.evaluate(&self.model, &all)
+    }
+
+    /// Phase 6c — append the iteration to the metrics log.
+    #[allow(clippy::too_many_arguments)]
+    fn push_record(
+        &mut self,
+        iter: usize,
+        updates: &[LocalUpdate],
+        walls: &[Duration],
+        merge_wall: Duration,
+        steal_count: usize,
+        overlap_wall: Duration,
+        metric: Option<Metric>,
+    ) {
+        let iter_samples: usize = updates.iter().map(|u| u.samples).sum();
         let loss_sum: f64 = updates.iter().map(|u| u.loss_sum).sum();
         let steps: usize = updates.iter().filter(|u| u.samples > 0).count();
         self.metrics.push(IterationRecord {
@@ -417,30 +469,174 @@ impl Trainer {
             vtime: self.clock.now(),
             wall: walls.iter().copied().max().unwrap_or(Duration::ZERO),
             merge_wall,
-            n_tasks: k,
+            steal_count,
+            overlap_wall,
+            n_tasks: updates.len(),
             samples: iter_samples,
             train_loss: if steps > 0 { Some(loss_sum / steps as f64) } else { None },
         });
-        Ok(metric)
+    }
+
+    fn reduce_opts(&self) -> ReduceOptions {
+        ReduceOptions {
+            shards_per_worker: self.cfg.shards_per_worker.max(1),
+            stealing: true,
+        }
+    }
+
+    /// May iteration `iter`'s merge be overlapped with iteration
+    /// `iter + 1`'s dispatch? Requires: the pipeline enabled, no metric
+    /// evaluation due (it needs a barriered snapshot), another iteration
+    /// actually coming (run() stops on max_iters / max_epochs — the epoch
+    /// check matches run()'s, since `phase_timeline` has already folded
+    /// this iteration's samples in), and a model large enough for the
+    /// pool reduce.
+    fn should_overlap(&self, iter: usize, eval_point: bool) -> bool {
+        self.cfg.overlap
+            && !eval_point
+            && iter + 1 < self.cfg.max_iters
+            && self.epochs() < self.cfg.max_epochs
+            && self.pool.len() >= 2
+            && self.model.len() >= PARALLEL_MERGE_MIN_LEN
+    }
+
+    /// The overlapped merge: run iteration `iter + 1`'s boundary phases
+    /// now (workers are idle — the scheduler owns the chunks), then queue
+    /// the work-stealing reduction of `iter`'s updates and iteration
+    /// `iter + 1` right behind it against the pending merge buffer.
+    /// Returns `(merge_wall, steal_count, overlap_wall)` once the
+    /// reduction lands; the dispatched iteration stays in flight and is
+    /// collected by the next `step` call.
+    fn pipeline_next(
+        &mut self,
+        iter: usize,
+        updates: &Arc<Vec<LocalUpdate>>,
+    ) -> Result<(Duration, usize, Duration)> {
+        // Boundary of iteration `iter + 1`, at the virtual time the
+        // barriered schedule would run it (the clock already advanced) and
+        // in the same RNG order.
+        let mut moved = self.phase_elasticity()?;
+        moved += self.phase_policies(iter + 1)?;
+
+        let k = updates.len();
+        let opts = self.reduce_opts();
+        let t0 = Instant::now();
+        let reduce = self
+            .pool
+            .begin_reduce(&self.model, Arc::clone(updates), k, opts)?;
+        let buf = reduce.buf();
+        let plan = self.iteration_plan(iter + 1);
+        let k_next = self.tasks.len();
+        let t_dispatch = Instant::now();
+        let iteration = match self.pool.dispatch_iteration(
+            &plan,
+            ModelRef::Pending(Arc::clone(&buf)),
+            k_next,
+            None,
+        ) {
+            Ok(p) => p,
+            Err(e) => {
+                // Nothing overlapped after all — settle the reduce so the
+                // reply protocol stays in sync, then surface the error.
+                let _ = self.pool.collect_reduce(reduce);
+                return Err(e);
+            }
+        };
+        let stats = match self.pool.collect_reduce(reduce) {
+            Ok(s) => s,
+            Err(e) => {
+                // collect_reduce poisoned the buffer: the overlapped
+                // iteration unblocks with per-worker errors — drain them.
+                let _ = self.pool.collect_iteration(iteration);
+                return Err(e);
+            }
+        };
+        let merge_wall = t0.elapsed();
+        let overlap_wall = t_dispatch.elapsed();
+        self.pending = Some(PendingStep {
+            iter: iter + 1,
+            iteration,
+            buf,
+            moved_bytes: moved,
+        });
+        Ok((merge_wall, stats.steals, overlap_wall))
     }
 
     /// Execute one full training iteration. Returns the evaluated metric
     /// if this iteration was an evaluation point.
+    ///
+    /// With the overlap pipeline enabled (`cfg.overlap`), a step may leave
+    /// the *next* iteration's compute in flight; the following `step` call
+    /// collects it. Use [`Trainer::step_barriered`] for a final iteration
+    /// outside `run()`'s stop conditions (e.g. fixed-count loops).
     pub fn step(&mut self, iter: usize) -> Result<Option<Metric>> {
-        let mut moved_bytes = self.phase_elasticity()?;
-        moved_bytes += self.phase_policies(iter)?;
-        let runs = self.phase_execute(iter)?;
+        self.step_inner(iter, true)
+    }
+
+    /// Like [`Trainer::step`], but never leaves work in flight.
+    pub fn step_barriered(&mut self, iter: usize) -> Result<Option<Metric>> {
+        self.step_inner(iter, false)
+    }
+
+    fn step_inner(&mut self, iter: usize, allow_overlap: bool) -> Result<Option<Metric>> {
+        // Phases 1–3: results for `iter` — either collected from the
+        // pipeline (boundary phases already ran last step) or computed
+        // barriered right now.
+        let (runs, moved_bytes) = match self.pending.take() {
+            Some(p) => {
+                anyhow::ensure!(
+                    p.iter == iter,
+                    "pipelined iteration {} pending, step({iter}) requested",
+                    p.iter
+                );
+                let runs = self.pool.collect_iteration(p.iteration)?;
+                // Workers dropped their buffer handles before replying, so
+                // this is the zero-copy hand-over of the merged model.
+                self.model = Arc::new(p.buf.into_model());
+                (runs, p.moved_bytes)
+            }
+            None => {
+                let mut moved = self.phase_elasticity()?;
+                moved += self.phase_policies(iter)?;
+                (self.phase_execute(iter)?, moved)
+            }
+        };
         let (updates, walls): (Vec<LocalUpdate>, Vec<Duration>) =
             runs.into_iter().map(|r| (r.update, r.wall)).unzip();
         // Shared with the worker pool during the (possibly parallel) merge.
         let updates = Arc::new(updates);
-        let merge_wall = self.phase_merge(&updates)?;
+
+        // Phases 5–6a: pure bookkeeping — independent of the merge, so it
+        // runs first and the merge can be overlapped behind it.
         let timing = self.phase_account(&updates, &walls, moved_bytes);
-        self.phase_record(iter, &updates, &walls, merge_wall, timing)
+        self.phase_timeline(iter, &updates, &timing);
+
+        let eval_point = iter % self.eval_every == 0;
+        let (metric, merge_wall, steal_count, overlap_wall) =
+            if allow_overlap && self.should_overlap(iter, eval_point) {
+                let (mw, steals, ow) = self.pipeline_next(iter, &updates)?;
+                (None, mw, steals, ow)
+            } else {
+                let (mw, steals) = self.phase_merge(&updates)?;
+                let metric = if eval_point { Some(self.evaluate_now()?) } else { None };
+                (metric, mw, steals, Duration::ZERO)
+            };
+        self.push_record(
+            iter,
+            &updates,
+            &walls,
+            merge_wall,
+            steal_count,
+            overlap_wall,
+            metric,
+        );
+        Ok(metric)
     }
 
     /// Run to completion: stops at `max_iters`, `max_epochs`, or when the
-    /// algorithm's convergence target is reached.
+    /// algorithm's convergence target is reached. The overlap pipeline
+    /// never outruns these conditions (see [`Trainer::should_overlap`]),
+    /// so no work is left in flight on return.
     pub fn run(&mut self) -> Result<&MetricsLog> {
         let target = self.algo.target();
         for iter in 0..self.cfg.max_iters {
@@ -454,6 +650,7 @@ impl Trainer {
                 }
             }
         }
+        debug_assert!(self.pending.is_none(), "pipeline outran run()'s stop conditions");
         Ok(&self.metrics)
     }
 }

@@ -11,6 +11,10 @@
 //!   solver iterations against it.
 //! * [`pool`] — the coordinator-side [`WorkerPool`]: spawns workers, routes
 //!   commands, and collects completions in a deterministic order.
+//! * [`reduce`] — the work-stealing sharded-reduction primitives: the
+//!   shard claim queue, the shared output buffer, and the pending-model
+//!   reference that lets the next iteration's dispatch overlap an
+//!   in-flight merge.
 //!
 //! ## Command protocol
 //!
@@ -20,8 +24,9 @@
 //!
 //! | command                                      | reply                |
 //! |----------------------------------------------|----------------------|
-//! | `RunIteration { model, k_tasks, seed, budget }` | `Iteration(TaskRun)` |
-//! | `ReduceShard { model, updates, offset, len, k_tasks }` | `Shard { offset, data }` |
+//! | `RunIteration { model: ModelRef, k_tasks, seed, budget }` | `Iteration(TaskRun)` |
+//! | `ReduceShards { model, updates, queue, buf, slot, k_tasks }` | `ShardsDone { shards, steals }` |
+//! | `SetReduceSlowdown(ns_per_elem)`             | — (fire and forget)  |
 //! | `InstallChunks(chunks)`                      | — (fire and forget)  |
 //! | `DrainChunks`                                | `Drained(chunks)`    |
 //! | `Shutdown`                                   | — (thread exits)     |
@@ -32,9 +37,32 @@
 //! do not hold a store handle; `DrainChunks`/`Shutdown` are the
 //! revocation path either way.
 //!
-//! The shared model is published to workers as an `Arc<ModelVec>` snapshot
-//! per iteration; workers drop their reference before signalling
-//! completion, so the driver's `Arc::make_mut` merge never copies.
+//! ## Work-stealing sharded reduction
+//!
+//! The merge phase reuses the same pool: [`WorkerPool::begin_reduce`]
+//! tiles the model into `S ≫ workers` small shards with fixed offsets and
+//! hands every worker one `ReduceShards` command over a shared
+//! [`ShardQueue`]. Workers claim shards — own block first, then stealing
+//! from the others' remainders — and write merged shards straight into
+//! the shared [`ReduceBuf`], so a straggling worker holds the barrier up
+//! by at most one small shard. Shard geometry is a pure function of
+//! `(model_len, shard_count)` and `Algorithm::merge_shard` is
+//! elementwise, so the merged model is bit-identical to the serial fold
+//! for every worker count, shard count, and claim interleaving —
+//! including across elastic resizes mid-run, and even a revoke *during*
+//! an in-flight reduction (the revoked worker finishes its claims before
+//! draining; its completion is stashed for `collect_reduce`).
+//!
+//! ## Reduce/dispatch overlap
+//!
+//! `RunIteration` takes a [`ModelRef`]: either a ready snapshot or the
+//! [`ReduceBuf`] of a reduction still in flight. The coordinator can
+//! therefore enqueue iteration *i+1* right behind iteration *i*'s
+//! `ReduceShards` — each worker finishes its share of the merge, then
+//! blocks on the buffer's remaining-shards counter and starts computing
+//! the instant the last shard lands, with no coordinator round-trip on
+//! the critical path. The trainer uses this to hide its bookkeeping
+//! (accounting, swimlanes, logging) behind the merge+compute pipeline.
 //!
 //! ## Lifecycle under elasticity
 //!
@@ -43,27 +71,20 @@
 //! `Shutdown` — the drained chunks (with their per-sample optimizer state)
 //! are redistributed to the survivors, whose compute state is untouched.
 //!
-//! ## Sharded model reduction
-//!
-//! The merge phase reuses the same pool: [`WorkerPool::reduce_model`]
-//! splits the model into contiguous shards, sends each resident worker one
-//! `ReduceShard` command, and reassembles the replies at their fixed
-//! offsets. The shard→slot order is a pure function of `(model_len,
-//! worker_count)` and `Algorithm::merge_shard` is elementwise, so the
-//! merged model is bit-identical to the serial fold for every worker
-//! count — including across elastic resizes mid-run.
-//!
 //! ## Determinism
 //!
 //! Task execution is deterministic regardless of worker scheduling: each
 //! task's RNG stream is keyed by `(seed, task index, iteration)`, chunk
 //! stores are only mutated by their own worker during an iteration, and
-//! results are merged in task order (sharded reduction preserves this —
-//! see above). Two runs with the same seed produce identical `MetricsLog`
-//! records (modulo measured wallclock).
+//! results are merged in task order (sharded stealing reduction preserves
+//! this — see above). Two runs with the same seed produce identical
+//! `MetricsLog` records (modulo measured wallclock), with or without the
+//! overlap pipeline.
 
 pub mod pool;
+pub mod reduce;
 pub mod worker;
 
-pub use pool::WorkerPool;
+pub use pool::{PendingIteration, PendingReduce, WorkerPool};
+pub use reduce::{ModelRef, ReduceBuf, ReduceOptions, ReduceStats, ShardQueue};
 pub use worker::{Command, Reply, TaskRun};

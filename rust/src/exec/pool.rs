@@ -11,6 +11,7 @@ use crate::algos::{Algorithm, LocalUpdate, ModelVec};
 use crate::chunks::{Chunk, SharedStore};
 use crate::cluster::NodeId;
 
+use super::reduce::{ModelRef, ReduceBuf, ReduceOptions, ReduceStats, ShardQueue};
 use super::worker::{worker_loop, Command, Reply, TaskRun};
 
 /// Channels + join handle of one resident worker.
@@ -21,6 +22,40 @@ struct WorkerHandle {
     thread: Option<JoinHandle<()>>,
 }
 
+/// A sharded reduction in flight: which workers owe a `ShardsDone` reply,
+/// and the shared queue/buffer they are working against.
+pub struct PendingReduce {
+    /// `(node, dispatched)` in dispatch order; an undispatched entry means
+    /// the worker's thread was already gone at dispatch time.
+    nodes: Vec<(NodeId, bool)>,
+    queue: Arc<ShardQueue>,
+    buf: Arc<ReduceBuf>,
+}
+
+impl PendingReduce {
+    /// The shared output buffer (hand [`ModelRef::Pending`] of this to
+    /// `dispatch_iteration` to overlap the next iteration with the merge).
+    pub fn buf(&self) -> Arc<ReduceBuf> {
+        Arc::clone(&self.buf)
+    }
+}
+
+impl Drop for PendingReduce {
+    /// Poison the buffer when the handle dies: a caller that drops an
+    /// uncollected reduction (early `?` return, API misuse) must not
+    /// leave workers spinning forever on a buffer that never completes.
+    /// Harmless after a successful `collect_reduce` — waiters check
+    /// completion before the poison flag, and completion is permanent.
+    fn drop(&mut self) {
+        self.buf.poison();
+    }
+}
+
+/// An iteration in flight: which workers owe an `Iteration` reply.
+pub struct PendingIteration {
+    nodes: Vec<(NodeId, bool)>,
+}
+
 /// One long-lived worker per uni-task, addressed by node id.
 ///
 /// All methods are called from the coordinator thread between iterations;
@@ -28,11 +63,15 @@ struct WorkerHandle {
 pub struct WorkerPool {
     algo: Arc<dyn Algorithm>,
     workers: Vec<WorkerHandle>,
+    /// `ShardsDone` replies swallowed by `shutdown_worker` while a
+    /// reduction was in flight (mid-reduce revoke): `collect_reduce`
+    /// counts them in place of the departed worker's reply.
+    stashed_shards: Vec<(NodeId, usize, usize)>,
 }
 
 impl WorkerPool {
     pub fn new(algo: Arc<dyn Algorithm>) -> Self {
-        WorkerPool { algo, workers: Vec::new() }
+        WorkerPool { algo, workers: Vec::new(), stashed_shards: Vec::new() }
     }
 
     pub fn len(&self) -> usize {
@@ -75,9 +114,25 @@ impl WorkerPool {
             .map_err(|_| anyhow!("worker for node {node} is gone"))
     }
 
+    /// Simulate a slow node: the worker busies itself for `ns_per_elem`
+    /// nanoseconds per model element before reducing each claimed shard
+    /// (straggler benches/tests; 0 restores full speed).
+    pub fn set_reduce_slowdown(&self, node: NodeId, ns_per_elem: u64) -> Result<()> {
+        self.worker(node)?
+            .commands
+            .send(Command::SetReduceSlowdown(ns_per_elem))
+            .map_err(|_| anyhow!("worker for node {node} is gone"))
+    }
+
     /// Drain a worker's chunks and shut it down (the revocation path):
     /// the chunks — with their per-sample optimizer state — survive, the
     /// thread exits, and every other worker's compute state is untouched.
+    ///
+    /// Safe to call while a sharded reduction is in flight: commands are
+    /// FIFO per worker, so the worker finishes its reduce claims first;
+    /// its `ShardsDone` reply is stashed here and handed to the eventual
+    /// `collect_reduce`. (A pending *iteration* on this worker is not
+    /// supported — the trainer never revokes mid-iteration.)
     pub fn shutdown_worker(&mut self, node: NodeId) -> Result<Vec<Chunk>> {
         let idx = self
             .workers
@@ -90,10 +145,16 @@ impl WorkerPool {
         let mut w = self.workers.remove(idx);
         let result = match w.commands.send(Command::DrainChunks) {
             Err(_) => Err(anyhow!("worker for node {node} is gone")),
-            Ok(()) => match w.replies.recv() {
-                Ok(Reply::Drained(chunks)) => Ok(chunks),
-                Ok(_) => Err(anyhow!("unexpected reply during drain")),
-                Err(_) => Err(anyhow!("worker {node} died during drain")),
+            Ok(()) => loop {
+                match w.replies.recv() {
+                    Ok(Reply::Drained(chunks)) => break Ok(chunks),
+                    // Mid-reduce revoke: keep the reduction accountable.
+                    Ok(Reply::ShardsDone { shards, steals }) => {
+                        self.stashed_shards.push((node, shards, steals));
+                    }
+                    Ok(_) => break Err(anyhow!("unexpected reply during drain")),
+                    Err(_) => break Err(anyhow!("worker {node} died during drain")),
+                }
             },
         };
         let _ = w.commands.send(Command::Shutdown);
@@ -104,16 +165,16 @@ impl WorkerPool {
     }
 
     /// Dispatch one iteration to every worker in `plan` order — each entry
-    /// is `(node, task_seed)` — then collect results in the same order.
-    /// Per-worker completion channels make collection deterministic
-    /// regardless of which worker finishes first.
-    pub fn run_iteration(
+    /// is `(node, task_seed)`. The model may be a pending reduction
+    /// ([`ModelRef::Pending`]): workers then start the instant its last
+    /// shard lands, with no coordinator round-trip in between.
+    pub fn dispatch_iteration(
         &self,
         plan: &[(NodeId, u64)],
-        model: Arc<ModelVec>,
+        model: ModelRef,
         k_tasks: usize,
         budget: Option<usize>,
-    ) -> Result<Vec<TaskRun>> {
+    ) -> Result<PendingIteration> {
         // Resolve every worker before dispatching anything: an unknown
         // node must not leave part of the pool mid-iteration.
         let handles = plan
@@ -123,117 +184,184 @@ impl WorkerPool {
         // A failed send means that worker's thread is gone; remember it
         // and keep dispatching so every live worker still gets exactly
         // one command this round.
-        let mut dispatched = vec![false; plan.len()];
-        for (i, (handle, (_, seed))) in handles.iter().zip(plan).enumerate() {
-            dispatched[i] = handle
+        let mut nodes = Vec::with_capacity(plan.len());
+        for (handle, (node, seed)) in handles.iter().zip(plan) {
+            let dispatched = handle
                 .commands
                 .send(Command::RunIteration {
-                    model: Arc::clone(&model),
+                    model: model.clone(),
                     k_tasks,
                     seed: *seed,
                     budget,
                 })
                 .is_ok();
+            nodes.push((*node, dispatched));
         }
         drop(model);
-        // Collect every reply before surfacing any error — returning
-        // early would leave replies queued and desync the per-worker
-        // command/reply protocol for later calls.
-        let mut results = Vec::with_capacity(plan.len());
-        for (i, (handle, (node, _))) in handles.iter().zip(plan).enumerate() {
-            results.push(if !dispatched[i] {
+        Ok(PendingIteration { nodes })
+    }
+
+    /// Collect the replies of a dispatched iteration, in dispatch order.
+    /// Per-worker completion channels make collection deterministic
+    /// regardless of which worker finishes first. Every reply is drained
+    /// before surfacing any error — returning early would leave replies
+    /// queued and desync the per-worker command/reply protocol.
+    pub fn collect_iteration(&self, pending: PendingIteration) -> Result<Vec<TaskRun>> {
+        let mut results = Vec::with_capacity(pending.nodes.len());
+        for (node, dispatched) in &pending.nodes {
+            results.push(if !dispatched {
                 Err(anyhow!("worker for node {node} is gone"))
             } else {
-                match handle.replies.recv() {
-                    Ok(Reply::Iteration(result)) => result,
-                    Ok(_) => Err(anyhow!("unexpected reply from worker {node}")),
-                    Err(_) => Err(anyhow!("worker for node {node} died mid-iteration")),
+                match self.worker(*node).map(|w| w.replies.recv()) {
+                    Ok(Ok(Reply::Iteration(result))) => result,
+                    Ok(Ok(_)) => Err(anyhow!("unexpected reply from worker {node}")),
+                    Ok(Err(_)) => Err(anyhow!("worker for node {node} died mid-iteration")),
+                    Err(e) => Err(e),
                 }
             });
         }
         results.into_iter().collect()
     }
 
-    /// Sharded parallel model reduction: fan the merge of `updates` into
-    /// `model` out across the resident workers and reassemble the merged
-    /// model on the coordinator.
+    /// Dispatch + collect one iteration against a ready model snapshot.
+    pub fn run_iteration(
+        &self,
+        plan: &[(NodeId, u64)],
+        model: Arc<ModelVec>,
+        k_tasks: usize,
+        budget: Option<usize>,
+    ) -> Result<Vec<TaskRun>> {
+        let pending = self.dispatch_iteration(plan, ModelRef::Ready(model), k_tasks, budget)?;
+        self.collect_iteration(pending)
+    }
+
+    /// Start a work-stealing sharded reduction of `updates` into `model`
+    /// across every resident worker.
     ///
-    /// The model is split into contiguous shards of `ceil(len / workers)`
-    /// elements; shard `i` always covers the fixed range
-    /// `[i·per, min((i+1)·per, len))` and is written back at exactly that
-    /// offset, and each worker receives at most one `ReduceShard` command
-    /// (so its private reply channel sees exactly one reply). Because
-    /// [`crate::algos::Algorithm::merge_shard`] is elementwise, the
-    /// reassembled model is bit-identical to the serial `merge` fold
-    /// regardless of worker count, OS scheduling, or an elastic resize
+    /// The model is tiled into `~opts.shards_per_worker × workers` shards
+    /// with *fixed* offsets; each worker claims shards from its own block
+    /// first, then steals from the others' remainders, writing merged
+    /// shards straight into the shared [`ReduceBuf`]. Because
+    /// [`crate::algos::Algorithm::merge_shard`] is elementwise and shard
+    /// geometry never depends on the claim order, the assembled model is
+    /// bit-identical to the serial `merge` fold regardless of worker
+    /// count, shard count, OS scheduling, stealing, or an elastic resize
     /// having changed the pool since the last iteration.
+    pub fn begin_reduce(
+        &mut self,
+        model: &Arc<ModelVec>,
+        updates: Arc<Vec<LocalUpdate>>,
+        k_tasks: usize,
+        opts: ReduceOptions,
+    ) -> Result<PendingReduce> {
+        anyhow::ensure!(!self.workers.is_empty(), "no workers to reduce over");
+        anyhow::ensure!(!model.is_empty(), "empty model");
+        // A stash entry can only be valid between this reduction's
+        // dispatch and collect; anything older belongs to an abandoned
+        // reduction (or a re-assigned node id) and must not shadow a
+        // future worker's real reply.
+        self.stashed_shards.clear();
+        let queue = Arc::new(ShardQueue::new(model.len(), self.workers.len(), opts));
+        let buf = Arc::new(ReduceBuf::new(model.len(), queue.n_shards()));
+        let mut nodes = Vec::with_capacity(self.workers.len());
+        for (slot, w) in self.workers.iter().enumerate() {
+            let dispatched = w
+                .commands
+                .send(Command::ReduceShards {
+                    model: Arc::clone(model),
+                    updates: Arc::clone(&updates),
+                    queue: Arc::clone(&queue),
+                    buf: Arc::clone(&buf),
+                    slot,
+                    k_tasks,
+                })
+                .is_ok();
+            nodes.push((w.node, dispatched));
+        }
+        drop(updates);
+        Ok(PendingReduce { nodes, queue, buf })
+    }
+
+    /// Collect every worker's `ShardsDone` reply (stashed replies from a
+    /// mid-reduce revoke included) and verify the buffer completed. On
+    /// failure the buffer is poisoned so any overlapped iteration waiting
+    /// on it unblocks with an error instead of deadlocking.
+    pub fn collect_reduce(&mut self, pending: PendingReduce) -> Result<ReduceStats> {
+        let mut stats = ReduceStats::default();
+        let mut first_err: Option<anyhow::Error> = None;
+        for (node, dispatched) in &pending.nodes {
+            if !dispatched {
+                // With stealing on, live workers absorb a dead worker's
+                // block; completeness is checked on the buffer below.
+                continue;
+            }
+            let done = if let Some(i) =
+                self.stashed_shards.iter().position(|(n, _, _)| n == node)
+            {
+                let (_, shards, steals) = self.stashed_shards.swap_remove(i);
+                Some((shards, steals))
+            } else {
+                match self.worker(*node).map(|w| w.replies.recv()) {
+                    Ok(Ok(Reply::ShardsDone { shards, steals })) => Some((shards, steals)),
+                    Ok(Ok(_)) => {
+                        first_err.get_or_insert(anyhow!(
+                            "unexpected reply from worker {node} during reduce"
+                        ));
+                        None
+                    }
+                    Ok(Err(_)) | Err(_) => {
+                        first_err
+                            .get_or_insert(anyhow!("worker {node} died during reduce"));
+                        None
+                    }
+                }
+            };
+            if let Some((shards, steals)) = done {
+                stats.shards += shards;
+                stats.steals += steals;
+                stats.workers += 1;
+            }
+        }
+        if first_err.is_none() && !pending.buf.complete() {
+            first_err = Some(anyhow!(
+                "reduction incomplete: {} of {} shards written",
+                stats.shards,
+                pending.queue.n_shards()
+            ));
+        }
+        match first_err {
+            Some(e) => {
+                pending.buf.poison();
+                Err(e)
+            }
+            None => {
+                debug_assert_eq!(stats.shards, pending.queue.n_shards());
+                Ok(stats)
+            }
+        }
+    }
+
+    /// Sharded work-stealing reduction, barriered: fan out, collect, and
+    /// reassemble the merged model on the coordinator.
     ///
     /// A pool with fewer than two workers (or an empty model) reduces
     /// inline — the same fold, without the dispatch round-trip.
     pub fn reduce_model(
-        &self,
+        &mut self,
         model: &Arc<ModelVec>,
         updates: Arc<Vec<LocalUpdate>>,
         k_tasks: usize,
-    ) -> Result<ModelVec> {
-        let len = model.len();
-        if self.workers.len() <= 1 || len == 0 {
+        opts: ReduceOptions,
+    ) -> Result<(ModelVec, ReduceStats)> {
+        if self.workers.len() <= 1 || model.is_empty() {
             let mut out = (**model).clone();
             self.algo.merge_shard(&mut out, 0, &updates, k_tasks);
-            return Ok(out);
+            return Ok((out, ReduceStats::default()));
         }
-        let per = len.div_ceil(self.workers.len().min(len));
-        let n_shards = len.div_ceil(per);
-        // Dispatch shard i to worker i. A failed send means that worker's
-        // thread is gone; remember it and keep going so the per-worker
-        // command/reply protocol stays in sync for every live worker.
-        let mut dispatched = vec![false; n_shards];
-        for (i, (w, d)) in self.workers.iter().zip(&mut dispatched).enumerate() {
-            let offset = i * per;
-            *d = w
-                .commands
-                .send(Command::ReduceShard {
-                    model: Arc::clone(model),
-                    updates: Arc::clone(&updates),
-                    offset,
-                    len: per.min(len - offset),
-                    k_tasks,
-                })
-                .is_ok();
-        }
-        drop(updates);
-        // Collect every reply before surfacing any error; shard offsets fix
-        // the slot each result lands in, so assembly order is irrelevant.
-        let mut merged = vec![0.0f32; len];
-        let mut first_err: Option<anyhow::Error> = None;
-        for (w, &ok) in self.workers.iter().zip(&dispatched) {
-            if !ok {
-                if first_err.is_none() {
-                    first_err = Some(anyhow!("worker for node {} is gone", w.node));
-                }
-                continue;
-            }
-            match w.replies.recv() {
-                Ok(Reply::Shard { offset, data }) => {
-                    merged[offset..offset + data.len()].copy_from_slice(&data);
-                }
-                Ok(_) => {
-                    if first_err.is_none() {
-                        first_err =
-                            Some(anyhow!("unexpected reply from worker {} during reduce", w.node));
-                    }
-                }
-                Err(_) => {
-                    if first_err.is_none() {
-                        first_err = Some(anyhow!("worker {} died during reduce", w.node));
-                    }
-                }
-            }
-        }
-        match first_err {
-            Some(e) => Err(e),
-            None => Ok(merged),
-        }
+        let pending = self.begin_reduce(model, updates, k_tasks, opts)?;
+        let buf = pending.buf();
+        let stats = self.collect_reduce(pending)?;
+        Ok((buf.into_model(), stats))
     }
 
     fn worker(&self, node: NodeId) -> Result<&WorkerHandle> {
@@ -316,9 +444,49 @@ mod tests {
             for i in 0..n_workers {
                 p.spawn_worker(i as u32, SharedStore::new());
             }
-            let merged = p.reduce_model(&model, Arc::clone(&updates), 2).unwrap();
+            let (merged, _) = p
+                .reduce_model(&model, Arc::clone(&updates), 2, ReduceOptions::default())
+                .unwrap();
             assert_eq!(merged, serial, "{n_workers} workers");
         }
+    }
+
+    #[test]
+    fn overlapped_iteration_waits_for_reduce() {
+        // Dispatch an iteration against a pending reduction: the worker
+        // must block until the merge lands, then run on the merged model.
+        let algo: Arc<dyn Algorithm> = Arc::new(CocoaAlgo::new(
+            CocoaConfig::default(),
+            Backend::native_cocoa(),
+            100,
+            6,
+        ));
+        let mut p = WorkerPool::new(Arc::clone(&algo));
+        for i in 0..3 {
+            p.spawn_worker(i, SharedStore::new());
+        }
+        let model = Arc::new(vec![1.0f32; 6]);
+        let updates = Arc::new(vec![LocalUpdate {
+            delta: vec![2.0; 6],
+            samples: 4,
+            loss_sum: 0.0,
+        }]);
+        let pending = p
+            .begin_reduce(&model, Arc::clone(&updates), 1, ReduceOptions::default())
+            .unwrap();
+        let plan: Vec<(NodeId, u64)> = (0..3u32).map(|i| (i, i as u64)).collect();
+        let iter_pending = p
+            .dispatch_iteration(&plan, ModelRef::Pending(pending.buf()), 1, None)
+            .unwrap();
+        let buf = pending.buf();
+        p.collect_reduce(pending).unwrap();
+        let runs = p.collect_iteration(iter_pending).unwrap();
+        assert_eq!(runs.len(), 3);
+        // Empty stores → zero updates, but the dispatch must have resolved.
+        assert!(runs.iter().all(|r| r.update.samples == 0));
+        let mut serial = (*model).clone();
+        algo.merge(&mut serial, &updates, 1);
+        assert_eq!(buf.into_model(), serial);
     }
 
     #[test]

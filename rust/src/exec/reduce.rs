@@ -1,0 +1,366 @@
+//! Work-stealing multi-shard reduction primitives.
+//!
+//! The merge phase splits the model into `S >> workers` small shards with
+//! *fixed* offsets (shard `i` always covers `[i·per, min((i+1)·per, len))`),
+//! so the reassembled model is bit-identical to the serial fold no matter
+//! which worker reduces which shard — `Algorithm::merge_shard` is
+//! elementwise. What stealing changes is only *who* does the work: each
+//! worker owns a contiguous block of shard indices and, when its block
+//! drains, pulls from other workers' remainders. A straggling worker
+//! therefore holds the barrier up by at most one small shard instead of
+//! `len / workers` elements (Chicle §4's load-balancing argument applied
+//! to the reduction itself).
+//!
+//! Three pieces:
+//!
+//! * [`ShardQueue`] — the shared claim structure: per-worker atomic
+//!   cursors over disjoint blocks of shard indices. `claim` pops from the
+//!   worker's own block first, then scans the other blocks (a steal).
+//! * [`ReduceBuf`] — the shared output buffer. Workers write their merged
+//!   shards directly at the shard's fixed offset (ranges are disjoint by
+//!   construction) and decrement a remaining-shards counter with release
+//!   ordering; a reader that observes zero with acquire ordering sees
+//!   every shard's bytes. This is what lets the *next* iteration start on
+//!   a worker the instant the last shard lands, without a coordinator
+//!   round-trip.
+//! * [`ModelRef`] — the model argument of `RunIteration`: either a ready
+//!   snapshot (`Arc<ModelVec>`) or a pending [`ReduceBuf`] that the worker
+//!   blocks on before computing. This is the reduce/dispatch overlap: the
+//!   coordinator may enqueue iteration *i+1* while iteration *i*'s merge
+//!   is still in flight.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::algos::ModelVec;
+
+/// Default shard granularity: the single source of truth shared by
+/// [`ReduceOptions::default`] and `SessionConfig`'s constructors/JSON
+/// fallback, so a round-tripped legacy config trains with the same
+/// reduction geometry as a freshly constructed one.
+pub const DEFAULT_SHARDS_PER_WORKER: usize = 8;
+
+/// Tuning knobs for one sharded reduction.
+#[derive(Clone, Copy, Debug)]
+pub struct ReduceOptions {
+    /// Target shards per worker. 1 reproduces the fixed one-shard-per-
+    /// worker assignment of PR 2; larger values shrink the granule a
+    /// straggler can hold the barrier on.
+    pub shards_per_worker: usize,
+    /// Whether a worker whose own block drained may claim shards from
+    /// other workers' blocks. Off = the fixed static assignment (useful
+    /// as a baseline in benches; the trainer always steals).
+    pub stealing: bool,
+}
+
+impl Default for ReduceOptions {
+    fn default() -> Self {
+        ReduceOptions { shards_per_worker: DEFAULT_SHARDS_PER_WORKER, stealing: true }
+    }
+}
+
+/// Aggregate outcome of one sharded reduction.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ReduceStats {
+    /// Shards reduced in total (== the queue's shard count on success).
+    pub shards: usize,
+    /// Shards a worker claimed from another worker's block.
+    pub steals: usize,
+    /// Workers that participated.
+    pub workers: usize,
+}
+
+/// The shared shard-claim queue for one reduction.
+///
+/// Shard geometry is a pure function of `(model_len, n_shards)` and never
+/// depends on which worker claims what, so any claim order yields the
+/// same set of `(offset, len)` ranges — the determinism invariant.
+pub struct ShardQueue {
+    model_len: usize,
+    /// Fixed shard length (last shard may be shorter).
+    per: usize,
+    n_shards: usize,
+    stealing: bool,
+    /// Per-worker block `[block_start[w], block_start[w+1])` of shard
+    /// indices; `cursors[w]` is the next unclaimed index in block `w`.
+    /// `fetch_add` makes every claim unique even under contention.
+    block_start: Vec<usize>,
+    cursors: Vec<AtomicUsize>,
+}
+
+impl ShardQueue {
+    /// Lay out `~shards_per_worker × n_workers` fixed-offset shards over a
+    /// `model_len`-element model, split into `n_workers` contiguous blocks
+    /// of shard indices.
+    pub fn new(model_len: usize, n_workers: usize, opts: ReduceOptions) -> Self {
+        assert!(n_workers > 0 && model_len > 0);
+        let target = (n_workers * opts.shards_per_worker.max(1)).min(model_len);
+        let per = model_len.div_ceil(target);
+        let n_shards = model_len.div_ceil(per);
+        // Near-equal contiguous blocks of shard indices per worker.
+        let base = n_shards / n_workers;
+        let extra = n_shards % n_workers;
+        let mut block_start = Vec::with_capacity(n_workers + 1);
+        let mut at = 0usize;
+        for w in 0..n_workers {
+            block_start.push(at);
+            at += base + usize::from(w < extra);
+        }
+        block_start.push(at);
+        debug_assert_eq!(at, n_shards);
+        let cursors = block_start[..n_workers]
+            .iter()
+            .map(|&s| AtomicUsize::new(s))
+            .collect();
+        ShardQueue {
+            model_len,
+            per,
+            n_shards,
+            stealing: opts.stealing,
+            block_start,
+            cursors,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    /// Fixed `(offset, len)` range of shard `idx`.
+    pub fn shard_range(&self, idx: usize) -> (usize, usize) {
+        let offset = idx * self.per;
+        (offset, self.per.min(self.model_len - offset))
+    }
+
+    /// Claim the next shard for worker `slot`: own block first, then (if
+    /// stealing) the other blocks in ring order. Returns the shard index
+    /// and whether the claim was a steal. Every shard index is handed out
+    /// exactly once across all workers.
+    pub fn claim(&self, slot: usize) -> Option<(usize, bool)> {
+        let w = self.cursors.len();
+        for k in 0..w {
+            let v = (slot + k) % w;
+            if k > 0 && !self.stealing {
+                break;
+            }
+            let end = self.block_start[v + 1];
+            // Monotonic cursor: a fetch_add past `end` wastes nothing but
+            // the increment — the claim is simply not ours.
+            if self.cursors[v].load(Ordering::Relaxed) < end {
+                let idx = self.cursors[v].fetch_add(1, Ordering::Relaxed);
+                if idx < end {
+                    return Some((idx, k > 0));
+                }
+            }
+        }
+        None
+    }
+}
+
+/// The shared output buffer of one in-flight reduction.
+///
+/// Workers write disjoint shard ranges (disjointness is guaranteed by the
+/// queue handing out each shard index exactly once) and count shards down
+/// with `Release`; `wait`/`complete` observe zero with `Acquire`, which
+/// makes every shard's bytes visible to the reader. `poison` unblocks
+/// waiters when a reduction is abandoned on an error path.
+pub struct ReduceBuf {
+    data: UnsafeCell<ModelVec>,
+    /// Base pointer of `data`, captured at construction (the vector is
+    /// never resized). Writers go through this raw pointer so no `&mut`
+    /// to the vector is ever formed while other writers are live.
+    base: *mut f32,
+    len: usize,
+    remaining: AtomicUsize,
+    poisoned: AtomicBool,
+}
+
+// SAFETY: the only mutable accesses are `write_shard` raw-pointer writes
+// over disjoint ranges before `remaining` reaches zero; shared reads only
+// happen after an Acquire load observes zero (or never, if poisoned).
+unsafe impl Sync for ReduceBuf {}
+unsafe impl Send for ReduceBuf {}
+
+impl ReduceBuf {
+    pub fn new(model_len: usize, n_shards: usize) -> Self {
+        let mut data = vec![0.0f32; model_len];
+        let base = data.as_mut_ptr();
+        ReduceBuf {
+            data: UnsafeCell::new(data),
+            base,
+            len: model_len,
+            remaining: AtomicUsize::new(n_shards),
+            poisoned: AtomicBool::new(false),
+        }
+    }
+
+    /// Write one merged shard at its fixed offset and retire it.
+    ///
+    /// Must be called at most once per claimed shard index; the caller
+    /// (the worker loop) gets each index from [`ShardQueue::claim`], which
+    /// hands every index out exactly once — so concurrent writes cover
+    /// disjoint ranges.
+    pub fn write_shard(&self, offset: usize, shard: &[f32]) {
+        assert!(offset + shard.len() <= self.len, "shard out of bounds");
+        // SAFETY: in-bounds (asserted), ranges from distinct claims are
+        // disjoint, writes go through the raw base pointer (no aliasing
+        // `&mut`), and no reader exists until `remaining` hits zero
+        // (Release below / Acquire in the readers).
+        unsafe {
+            std::ptr::copy_nonoverlapping(shard.as_ptr(), self.base.add(offset), shard.len());
+        }
+        let prev = self.remaining.fetch_sub(1, Ordering::Release);
+        debug_assert!(prev > 0, "more shards written than scheduled");
+    }
+
+    /// All shards written (Acquire: the caller may now read the model).
+    pub fn complete(&self) -> bool {
+        self.remaining.load(Ordering::Acquire) == 0
+    }
+
+    /// Unblock any waiter without completing (error paths only).
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+    }
+
+    /// Block until the reduction completes; `None` if it was poisoned.
+    /// Spin-then-yield: the tail of a reduction is microseconds away in
+    /// the common case, so parking machinery would only add latency.
+    pub fn wait(&self) -> Option<&ModelVec> {
+        let mut spins = 0u32;
+        loop {
+            if self.complete() {
+                // SAFETY: remaining == 0 (Acquire) ⇒ all writers done.
+                return Some(unsafe { &*self.data.get() });
+            }
+            if self.poisoned.load(Ordering::Acquire) {
+                return None;
+            }
+            spins += 1;
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+
+    /// Extract the merged model. Zero-copy when this is the last handle
+    /// (the usual case: workers drop theirs before replying), otherwise a
+    /// clone. Panics if the reduction has not completed.
+    pub fn into_model(self: Arc<Self>) -> ModelVec {
+        assert!(self.complete(), "reduction still in flight");
+        match Arc::try_unwrap(self) {
+            Ok(buf) => buf.data.into_inner(),
+            // SAFETY: complete ⇒ no writers remain; concurrent readers
+            // (workers iterating on the merged model) are fine.
+            Err(arc) => unsafe { (*arc.data.get()).clone() },
+        }
+    }
+}
+
+/// The model input of a `RunIteration` command: a ready snapshot, or the
+/// output buffer of a reduction still in flight (the overlap path).
+#[derive(Clone)]
+pub enum ModelRef {
+    Ready(Arc<ModelVec>),
+    Pending(Arc<ReduceBuf>),
+}
+
+impl ModelRef {
+    /// Resolve to the model, blocking on a pending reduction. `None` if a
+    /// pending reduction was poisoned.
+    pub fn wait(&self) -> Option<&ModelVec> {
+        match self {
+            ModelRef::Ready(m) => Some(m),
+            ModelRef::Pending(buf) => buf.wait(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_geometry_is_fixed_and_covering() {
+        let q = ShardQueue::new(1000, 3, ReduceOptions { shards_per_worker: 4, stealing: true });
+        // Shards tile [0, 1000) exactly, in index order.
+        let mut at = 0;
+        for i in 0..q.n_shards() {
+            let (offset, len) = q.shard_range(i);
+            assert_eq!(offset, at);
+            assert!(len > 0);
+            at += len;
+        }
+        assert_eq!(at, 1000);
+    }
+
+    #[test]
+    fn claims_hand_out_every_shard_exactly_once() {
+        for stealing in [false, true] {
+            let q = ShardQueue::new(997, 4, ReduceOptions { shards_per_worker: 4, stealing });
+            let mut seen = vec![false; q.n_shards()];
+            for slot in 0..4 {
+                while let Some((idx, _)) = q.claim(slot) {
+                    assert!(!seen[idx], "shard {idx} claimed twice");
+                    seen[idx] = true;
+                }
+            }
+            // Without stealing each worker drains only its own block, but
+            // all blocks together still cover every shard.
+            assert!(seen.iter().all(|&s| s), "stealing={stealing}");
+        }
+    }
+
+    #[test]
+    fn stealing_lets_one_worker_drain_everything() {
+        let q = ShardQueue::new(100, 4, ReduceOptions { shards_per_worker: 2, stealing: true });
+        let mut claimed = 0;
+        let mut steals = 0;
+        while let Some((_, stolen)) = q.claim(2) {
+            claimed += 1;
+            steals += usize::from(stolen);
+        }
+        assert_eq!(claimed, q.n_shards());
+        assert!(steals > 0, "claims outside slot 2's block are steals");
+    }
+
+    #[test]
+    fn more_workers_than_elements_degrades_gracefully() {
+        let q = ShardQueue::new(3, 8, ReduceOptions::default());
+        assert_eq!(q.n_shards(), 3);
+        let total: usize = (0..8)
+            .map(|s| {
+                let mut n = 0;
+                while q.claim(s).is_some() {
+                    n += 1;
+                }
+                n
+            })
+            .sum();
+        assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn buf_completes_after_all_shards() {
+        let buf = ReduceBuf::new(10, 2);
+        assert!(!buf.complete());
+        buf.write_shard(0, &[1.0; 5]);
+        assert!(!buf.complete());
+        buf.write_shard(5, &[2.0; 5]);
+        assert!(buf.complete());
+        let model = Arc::new(buf).into_model();
+        assert_eq!(&model[..5], &[1.0; 5]);
+        assert_eq!(&model[5..], &[2.0; 5]);
+    }
+
+    #[test]
+    fn poisoned_buf_unblocks_waiters() {
+        let buf = Arc::new(ReduceBuf::new(4, 1));
+        let r = ModelRef::Pending(Arc::clone(&buf));
+        buf.poison();
+        assert!(r.wait().is_none());
+    }
+}

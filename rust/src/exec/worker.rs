@@ -9,31 +9,43 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::algos::{Algorithm, LocalUpdate, ModelVec};
 use crate::chunks::{Chunk, SharedStore};
 
+use super::reduce::{ModelRef, ReduceBuf, ShardQueue};
+
 /// Commands the coordinator sends a uni-task worker.
 pub enum Command {
-    /// Run one solver iteration against the published model snapshot.
+    /// Run one solver iteration against the model snapshot — which may be
+    /// the output buffer of a reduction still in flight
+    /// ([`ModelRef::Pending`]): the worker then blocks until the last
+    /// shard lands and starts computing without a coordinator round-trip.
     RunIteration {
-        model: Arc<ModelVec>,
+        model: ModelRef,
         k_tasks: usize,
         seed: u64,
         budget: Option<usize>,
     },
-    /// Reduce one contiguous model shard: fold `updates[..]` restricted to
-    /// `offset .. offset + len` into that slice of the model snapshot and
-    /// reply with the merged values. The pool guarantees the range is in
-    /// bounds for the model and every update delta.
-    ReduceShard {
+    /// Participate in a work-stealing sharded reduction: claim shards from
+    /// `queue` (own block first, then steal), fold `updates` restricted to
+    /// each claimed shard's fixed range into a copy of that slice of
+    /// `model`, and write the result into `buf` at the same offset. Ends
+    /// with one `ShardsDone` reply once the queue has drained.
+    ReduceShards {
         model: Arc<ModelVec>,
         updates: Arc<Vec<LocalUpdate>>,
-        offset: usize,
-        len: usize,
+        queue: Arc<ShardQueue>,
+        buf: Arc<ReduceBuf>,
+        /// This worker's block index in the queue.
+        slot: usize,
         k_tasks: usize,
     },
+    /// Simulate a slow node: busy the worker for this many nanoseconds per
+    /// model element before reducing each claimed shard (straggler benches
+    /// and tests; 0 = full speed). Applies until overwritten.
+    SetReduceSlowdown(u64),
     /// Add chunks to the worker's store over the channel. The trainer
     /// installs chunks by writing the shared store directly between
     /// iterations; this command serves coordinators without a store
@@ -48,9 +60,9 @@ pub enum Command {
 /// Replies a worker sends on its completion channel.
 pub enum Reply {
     Iteration(Result<TaskRun>),
-    /// One reduced model shard: the merged values for
-    /// `model[offset .. offset + data.len()]`.
-    Shard { offset: usize, data: Vec<f32> },
+    /// This worker's share of a sharded reduction is done (its claims are
+    /// already written to the shared buffer).
+    ShardsDone { shards: usize, steals: usize },
     Drained(Vec<Chunk>),
 }
 
@@ -58,7 +70,8 @@ pub enum Reply {
 #[derive(Clone, Debug)]
 pub struct TaskRun {
     pub update: LocalUpdate,
-    /// Wallclock compute time of the task body.
+    /// Wallclock compute time of the task body (excludes any wait on an
+    /// in-flight reduction).
     pub wall: Duration,
 }
 
@@ -69,28 +82,47 @@ pub(crate) fn worker_loop(
     commands: Receiver<Command>,
     replies: Sender<Reply>,
 ) {
+    // Artificial per-element reduce delay (straggler simulation).
+    let mut slow_ns_per_elem = 0u64;
     while let Ok(cmd) = commands.recv() {
         match cmd {
             Command::RunIteration { model, k_tasks, seed, budget } => {
-                let result = run_iteration(algo.as_ref(), &store, &model, k_tasks, seed, budget);
-                // Release the model snapshot before signalling completion so
-                // the driver's Arc::make_mut merge never needs a copy.
+                let result = match model.wait() {
+                    Some(m) => run_iteration(algo.as_ref(), &store, m, k_tasks, seed, budget),
+                    None => Err(anyhow!("model reduction was abandoned")),
+                };
+                // Release the model snapshot before signalling completion
+                // so the coordinator can reclaim the buffer without a copy.
                 drop(model);
                 if replies.send(Reply::Iteration(result)).is_err() {
                     break;
                 }
             }
-            Command::ReduceShard { model, updates, offset, len, k_tasks } => {
-                let mut data = model[offset..offset + len].to_vec();
-                algo.merge_shard(&mut data, offset, &updates, k_tasks);
-                // Release both snapshots before signalling completion so no
+            Command::ReduceShards { model, updates, queue, buf, slot, k_tasks } => {
+                let mut shards = 0usize;
+                let mut steals = 0usize;
+                while let Some((idx, stolen)) = queue.claim(slot) {
+                    let (offset, len) = queue.shard_range(idx);
+                    if slow_ns_per_elem > 0 {
+                        spin_for(Duration::from_nanos(slow_ns_per_elem * len as u64));
+                    }
+                    let mut data = model[offset..offset + len].to_vec();
+                    algo.merge_shard(&mut data, offset, &updates, k_tasks);
+                    buf.write_shard(offset, &data);
+                    shards += 1;
+                    steals += usize::from(stolen);
+                }
+                // Release every reduction handle before signalling, so no
                 // worker-side reference outlives the merge phase.
                 drop(model);
                 drop(updates);
-                if replies.send(Reply::Shard { offset, data }).is_err() {
+                drop(queue);
+                drop(buf);
+                if replies.send(Reply::ShardsDone { shards, steals }).is_err() {
                     break;
                 }
             }
+            Command::SetReduceSlowdown(ns) => slow_ns_per_elem = ns,
             Command::InstallChunks(chunks) => {
                 let mut store = store.lock();
                 for chunk in chunks {
@@ -105,6 +137,20 @@ pub(crate) fn worker_loop(
             }
             Command::Shutdown => break,
         }
+    }
+}
+
+/// Simulated straggler delay. Sleeps for delays long enough that timer
+/// granularity is noise (freeing the core for the fast workers, as a real
+/// slow node would); busy-waits below that so tiny delays stay faithful.
+fn spin_for(d: Duration) {
+    if d >= Duration::from_micros(200) {
+        std::thread::sleep(d);
+        return;
+    }
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::spin_loop();
     }
 }
 

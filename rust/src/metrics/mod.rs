@@ -45,8 +45,15 @@ pub struct IterationRecord {
     pub vtime: Duration,
     /// Wallclock compute time actually spent in this iteration.
     pub wall: Duration,
-    /// Wallclock of the merge phase (serial fold or sharded pool reduce).
+    /// Wallclock of the merge phase (serial fold or sharded pool reduce;
+    /// for a pipelined iteration, the reduce-in-flight window).
     pub merge_wall: Duration,
+    /// Shards claimed outside their home worker's block during the
+    /// work-stealing pool reduction (0 = serial fold or no stealing).
+    pub steal_count: usize,
+    /// How long the *next* iteration's dispatch overlapped this
+    /// iteration's in-flight reduce (zero on barriered iterations).
+    pub overlap_wall: Duration,
     /// Number of tasks/nodes active during this iteration.
     pub n_tasks: usize,
     /// Samples processed across all tasks this iteration.
@@ -142,16 +149,19 @@ impl MetricsLog {
     /// Tab-separated dump for the figure harnesses / plotting.
     pub fn to_tsv(&self) -> String {
         let mut out = String::from(
-            "iter\tepochs\tvtime_s\twall_s\tmerge_wall_s\tn_tasks\tsamples\tmetric\ttrain_loss\n",
+            "iter\tepochs\tvtime_s\twall_s\tmerge_wall_s\tsteal_count\toverlap_wall_s\t\
+             n_tasks\tsamples\tmetric\ttrain_loss\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{}\t{:.4}\t{:.4}\t{:.4}\t{:.6}\t{}\t{}\t{}\t{}\n",
+                "{}\t{:.4}\t{:.4}\t{:.4}\t{:.6}\t{}\t{:.6}\t{}\t{}\t{}\t{}\n",
                 r.iter,
                 r.epochs,
                 r.vtime.as_secs_f64(),
                 r.wall.as_secs_f64(),
                 r.merge_wall.as_secs_f64(),
+                r.steal_count,
+                r.overlap_wall.as_secs_f64(),
                 r.n_tasks,
                 r.samples,
                 r.metric.map_or("".into(), |m| format!("{:.6}", m.value())),
@@ -174,6 +184,8 @@ mod tests {
             vtime: Duration::from_secs_f64(vt),
             wall: Duration::from_millis(5),
             merge_wall: Duration::from_micros(50),
+            steal_count: 0,
+            overlap_wall: Duration::ZERO,
             n_tasks: 4,
             samples: 100,
             train_loss: None,
@@ -208,5 +220,10 @@ mod tests {
         let tsv = log.to_tsv();
         assert!(tsv.starts_with("iter\t"));
         assert_eq!(tsv.lines().count(), 2);
+        let header = tsv.lines().next().unwrap();
+        assert!(header.contains("steal_count") && header.contains("overlap_wall_s"));
+        // Every row has exactly as many cells as the header.
+        let cols = header.split('\t').count();
+        assert!(tsv.lines().all(|l| l.split('\t').count() == cols));
     }
 }

@@ -1,0 +1,141 @@
+//! The reduce/dispatch overlap pipeline must be invisible to the science:
+//! a pipelined run produces a *bit-identical* iterate trajectory to the
+//! barriered schedule — same metrics, same virtual times, same epochs —
+//! across elastic resizes, with only the measured wallclock columns
+//! (`merge_wall`, `overlap_wall`, `steal_count`) allowed to differ.
+//!
+//! Also exercises the straggler payoff of the work-stealing reducer
+//! end-to-end (ignored by default: timing-sensitive on loaded CI hosts;
+//! the CI-gated numbers live in `benches/bench_coordinator.rs`).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use chicle::algos::{Algorithm, Backend, CocoaAlgo, LocalUpdate};
+use chicle::chunks::SharedStore;
+use chicle::config::{AlgoConfig, ElasticSpec, ModelKind, SessionConfig};
+use chicle::coordinator::TrainingSession;
+use chicle::data::synth;
+use chicle::exec::{ReduceOptions, WorkerPool};
+use chicle::metrics::MetricsLog;
+
+/// An elastic lSGD/MLP session: 235k-parameter model (well above the
+/// parallel-merge threshold), 4 → 2 nodes over the run, evaluation every
+/// 5 iterations so most iterations are overlap-eligible.
+fn mlp_log(overlap: bool, seed: u64) -> MetricsLog {
+    let ds = synth::fmnist_like(1200, 7);
+    let mut cfg = SessionConfig::lsgd("overlap-traj", ModelKind::Mlp, 4)
+        .with_seed(seed)
+        .with_overlap(overlap)
+        .with_elastic(ElasticSpec::Gradual { from: 4, to: 2, interval_s: 3.0 });
+    cfg.chunk_bytes = 32 * 1024;
+    cfg.max_iters = 12;
+    if let AlgoConfig::Lsgd(l) = &mut cfg.algo {
+        l.eval_every = 5;
+        l.target_acc = 2.0; // unreachable: run all iterations
+    }
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    s.run().unwrap()
+}
+
+#[test]
+fn overlapped_trajectory_is_identical_to_barriered() {
+    let piped = mlp_log(true, 11);
+    let barriered = mlp_log(false, 11);
+    assert_eq!(piped.records.len(), barriered.records.len());
+    for (p, b) in piped.records.iter().zip(&barriered.records) {
+        assert_eq!(p.iter, b.iter);
+        assert_eq!(p.epochs, b.epochs, "iter {}", p.iter);
+        assert_eq!(p.metric, b.metric, "iter {}", p.iter);
+        assert_eq!(p.vtime, b.vtime, "iter {}", p.iter);
+        assert_eq!(p.n_tasks, b.n_tasks, "iter {}", p.iter);
+        assert_eq!(p.samples, b.samples, "iter {}", p.iter);
+        assert_eq!(p.train_loss, b.train_loss, "iter {}", p.iter);
+    }
+    // The pipeline actually engaged in the overlapped run — and never in
+    // the barriered one. Elastic scale-in means n_tasks must still have
+    // dropped 4 → 2 with the pipeline live.
+    assert!(
+        piped.records.iter().any(|r| r.overlap_wall > Duration::ZERO),
+        "overlap never engaged"
+    );
+    assert!(barriered.records.iter().all(|r| r.overlap_wall == Duration::ZERO));
+    assert_eq!(piped.records.last().unwrap().n_tasks, 2);
+}
+
+#[test]
+fn overlapped_run_is_deterministic_across_repeats() {
+    let a = mlp_log(true, 3);
+    let b = mlp_log(true, 3);
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.metric, rb.metric);
+        assert_eq!(ra.vtime, rb.vtime);
+        assert_eq!(ra.epochs, rb.epochs);
+    }
+}
+
+/// `run_iters` barriers its last iteration, so a fixed-count loop records
+/// exactly the requested iterations even with the pipeline on.
+#[test]
+fn run_iters_never_outruns_the_request() {
+    let ds = synth::fmnist_like(800, 1);
+    let mut cfg = SessionConfig::lsgd("overlap-iters", ModelKind::Mlp, 2)
+        .with_overlap(true);
+    cfg.chunk_bytes = 32 * 1024;
+    cfg.max_iters = 50;
+    if let AlgoConfig::Lsgd(l) = &mut cfg.algo {
+        l.eval_every = 10;
+        l.target_acc = 2.0;
+    }
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    let log = s.run_iters(7).unwrap();
+    assert_eq!(log.records.len(), 7);
+    assert_eq!(log.records.last().unwrap().iter, 6);
+}
+
+/// One artificially slow worker holds a fixed one-shard-per-worker
+/// reduction for its whole (large) shard, but holds the stealing
+/// reduction for at most a few small shards. Timing-sensitive, so ignored
+/// by default — run explicitly with `cargo test -- --ignored`; the
+/// CI-tracked equivalent is the `merge/slow1_*` bench pair.
+#[test]
+#[ignore = "timing-sensitive; the bench gate tracks the CI numbers"]
+fn stealing_beats_fixed_assignment_under_a_straggler() {
+    let model_len = 200_000usize;
+    let algo: Arc<dyn Algorithm> = Arc::new(CocoaAlgo::new(
+        chicle::config::CocoaConfig::default(),
+        Backend::native_cocoa(),
+        10_000,
+        model_len,
+    ));
+    let mut pool = WorkerPool::new(Arc::clone(&algo));
+    for i in 0..4u32 {
+        pool.spawn_worker(i, SharedStore::new());
+    }
+    // Node 0 reduces at +100 ns per element — a 10× straggler.
+    pool.set_reduce_slowdown(0, 100).unwrap();
+    let model = Arc::new(vec![0.1f32; model_len]);
+    let updates = Arc::new(vec![
+        LocalUpdate { delta: vec![1e-3; model_len], samples: 100, loss_sum: 0.0 };
+        3
+    ]);
+
+    let mut wall = |opts: ReduceOptions| {
+        let mut best = Duration::MAX;
+        for _ in 0..3 {
+            let t0 = std::time::Instant::now();
+            let (merged, _) = pool
+                .reduce_model(&model, Arc::clone(&updates), 3, opts)
+                .unwrap();
+            best = best.min(t0.elapsed());
+            assert_eq!(merged.len(), model_len);
+        }
+        best
+    };
+    let fixed = wall(ReduceOptions { shards_per_worker: 1, stealing: false });
+    let steal = wall(ReduceOptions { shards_per_worker: 16, stealing: true });
+    assert!(
+        steal * 2 <= fixed,
+        "stealing {steal:?} should be ≥2× faster than fixed {fixed:?} under a straggler"
+    );
+}

@@ -1,8 +1,11 @@
 //! Property tests: the sharded parallel model reduction through the
 //! worker pool is *bit-identical* to the serial merge fold — for every
 //! algorithm family (CoCoA GLM, lSGD MLP, lSGD CNN), across 1–8 workers,
-//! odd shard splits, and an elastic resize mid-run. This is the
-//! determinism invariant the trainer's parallel merge phase rests on.
+//! shard counts of 1×/4×/16× the worker count, stealing on and off, odd
+//! shard splits, an elastic resize between reductions, and a worker
+//! revoke *during* an in-flight reduction. This is the determinism
+//! invariant the trainer's parallel merge phase (and its reduce/dispatch
+//! overlap) rests on.
 //!
 //! proptest is not available in the offline crate set, so properties are
 //! checked over seeded random cases (deterministic, reproducible).
@@ -13,7 +16,7 @@ use chicle::algos::nn::NativeModel;
 use chicle::algos::{Algorithm, Backend, CocoaAlgo, LocalUpdate, LsgdAlgo};
 use chicle::chunks::SharedStore;
 use chicle::config::{CocoaConfig, LsgdConfig, ModelKind};
-use chicle::exec::WorkerPool;
+use chicle::exec::{ReduceOptions, WorkerPool};
 use chicle::util::Rng;
 
 /// One representative of each algorithm family. The CoCoA dim is a prime
@@ -82,7 +85,8 @@ fn pool_of(algo: &Arc<dyn Algorithm>, n_workers: usize) -> WorkerPool {
 }
 
 /// Parallel sharded merge == serial merge, bit for bit, for 1–8 workers
-/// and several update counts, on every algorithm family.
+/// and several update counts, on every algorithm family (default
+/// work-stealing options).
 #[test]
 fn prop_sharded_merge_matches_serial() {
     for (name, algo) in families() {
@@ -94,14 +98,55 @@ fn prop_sharded_merge_matches_serial() {
             let mut serial = (*model).clone();
             algo.merge(&mut serial, &updates, k_updates);
             for n_workers in 1..=8usize {
-                let pool = pool_of(&algo, n_workers);
-                let merged = pool
-                    .reduce_model(&model, Arc::clone(&updates), k_updates)
+                let mut pool = pool_of(&algo, n_workers);
+                let (merged, _) = pool
+                    .reduce_model(
+                        &model,
+                        Arc::clone(&updates),
+                        k_updates,
+                        ReduceOptions::default(),
+                    )
                     .unwrap();
                 assert_eq!(
                     merged, serial,
                     "{name}: k={k_updates} workers={n_workers} diverged from serial fold"
                 );
+            }
+        }
+    }
+}
+
+/// The stealing reducer is exact across the whole shard-granularity
+/// matrix: shard counts of 1×, 4× and 16× the worker count, stealing on
+/// and off, 1–8 workers. With stealing on and multiple workers, steals
+/// must actually be possible (they depend on scheduling, so only the
+/// merged bits — not the steal count — are asserted).
+#[test]
+fn prop_stealing_matrix_matches_serial() {
+    for (name, algo) in families() {
+        let len = algo.model_len();
+        let mut rng = Rng::seed_from_u64(21);
+        let model = Arc::new(algo.init_model().unwrap());
+        let updates = random_updates(&mut rng, 3, len);
+        let mut serial = (*model).clone();
+        algo.merge(&mut serial, &updates, 3);
+        for n_workers in 1..=8usize {
+            for shards_per_worker in [1usize, 4, 16] {
+                for stealing in [false, true] {
+                    let mut pool = pool_of(&algo, n_workers);
+                    let opts = ReduceOptions { shards_per_worker, stealing };
+                    let (merged, stats) = pool
+                        .reduce_model(&model, Arc::clone(&updates), 3, opts)
+                        .unwrap();
+                    assert_eq!(
+                        merged, serial,
+                        "{name}: workers={n_workers} spw={shards_per_worker} \
+                         stealing={stealing} diverged from serial fold"
+                    );
+                    if n_workers >= 2 && !stealing {
+                        assert_eq!(stats.steals, 0, "{name}: fixed assignment cannot steal");
+                    }
+                }
             }
         }
     }
@@ -121,7 +166,9 @@ fn prop_sharded_merge_survives_elastic_resize() {
         let u1 = random_updates(&mut rng, 4, len);
         let mut serial = (*model).clone();
         algo.merge(&mut serial, &u1, 4);
-        let merged = pool.reduce_model(&model, Arc::clone(&u1), 4).unwrap();
+        let (merged, _) = pool
+            .reduce_model(&model, Arc::clone(&u1), 4, ReduceOptions::default())
+            .unwrap();
         assert_eq!(merged, serial, "{name}: pre-resize merge diverged");
         let model = Arc::new(merged);
 
@@ -134,8 +181,43 @@ fn prop_sharded_merge_survives_elastic_resize() {
         let u2 = random_updates(&mut rng, 3, len);
         let mut serial2 = (*model).clone();
         algo.merge(&mut serial2, &u2, 3);
-        let merged2 = pool.reduce_model(&model, Arc::clone(&u2), 3).unwrap();
+        let (merged2, _) = pool
+            .reduce_model(&model, Arc::clone(&u2), 3, ReduceOptions::default())
+            .unwrap();
         assert_eq!(merged2, serial2, "{name}: post-resize merge diverged");
+    }
+}
+
+/// A worker revoked *while a stealing reduction is in flight* must not
+/// lose shards or desync the reply protocol: commands are FIFO per
+/// worker, so the revoked worker finishes its claims before draining, its
+/// completion is stashed, and the assembled model still equals the serial
+/// fold bit for bit. The drained worker's chunks survive too.
+#[test]
+fn prop_mid_reduce_revoke_preserves_merge() {
+    for (name, algo) in families() {
+        let len = algo.model_len();
+        let mut rng = Rng::seed_from_u64(5);
+        let model = Arc::new(algo.init_model().unwrap());
+        let updates = random_updates(&mut rng, 4, len);
+        let mut serial = (*model).clone();
+        algo.merge(&mut serial, &updates, 4);
+
+        let mut pool = pool_of(&algo, 4);
+        let opts = ReduceOptions { shards_per_worker: 16, stealing: true };
+        let pending = pool
+            .begin_reduce(&model, Arc::clone(&updates), 4, opts)
+            .unwrap();
+        let buf = pending.buf();
+        // Revoke worker 2 mid-reduce: FIFO guarantees it reduces first,
+        // then drains; its ShardsDone reply is stashed for collect.
+        let drained = pool.shutdown_worker(2).unwrap();
+        assert!(drained.is_empty());
+        assert!(!pool.has_worker(2));
+
+        let stats = pool.collect_reduce(pending).unwrap();
+        assert_eq!(stats.workers, 4, "{name}: stashed completion must count");
+        assert_eq!(buf.into_model(), serial, "{name}: mid-reduce revoke diverged");
     }
 }
 
@@ -150,7 +232,9 @@ fn zero_sample_updates_leave_model_unchanged_under_sharding() {
         LocalUpdate { delta: vec![1.0; len], samples: 0, loss_sum: 0.0 };
         3
     ]);
-    let pool = pool_of(&algo, 4);
-    let merged = pool.reduce_model(&model, updates, 3).unwrap();
+    let mut pool = pool_of(&algo, 4);
+    let (merged, _) = pool
+        .reduce_model(&model, updates, 3, ReduceOptions::default())
+        .unwrap();
     assert_eq!(merged, *model);
 }
