@@ -5,20 +5,59 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use chicle::algos::{Algorithm, Backend, CocoaAlgo, LocalUpdate};
+use chicle::algos::nn::NativeModel;
+use chicle::algos::{Algorithm, Backend, CocoaAlgo, LocalUpdate, LsgdAlgo};
 use chicle::chunks::chunker::make_chunks;
 use chicle::chunks::{NetworkModel, SharedStore};
 use chicle::exec::{ReduceOptions, WorkerPool};
 use chicle::cluster::NodeSpec;
-use chicle::config::CocoaConfig;
+use chicle::config::{AlgoConfig, CocoaConfig, ModelKind, SessionConfig};
 use chicle::coordinator::policy::{
     redistribute_for_new_tasks, Policy, PolicyCtx, RebalancePolicy,
 };
-use chicle::coordinator::TaskState;
-use chicle::data::synth;
+use chicle::coordinator::{TaskState, Trainer};
+use chicle::data::{synth, FeatureMatrix, Labels};
 use chicle::sim::{makespan, microtask_iteration_time};
 use chicle::util::bench::Bencher;
 use chicle::util::Rng;
+
+/// An eval-every-iteration lSGD/MLP trainer (235k-parameter model, well
+/// above the parallel-merge threshold) for the eval-overlap benches:
+/// every `step` runs one full iteration *including* the test-set
+/// evaluation, pipelined or barriered per `overlap`.
+fn eval_overlap_trainer(overlap: bool, tasks: usize) -> Trainer {
+    let ds = synth::fmnist_like(1024, 3);
+    let mut cfg = SessionConfig::lsgd("bench-eval-overlap", ModelKind::Mlp, tasks)
+        .with_overlap(overlap);
+    cfg.chunk_bytes = 32 * 1024;
+    cfg.max_iters = usize::MAX;
+    if let AlgoConfig::Lsgd(l) = &mut cfg.algo {
+        l.eval_every = 1;
+        l.target_acc = 2.0; // unreachable: benches drive the step loop
+    }
+    let (train, test) = ds.split_test(cfg.test_frac);
+    let (tx, ty) = match (&test.features, &test.labels) {
+        (FeatureMatrix::Dense { data, .. }, Labels::Class(y)) => (data.clone(), y.clone()),
+        _ => unreachable!("fmnist_like is dense-classed"),
+    };
+    let lcfg = match &cfg.algo {
+        AlgoConfig::Lsgd(l) => l.clone(),
+        _ => unreachable!(),
+    };
+    let algo = std::sync::Arc::new(
+        LsgdAlgo::new_classif(
+            lcfg,
+            Backend::native_nn(NativeModel::mlp_default()),
+            train.dim(),
+            tx,
+            ty,
+            cfg.seed,
+        )
+        .unwrap(),
+    );
+    let chunks = make_chunks(&train, cfg.chunk_bytes);
+    Trainer::new(cfg, algo, chunks).unwrap()
+}
 
 fn tasks_with_chunks(k: usize, n_samples: usize) -> Vec<TaskState> {
     let ds = synth::higgs_like(n_samples, 1);
@@ -106,6 +145,30 @@ fn main() {
                 .len()
         });
     }
+
+    // --- eval-spanning overlap: one full eval-point iteration (compute +
+    // merge + test-set evaluation), pipelined vs barriered. Barriered
+    // pays the full pipeline flush — reduce round-trip, then evaluation,
+    // then the next dispatch all sequential on the critical path. The
+    // pipelined row dispatches the next iteration behind the in-flight
+    // reduce and evaluates against the completed buffer while the workers
+    // are already computing, so its median must sit visibly below the
+    // barriered row's (the gate pins both). ---
+    let mut tr_piped = eval_overlap_trainer(true, 4);
+    let mut iter_p = 0usize;
+    b.bench("merge/eval_overlap_mlp_4w_pipelined", || {
+        let m = tr_piped.step(iter_p).unwrap();
+        iter_p += 1;
+        m.is_some()
+    });
+    drop(tr_piped); // a speculative iteration may be in flight; drop settles it
+    let mut tr_barr = eval_overlap_trainer(false, 4);
+    let mut iter_b = 0usize;
+    b.bench("merge/eval_overlap_mlp_4w_barriered", || {
+        let m = tr_barr.step(iter_b).unwrap();
+        iter_b += 1;
+        m.is_some()
+    });
 
     // --- rebalance decision over 16 tasks ---
     b.bench("rebalance/decision_16_tasks", || {

@@ -253,6 +253,13 @@ impl Algorithm for LsgdAlgo {
         }
     }
 
+    fn eval_reads_chunks(&self) -> bool {
+        // Evaluation runs over the held-out test set stored in `self.test`
+        // and ignores the chunk argument, so the trainer's eval-spanning
+        // overlap can skip cloning chunk state for the snapshot.
+        false
+    }
+
     fn samples_per_iteration(&self, _local_samples: usize) -> usize {
         self.cfg.l * self.cfg.h
     }

@@ -69,19 +69,53 @@ pub trait Algorithm: Send + Sync {
     /// `offset .. offset + shard.len()` of every task update into `shard`
     /// (which aliases `model[offset ..]` on the caller's side).
     ///
-    /// The contract that makes sharded reduction exact: the merge rule must
-    /// be *elementwise* — element `i` of the merged model may depend only
-    /// on element `i` of the inputs plus shard-independent scalars (e.g.
-    /// total sample counts), and updates must be folded in slice order.
-    /// Any partition of the model into contiguous shards then composes to
-    /// bit-identical results with the serial fold, for any shard count
-    /// *and any shard→worker assignment* — which is what lets the trainer
-    /// fan the merge out across however many workers the elastic schedule
-    /// currently provides, and lets the work-stealing reducer hand shards
-    /// to whichever worker is free without perturbing the trajectory
-    /// (`tests/prop_merge_equivalence.rs` enforces this).
+    /// # The elementwise-merge invariant (ROADMAP, do not weaken)
+    ///
+    /// `merge_shard` stays *elementwise* (element `i` of the merged model
+    /// depends only on element `i` of the inputs plus shard-independent
+    /// scalars, updates folded in task order), so any contiguous sharding
+    /// — any shard count, any claim interleaving, resizes and mid-reduce
+    /// revokes included — is bit-identical to the serial fold, and the
+    /// overlapped schedule reproduces the barriered trajectory exactly.
+    ///
+    /// This is the contract every implementation must uphold: it is what
+    /// lets the trainer fan the merge out across however many workers the
+    /// elastic schedule currently provides, lets the work-stealing
+    /// reducer hand shards to whichever worker is free, and lets the
+    /// reduce/dispatch overlap span evaluation points — all without
+    /// perturbing the trajectory. An implementation that, say, computed a
+    /// *per-shard* normalizer would silently break bit-identity for every
+    /// shard count but one. `tests/prop_merge_equivalence.rs` and
+    /// `tests/overlap_pipeline.rs` enforce it.
     ///
     /// Every update's `delta` must cover `offset + shard.len()` elements.
+    ///
+    /// # Example
+    ///
+    /// Any split into contiguous shards — merged in any order — composes
+    /// to the exact bits of the whole-model fold:
+    ///
+    /// ```
+    /// use chicle::algos::{Algorithm, Backend, CocoaAlgo, LocalUpdate};
+    /// use chicle::config::CocoaConfig;
+    ///
+    /// let algo = CocoaAlgo::new(CocoaConfig::default(), Backend::native_cocoa(), 100, 8);
+    /// let updates = vec![
+    ///     LocalUpdate { delta: vec![0.25; 8], samples: 10, loss_sum: 0.0 },
+    ///     LocalUpdate { delta: vec![-0.5; 8], samples: 5, loss_sum: 0.0 },
+    /// ];
+    ///
+    /// let mut serial = vec![1.0f32; 8];
+    /// algo.merge(&mut serial, &updates, 2);
+    ///
+    /// // Two uneven shards, merged back-to-front.
+    /// let mut sharded = vec![1.0f32; 8];
+    /// let (lo, hi) = sharded.split_at_mut(5);
+    /// algo.merge_shard(hi, 5, &updates, 2);
+    /// algo.merge_shard(lo, 0, &updates, 2);
+    ///
+    /// assert_eq!(serial, sharded);
+    /// ```
     fn merge_shard(
         &self,
         shard: &mut [f32],
@@ -98,6 +132,19 @@ pub trait Algorithm: Send + Sync {
 
     /// Global convergence metric over all chunks (+ optional held-out set).
     fn evaluate(&self, model: &ModelVec, all_chunks: &[&Chunk]) -> Result<Metric>;
+
+    /// Does [`Algorithm::evaluate`] actually read the chunks it is handed?
+    ///
+    /// The trainer's eval-spanning overlap consults this to decide whether
+    /// an evaluation snapshot must *clone* the chunk state before the next
+    /// iteration's workers start mutating it: CoCoA's duality gap reads
+    /// the per-sample α state co-located in the chunks (default `true`),
+    /// while lSGD evaluates a held-out test set stored in the algorithm
+    /// itself and ignores the chunk argument entirely (`false` — the
+    /// snapshot is then free).
+    fn eval_reads_chunks(&self) -> bool {
+        true
+    }
 
     /// Samples one task processes per iteration given its local count
     /// (CoCoA: all local samples; lSGD: L×H regardless of locality).

@@ -9,9 +9,9 @@ use crate::util::Rng;
 use super::{Chunk, Payload};
 
 /// Split `ds` into chunks of at most `chunk_bytes` bytes each, preserving
-/// sample order (contiguous chunking; pair with
-/// [`crate::coordinator::scheduler`]'s random assignment for the Chicle
-/// behaviour, or assign contiguously for the Snap-ML-style baseline).
+/// sample order (contiguous chunking; pair with the trainer's
+/// `Partitioning::RandomChunks` placement for the Chicle behaviour, or
+/// `Partitioning::Contiguous` for the Snap-ML-style baseline).
 pub fn make_chunks(ds: &Dataset, chunk_bytes: usize) -> Vec<Chunk> {
     let n = ds.n_samples();
     let mut chunks = Vec::new();

@@ -335,7 +335,17 @@ pub struct SessionConfig {
     pub overlap: bool,
     /// Target shards per worker for the work-stealing pool reduction
     /// (larger = finer stealing granules; 1 = fixed one-shard-per-worker).
+    /// With `adaptive_spw` set this is only the *starting* value.
     pub shards_per_worker: usize,
+    /// Adapt `shards_per_worker` at runtime from observed steal counts
+    /// (widen while a straggler sheds work, narrow when the pool is
+    /// balanced), clamped to `[exec::SPW_MIN, exec::SPW_MAX]`. Never
+    /// affects the trained model's bits — only the reduction's
+    /// granularity; the value used each iteration lands in the `spw`
+    /// TSV column. Constructors default this on; a JSON config that
+    /// pins `shards_per_worker` without an `adaptive_spw` key keeps its
+    /// fixed granularity (the pin is honored, not demoted to a seed).
+    pub adaptive_spw: bool,
 }
 
 impl SessionConfig {
@@ -359,6 +369,7 @@ impl SessionConfig {
             test_frac: 0.0,
             overlap: true,
             shards_per_worker: DEFAULT_SHARDS_PER_WORKER,
+            adaptive_spw: true,
         }
     }
 
@@ -382,6 +393,7 @@ impl SessionConfig {
             test_frac: 0.15,
             overlap: true,
             shards_per_worker: DEFAULT_SHARDS_PER_WORKER,
+            adaptive_spw: true,
         }
     }
 
@@ -493,6 +505,7 @@ impl SessionConfig {
             ("test_frac", Json::num(self.test_frac)),
             ("overlap", Json::Bool(self.overlap)),
             ("shards_per_worker", Json::num(self.shards_per_worker as f64)),
+            ("adaptive_spw", Json::Bool(self.adaptive_spw)),
         ])
     }
 
@@ -567,6 +580,15 @@ impl SessionConfig {
                 .map(Json::as_usize)
                 .transpose()?
                 .unwrap_or(DEFAULT_SHARDS_PER_WORKER),
+            // Missing-key default: a config that *explicitly pinned*
+            // shards_per_worker (but predates adaptive_spw) keeps its
+            // fixed granularity — the pin meant something; only configs
+            // that never chose a granularity get adaptation by default.
+            adaptive_spw: v
+                .opt("adaptive_spw")
+                .map(Json::as_bool)
+                .transpose()?
+                .unwrap_or(v.opt("shards_per_worker").is_none()),
         })
     }
 
@@ -607,12 +629,27 @@ mod tests {
             Json::Obj(mut o) => {
                 o.remove("overlap");
                 o.remove("shards_per_worker");
+                o.remove("adaptive_spw");
                 Json::Obj(o)
             }
             _ => unreachable!(),
         };
         let back = SessionConfig::from_json(&legacy).unwrap();
         assert!(back.overlap, "missing key defaults to enabled");
+        assert_eq!(back.shards_per_worker, DEFAULT_SHARDS_PER_WORKER);
+        assert!(back.adaptive_spw, "no granularity chosen → adaptive by default");
+
+        // A legacy config that *pinned* shards_per_worker (but predates
+        // adaptive_spw) must keep its fixed granularity.
+        let pinned = match SessionConfig::cocoa("pinned", 2).to_json() {
+            Json::Obj(mut o) => {
+                o.remove("adaptive_spw");
+                Json::Obj(o)
+            }
+            _ => unreachable!(),
+        };
+        let back = SessionConfig::from_json(&pinned).unwrap();
+        assert!(!back.adaptive_spw, "explicit spw pin must stay fixed");
         assert_eq!(back.shards_per_worker, DEFAULT_SHARDS_PER_WORKER);
     }
 

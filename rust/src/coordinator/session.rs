@@ -152,16 +152,18 @@ impl TrainingSession {
 
     /// Execute a single iteration (benchmarks / custom loops), barriered:
     /// no work is left in flight, so callers may stop after any step and
-    /// observe a consistent model/chunk state. The overlap pipeline is
-    /// exercised by `run`/`run_iters`, which know whether a next
-    /// iteration is coming.
+    /// observe a consistent model/chunk state. The overlap pipeline —
+    /// which since the eval-spanning extension covers evaluation
+    /// iterations too — is exercised by `run`/`run_iters`, which know
+    /// whether a next iteration is coming.
     pub fn step(&mut self, iter: usize) -> Result<Option<crate::metrics::Metric>> {
         self.trainer.step_barriered(iter)
     }
 
     /// Run exactly `iters` iterations (ignores targets). The last
     /// iteration is barriered so the overlap pipeline never dispatches an
-    /// iteration beyond the requested count.
+    /// iteration beyond the requested count; every earlier iteration —
+    /// eval points included — may pipeline.
     pub fn run_iters(&mut self, iters: usize) -> Result<MetricsLog> {
         for i in 0..iters {
             if i + 1 == iters {

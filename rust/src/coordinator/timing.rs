@@ -17,13 +17,22 @@
 //! Accounting also feeds each task's learned per-sample runtime history,
 //! which the rebalance policy consumes (§4.5).
 //!
+//! # Why the overlap never enters virtual time
+//!
 //! Accounting is deliberately independent of the trainer's reduce/dispatch
 //! overlap: virtual time charges the same tree-reduce exchange cost whether
 //! the merge ran barriered or pipelined behind the next iteration's
-//! dispatch. Wallclock savings from the overlap show up in the measured
-//! `merge_wall`/`overlap_wall` TSV columns instead — folding them into
-//! virtual time would make the trajectory depend on host scheduling and
-//! break run-to-run determinism.
+//! dispatch — and, since the eval-spanning extension, whether the
+//! evaluation ran against a live barriered snapshot or against the
+//! completed reduce buffer while the next iteration was already computing.
+//! Wallclock savings from the overlap show up in the measured
+//! `merge_wall`/`overlap_wall` TSV columns instead; the adaptive
+//! shards-per-worker controller likewise only ever appears as the `spw`
+//! column. Folding any of them into virtual time would make the projected
+//! trajectory depend on host scheduling (steal counts and overlap windows
+//! vary run to run) and break the determinism of scheduler projections —
+//! two runs with the same seed must report the same vtime series, which is
+//! what makes the paper's elasticity comparisons reproducible.
 
 use std::time::Duration;
 

@@ -27,23 +27,42 @@
 //! 6. **evaluate** — compute the convergence metric on schedule and log
 //!    the iteration.
 //!
-//! ## Reduce/dispatch overlap
+//! ## Reduce/dispatch overlap — spanning eval points
 //!
-//! On iterations that need no evaluation, the trainer *pipelines* the
-//! merge with the next iteration: after accounting for iteration `i` it
-//! runs iteration `i+1`'s boundary phases (elasticity + policies — the
-//! workers are idle, so the scheduler owns the chunks), then enqueues the
-//! work-stealing reduction of `i`'s updates and, right behind it,
-//! iteration `i+1`'s `RunIteration` against the *pending* merge buffer
-//! ([`crate::exec::ModelRef::Pending`]). Each worker finishes its share
-//! of the merge and starts computing the instant the last shard lands —
-//! no coordinator round-trip on the critical path — while the coordinator
-//! logs iteration `i` in the shadow of the pipeline. The iterate
-//! trajectory is *identical* to the barriered schedule: the boundary
-//! phases run at the same virtual time, consume the RNG in the same
-//! order, and the merged model is bit-identical (see
-//! `tests/overlap_pipeline.rs`). Eval-point iterations stay barriered so
-//! the metric sees a consistent (model, chunk-state) snapshot.
+//! The trainer *pipelines* the merge with the next iteration: after
+//! accounting for iteration `i` it runs iteration `i+1`'s boundary phases
+//! (elasticity + policies — the workers are idle, so the scheduler owns
+//! the chunks), then enqueues the work-stealing reduction of `i`'s
+//! updates and, right behind it, iteration `i+1`'s `RunIteration` against
+//! the *pending* merge buffer ([`crate::exec::ModelRef::Pending`]). Each
+//! worker finishes its share of the merge and starts computing the
+//! instant the last shard lands — no coordinator round-trip on the
+//! critical path — while the coordinator logs iteration `i` in the shadow
+//! of the pipeline.
+//!
+//! Evaluation points do **not** break the pipeline. The metric needs a
+//! consistent `(model, chunk-state)` snapshot, and the overlapped
+//! schedule provides one without a flush: the chunk state the evaluator
+//! reads is snapshotted *before* the next boundary phases run (if the
+//! algorithm's `evaluate` reads chunks at all — see
+//! [`Algorithm::eval_reads_chunks`]), the merged model is read straight
+//! out of the completed [`ReduceBuf`] the moment its shard countdown
+//! reaches zero, and the evaluation runs on the coordinator while the
+//! workers are already computing iteration `i+1` on the live buffer.
+//! One economic exception: when the evaluator reads chunks *and* the
+//! snapshot clone would dwarf the model (large-dataset CoCoA), the eval
+//! iteration falls back to the barriered, clone-free schedule — see
+//! `eval_overlap_affordable`.
+//!
+//! The iterate trajectory is *identical* to the barriered schedule: the
+//! boundary phases run at the same virtual time, consume the RNG in the
+//! same order, the merged model is bit-identical, and the eval snapshot
+//! preserves both the content and the accumulation order the barriered
+//! evaluation would see (see `tests/overlap_pipeline.rs`, which pins
+//! trajectory equality through eval points and elastic resizes). The one
+//! stop condition the pipeline cannot see coming — the metric reaching
+//! its convergence target — is settled by [`Trainer::run`] draining the
+//! speculative in-flight iteration.
 //!
 //! Micro-task emulation (§5.1 "Micro-tasks") keeps K fixed task states
 //! (each with its own resident worker) regardless of node count and
@@ -77,6 +96,30 @@ use super::timing::{IterationTiming, TimeAccountant};
 /// per-shard arithmetic dominates (NN-scale models; CoCoA's GLM vectors
 /// stay serial).
 const PARALLEL_MERGE_MIN_LEN: usize = 1 << 15;
+
+/// Largest eval snapshot the eval-spanning overlap will pay for, as a
+/// multiple of the model size. The snapshot deep-clones every chunk the
+/// evaluator reads; the overlap hides roughly a merge + eval of the
+/// *model*, so once the clone dwarfs the model the barriered, clone-free
+/// evaluation is the better schedule (large-dataset CoCoA). Algorithms
+/// whose evaluate ignores chunks (lSGD) never pay a snapshot and are
+/// unaffected.
+const EVAL_SNAPSHOT_MAX_RATIO: usize = 4;
+
+/// What one engagement of the overlap pipeline reports back to `step`.
+struct PipelineOutcome {
+    /// Wall of the reduce-in-flight window (begin_reduce → collected).
+    merge_wall: Duration,
+    /// Shards claimed outside their home block during the reduction.
+    steal_count: usize,
+    /// How long the next iteration was in flight while the coordinator
+    /// collected the reduce and (at eval points) ran the evaluation.
+    overlap_wall: Duration,
+    /// Shard granularity the reduction used.
+    spw: usize,
+    /// The metric, when this was an overlapped evaluation point.
+    metric: Option<Metric>,
+}
 
 /// A pipelined iteration in flight: iteration `iter`'s `RunIteration`
 /// commands are queued behind the previous iteration's reduction.
@@ -190,6 +233,9 @@ impl Trainer {
         // Bring up the persistent executor: one resident worker per task,
         // sharing the task's chunk store.
         let mut pool = WorkerPool::new(Arc::clone(&algo));
+        if cfg.adaptive_spw {
+            pool.enable_adaptive_spw(cfg.shards_per_worker.max(1));
+        }
         for task in &tasks {
             pool.spawn_worker(task.node.id, task.store.clone());
         }
@@ -363,7 +409,8 @@ impl Trainer {
     }
 
     /// Phase 4 — merge task updates into the shared model, barriered.
-    /// Returns the merge wallclock and the stealing reducer's steal count.
+    /// Returns the merge wallclock, the stealing reducer's steal count,
+    /// and the shard granularity used (0 = serial fold).
     ///
     /// Models below [`PARALLEL_MERGE_MIN_LEN`] take the serial fold —
     /// workers dropped their snapshots before completing, so
@@ -371,22 +418,22 @@ impl Trainer {
     /// reduced by the work-stealing sharded fan-out across the resident
     /// workers; fixed shard offsets make the result bit-identical to the
     /// serial fold at any worker count, elastic resizes included.
-    fn phase_merge(&mut self, updates: &Arc<Vec<LocalUpdate>>) -> Result<(Duration, usize)> {
+    fn phase_merge(&mut self, updates: &Arc<Vec<LocalUpdate>>) -> Result<(Duration, usize, usize)> {
         let t0 = Instant::now();
         let k = updates.len();
-        let steals = if self.pool.len() >= 2 && self.model.len() >= PARALLEL_MERGE_MIN_LEN {
+        let (steals, spw) = if self.pool.len() >= 2 && self.model.len() >= PARALLEL_MERGE_MIN_LEN {
             let opts = self.reduce_opts();
             let (merged, stats) =
                 self.pool
                     .reduce_model(&self.model, Arc::clone(updates), k, opts)?;
             self.model = Arc::new(merged);
-            stats.steals
+            (stats.steals, opts.shards_per_worker)
         } else {
             let model = Arc::make_mut(&mut self.model);
             self.algo.merge(model, updates, k);
-            0
+            (0, 0)
         };
-        Ok((t0.elapsed(), steals))
+        Ok((t0.elapsed(), steals, spw))
     }
 
     /// Phase 5 — time accounting over the configured model.
@@ -439,8 +486,10 @@ impl Trainer {
     }
 
     /// Phase 6b — the convergence metric over the current model and every
-    /// task's chunks (barriered iterations only: needs a consistent
-    /// snapshot, so never runs while a pipelined iteration is in flight).
+    /// task's chunks, read live (barriered iterations only: the stores are
+    /// quiescent and `self.model` is the fresh merge). Overlapped eval
+    /// points instead evaluate inside [`Trainer::pipeline_next`], against
+    /// the completed reduce buffer and a pre-dispatch chunk snapshot.
     fn evaluate_now(&self) -> Result<Metric> {
         let guards: Vec<_> = self.tasks.iter().map(|t| t.store.lock()).collect();
         let all: Vec<&Chunk> = guards.iter().flat_map(|g| g.iter()).collect();
@@ -457,6 +506,7 @@ impl Trainer {
         merge_wall: Duration,
         steal_count: usize,
         overlap_wall: Duration,
+        spw: usize,
         metric: Option<Metric>,
     ) {
         let iter_samples: usize = updates.iter().map(|u| u.samples).sum();
@@ -471,47 +521,111 @@ impl Trainer {
             merge_wall,
             steal_count,
             overlap_wall,
+            spw,
             n_tasks: updates.len(),
             samples: iter_samples,
             train_loss: if steps > 0 { Some(loss_sum / steps as f64) } else { None },
         });
     }
 
+    /// Reduction options for this iteration. With `cfg.adaptive_spw` the
+    /// granularity comes from the pool's steal-count feedback controller;
+    /// otherwise it is the fixed configured value.
     fn reduce_opts(&self) -> ReduceOptions {
         ReduceOptions {
-            shards_per_worker: self.cfg.shards_per_worker.max(1),
+            shards_per_worker: self
+                .pool
+                .adaptive_spw()
+                .unwrap_or(self.cfg.shards_per_worker)
+                .max(1),
             stealing: true,
         }
     }
 
     /// May iteration `iter`'s merge be overlapped with iteration
-    /// `iter + 1`'s dispatch? Requires: the pipeline enabled, no metric
-    /// evaluation due (it needs a barriered snapshot), another iteration
-    /// actually coming (run() stops on max_iters / max_epochs — the epoch
-    /// check matches run()'s, since `phase_timeline` has already folded
-    /// this iteration's samples in), and a model large enough for the
-    /// pool reduce.
-    fn should_overlap(&self, iter: usize, eval_point: bool) -> bool {
+    /// `iter + 1`'s dispatch? Requires: the pipeline enabled, another
+    /// iteration actually coming (run() stops on max_iters / max_epochs —
+    /// the epoch check matches run()'s, since `phase_timeline` has
+    /// already folded this iteration's samples in), and a model large
+    /// enough for the pool reduce. Eval points *do* overlap (the metric
+    /// is computed from a snapshot in the pipeline's shadow) provided the
+    /// snapshot is affordable ([`Trainer::eval_overlap_affordable`] —
+    /// checked by the caller, since only it knows the eval schedule); the
+    /// one stop the pipeline cannot predict — the metric reaching its
+    /// target — is settled by `run()` draining the speculative iteration.
+    fn should_overlap(&self, iter: usize) -> bool {
         self.cfg.overlap
-            && !eval_point
             && iter + 1 < self.cfg.max_iters
             && self.epochs() < self.cfg.max_epochs
             && self.pool.len() >= 2
             && self.model.len() >= PARALLEL_MERGE_MIN_LEN
     }
 
+    /// At an eval point, is the overlapped (snapshot-based) evaluation
+    /// worth it? Free for algorithms whose evaluate ignores chunks;
+    /// otherwise the deep clone must stay within
+    /// [`EVAL_SNAPSHOT_MAX_RATIO`]× the model size, else the iteration
+    /// falls back to the barriered, clone-free evaluation — the PR-3
+    /// schedule — rather than trade a dataset-sized memcpy for a
+    /// model-sized flush. Either schedule yields bit-identical metrics,
+    /// so this gate is a pure wallclock decision.
+    fn eval_overlap_affordable(&self) -> bool {
+        if !self.algo.eval_reads_chunks() {
+            return true;
+        }
+        let snapshot_bytes: usize = self.tasks.iter().map(|t| t.store.size_bytes()).sum();
+        let model_bytes = self.model.len() * std::mem::size_of::<f32>();
+        snapshot_bytes <= model_bytes.saturating_mul(EVAL_SNAPSHOT_MAX_RATIO)
+    }
+
+    /// Clone every task's chunks, in the exact order
+    /// [`Trainer::evaluate_now`] would visit them. This is the eval
+    /// snapshot for an overlapped evaluation point, taken *before* the
+    /// next boundary phases run: chunk moves never change chunk
+    /// *contents*, but they do change which store a chunk sits in, and
+    /// the metric's floating-point accumulation follows store order — so
+    /// both content and order must be captured here for the overlapped
+    /// metric to be bit-identical to the barriered one.
+    ///
+    /// Cost: a deep clone of every chunk (immutable payloads included),
+    /// O(dataset bytes) on the serialized dispatch path — only paid when
+    /// the algorithm's evaluate reads chunks at all (lSGD skips it
+    /// entirely). For chunk-reading algorithms on large datasets this
+    /// can rival what the overlap saves; ROADMAP names the fix
+    /// (copy-on-write payloads / state-only snapshot) as a next step.
+    /// Disable `cfg.overlap` to force the barriered, clone-free eval if
+    /// that trade-off bites first.
+    fn snapshot_eval_chunks(&self) -> Vec<Chunk> {
+        let mut all = Vec::new();
+        for task in &self.tasks {
+            let guard = task.store.lock();
+            all.extend(guard.iter().cloned());
+        }
+        all
+    }
+
     /// The overlapped merge: run iteration `iter + 1`'s boundary phases
     /// now (workers are idle — the scheduler owns the chunks), then queue
     /// the work-stealing reduction of `iter`'s updates and iteration
-    /// `iter + 1` right behind it against the pending merge buffer.
-    /// Returns `(merge_wall, steal_count, overlap_wall)` once the
-    /// reduction lands; the dispatched iteration stays in flight and is
-    /// collected by the next `step` call.
+    /// `iter + 1` right behind it against the pending merge buffer. At an
+    /// eval point, the metric is additionally computed on the coordinator
+    /// — against the completed reduce buffer and a pre-dispatch chunk
+    /// snapshot — while the workers compute `iter + 1`. The dispatched
+    /// iteration stays in flight and is collected by the next `step`
+    /// call.
     fn pipeline_next(
         &mut self,
         iter: usize,
         updates: &Arc<Vec<LocalUpdate>>,
-    ) -> Result<(Duration, usize, Duration)> {
+        eval_point: bool,
+    ) -> Result<PipelineOutcome> {
+        // Eval snapshot of the chunk state, before the boundary moves
+        // chunks between stores and long before iteration `iter + 1`'s
+        // workers start mutating per-sample state. Skipped entirely when
+        // the algorithm's evaluate ignores chunks (lSGD's held-out set).
+        let eval_chunks: Option<Vec<Chunk>> = (eval_point && self.algo.eval_reads_chunks())
+            .then(|| self.snapshot_eval_chunks());
+
         // Boundary of iteration `iter + 1`, at the virtual time the
         // barriered schedule would run it (the clock already advanced) and
         // in the same RNG order.
@@ -552,6 +666,32 @@ impl Trainer {
             }
         };
         let merge_wall = t0.elapsed();
+        // Eval-spanning overlap: the reduction is complete (collected
+        // above), so the merged model can be read straight out of the
+        // shared buffer — zero-copy — and evaluated on the coordinator
+        // while the workers are already computing `iter + 1` against the
+        // very same buffer. The snapshot taken up top supplies the chunk
+        // state as the barriered evaluation would have seen it.
+        let metric = if eval_point {
+            let model = buf.wait().expect("collected reduction must be complete");
+            let refs: Vec<&Chunk> = eval_chunks.iter().flatten().collect();
+            match self.algo.evaluate(model, &refs) {
+                Ok(m) => Some(m),
+                Err(e) => {
+                    // Keep the reply protocol in sync: the overlapped
+                    // iteration is in flight and must be collected before
+                    // this step can surface the evaluation error. The
+                    // merge itself *succeeded* — install it, so a caller
+                    // that survives the error is not left training from
+                    // the stale pre-merge model.
+                    let _ = self.pool.collect_iteration(iteration);
+                    self.model = Arc::new(buf.into_model());
+                    return Err(e);
+                }
+            }
+        } else {
+            None
+        };
         let overlap_wall = t_dispatch.elapsed();
         self.pending = Some(PendingStep {
             iter: iter + 1,
@@ -559,7 +699,13 @@ impl Trainer {
             buf,
             moved_bytes: moved,
         });
-        Ok((merge_wall, stats.steals, overlap_wall))
+        Ok(PipelineOutcome {
+            merge_wall,
+            steal_count: stats.steals,
+            overlap_wall,
+            spw: opts.shards_per_worker,
+            metric,
+        })
     }
 
     /// Execute one full training iteration. Returns the evaluated metric
@@ -612,14 +758,17 @@ impl Trainer {
         self.phase_timeline(iter, &updates, &timing);
 
         let eval_point = iter % self.eval_every == 0;
-        let (metric, merge_wall, steal_count, overlap_wall) =
-            if allow_overlap && self.should_overlap(iter, eval_point) {
-                let (mw, steals, ow) = self.pipeline_next(iter, &updates)?;
-                (None, mw, steals, ow)
+        let overlap_now = allow_overlap
+            && self.should_overlap(iter)
+            && (!eval_point || self.eval_overlap_affordable());
+        let (metric, merge_wall, steal_count, overlap_wall, spw) =
+            if overlap_now {
+                let out = self.pipeline_next(iter, &updates, eval_point)?;
+                (out.metric, out.merge_wall, out.steal_count, out.overlap_wall, out.spw)
             } else {
-                let (mw, steals) = self.phase_merge(&updates)?;
+                let (mw, steals, spw) = self.phase_merge(&updates)?;
                 let metric = if eval_point { Some(self.evaluate_now()?) } else { None };
-                (metric, mw, steals, Duration::ZERO)
+                (metric, mw, steals, Duration::ZERO, spw)
             };
         self.push_record(
             iter,
@@ -628,15 +777,43 @@ impl Trainer {
             merge_wall,
             steal_count,
             overlap_wall,
+            spw,
             metric,
         );
         Ok(metric)
     }
 
+    /// Collect and discard a speculative pipelined iteration after an
+    /// early stop: the merged model it was running against becomes the
+    /// final model (bit-identical to what the barriered schedule would
+    /// have stopped on); its updates are dropped — the barriered schedule
+    /// would never have run it.
+    ///
+    /// Scope of the guarantee: the final *model*, the metrics log and the
+    /// virtual-time trajectory match the barriered schedule exactly. The
+    /// speculative iteration's side effects are not rolled back — its
+    /// boundary phases already moved chunks/consumed RNG and its compute
+    /// already advanced per-sample chunk state — so a trainer reused
+    /// *after* an early-stopped `run()` (further `step` calls, or a
+    /// chunk-reading re-evaluation) observes chunk state one iteration
+    /// ahead of the barriered schedule. Rolling that back would require
+    /// snapshotting every store on every overlapped eval point; training
+    /// has stopped, so the model/metrics guarantee is the one that
+    /// matters.
+    fn drain_pending(&mut self) -> Result<()> {
+        if let Some(p) = self.pending.take() {
+            self.pool.collect_iteration(p.iteration)?;
+            self.model = Arc::new(p.buf.into_model());
+        }
+        Ok(())
+    }
+
     /// Run to completion: stops at `max_iters`, `max_epochs`, or when the
     /// algorithm's convergence target is reached. The overlap pipeline
-    /// never outruns these conditions (see [`Trainer::should_overlap`]),
-    /// so no work is left in flight on return.
+    /// never outruns the first two conditions (`should_overlap` checks
+    /// them before engaging); a metric-triggered stop at an overlapped
+    /// eval point leaves one speculative iteration in flight, which is
+    /// drained here — no work is left pending on return.
     pub fn run(&mut self) -> Result<&MetricsLog> {
         let target = self.algo.target();
         for iter in 0..self.cfg.max_iters {
@@ -646,6 +823,7 @@ impl Trainer {
             }
             if let (Some(m), Some(t)) = (metric, target) {
                 if m.reached(t) {
+                    self.drain_pending()?;
                     break;
                 }
             }

@@ -53,6 +53,15 @@
 //! an in-flight reduction (the revoked worker finishes its claims before
 //! draining; its completion is stashed for `collect_reduce`).
 //!
+//! The *granularity* of the tiling can adapt at runtime: with
+//! [`WorkerPool::enable_adaptive_spw`], every collected reduction feeds
+//! its observed steal count into a clamped feedback controller
+//! ([`SpwController`]) that widens `shards_per_worker` while a straggler
+//! is shedding work (heavy stealing) and narrows it when the pool is
+//! balanced (zero steals — queue overhead is then pure cost). Because
+//! geometry never affects the merged bits, adaptation is invisible to
+//! the trajectory.
+//!
 //! ## Reduce/dispatch overlap
 //!
 //! `RunIteration` takes a [`ModelRef`]: either a ready snapshot or the
@@ -62,7 +71,11 @@
 //! blocks on the buffer's remaining-shards counter and starts computing
 //! the instant the last shard lands, with no coordinator round-trip on
 //! the critical path. The trainer uses this to hide its bookkeeping
-//! (accounting, swimlanes, logging) behind the merge+compute pipeline.
+//! (accounting, swimlanes, logging) behind the merge+compute pipeline —
+//! and, at evaluation points, to run the convergence metric on the
+//! coordinator against the completed buffer (plus a pre-dispatch chunk
+//! snapshot) while the workers are already computing the next iteration
+//! (see `coordinator::trainer`'s eval-spanning overlap).
 //!
 //! ## Lifecycle under elasticity
 //!
@@ -86,5 +99,7 @@ pub mod reduce;
 pub mod worker;
 
 pub use pool::{PendingIteration, PendingReduce, WorkerPool};
-pub use reduce::{ModelRef, ReduceBuf, ReduceOptions, ReduceStats, ShardQueue};
+pub use reduce::{
+    ModelRef, ReduceBuf, ReduceOptions, ReduceStats, ShardQueue, SpwController, SPW_MAX, SPW_MIN,
+};
 pub use worker::{Command, Reply, TaskRun};

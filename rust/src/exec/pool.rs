@@ -11,7 +11,7 @@ use crate::algos::{Algorithm, LocalUpdate, ModelVec};
 use crate::chunks::{Chunk, SharedStore};
 use crate::cluster::NodeId;
 
-use super::reduce::{ModelRef, ReduceBuf, ReduceOptions, ReduceStats, ShardQueue};
+use super::reduce::{ModelRef, ReduceBuf, ReduceOptions, ReduceStats, ShardQueue, SpwController};
 use super::worker::{worker_loop, Command, Reply, TaskRun};
 
 /// Channels + join handle of one resident worker.
@@ -67,11 +67,35 @@ pub struct WorkerPool {
     /// reduction was in flight (mid-reduce revoke): `collect_reduce`
     /// counts them in place of the departed worker's reply.
     stashed_shards: Vec<(NodeId, usize, usize)>,
+    /// Adaptive shards-per-worker controller, fed by every collected
+    /// reduction's steal count (see [`SpwController`]). `None` = fixed
+    /// granularity (callers pass whatever `ReduceOptions` they like).
+    spw_ctl: Option<SpwController>,
 }
 
 impl WorkerPool {
     pub fn new(algo: Arc<dyn Algorithm>) -> Self {
-        WorkerPool { algo, workers: Vec::new(), stashed_shards: Vec::new() }
+        WorkerPool {
+            algo,
+            workers: Vec::new(),
+            stashed_shards: Vec::new(),
+            spw_ctl: None,
+        }
+    }
+
+    /// Enable the adaptive shards-per-worker feedback loop, starting at
+    /// `start` (clamped to `[SPW_MIN, SPW_MAX]`). Every subsequent
+    /// successfully collected reduction feeds its steal count into the
+    /// controller; read the adapted granularity back with
+    /// [`WorkerPool::adaptive_spw`] when building [`ReduceOptions`].
+    pub fn enable_adaptive_spw(&mut self, start: usize) {
+        self.spw_ctl = Some(SpwController::new(start));
+    }
+
+    /// Current granularity recommended by the adaptive controller
+    /// (`None` when adaptation is disabled).
+    pub fn adaptive_spw(&self) -> Option<usize> {
+        self.spw_ctl.as_ref().map(|c| c.current())
     }
 
     pub fn len(&self) -> usize {
@@ -336,6 +360,11 @@ impl WorkerPool {
             }
             None => {
                 debug_assert_eq!(stats.shards, pending.queue.n_shards());
+                // Close the adaptive-granularity feedback loop: only
+                // clean reductions are a trustworthy steal signal.
+                if let Some(ctl) = &mut self.spw_ctl {
+                    ctl.observe(stats.steals, stats.workers);
+                }
                 Ok(stats)
             }
         }
@@ -487,6 +516,17 @@ mod tests {
         let mut serial = (*model).clone();
         algo.merge(&mut serial, &updates, 1);
         assert_eq!(buf.into_model(), serial);
+    }
+
+    #[test]
+    fn adaptive_spw_is_off_by_default_and_reports_when_enabled() {
+        let mut p = pool();
+        assert_eq!(p.adaptive_spw(), None);
+        p.enable_adaptive_spw(8);
+        assert_eq!(p.adaptive_spw(), Some(8));
+        // Clamped on entry, like the controller itself.
+        p.enable_adaptive_spw(10_000);
+        assert_eq!(p.adaptive_spw(), Some(crate::exec::SPW_MAX));
     }
 
     #[test]

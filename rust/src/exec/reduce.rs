@@ -41,6 +41,98 @@ use crate::algos::ModelVec;
 /// reduction geometry as a freshly constructed one.
 pub const DEFAULT_SHARDS_PER_WORKER: usize = 8;
 
+/// Lower clamp of the adaptive shards-per-worker controller: one shard
+/// per worker is the fixed static assignment — the cheapest possible
+/// queue traffic.
+pub const SPW_MIN: usize = 1;
+
+/// Upper clamp of the adaptive shards-per-worker controller. Beyond this
+/// the per-shard claim/dispatch overhead dominates any straggler
+/// insurance the finer granules buy.
+pub const SPW_MAX: usize = 64;
+
+/// Consecutive zero-steal reductions the controller waits for before
+/// narrowing the granularity (hysteresis: one calm iteration is not
+/// evidence the straggler is gone).
+const SPW_CALM_ROUNDS: u32 = 2;
+
+/// Feedback controller for the reduction's shard granularity
+/// (`shards_per_worker`), fed by each reduction's observed steal count.
+///
+/// The trade-off it walks: *finer* shards (higher `spw`) shrink the
+/// granule a straggler can hold the barrier on, but cost more claim/queue
+/// traffic; *coarser* shards minimize overhead when the pool is balanced.
+/// The steal count is a direct signal for which regime the pool is in —
+/// heavy stealing means fast workers are draining a straggler's block,
+/// zero stealing means every worker finished its own block unassisted:
+///
+/// * `steals ≥ workers` (on average every worker stole — a straggler is
+///   shedding a whole block's worth of work) → **widen**: double `spw`.
+/// * `steals == 0` for `SPW_CALM_ROUNDS` consecutive reductions (the
+///   pool is balanced; the queue overhead is pure cost) → **narrow**:
+///   halve `spw`.
+/// * anything in between → hold.
+///
+/// Always clamped to `[SPW_MIN, SPW_MAX]` (or the clamps given to
+/// [`SpwController::with_clamps`]). The controller only ever changes the
+/// *granularity* of the reduction, never its result: shard geometry is a
+/// pure function of `(model_len, shard count)` and the merge rule is
+/// elementwise, so every `spw` value produces bit-identical merged
+/// models (`tests/prop_merge_equivalence.rs` pins this). Steal counts
+/// are scheduling-dependent, so the `spw` trajectory may differ between
+/// runs — which is exactly why it must (and does) stay out of virtual
+/// time and the iterate trajectory.
+#[derive(Clone, Copy, Debug)]
+pub struct SpwController {
+    spw: usize,
+    lo: usize,
+    hi: usize,
+    calm: u32,
+}
+
+impl SpwController {
+    /// A controller starting at `start`, clamped to `[SPW_MIN, SPW_MAX]`.
+    pub fn new(start: usize) -> Self {
+        Self::with_clamps(start, SPW_MIN, SPW_MAX)
+    }
+
+    /// A controller with explicit clamps (`lo` is raised to at least 1;
+    /// `hi` to at least `lo`).
+    pub fn with_clamps(start: usize, lo: usize, hi: usize) -> Self {
+        let lo = lo.max(1);
+        let hi = hi.max(lo);
+        SpwController { spw: start.clamp(lo, hi), lo, hi, calm: 0 }
+    }
+
+    /// The granularity the next reduction should use.
+    pub fn current(&self) -> usize {
+        self.spw
+    }
+
+    /// Feed one completed reduction's outcome into the controller.
+    /// Deterministic: the `spw` trajectory is a pure function of the
+    /// observation sequence.
+    pub fn observe(&mut self, steals: usize, workers: usize) {
+        if workers < 2 {
+            // A single-worker reduction can neither steal nor straggle
+            // against itself; no signal.
+            return;
+        }
+        if steals >= workers {
+            self.spw = (self.spw * 2).min(self.hi);
+            self.calm = 0;
+        } else if steals == 0 {
+            self.calm += 1;
+            if self.calm >= SPW_CALM_ROUNDS {
+                self.spw = (self.spw / 2).max(self.lo);
+                self.calm = 0;
+            }
+        } else {
+            self.calm = 0;
+        }
+    }
+}
+
 /// Tuning knobs for one sharded reduction.
 #[derive(Clone, Copy, Debug)]
 pub struct ReduceOptions {
@@ -354,6 +446,53 @@ mod tests {
         let model = Arc::new(buf).into_model();
         assert_eq!(&model[..5], &[1.0; 5]);
         assert_eq!(&model[5..], &[2.0; 5]);
+    }
+
+    #[test]
+    fn spw_controller_widens_under_stealing_and_narrows_when_calm() {
+        // A deterministic synthetic steal sequence: a straggler appears
+        // (heavy stealing), then disappears (calm). The controller must
+        // ride up to the upper clamp and back down to the lower clamp,
+        // never leaving [SPW_MIN, SPW_MAX].
+        let mut c = SpwController::new(DEFAULT_SHARDS_PER_WORKER);
+        assert_eq!(c.current(), DEFAULT_SHARDS_PER_WORKER);
+        let workers = 4;
+        // Heavy stealing: doubles per observation, clamped at SPW_MAX.
+        let mut seen = vec![c.current()];
+        for _ in 0..6 {
+            c.observe(workers, workers); // steals == workers → widen
+            assert!(c.current() >= SPW_MIN && c.current() <= SPW_MAX);
+            seen.push(c.current());
+        }
+        assert_eq!(c.current(), SPW_MAX, "heavy stealing must reach the clamp");
+        assert!(seen.windows(2).all(|w| w[1] >= w[0]), "monotone on the way up");
+        // Calm: narrows only after SPW_CALM_ROUNDS consecutive zeros.
+        c.observe(0, workers);
+        assert_eq!(c.current(), SPW_MAX, "one calm round is not enough");
+        c.observe(0, workers);
+        assert_eq!(c.current(), SPW_MAX / 2, "second calm round halves");
+        // A lone steal burst resets the calm streak without widening.
+        c.observe(1, workers);
+        c.observe(0, workers);
+        assert_eq!(c.current(), SPW_MAX / 2, "streak was reset");
+        // Sustained calm rides all the way down to the lower clamp.
+        for _ in 0..20 {
+            c.observe(0, workers);
+            assert!(c.current() >= SPW_MIN && c.current() <= SPW_MAX);
+        }
+        assert_eq!(c.current(), SPW_MIN, "sustained calm must reach the floor");
+    }
+
+    #[test]
+    fn spw_controller_ignores_single_worker_pools_and_respects_clamps() {
+        let mut c = SpwController::with_clamps(100, 2, 32);
+        assert_eq!(c.current(), 32, "start is clamped into range");
+        c.observe(8, 1); // single worker: no signal
+        assert_eq!(c.current(), 32);
+        let mut c = SpwController::with_clamps(0, 0, 0);
+        assert_eq!(c.current(), 1, "degenerate clamps collapse to [1, 1]");
+        c.observe(10, 4);
+        assert_eq!(c.current(), 1);
     }
 
     #[test]

@@ -4,6 +4,25 @@
 //! processes [`Command`]s until `Shutdown` or channel disconnect. It holds
 //! a clone of the task's [`SharedStore`] and locks it only while running
 //! an iteration — the ownership window the coordinator grants it.
+//!
+//! # Protocol invariants
+//!
+//! The command/reply discipline the pool relies on (and that the
+//! pipelined trainer's error paths are careful to preserve):
+//!
+//! * **FIFO per worker** — commands are processed strictly in send
+//!   order. This is what makes a mid-reduce revoke safe: the
+//!   `DrainChunks` queued behind a `ReduceShards` cannot overtake it,
+//!   so the revoked worker always finishes its shard claims first.
+//! * **Exactly one reply per replying command** — `RunIteration` ⇒
+//!   `Iteration`, `ReduceShards` ⇒ `ShardsDone`, `DrainChunks` ⇒
+//!   `Drained`; `InstallChunks`/`SetReduceSlowdown`/`Shutdown` never
+//!   reply. Every dispatched replying command must eventually be
+//!   collected, even on error paths — an uncollected reply desyncs the
+//!   worker's whole channel.
+//! * **Handles dropped before replying** — a worker releases its model /
+//!   reduce-buffer handles before signalling completion, so the
+//!   coordinator's collect can reclaim buffers zero-copy.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;

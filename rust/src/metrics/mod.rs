@@ -51,9 +51,17 @@ pub struct IterationRecord {
     /// Shards claimed outside their home worker's block during the
     /// work-stealing pool reduction (0 = serial fold or no stealing).
     pub steal_count: usize,
-    /// How long the *next* iteration's dispatch overlapped this
-    /// iteration's in-flight reduce (zero on barriered iterations).
+    /// How long the *next* iteration was in flight on the workers while
+    /// the coordinator finished collecting this iteration's reduce —
+    /// and, at an overlapped eval point, ran the evaluation against the
+    /// snapshot. Zero on barriered iterations.
     pub overlap_wall: Duration,
+    /// Shards-per-worker granularity the pool reduction used this
+    /// iteration (0 = serial fold, no reduction dispatched). Driven by
+    /// the adaptive controller when `SessionConfig::adaptive_spw` is on,
+    /// so spikes in `steal_count` show up as a widening `spw` a few
+    /// iterations later.
+    pub spw: usize,
     /// Number of tasks/nodes active during this iteration.
     pub n_tasks: usize,
     /// Samples processed across all tasks this iteration.
@@ -149,12 +157,12 @@ impl MetricsLog {
     /// Tab-separated dump for the figure harnesses / plotting.
     pub fn to_tsv(&self) -> String {
         let mut out = String::from(
-            "iter\tepochs\tvtime_s\twall_s\tmerge_wall_s\tsteal_count\toverlap_wall_s\t\
+            "iter\tepochs\tvtime_s\twall_s\tmerge_wall_s\tsteal_count\toverlap_wall_s\tspw\t\
              n_tasks\tsamples\tmetric\ttrain_loss\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{}\t{:.4}\t{:.4}\t{:.4}\t{:.6}\t{}\t{:.6}\t{}\t{}\t{}\t{}\n",
+                "{}\t{:.4}\t{:.4}\t{:.4}\t{:.6}\t{}\t{:.6}\t{}\t{}\t{}\t{}\t{}\n",
                 r.iter,
                 r.epochs,
                 r.vtime.as_secs_f64(),
@@ -162,6 +170,7 @@ impl MetricsLog {
                 r.merge_wall.as_secs_f64(),
                 r.steal_count,
                 r.overlap_wall.as_secs_f64(),
+                r.spw,
                 r.n_tasks,
                 r.samples,
                 r.metric.map_or("".into(), |m| format!("{:.6}", m.value())),
@@ -186,6 +195,7 @@ mod tests {
             merge_wall: Duration::from_micros(50),
             steal_count: 0,
             overlap_wall: Duration::ZERO,
+            spw: 0,
             n_tasks: 4,
             samples: 100,
             train_loss: None,
@@ -222,6 +232,7 @@ mod tests {
         assert_eq!(tsv.lines().count(), 2);
         let header = tsv.lines().next().unwrap();
         assert!(header.contains("steal_count") && header.contains("overlap_wall_s"));
+        assert!(header.contains("\tspw\t"), "adaptive-spw column present");
         // Every row has exactly as many cells as the header.
         let cols = header.split('\t').count();
         assert!(tsv.lines().all(|l| l.split('\t').count() == cols));

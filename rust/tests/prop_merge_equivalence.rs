@@ -221,6 +221,44 @@ fn prop_mid_reduce_revoke_preserves_merge() {
     }
 }
 
+/// Adaptive shard sizing never changes the merged bits: drive a
+/// granularity controller with a synthetic steal/calm schedule (straggler
+/// appears, rages, disappears) and reduce at whatever `spw` it recommends
+/// each round — every reduction must equal the serial fold exactly, at
+/// every granularity the controller visits.
+#[test]
+fn prop_adaptive_spw_never_changes_merged_bits() {
+    use chicle::exec::SpwController;
+    use std::collections::BTreeSet;
+    for (name, algo) in families() {
+        let len = algo.model_len();
+        let mut rng = Rng::seed_from_u64(17);
+        let model = Arc::new(algo.init_model().unwrap());
+        let updates = random_updates(&mut rng, 3, len);
+        let mut serial = (*model).clone();
+        algo.merge(&mut serial, &updates, 3);
+        let mut pool = pool_of(&algo, 4);
+        let mut ctl = SpwController::new(8);
+        let schedule = [0usize, 4, 8, 16, 4, 0, 0, 0, 0];
+        let mut seen_spw = BTreeSet::new();
+        for steals in schedule {
+            let spw = ctl.current();
+            seen_spw.insert(spw);
+            let opts = ReduceOptions { shards_per_worker: spw, stealing: true };
+            let (merged, _) = pool
+                .reduce_model(&model, Arc::clone(&updates), 3, opts)
+                .unwrap();
+            assert_eq!(merged, serial, "{name}: spw={spw} diverged from serial fold");
+            ctl.observe(steals, 4);
+        }
+        assert!(
+            seen_spw.len() > 2,
+            "{name}: the synthetic schedule must actually move the granularity \
+             (visited {seen_spw:?})"
+        );
+    }
+}
+
 /// lSGD's weighted merge with zero total samples is the identity — the
 /// sharded path must preserve that exactly (no NaNs from 0/0 weights).
 #[test]
