@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::chunks::{Chunk, Payload};
+use crate::chunks::{Chunk, Samples};
 use crate::runtime::{HloService, HostTensor, Manifest};
 
 use super::nn::NativeModel;
@@ -130,15 +130,17 @@ impl Backend {
         match self {
             Backend::Native { .. } => {
                 let mut dv = vec![0.0f32; v.len()];
-                match &chunk.payload {
-                    Payload::DenseBinary { x, dim, y } => {
+                // Split borrow: read-only sample data, mutable α state.
+                let (samples, state) = chunk.samples_and_state_mut();
+                match samples {
+                    Samples::DenseBinary { x, dim, y } => {
                         svm::scd_pass_dense(
-                            x, *dim, y, order, &mut chunk.state, v, &mut dv, lam_n, sigma,
+                            x, *dim, y, order, state, v, &mut dv, lam_n, sigma,
                         );
                     }
-                    Payload::SparseBinary { rows, y, .. } => {
+                    Samples::SparseBinary { rows, y, .. } => {
                         svm::scd_pass_sparse(
-                            rows, y, order, &mut chunk.state, v, &mut dv, lam_n, sigma,
+                            rows, y, order, state, v, &mut dv, lam_n, sigma,
                         );
                     }
                     _ => bail!("scd_chunk on unsupported payload"),
@@ -147,8 +149,9 @@ impl Backend {
             }
             Backend::Hlo { service, scd, .. } => {
                 let scd = scd.as_ref().context("backend has no SCD artifacts")?;
-                let (x, dim, y) = match &chunk.payload {
-                    Payload::DenseBinary { x, dim, y } => (x, *dim, y),
+                let (samples, state) = chunk.samples_and_state_mut();
+                let (x, dim, y) = match samples {
+                    Samples::DenseBinary { x, dim, y } => (x, *dim, y),
                     _ => bail!("HLO scd_chunk requires dense-binary chunks"),
                 };
                 if dim != scd.f {
@@ -168,7 +171,7 @@ impl Backend {
                     let mut yb = vec![0.0f32; scd.s];
                     yb[..wn].copy_from_slice(&y[range.clone()]);
                     let mut ab = vec![0.0f32; scd.s];
-                    ab[..wn].copy_from_slice(&chunk.state[range.clone()]);
+                    ab[..wn].copy_from_slice(&state[range.clone()]);
                     // Window-local visit order: entries of `order` falling in
                     // this window, padded with a zero row (no-op updates).
                     let pad_row = if wn < scd.s { wn } else { 0 };
@@ -207,7 +210,7 @@ impl Backend {
                         ],
                     )?;
                     let alpha_out = out[0].as_f32()?;
-                    chunk.state[range.clone()].copy_from_slice(&alpha_out[..wn]);
+                    state[range.clone()].copy_from_slice(&alpha_out[..wn]);
                     let dv = out[1].as_f32()?;
                     // Same convention as the kernel/native pass: the local
                     // view v accumulates sigma'-scaled updates (CoCoA+),
@@ -228,8 +231,8 @@ impl Backend {
             Backend::Native { .. } => Ok(svm::gap_contributions(chunk, w)),
             Backend::Hlo { service, scd, .. } => {
                 let scd = scd.as_ref().context("backend has no SCD artifacts")?;
-                let (x, dim, y) = match &chunk.payload {
-                    Payload::DenseBinary { x, dim, y } => (x, *dim, y),
+                let (x, dim, y) = match chunk.samples() {
+                    Samples::DenseBinary { x, dim, y } => (x, *dim, y),
                     // Sparse gap eval has no HLO artifact; use native math.
                     _ => return Ok(svm::gap_contributions(chunk, w)),
                 };

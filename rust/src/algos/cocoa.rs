@@ -4,7 +4,10 @@
 //! ascent over *all samples in its local chunks* (H = |local samples|,
 //! L = 1) against a snapshot of the shared vector v = w, then ships the
 //! accumulated model delta Δv. Per-sample dual state α lives inside the
-//! chunks and moves with them (paper §4.4).
+//! chunks and moves with them (paper §4.4); it is the *only* chunk bytes
+//! this algorithm ever writes — the sample payload stays immutable, which
+//! is what lets the trainer snapshot chunks for the eval-spanning overlap
+//! at O(α bytes) cost (`Chunk::clone` shares the payload).
 //!
 //! Aggregation follows CoCoA+ with γ = 1 (adding) and σ' = K: local steps
 //! are damped by σ' = K and the driver *sums* task deltas. (The paper's

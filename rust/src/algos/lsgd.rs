@@ -16,7 +16,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::chunks::{Chunk, Payload};
+use crate::chunks::{Chunk, Samples};
 use crate::config::LsgdConfig;
 use crate::metrics::Metric;
 use crate::util::Rng;
@@ -113,8 +113,8 @@ impl LsgdAlgo {
             for chunk in chunks {
                 let n = chunk.n_samples();
                 if k < n {
-                    match &chunk.payload {
-                        Payload::DenseClass { x: cx, dim, y: cy } => {
+                    match chunk.samples() {
+                        Samples::DenseClass { x: cx, dim, y: cy } => {
                             x.extend_from_slice(&cx[k * dim..(k + 1) * dim]);
                             y.push(cy[k]);
                         }
@@ -144,8 +144,8 @@ impl LsgdAlgo {
             for chunk in chunks {
                 let n = chunk.n_samples();
                 if k < n {
-                    match &chunk.payload {
-                        Payload::Tokens { data, seq_len } => {
+                    match chunk.samples() {
+                        Samples::Tokens { data, seq_len } => {
                             out.extend_from_slice(&data[k * seq_len..(k + 1) * seq_len]);
                         }
                         _ => bail!("lSGD LM requires token chunks"),

@@ -136,12 +136,15 @@ pub trait Algorithm: Send + Sync {
     /// Does [`Algorithm::evaluate`] actually read the chunks it is handed?
     ///
     /// The trainer's eval-spanning overlap consults this to decide whether
-    /// an evaluation snapshot must *clone* the chunk state before the next
+    /// an evaluation snapshot must capture the chunk state before the next
     /// iteration's workers start mutating it: CoCoA's duality gap reads
     /// the per-sample α state co-located in the chunks (default `true`),
     /// while lSGD evaluates a held-out test set stored in the algorithm
     /// itself and ignores the chunk argument entirely (`false` — the
-    /// snapshot is then free).
+    /// snapshot is then skipped). The snapshot itself is *state-only*:
+    /// `Chunk::clone` shares the immutable payload by `Arc` and copies
+    /// just the per-sample state, so even chunk-reading evaluators pay
+    /// O(per-sample state), not O(dataset).
     fn eval_reads_chunks(&self) -> bool {
         true
     }

@@ -11,7 +11,7 @@
 //! gap     P − D = 1/n Σ (hinge_i − α_i) + λ‖w‖²
 //! ```
 
-use crate::chunks::{Chunk, Payload};
+use crate::chunks::{Chunk, Samples};
 
 /// One local SDCA pass over a dense chunk: visit rows in `order`, mutate
 /// `alpha` (chunk state) and `v` in place, and accumulate the delta in
@@ -90,8 +90,8 @@ pub fn scd_pass_sparse(
 pub fn gap_contributions(chunk: &Chunk, w: &[f32]) -> (f64, f64, f64, usize) {
     let (mut hinge, mut alpha_sum, mut correct) = (0.0f64, 0.0f64, 0.0f64);
     let mut n = 0usize;
-    match &chunk.payload {
-        Payload::DenseBinary { x, dim, y } => {
+    match chunk.samples() {
+        Samples::DenseBinary { x, dim, y } => {
             for (i, &yi) in y.iter().enumerate() {
                 if yi == 0.0 {
                     continue;
@@ -105,7 +105,7 @@ pub fn gap_contributions(chunk: &Chunk, w: &[f32]) -> (f64, f64, f64, usize) {
                 n += 1;
             }
         }
-        Payload::SparseBinary { rows, y, .. } => {
+        Samples::SparseBinary { rows, y, .. } => {
             for (i, &yi) in y.iter().enumerate() {
                 if yi == 0.0 {
                     continue;
@@ -228,8 +228,8 @@ mod tests {
         let ds = synth::criteo_like_with(128, 500, 10, 8, 2);
         let chunks = make_chunks(&ds, usize::MAX);
         let chunk = &chunks[0];
-        let (rows, dim, y) = match &chunk.payload {
-            Payload::SparseBinary { rows, dim, y } => (rows, *dim, y),
+        let (rows, dim, y) = match chunk.samples() {
+            Samples::SparseBinary { rows, dim, y } => (rows, *dim, y),
             _ => panic!(),
         };
         let dense: Vec<f32> = rows.iter().flat_map(|r| r.to_dense(dim)).collect();
@@ -257,13 +257,18 @@ mod tests {
     #[test]
     fn gap_contributions_skip_padding() {
         let ds = synth::higgs_like(10, 3);
-        let mut chunks = make_chunks(&ds, usize::MAX);
-        let chunk = &mut chunks[0];
-        if let Payload::DenseBinary { y, .. } = &mut chunk.payload {
+        let chunks = make_chunks(&ds, usize::MAX);
+        // Payloads are immutable post-chunking, so a padded variant is a
+        // *new* chunk built from edited sample data, not an in-place edit.
+        let src = &chunks[0];
+        let mut samples = src.samples().clone();
+        if let Samples::DenseBinary { y, .. } = &mut samples {
             y[0] = 0.0; // mark padding
         }
+        let mut chunk = crate::chunks::Chunk::new(src.id, samples, src.global_ids().to_vec());
+        chunk.init_state();
         let w = vec![0.0f32; 28];
-        let (h, a, _c, n) = gap_contributions(chunk, &w);
+        let (h, a, _c, n) = gap_contributions(&chunk, &w);
         assert_eq!(n, 9);
         assert!((h - 9.0).abs() < 1e-9); // w=0 → hinge=1 each
         assert_eq!(a, 0.0);

@@ -1,15 +1,40 @@
 //! The chunk format: samples + per-sample state in flat, serialization-free
-//! arrays (paper §4.4).
+//! arrays (paper §4.4), split into an immutable reference-counted payload
+//! and small mutable per-chunk state.
+//!
+//! # The payload/state split (zero-copy data plane)
+//!
+//! A [`Chunk`] is two very different kinds of bytes:
+//!
+//! * [`Payload`] — the sample data (features, labels) plus the samples'
+//!   original dataset indices. Written exactly once, at chunking time,
+//!   and **never mutated afterwards**; held behind an `Arc` and private
+//!   to this module, so the only way to touch it post-chunking is the
+//!   read-only accessors ([`Chunk::samples`], [`Chunk::global_ids`]).
+//! * `state` — the per-sample optimizer state (CoCoA's dual variables α),
+//!   a small `Vec<f32>` the solver mutates every iteration. It stays a
+//!   plain owned field.
+//!
+//! `Chunk::clone` therefore bumps the payload's refcount and deep-copies
+//! only the state: cloning a chunk costs O(per-sample state), not
+//! O(sample bytes). This is what makes the trainer's eval-spanning
+//! snapshot, elastic revoke/install and any copy-retaining migration
+//! protocol pointer-bump cheap — the observation behind Elastic CoCoA's
+//! "resizes are nearly free" argument. Use [`Chunk::deep_clone`] when a
+//! genuinely private payload copy is required (benchmark reference
+//! variants; a real cross-address-space transfer).
+
+use std::sync::Arc;
 
 use crate::data::SparseVec;
 
 /// Globally unique chunk identifier (assigned once at chunking time).
 pub type ChunkId = u32;
 
-/// Sample payload of a chunk. Variants mirror [`crate::data::FeatureMatrix`]
+/// Sample data of a chunk. Variants mirror [`crate::data::FeatureMatrix`]
 /// plus the label storage, so a chunk is self-contained and movable.
 #[derive(Clone, Debug)]
-pub enum Payload {
+pub enum Samples {
     /// Dense features + binary (±1) labels — the GLM/SVM workloads.
     DenseBinary { x: Vec<f32>, dim: usize, y: Vec<f32> },
     /// Dense features + class labels — the NN workloads.
@@ -20,51 +45,152 @@ pub enum Payload {
     Tokens { data: Vec<i32>, seq_len: usize },
 }
 
+/// The immutable half of a chunk: sample data + the samples' original
+/// dataset indices. Built once by the chunker, then shared by `Arc` —
+/// every consumer reads it through [`Chunk`]'s accessors and nothing may
+/// mutate it post-chunking.
+#[derive(Clone, Debug)]
+pub struct Payload {
+    pub samples: Samples,
+    /// Original dataset indices of the samples (diagnostics / shuffling).
+    pub global_ids: Vec<u32>,
+    /// Cached byte total of `samples` + `global_ids`. Immutable like the
+    /// rest of the payload (id remapping preserves length), computed once
+    /// at construction so size accounting — which the trainer's eval gate
+    /// and the policies' transfer charges read on hot paths — never
+    /// re-walks sparse rows.
+    bytes: usize,
+}
+
+fn samples_bytes(samples: &Samples) -> usize {
+    match samples {
+        Samples::DenseBinary { x, y, .. } => x.len() * 4 + y.len() * 4,
+        Samples::DenseClass { x, y, .. } => x.len() * 4 + y.len() * 4,
+        Samples::SparseBinary { rows, y, .. } => {
+            rows.iter().map(|r| r.size_bytes()).sum::<usize>() + y.len() * 4
+        }
+        Samples::Tokens { data, .. } => data.len() * 4,
+    }
+}
+
 /// A mobile data chunk: fixed-capacity set of samples, their labels and
 /// their per-sample optimizer state. Chunks are the scheduling granularity;
 /// tasks are not (paper §3 "Core concepts").
+///
+/// Cloning shares the immutable payload (refcount bump) and deep-copies
+/// only `state` — see the module docs for the ownership rules.
 #[derive(Clone, Debug)]
 pub struct Chunk {
     pub id: ChunkId,
-    pub payload: Payload,
-    /// Per-sample state co-located with the data (CoCoA's α). Empty when the
-    /// algorithm keeps no per-sample state (lSGD).
+    /// Immutable sample data, shared by reference. Private: post-chunking
+    /// access is read-only through [`Chunk::samples`] /
+    /// [`Chunk::global_ids`] / [`Chunk::samples_and_state_mut`].
+    payload: Arc<Payload>,
+    /// Per-sample state co-located with the data (CoCoA's α). Empty when
+    /// the algorithm keeps no per-sample state (lSGD).
     pub state: Vec<f32>,
-    /// Original dataset indices of the samples (diagnostics / shuffling).
-    pub global_ids: Vec<u32>,
 }
 
 impl Chunk {
-    pub fn n_samples(&self) -> usize {
-        match &self.payload {
-            Payload::DenseBinary { y, .. } => y.len(),
-            Payload::DenseClass { y, .. } => y.len(),
-            Payload::SparseBinary { y, .. } => y.len(),
-            Payload::Tokens { data, seq_len } => data.len() / seq_len.max(&1),
+    /// Build a chunk from freshly produced sample data (chunking time).
+    /// The per-sample state starts empty; call [`Chunk::init_state`] to
+    /// zero-fill it.
+    pub fn new(id: ChunkId, samples: Samples, global_ids: Vec<u32>) -> Self {
+        let bytes = samples_bytes(&samples) + global_ids.len() * 4;
+        Chunk {
+            id,
+            payload: Arc::new(Payload { samples, global_ids, bytes }),
+            state: Vec::new(),
         }
     }
 
-    /// In-memory footprint in bytes — what the transfer cost model charges
-    /// when the scheduler moves this chunk (§4.3).
+    /// Read-only view of the sample data.
+    pub fn samples(&self) -> &Samples {
+        &self.payload.samples
+    }
+
+    /// Original dataset indices of the samples.
+    pub fn global_ids(&self) -> &[u32] {
+        &self.payload.global_ids
+    }
+
+    /// The shared payload handle (pointer identity — lets tests and the
+    /// migration benches verify a path really is zero-copy).
+    pub fn payload(&self) -> &Arc<Payload> {
+        &self.payload
+    }
+
+    /// Do two chunks share one payload allocation?
+    pub fn shares_payload(&self, other: &Chunk) -> bool {
+        Arc::ptr_eq(&self.payload, &other.payload)
+    }
+
+    /// Borrow the immutable sample data and the mutable per-sample state
+    /// together — the solver hot-path accessor (the payload borrow proves
+    /// the sample data cannot be written while the state is).
+    pub fn samples_and_state_mut(&mut self) -> (&Samples, &mut [f32]) {
+        (&self.payload.samples, &mut self.state)
+    }
+
+    /// A copy with its own private payload allocation (O(sample bytes)).
+    /// The reference variant for the migration/snapshot benches; real
+    /// data-plane paths use `clone()`, which shares the payload.
+    pub fn deep_clone(&self) -> Chunk {
+        Chunk {
+            id: self.id,
+            payload: Arc::new((*self.payload).clone()),
+            state: self.state.clone(),
+        }
+    }
+
+    /// Rewrite the global ids (chunking time only — copy-on-write, so it
+    /// is free while the payload is still uniquely owned and never
+    /// corrupts a shared payload afterwards).
+    pub(crate) fn remap_global_ids(&mut self, mut f: impl FnMut(u32) -> u32) {
+        let payload = Arc::make_mut(&mut self.payload);
+        for g in payload.global_ids.iter_mut() {
+            *g = f(*g);
+        }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        match self.samples() {
+            Samples::DenseBinary { y, .. } => y.len(),
+            Samples::DenseClass { y, .. } => y.len(),
+            Samples::SparseBinary { y, .. } => y.len(),
+            Samples::Tokens { data, seq_len } => data.len() / (*seq_len).max(1),
+        }
+    }
+
+    /// Bytes of the immutable payload (features + labels + global ids) —
+    /// what a *cold* transfer must move, and what `clone()` never copies.
+    /// O(1): cached at construction, valid forever because the payload is.
+    pub fn payload_bytes(&self) -> usize {
+        self.payload.bytes
+    }
+
+    /// Bytes of the mutable per-sample state — what a *warm* transfer
+    /// (payload already resident at the destination) moves, and the whole
+    /// cost of `clone()`.
+    pub fn state_bytes(&self) -> usize {
+        self.state.len() * 4
+    }
+
+    /// Total in-memory footprint in bytes — what the transfer cost model
+    /// charges when the scheduler moves this chunk cold (§4.3). See
+    /// [`crate::chunks::NetworkModel::chunk_cost`] for the warm/cold
+    /// split.
     pub fn size_bytes(&self) -> usize {
-        let payload = match &self.payload {
-            Payload::DenseBinary { x, y, .. } => x.len() * 4 + y.len() * 4,
-            Payload::DenseClass { x, y, .. } => x.len() * 4 + y.len() * 4,
-            Payload::SparseBinary { rows, y, .. } => {
-                rows.iter().map(|r| r.size_bytes()).sum::<usize>() + y.len() * 4
-            }
-            Payload::Tokens { data, .. } => data.len() * 4,
-        };
-        payload + self.state.len() * 4 + self.global_ids.len() * 4
+        self.payload_bytes() + self.state_bytes()
     }
 
     /// Feature dimension (or sequence length for token chunks).
     pub fn dim(&self) -> usize {
-        match &self.payload {
-            Payload::DenseBinary { dim, .. } => *dim,
-            Payload::DenseClass { dim, .. } => *dim,
-            Payload::SparseBinary { dim, .. } => *dim,
-            Payload::Tokens { seq_len, .. } => *seq_len,
+        match self.samples() {
+            Samples::DenseBinary { dim, .. } => *dim,
+            Samples::DenseClass { dim, .. } => *dim,
+            Samples::SparseBinary { dim, .. } => *dim,
+            Samples::Tokens { seq_len, .. } => *seq_len,
         }
     }
 
@@ -79,16 +205,15 @@ mod tests {
     use super::*;
 
     fn dense_chunk(n: usize, dim: usize) -> Chunk {
-        Chunk {
-            id: 1,
-            payload: Payload::DenseBinary {
+        Chunk::new(
+            1,
+            Samples::DenseBinary {
                 x: vec![0.5; n * dim],
                 dim,
                 y: vec![1.0; n],
             },
-            state: vec![],
-            global_ids: (0..n as u32).collect(),
-        }
+            (0..n as u32).collect(),
+        )
     }
 
     #[test]
@@ -98,20 +223,62 @@ mod tests {
         assert_eq!(c.dim(), 4);
         let base = 10 * 4 * 4 + 10 * 4 + 10 * 4;
         assert_eq!(c.size_bytes(), base);
+        assert_eq!(c.payload_bytes(), base);
+        assert_eq!(c.state_bytes(), 0);
         c.init_state();
         assert_eq!(c.state.len(), 10);
         assert_eq!(c.size_bytes(), base + 40);
+        assert_eq!(c.state_bytes(), 40);
+        assert_eq!(c.payload_bytes(), base);
     }
 
     #[test]
     fn token_chunk_counts_sequences() {
-        let c = Chunk {
-            id: 2,
-            payload: Payload::Tokens { data: vec![0; 64 * 3], seq_len: 64 },
-            state: vec![],
-            global_ids: vec![0, 1, 2],
-        };
+        let c = Chunk::new(
+            2,
+            Samples::Tokens { data: vec![0; 64 * 3], seq_len: 64 },
+            vec![0, 1, 2],
+        );
         assert_eq!(c.n_samples(), 3);
         assert_eq!(c.dim(), 64);
+    }
+
+    #[test]
+    fn clone_shares_payload_and_copies_state() {
+        let mut a = dense_chunk(10, 4);
+        a.init_state();
+        let mut b = a.clone();
+        assert!(a.shares_payload(&b), "clone must bump the Arc, not copy");
+        // State is private per clone: mutating one never leaks into the
+        // other (the eval-snapshot correctness condition).
+        b.state[0] = 7.0;
+        assert_eq!(a.state[0], 0.0);
+        // deep_clone severs payload sharing.
+        let d = a.deep_clone();
+        assert!(!a.shares_payload(&d));
+        assert_eq!(d.n_samples(), a.n_samples());
+        assert_eq!(d.global_ids(), a.global_ids());
+    }
+
+    #[test]
+    fn payload_bytes_cache_survives_remap_and_deep_clone() {
+        let mut a = dense_chunk(10, 4);
+        let expect = 10 * 4 * 4 + 10 * 4 + 10 * 4;
+        assert_eq!(a.payload_bytes(), expect);
+        a.remap_global_ids(|g| g + 1);
+        assert_eq!(a.payload_bytes(), expect, "remap preserves payload size");
+        assert_eq!(a.deep_clone().payload_bytes(), expect);
+        assert_eq!(a.clone().payload_bytes(), expect);
+    }
+
+    #[test]
+    fn remap_is_copy_on_write() {
+        let a = dense_chunk(4, 2);
+        let mut b = a.clone();
+        b.remap_global_ids(|g| g + 100);
+        assert_eq!(b.global_ids(), &[100, 101, 102, 103]);
+        // The shared original is untouched: remap cloned before writing.
+        assert_eq!(a.global_ids(), &[0, 1, 2, 3]);
+        assert!(!a.shares_payload(&b));
     }
 }

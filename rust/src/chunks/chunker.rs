@@ -6,7 +6,7 @@
 use crate::data::{Dataset, FeatureMatrix, Labels};
 use crate::util::Rng;
 
-use super::{Chunk, Payload};
+use super::{Chunk, Samples};
 
 /// Split `ds` into chunks of at most `chunk_bytes` bytes each, preserving
 /// sample order (contiguous chunking; pair with the trainer's
@@ -20,13 +20,8 @@ pub fn make_chunks(ds: &Dataset, chunk_bytes: usize) -> Vec<Chunk> {
     while start < n {
         let take = samples_for_budget(ds, start, chunk_bytes).max(1).min(n - start);
         let end = start + take;
-        let payload = slice_payload(ds, start, end);
-        let mut chunk = Chunk {
-            id: next_id,
-            payload,
-            state: vec![],
-            global_ids: (start as u32..end as u32).collect(),
-        };
+        let samples = slice_samples(ds, start, end);
+        let mut chunk = Chunk::new(next_id, samples, (start as u32..end as u32).collect());
         chunk.init_state();
         chunks.push(chunk);
         next_id += 1;
@@ -43,11 +38,10 @@ pub fn make_chunks_shuffled(ds: &Dataset, chunk_bytes: usize, seed: u64) -> Vec<
     Rng::seed_from_u64(seed).shuffle(&mut order);
     let permuted = permute(ds, &order);
     let mut chunks = make_chunks(&permuted, chunk_bytes);
-    // Rewrite global ids to the original dataset indices.
+    // Rewrite global ids to the original dataset indices. Copy-on-write,
+    // which is free here: the payloads are still uniquely owned.
     for c in &mut chunks {
-        for g in c.global_ids.iter_mut() {
-            *g = order[*g as usize] as u32;
-        }
+        c.remap_global_ids(|g| order[g as usize] as u32);
     }
     chunks
 }
@@ -79,24 +73,24 @@ fn samples_for_budget(ds: &Dataset, start: usize, budget: usize) -> usize {
     count
 }
 
-fn slice_payload(ds: &Dataset, start: usize, end: usize) -> Payload {
+fn slice_samples(ds: &Dataset, start: usize, end: usize) -> Samples {
     match (&ds.features, &ds.labels) {
-        (FeatureMatrix::Dense { data, dim }, Labels::Binary(y)) => Payload::DenseBinary {
+        (FeatureMatrix::Dense { data, dim }, Labels::Binary(y)) => Samples::DenseBinary {
             x: data[start * dim..end * dim].to_vec(),
             dim: *dim,
             y: y[start..end].to_vec(),
         },
-        (FeatureMatrix::Dense { data, dim }, Labels::Class(y)) => Payload::DenseClass {
+        (FeatureMatrix::Dense { data, dim }, Labels::Class(y)) => Samples::DenseClass {
             x: data[start * dim..end * dim].to_vec(),
             dim: *dim,
             y: y[start..end].to_vec(),
         },
-        (FeatureMatrix::Sparse { rows, dim }, Labels::Binary(y)) => Payload::SparseBinary {
+        (FeatureMatrix::Sparse { rows, dim }, Labels::Binary(y)) => Samples::SparseBinary {
             rows: rows[start..end].to_vec(),
             dim: *dim,
             y: y[start..end].to_vec(),
         },
-        (FeatureMatrix::Tokens { data, seq_len }, _) => Payload::Tokens {
+        (FeatureMatrix::Tokens { data, seq_len }, _) => Samples::Tokens {
             data: data[start * seq_len..end * seq_len].to_vec(),
             seq_len: *seq_len,
         },
@@ -144,7 +138,7 @@ mod tests {
         let chunks = make_chunks(&ds, 8 * 1024);
         let total: usize = chunks.iter().map(|c| c.n_samples()).sum();
         assert_eq!(total, 1000);
-        let mut ids: Vec<u32> = chunks.iter().flat_map(|c| c.global_ids.clone()).collect();
+        let mut ids: Vec<u32> = chunks.iter().flat_map(|c| c.global_ids().to_vec()).collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..1000).collect::<Vec<u32>>());
     }
@@ -177,11 +171,11 @@ mod tests {
         let total: usize = chunks.iter().map(|c| c.n_samples()).sum();
         assert_eq!(total, 512);
         // global ids within a chunk should NOT be contiguous
-        let ids = &chunks[0].global_ids;
+        let ids = chunks[0].global_ids();
         let contiguous = ids.windows(2).filter(|w| w[1] == w[0] + 1).count();
         assert!(contiguous < ids.len() / 2, "still contiguous: {contiguous}");
         // all ids still covered exactly once
-        let mut all: Vec<u32> = chunks.iter().flat_map(|c| c.global_ids.clone()).collect();
+        let mut all: Vec<u32> = chunks.iter().flat_map(|c| c.global_ids().to_vec()).collect();
         all.sort_unstable();
         assert_eq!(all, (0..512).collect::<Vec<u32>>());
     }

@@ -6,13 +6,20 @@
 //! "ensuring that state and the data it correlates to are always moved
 //! together" (§4.4). The in-memory layout is flat arrays — nothing needs
 //! serialization, mirroring the paper's one-sided-RDMA constraint.
+//!
+//! Since the zero-copy data-plane refactor, a chunk is split into an
+//! immutable, `Arc`-shared [`Payload`] (samples + global ids, written once
+//! at chunking time) and small mutable per-sample `state`; `Chunk::clone`
+//! is a pointer bump plus a state copy, which is what makes eval
+//! snapshots and elastic migrations O(per-sample state) instead of
+//! O(dataset) — see [`chunk`]'s module docs for the ownership rules.
 
 pub mod chunk;
 pub mod chunker;
 pub mod store;
 pub mod transfer;
 
-pub use chunk::{Chunk, ChunkId, Payload};
+pub use chunk::{Chunk, ChunkId, Payload, Samples};
 pub use chunker::make_chunks;
 pub use store::{ChunkStore, SharedStore};
-pub use transfer::NetworkModel;
+pub use transfer::{ChunkBytes, NetworkModel};

@@ -60,6 +60,23 @@ impl ChunkStore {
         self.chunks.iter().map(|c| c.size_bytes()).sum()
     }
 
+    /// Bytes of mutable per-sample state across all local chunks — the
+    /// cost of a state-only snapshot (`Chunk::clone` of every chunk).
+    pub fn state_bytes(&self) -> usize {
+        self.chunks.iter().map(|c| c.state_bytes()).sum()
+    }
+
+    /// Bytes of immutable (Arc-shared) payload across all local chunks.
+    pub fn payload_bytes(&self) -> usize {
+        self.chunks.iter().map(|c| c.payload_bytes()).sum()
+    }
+
+    /// `(payload_bytes, state_bytes)` — the pair the trainer's
+    /// eval-overlap gate reads every evaluation point.
+    pub fn byte_split(&self) -> (usize, usize) {
+        (self.payload_bytes(), self.state_bytes())
+    }
+
     pub fn iter(&self) -> impl Iterator<Item = &Chunk> {
         self.chunks.iter()
     }
@@ -155,6 +172,21 @@ impl SharedStore {
         self.lock().size_bytes()
     }
 
+    /// Bytes of mutable per-sample state across all local chunks.
+    pub fn state_bytes(&self) -> usize {
+        self.lock().state_bytes()
+    }
+
+    /// Bytes of immutable (Arc-shared) payload across all local chunks.
+    pub fn payload_bytes(&self) -> usize {
+        self.lock().payload_bytes()
+    }
+
+    /// `(payload_bytes, state_bytes)` under a single lock acquisition.
+    pub fn byte_split(&self) -> (usize, usize) {
+        self.lock().byte_split()
+    }
+
     /// Sample count of a local chunk (None if not local).
     pub fn chunk_samples(&self, id: ChunkId) -> Option<usize> {
         self.lock().get(id).map(|c| c.n_samples())
@@ -164,15 +196,16 @@ impl SharedStore {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::chunks::Payload;
+    use crate::chunks::Samples;
 
     fn chunk(id: ChunkId, n: usize) -> Chunk {
-        Chunk {
+        let mut c = Chunk::new(
             id,
-            payload: Payload::DenseBinary { x: vec![0.0; n * 2], dim: 2, y: vec![1.0; n] },
-            state: vec![0.0; n],
-            global_ids: (0..n as u32).collect(),
-        }
+            Samples::DenseBinary { x: vec![0.0; n * 2], dim: 2, y: vec![1.0; n] },
+            (0..n as u32).collect(),
+        );
+        c.init_state();
+        c
     }
 
     #[test]
@@ -206,6 +239,19 @@ mod tests {
         let all = s.drain();
         assert_eq!(all.len(), 2);
         assert_eq!(s.n_chunks(), 0);
+    }
+
+    #[test]
+    fn byte_split_sums_payload_and_state() {
+        let mut s = ChunkStore::new();
+        s.add(chunk(1, 3));
+        s.add(chunk(2, 5));
+        // Per chunk: payload = n·(2·4 features + 4 label + 4 global id),
+        // state = n·4.
+        assert_eq!(s.state_bytes(), (3 + 5) * 4);
+        assert_eq!(s.payload_bytes(), (3 + 5) * 16);
+        assert_eq!(s.size_bytes(), s.payload_bytes() + s.state_bytes());
+        assert_eq!(s.byte_split(), (s.payload_bytes(), s.state_bytes()));
     }
 
     #[test]

@@ -8,6 +8,37 @@
 
 use std::time::Duration;
 
+use super::Chunk;
+
+/// Byte breakdown of one chunk move, mirroring the payload/state split of
+/// [`Chunk`]: the immutable payload only has to cross the wire when the
+/// destination does not already hold it (a *cold* transfer), while the
+/// mutable per-sample state moves every time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkBytes {
+    /// Immutable sample data + global ids (Arc-shared in process).
+    pub payload: usize,
+    /// Mutable per-sample optimizer state.
+    pub state: usize,
+}
+
+impl ChunkBytes {
+    /// The split for one chunk.
+    pub fn of(chunk: &Chunk) -> ChunkBytes {
+        ChunkBytes { payload: chunk.payload_bytes(), state: chunk.state_bytes() }
+    }
+
+    /// Bytes a transfer must move: payload + state when cold, state only
+    /// when the payload is already resident at the destination.
+    pub fn wire_bytes(&self, warm: bool) -> usize {
+        if warm {
+            self.state
+        } else {
+            self.payload + self.state
+        }
+    }
+}
+
 /// Bandwidth/latency model of the cluster interconnect.
 #[derive(Clone, Copy, Debug)]
 pub struct NetworkModel {
@@ -42,6 +73,19 @@ impl NetworkModel {
             .iter()
             .map(|&b| self.transfer_cost(b))
             .sum()
+    }
+
+    /// Cost of migrating one chunk given its payload/state byte split.
+    ///
+    /// `warm` means the destination already holds the chunk's immutable
+    /// payload (e.g. it hosted the chunk before, or a replica is
+    /// resident), so only the per-sample state crosses the wire — the
+    /// scheduler's migration cost model can thereby price a
+    /// scale-in/scale-out round-trip at O(state) instead of O(dataset),
+    /// matching what the in-process data plane actually does (payloads
+    /// move by `Arc` clone). A cold transfer charges payload + state.
+    pub fn chunk_cost(&self, bytes: ChunkBytes, warm: bool) -> Duration {
+        self.transfer_cost(bytes.wire_bytes(warm))
     }
 
     /// Rounds of a binary tree reduce-then-broadcast over `k` participants:
@@ -103,6 +147,34 @@ mod tests {
         assert_eq!(m.model_exchange_cost(16 << 20, 17), one * 10);
         // Logarithmic, not linear: far below the serialized-driver 2k.
         assert!(m.model_exchange_cost(16 << 20, 64) < one * 16);
+    }
+
+    #[test]
+    fn warm_transfers_charge_state_only() {
+        let m = NetworkModel::default();
+        let bytes = ChunkBytes { payload: 1 << 20, state: 4 << 10 };
+        assert_eq!(bytes.wire_bytes(false), (1 << 20) + (4 << 10));
+        assert_eq!(bytes.wire_bytes(true), 4 << 10);
+        let cold = m.chunk_cost(bytes, false);
+        let warm = m.chunk_cost(bytes, true);
+        assert!(warm < cold, "{warm:?} !< {cold:?}");
+        assert_eq!(cold, m.transfer_cost((1 << 20) + (4 << 10)));
+        assert_eq!(warm, m.transfer_cost(4 << 10));
+    }
+
+    #[test]
+    fn chunk_bytes_split_matches_chunk_accounting() {
+        use crate::chunks::{Chunk, Samples};
+        let mut c = Chunk::new(
+            1,
+            Samples::DenseBinary { x: vec![0.0; 40], dim: 4, y: vec![1.0; 10] },
+            (0..10).collect(),
+        );
+        c.init_state();
+        let b = ChunkBytes::of(&c);
+        assert_eq!(b.payload, c.payload_bytes());
+        assert_eq!(b.state, c.state_bytes());
+        assert_eq!(b.wire_bytes(false), c.size_bytes());
     }
 
     #[test]

@@ -90,16 +90,17 @@ pub fn redistribute_for_new_tasks(tasks: &mut [TaskState], rng: &mut Rng) -> usi
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::chunks::Payload;
+    use crate::chunks::Samples;
     use crate::cluster::NodeSpec;
 
     fn chunk(id: u32, n: usize) -> Chunk {
-        Chunk {
+        let mut c = Chunk::new(
             id,
-            payload: Payload::DenseBinary { x: vec![0.0; n * 2], dim: 2, y: vec![1.0; n] },
-            state: vec![0.0; n],
-            global_ids: vec![0; n],
-        }
+            Samples::DenseBinary { x: vec![0.0; n * 2], dim: 2, y: vec![1.0; n] },
+            vec![0; n],
+        );
+        c.init_state();
+        c
     }
 
     fn task_with(node: NodeSpec, ids: std::ops::Range<u32>, n: usize) -> TaskState {

@@ -36,6 +36,15 @@ pub struct PolicyCtx<'a> {
 impl<'a> PolicyCtx<'a> {
     /// Move one chunk `cid` from task `from` to task `to`, charging the
     /// transfer accounting.
+    ///
+    /// The in-process move is zero-copy (the `Chunk` value moves between
+    /// stores; its payload stays one `Arc` allocation), but the *virtual*
+    /// accounting deliberately charges a cold transfer (`size_bytes`, not
+    /// the warm [`crate::chunks::ChunkBytes`] state-only cost): in the
+    /// modeled cluster the destination node has never seen this chunk's
+    /// payload, and keeping the charge deterministic keeps vtime
+    /// trajectories reproducible. Schedulers that track payload residency
+    /// can price warm moves with [`NetworkModel::chunk_cost`].
     pub fn move_chunk(&mut self, from: usize, to: usize, cid: crate::chunks::ChunkId) -> Result<()> {
         let chunk = self.tasks[from]
             .store

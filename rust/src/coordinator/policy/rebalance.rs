@@ -82,18 +82,19 @@ impl Policy for RebalancePolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::chunks::{Chunk, NetworkModel, Payload};
+    use crate::chunks::{Chunk, NetworkModel, Samples};
     use crate::cluster::NodeSpec;
     use crate::coordinator::task::TaskState;
     use crate::util::Rng;
 
     fn chunk(id: u32, n: usize) -> Chunk {
-        Chunk {
+        let mut c = Chunk::new(
             id,
-            payload: Payload::DenseBinary { x: vec![0.0; n * 4], dim: 4, y: vec![1.0; n] },
-            state: vec![0.0; n],
-            global_ids: vec![0; n],
-        }
+            Samples::DenseBinary { x: vec![0.0; n * 4], dim: 4, y: vec![1.0; n] },
+            vec![0; n],
+        );
+        c.init_state();
+        c
     }
 
     fn setup(chunks_a: usize, chunks_b: usize, speed_b: f64) -> Vec<TaskState> {

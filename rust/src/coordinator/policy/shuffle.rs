@@ -57,7 +57,7 @@ impl Policy for ShufflePolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::chunks::{Chunk, NetworkModel, Payload};
+    use crate::chunks::{Chunk, NetworkModel, Samples};
     use crate::cluster::NodeSpec;
     use crate::coordinator::task::TaskState;
     use crate::util::Rng;
@@ -68,16 +68,17 @@ mod tests {
             .map(|i| {
                 let mut t = TaskState::new(NodeSpec::new(i as u32, 1.0), 3);
                 for _ in 0..chunks_each {
-                    t.store.add(Chunk {
+                    let mut c = Chunk::new(
                         id,
-                        payload: Payload::DenseBinary {
+                        Samples::DenseBinary {
                             x: vec![0.0; 8],
                             dim: 2,
                             y: vec![1.0; 4],
                         },
-                        state: vec![0.0; 4],
-                        global_ids: vec![0; 4],
-                    });
+                        vec![0; 4],
+                    );
+                    c.init_state();
+                    t.store.add(c);
                     id += 1;
                 }
                 t

@@ -86,7 +86,7 @@ impl Policy for StragglerPolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::chunks::{Chunk, NetworkModel, Payload};
+    use crate::chunks::{Chunk, NetworkModel, Samples};
     use crate::cluster::NodeSpec;
     use crate::coordinator::task::TaskState;
     use crate::util::Rng;
@@ -94,12 +94,13 @@ mod tests {
     fn task(id: u32, n_chunks: usize, per_sample: f64) -> TaskState {
         let mut t = TaskState::new(NodeSpec::new(id, 1.0), 3);
         for c in 0..n_chunks {
-            t.store.add(Chunk {
-                id: id * 100 + c as u32,
-                payload: Payload::DenseBinary { x: vec![0.0; 20], dim: 2, y: vec![1.0; 10] },
-                state: vec![0.0; 10],
-                global_ids: vec![0; 10],
-            });
+            let mut chunk = Chunk::new(
+                id * 100 + c as u32,
+                Samples::DenseBinary { x: vec![0.0; 20], dim: 2, y: vec![1.0; 10] },
+                vec![0; 10],
+            );
+            chunk.init_state();
+            t.store.add(chunk);
         }
         t.record_time(per_sample);
         t

@@ -49,10 +49,13 @@
 //! out of the completed [`ReduceBuf`] the moment its shard countdown
 //! reaches zero, and the evaluation runs on the coordinator while the
 //! workers are already computing iteration `i+1` on the live buffer.
-//! One economic exception: when the evaluator reads chunks *and* the
-//! snapshot clone would dwarf the model (large-dataset CoCoA), the eval
-//! iteration falls back to the barriered, clone-free schedule — see
-//! `eval_overlap_affordable`.
+//! The snapshot is *state-only* — `Chunk::clone` shares the immutable
+//! payload by `Arc` and copies just the per-sample state — so even
+//! chunk-reading evaluators on large datasets (CoCoA) pay O(per-sample
+//! state), not O(dataset), and take the overlapped path. One economic
+//! exception remains: an algorithm whose per-sample *state* dwarfs both
+//! its model and its sample data falls back to the barriered,
+//! snapshot-free schedule — see `eval_overlap_affordable`.
 //!
 //! The iterate trajectory is *identical* to the barriered schedule: the
 //! boundary phases run at the same virtual time, consume the RNG in the
@@ -98,10 +101,15 @@ use super::timing::{IterationTiming, TimeAccountant};
 const PARALLEL_MERGE_MIN_LEN: usize = 1 << 15;
 
 /// Largest eval snapshot the eval-spanning overlap will pay for, as a
-/// multiple of the model size. The snapshot deep-clones every chunk the
-/// evaluator reads; the overlap hides roughly a merge + eval of the
-/// *model*, so once the clone dwarfs the model the barriered, clone-free
-/// evaluation is the better schedule (large-dataset CoCoA). Algorithms
+/// multiple of the bytes the evaluation streams anyway (model + chunk
+/// payloads). The snapshot is *state-only* — `Chunk::clone` shares the
+/// immutable payload by `Arc` and copies just the per-sample state — so
+/// for CoCoA-style evaluators (state ≪ payload) it is always affordable
+/// and large-dataset sessions now take the overlapped eval path. The
+/// gate survives as a guard for pathological algorithms whose per-sample
+/// state dwarfs both their model and their sample data: there the serial
+/// state memcpy on the dispatch path can exceed the flush the overlap
+/// avoids, and the barriered, snapshot-free schedule wins. Algorithms
 /// whose evaluate ignores chunks (lSGD) never pay a snapshot and are
 /// unaffected.
 const EVAL_SNAPSHOT_MAX_RATIO: usize = 4;
@@ -562,20 +570,34 @@ impl Trainer {
     }
 
     /// At an eval point, is the overlapped (snapshot-based) evaluation
-    /// worth it? Free for algorithms whose evaluate ignores chunks;
-    /// otherwise the deep clone must stay within
-    /// [`EVAL_SNAPSHOT_MAX_RATIO`]× the model size, else the iteration
-    /// falls back to the barriered, clone-free evaluation — the PR-3
-    /// schedule — rather than trade a dataset-sized memcpy for a
-    /// model-sized flush. Either schedule yields bit-identical metrics,
-    /// so this gate is a pure wallclock decision.
+    /// worth it? Free for algorithms whose evaluate ignores chunks.
+    /// Otherwise the snapshot costs only the *state* bytes (payloads are
+    /// `Arc`-shared, never copied), while a chunk-reading evaluation
+    /// streams every payload byte plus the model regardless of schedule —
+    /// so the snapshot pays whenever its state memcpy stays within
+    /// [`EVAL_SNAPSHOT_MAX_RATIO`]× those streamed bytes. For CoCoA (4
+    /// state bytes per sample vs a full feature row) this always holds:
+    /// large-dataset CoCoA takes the overlapped eval path. Only an
+    /// algorithm whose per-sample state dwarfs both its model and its
+    /// sample data falls back to the barriered, snapshot-free schedule.
+    /// Either schedule yields bit-identical metrics, so this gate is a
+    /// pure wallclock decision.
     fn eval_overlap_affordable(&self) -> bool {
         if !self.algo.eval_reads_chunks() {
             return true;
         }
-        let snapshot_bytes: usize = self.tasks.iter().map(|t| t.store.size_bytes()).sum();
+        let mut state_bytes = 0usize;
+        let mut payload_bytes = 0usize;
+        for t in &self.tasks {
+            // One lock per store; per-chunk payload sizes are cached at
+            // construction, so this is O(chunks), not O(dataset).
+            let (p, s) = t.store.byte_split();
+            payload_bytes += p;
+            state_bytes += s;
+        }
         let model_bytes = self.model.len() * std::mem::size_of::<f32>();
-        snapshot_bytes <= model_bytes.saturating_mul(EVAL_SNAPSHOT_MAX_RATIO)
+        let streamed = model_bytes.saturating_add(payload_bytes);
+        state_bytes <= streamed.saturating_mul(EVAL_SNAPSHOT_MAX_RATIO)
     }
 
     /// Clone every task's chunks, in the exact order
@@ -587,14 +609,15 @@ impl Trainer {
     /// both content and order must be captured here for the overlapped
     /// metric to be bit-identical to the barriered one.
     ///
-    /// Cost: a deep clone of every chunk (immutable payloads included),
-    /// O(dataset bytes) on the serialized dispatch path — only paid when
-    /// the algorithm's evaluate reads chunks at all (lSGD skips it
-    /// entirely). For chunk-reading algorithms on large datasets this
-    /// can rival what the overlap saves; ROADMAP names the fix
-    /// (copy-on-write payloads / state-only snapshot) as a next step.
-    /// Disable `cfg.overlap` to force the barriered, clone-free eval if
-    /// that trade-off bites first.
+    /// Cost: *state-only* — `Chunk::clone` shares the immutable payload
+    /// by `Arc` and copies just the per-sample state, so the snapshot
+    /// allocates O(per-sample state bytes), never O(dataset). The next
+    /// iteration's workers mutate their own chunks' state `Vec`s, which
+    /// the snapshot no longer aliases; the shared payloads are immutable
+    /// post-chunking by construction (`chunks::chunk` privacy), so the
+    /// snapshot stays exactly the bytes the barriered evaluation would
+    /// have read. Only paid when the algorithm's evaluate reads chunks at
+    /// all (lSGD skips it entirely).
     fn snapshot_eval_chunks(&self) -> Vec<Chunk> {
         let mut all = Vec::new();
         for task in &self.tasks {
@@ -797,9 +820,10 @@ impl Trainer {
     /// *after* an early-stopped `run()` (further `step` calls, or a
     /// chunk-reading re-evaluation) observes chunk state one iteration
     /// ahead of the barriered schedule. Rolling that back would require
-    /// snapshotting every store on every overlapped eval point; training
-    /// has stopped, so the model/metrics guarantee is the one that
-    /// matters.
+    /// retaining a state snapshot of every store at every overlapped eval
+    /// point (cheap since snapshots went state-only, but still
+    /// bookkeeping); training has stopped, so the model/metrics guarantee
+    /// is the one that matters.
     fn drain_pending(&mut self) -> Result<()> {
         if let Some(p) = self.pending.take() {
             self.pool.collect_iteration(p.iteration)?;

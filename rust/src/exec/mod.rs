@@ -58,9 +58,14 @@
 //! its observed steal count into a clamped feedback controller
 //! ([`SpwController`]) that widens `shards_per_worker` while a straggler
 //! is shedding work (heavy stealing) and narrows it when the pool is
-//! balanced (zero steals — queue overhead is then pure cost). Because
-//! geometry never affects the merged bits, adaptation is invisible to
-//! the trajectory.
+//! balanced (zero steals — queue overhead is then pure cost). The block
+//! *layout* adapts too: the queue attributes every steal to the block
+//! owner it was taken from, and the worker that lost the most shards —
+//! the straggler — is handed the smallest fixed-offset block of the next
+//! reduction ([`WorkerPool::steal_victim`]), so fast workers start with
+//! the oversized blocks instead of winning them one steal at a time.
+//! Because geometry never affects the merged bits, both adaptations are
+//! invisible to the trajectory.
 //!
 //! ## Reduce/dispatch overlap
 //!

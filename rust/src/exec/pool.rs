@@ -71,6 +71,13 @@ pub struct WorkerPool {
     /// reduction's steal count (see [`SpwController`]). `None` = fixed
     /// granularity (callers pass whatever `ReduceOptions` they like).
     spw_ctl: Option<SpwController>,
+    /// The worker most stolen *from* in the last clean reduction — the
+    /// straggler. The next reduction's layout hands it the smallest
+    /// fixed-offset block, so it starts with the least owned work while
+    /// the fast workers absorb the oversized blocks. Purely a *who does
+    /// what* decision: shard geometry (and the merged bits) are layout-
+    /// independent.
+    steal_victim: Option<NodeId>,
 }
 
 impl WorkerPool {
@@ -80,7 +87,15 @@ impl WorkerPool {
             workers: Vec::new(),
             stashed_shards: Vec::new(),
             spw_ctl: None,
+            steal_victim: None,
         }
+    }
+
+    /// The straggler identified by the last clean reduction (most shards
+    /// stolen from its block), if any. Fed into the next reduction's
+    /// steal-aware block layout.
+    pub fn steal_victim(&self) -> Option<NodeId> {
+        self.steal_victim
     }
 
     /// Enable the adaptive shards-per-worker feedback loop, starting at
@@ -167,6 +182,12 @@ impl WorkerPool {
         // worker must stop being addressable (a dead entry would collide
         // with a future re-assignment of the same node id).
         let mut w = self.workers.remove(idx);
+        // Same reasoning for the layout feedback: a fresh worker that
+        // later reuses this node id must not inherit the departed
+        // straggler's smallest-block penalty.
+        if self.steal_victim == Some(node) {
+            self.steal_victim = None;
+        }
         let result = match w.commands.send(Command::DrainChunks) {
             Err(_) => Err(anyhow!("worker for node {node} is gone")),
             Ok(()) => loop {
@@ -285,7 +306,18 @@ impl WorkerPool {
         // reduction (or a re-assigned node id) and must not shadow a
         // future worker's real reply.
         self.stashed_shards.clear();
-        let queue = Arc::new(ShardQueue::new(model.len(), self.workers.len(), opts));
+        // Steal-aware layout: the worker most stolen from last round gets
+        // the smallest block (None if it was revoked since, or the last
+        // round was calm).
+        let small_slot = self
+            .steal_victim
+            .and_then(|v| self.workers.iter().position(|w| w.node == v));
+        let queue = Arc::new(ShardQueue::new_with_layout(
+            model.len(),
+            self.workers.len(),
+            opts,
+            small_slot,
+        ));
         let buf = Arc::new(ReduceBuf::new(model.len(), queue.n_shards()));
         let mut nodes = Vec::with_capacity(self.workers.len());
         for (slot, w) in self.workers.iter().enumerate() {
@@ -356,6 +388,7 @@ impl WorkerPool {
         match first_err {
             Some(e) => {
                 pending.buf.poison();
+                self.steal_victim = None;
                 Err(e)
             }
             None => {
@@ -365,6 +398,18 @@ impl WorkerPool {
                 if let Some(ctl) = &mut self.spw_ctl {
                     ctl.observe(stats.steals, stats.workers);
                 }
+                // Steal-aware layout feedback: remember who was stolen
+                // from the most (the straggler) so the next layout hands
+                // it the smallest block. Slot order == dispatch order ==
+                // `pending.nodes` order.
+                let losses = pending.queue.stolen_from();
+                self.steal_victim = losses
+                    .iter()
+                    .copied()
+                    .enumerate()
+                    .max_by_key(|&(_, l)| l)
+                    .filter(|&(_, l)| l > 0)
+                    .and_then(|(slot, _)| pending.nodes.get(slot).map(|(n, _)| *n));
                 Ok(stats)
             }
         }
@@ -527,6 +572,51 @@ mod tests {
         // Clamped on entry, like the controller itself.
         p.enable_adaptive_spw(10_000);
         assert_eq!(p.adaptive_spw(), Some(crate::exec::SPW_MAX));
+    }
+
+    #[test]
+    fn steal_victim_tracks_straggler_and_survives_resizes() {
+        let algo: Arc<dyn Algorithm> = Arc::new(CocoaAlgo::new(
+            CocoaConfig::default(),
+            Backend::native_cocoa(),
+            10_000,
+            200_000,
+        ));
+        let mut p = WorkerPool::new(Arc::clone(&algo));
+        for i in 0..4u32 {
+            p.spawn_worker(i, SharedStore::new());
+        }
+        assert_eq!(p.steal_victim(), None);
+        // Node 0 reduces 100 ns/element slower: if any stealing happens at
+        // all, the thieves drain node 0's block, so the recorded victim —
+        // when there is one — can only be node 0 (with 2+ fast workers a
+        // fast block may also lose the odd shard, but never more than the
+        // straggler's; ties resolve among actual losers).
+        p.set_reduce_slowdown(0, 100).unwrap();
+        let model = Arc::new(vec![0.1f32; 200_000]);
+        let updates = Arc::new(vec![
+            LocalUpdate { delta: vec![1e-3; 200_000], samples: 10, loss_sum: 0.0 };
+            3
+        ]);
+        let opts = ReduceOptions { shards_per_worker: 16, stealing: true };
+        let (merged, _) = p
+            .reduce_model(&model, Arc::clone(&updates), 3, opts)
+            .unwrap();
+        assert_eq!(merged.len(), 200_000);
+        // Scheduling-dependent, so only a sanity constraint: the victim is
+        // a live node (or none, if the round was calm).
+        if let Some(v) = p.steal_victim() {
+            assert!(p.has_worker(v), "victim must be a resident worker");
+        }
+        // A revoked victim must not panic the next layout: it simply maps
+        // to no slot.
+        p.shutdown_worker(0).unwrap();
+        let (merged2, _) = p
+            .reduce_model(&model, Arc::clone(&updates), 3, opts)
+            .unwrap();
+        let mut serial = (*model).clone();
+        algo.merge(&mut serial, &updates, 3);
+        assert_eq!(merged2, serial, "layout feedback must never change the bits");
     }
 
     #[test]

@@ -163,11 +163,44 @@ pub struct ReduceStats {
     pub workers: usize,
 }
 
+/// Distribute the `extra` oversized (base + 1) blocks over the workers,
+/// skipping `small_slot` — the steal-aware layout. With `small_slot =
+/// None` this reproduces the historical layout (the first `extra` slots
+/// get the oversized blocks); with a slot set, that worker is guaranteed
+/// the *smallest* block the geometry allows, so a straggler that was
+/// stolen from last round starts the next reduction with the least work.
+/// Only the partition of shard *indices* into blocks changes — shard
+/// offsets stay a pure function of `(model_len, shard count)`, so the
+/// merged bits are untouched whatever the layout.
+fn block_sizes(n_shards: usize, n_workers: usize, small_slot: Option<usize>) -> Vec<usize> {
+    let base = n_shards / n_workers;
+    let extra = n_shards % n_workers;
+    let mut sizes = vec![base; n_workers];
+    // `extra < n_workers` always, and at most one slot is skipped, so the
+    // ring walk below always finds enough slots to take the `+1`s.
+    let skip = small_slot.filter(|s| *s < n_workers && n_workers > 1);
+    let mut given = 0usize;
+    let mut w = 0usize;
+    while given < extra {
+        let idx = w % n_workers;
+        w += 1;
+        if Some(idx) == skip {
+            continue;
+        }
+        sizes[idx] += 1;
+        given += 1;
+    }
+    sizes
+}
+
 /// The shared shard-claim queue for one reduction.
 ///
 /// Shard geometry is a pure function of `(model_len, n_shards)` and never
 /// depends on which worker claims what, so any claim order yields the
-/// same set of `(offset, len)` ranges — the determinism invariant.
+/// same set of `(offset, len)` ranges — the determinism invariant. The
+/// block *layout* (which worker starts on which shard indices) may vary
+/// — e.g. the steal-aware layout hands a known straggler the smallest
+/// block — without touching that invariant.
 pub struct ShardQueue {
     model_len: usize,
     /// Fixed shard length (last shard may be shorter).
@@ -179,25 +212,38 @@ pub struct ShardQueue {
     /// `fetch_add` makes every claim unique even under contention.
     block_start: Vec<usize>,
     cursors: Vec<AtomicUsize>,
+    /// Steals suffered per block owner: `stolen_from[v]` counts shards of
+    /// block `v` claimed by some other worker. The victim with the most
+    /// losses is the straggler the next layout shrinks.
+    stolen_from: Vec<AtomicUsize>,
 }
 
 impl ShardQueue {
     /// Lay out `~shards_per_worker × n_workers` fixed-offset shards over a
     /// `model_len`-element model, split into `n_workers` contiguous blocks
-    /// of shard indices.
+    /// of shard indices (historical near-equal layout).
     pub fn new(model_len: usize, n_workers: usize, opts: ReduceOptions) -> Self {
+        Self::new_with_layout(model_len, n_workers, opts, None)
+    }
+
+    /// Like [`ShardQueue::new`], but hand worker `small_slot` the smallest
+    /// block (steal-aware layout for a known straggler).
+    pub fn new_with_layout(
+        model_len: usize,
+        n_workers: usize,
+        opts: ReduceOptions,
+        small_slot: Option<usize>,
+    ) -> Self {
         assert!(n_workers > 0 && model_len > 0);
         let target = (n_workers * opts.shards_per_worker.max(1)).min(model_len);
         let per = model_len.div_ceil(target);
         let n_shards = model_len.div_ceil(per);
-        // Near-equal contiguous blocks of shard indices per worker.
-        let base = n_shards / n_workers;
-        let extra = n_shards % n_workers;
+        let sizes = block_sizes(n_shards, n_workers, small_slot);
         let mut block_start = Vec::with_capacity(n_workers + 1);
         let mut at = 0usize;
-        for w in 0..n_workers {
+        for &sz in &sizes {
             block_start.push(at);
-            at += base + usize::from(w < extra);
+            at += sz;
         }
         block_start.push(at);
         debug_assert_eq!(at, n_shards);
@@ -212,11 +258,28 @@ impl ShardQueue {
             stealing: opts.stealing,
             block_start,
             cursors,
+            stolen_from: (0..n_workers).map(|_| AtomicUsize::new(0)).collect(),
         }
     }
 
     pub fn n_shards(&self) -> usize {
         self.n_shards
+    }
+
+    /// Shards lost per block owner this reduction (index = worker slot).
+    /// Scheduling-dependent — like steal counts, this may only influence
+    /// *who* does future work (the steal-aware layout), never virtual
+    /// time or the merged bits.
+    pub fn stolen_from(&self) -> Vec<usize> {
+        self.stolen_from
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Number of shard indices in worker `slot`'s own block.
+    pub fn block_len(&self, slot: usize) -> usize {
+        self.block_start[slot + 1] - self.block_start[slot]
     }
 
     /// Fixed `(offset, len)` range of shard `idx`.
@@ -242,6 +305,11 @@ impl ShardQueue {
             if self.cursors[v].load(Ordering::Relaxed) < end {
                 let idx = self.cursors[v].fetch_add(1, Ordering::Relaxed);
                 if idx < end {
+                    if k > 0 {
+                        // Block `v`'s owner lost this shard to a thief —
+                        // the signal the steal-aware layout feeds on.
+                        self.stolen_from[v].fetch_add(1, Ordering::Relaxed);
+                    }
                     return Some((idx, k > 0));
                 }
             }
@@ -433,6 +501,69 @@ mod tests {
             })
             .sum();
         assert_eq!(total, 3);
+    }
+
+    #[test]
+    fn steal_aware_layout_never_changes_coverage_or_geometry() {
+        // Whatever slot gets the small block, every shard is still handed
+        // out exactly once and every shard's (offset, len) is identical to
+        // the default layout's — the bit-identity precondition.
+        for (len, w, spw) in [(997usize, 4usize, 4usize), (1000, 3, 1), (5, 8, 2), (64, 2, 16)] {
+            let opts = ReduceOptions { shards_per_worker: spw, stealing: true };
+            let reference = ShardQueue::new(len, w, opts);
+            for small in std::iter::once(None).chain((0..w).map(Some)) {
+                let q = ShardQueue::new_with_layout(len, w, opts, small);
+                assert_eq!(q.n_shards(), reference.n_shards(), "len={len} w={w}");
+                for i in 0..q.n_shards() {
+                    assert_eq!(q.shard_range(i), reference.shard_range(i), "shard {i}");
+                }
+                let mut seen = vec![false; q.n_shards()];
+                for slot in 0..w {
+                    while let Some((idx, _)) = q.claim(slot) {
+                        assert!(!seen[idx], "shard {idx} claimed twice (small={small:?})");
+                        seen[idx] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "coverage hole (small={small:?})");
+                // Block sizes always sum to the shard count.
+                let total: usize = (0..w).map(|s| q.block_len(s)).sum();
+                assert_eq!(total, q.n_shards());
+            }
+        }
+    }
+
+    #[test]
+    fn victim_slot_gets_floor_sized_block() {
+        // 13 shards over 4 workers: base 3, extra 1. The victim must get
+        // the floor size; some other slot absorbs the +1.
+        let opts = ReduceOptions { shards_per_worker: 1, stealing: true };
+        for victim in 0..4usize {
+            let q = ShardQueue::new_with_layout(13, 4, opts, Some(victim));
+            assert_eq!(q.block_len(victim), 3, "victim {victim} must get the floor");
+            let max = (0..4).map(|s| q.block_len(s)).max().unwrap();
+            assert_eq!(max, 4, "someone else takes the oversized block");
+        }
+        // Without a victim, the historical layout: first slot oversized.
+        let q = ShardQueue::new_with_layout(13, 4, opts, None);
+        assert_eq!(q.block_len(0), 4);
+        assert_eq!(q.block_len(3), 3);
+    }
+
+    #[test]
+    fn stolen_from_attributes_losses_to_block_owners() {
+        let q = ShardQueue::new(100, 4, ReduceOptions { shards_per_worker: 2, stealing: true });
+        // Slot 2 drains everything: its own block first (no steal), then
+        // the other three blocks (all steals, attributed to their owners).
+        while q.claim(2).is_some() {}
+        let losses = q.stolen_from();
+        assert_eq!(losses[2], 0, "own-block claims are not steals");
+        let total_lost: usize = losses.iter().sum();
+        assert_eq!(
+            total_lost,
+            q.n_shards() - q.block_len(2),
+            "every foreign shard is attributed to its block owner"
+        );
+        assert!(losses.iter().enumerate().all(|(s, &l)| s == 2 || l == q.block_len(s)));
     }
 
     #[test]

@@ -68,9 +68,13 @@ pub enum Command {
     /// Add chunks to the worker's store over the channel. The trainer
     /// installs chunks by writing the shared store directly between
     /// iterations; this command serves coordinators without a store
-    /// handle.
+    /// handle. Zero-copy either way: the `Chunk` values move, and their
+    /// immutable payloads are `Arc`-shared — a coordinator that retains
+    /// copies (clone before install) pays only the per-sample state.
     InstallChunks(Vec<Chunk>),
     /// Hand every local chunk back to the coordinator (revocation drain).
+    /// The chunks move out with their payload `Arc`s intact — an elastic
+    /// revoke/reinstall round-trip never touches sample bytes.
     DrainChunks,
     /// Exit the worker loop.
     Shutdown,

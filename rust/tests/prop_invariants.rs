@@ -38,7 +38,7 @@ fn prop_chunking_conserves_samples() {
         };
         let total: usize = chunks.iter().map(|c| c.n_samples()).sum();
         assert_eq!(total, n, "case {case}: lost samples");
-        let mut ids: Vec<u32> = chunks.iter().flat_map(|c| c.global_ids.clone()).collect();
+        let mut ids: Vec<u32> = chunks.iter().flat_map(|c| c.global_ids().to_vec()).collect();
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), n, "case {case}: duplicate/missing ids");
@@ -174,7 +174,7 @@ fn prop_cocoa_v_equals_w_of_alpha() {
         let mut w = vec![0.0f32; ds.dim()];
         for part in &parts {
             for c in part {
-                if let chicle::chunks::Payload::DenseBinary { x, dim, y } = &c.payload {
+                if let chicle::chunks::Samples::DenseBinary { x, dim, y } = c.samples() {
                     for i in 0..y.len() {
                         let scale = c.state[i] * y[i] / lam_n;
                         for j in 0..*dim {
