@@ -7,10 +7,10 @@ use std::time::Duration;
 
 use chicle::algos::nn::linear::{fused_linear_fwd, Act};
 use chicle::algos::nn::NativeModel;
-use chicle::algos::svm::{scd_pass_dense, scd_pass_sparse};
+use chicle::algos::svm::{scd_pass_dense, scd_pass_dense_scalar, scd_pass_sparse};
 use chicle::data::{synth, FeatureMatrix};
 use chicle::util::bench::Bencher;
-use chicle::util::Rng;
+use chicle::util::{kernels, Rng};
 
 fn main() {
     let mut b = Bencher::new(Duration::from_secs(2));
@@ -54,6 +54,49 @@ fn main() {
         fused_linear_fwd(&xx, &w, &bias, m, k, n, Act::Relu).0[0]
     });
 
+    // --- scalar/simd kernel pairs (speedup asserted after the TSV) ---
+    // Same fused-linear geometry as above, dispatched vs forced-scalar:
+    // both run the identical blocked loop, so the pair isolates the
+    // kernel speedup (outputs are bit-equal).
+    let fl_scalar = b
+        .bench("nn/fused_linear_scalar", || {
+            kernels::fused_linear_fwd_scalar(&xx, &w, &bias, m, k, n, Act::Relu).0[0]
+        })
+        .p50;
+    let fl_simd = b
+        .bench("nn/fused_linear_simd", || {
+            fused_linear_fwd(&xx, &w, &bias, m, k, n, Act::Relu).0[0]
+        })
+        .p50;
+
+    // SCD dense pass at a SIMD-friendly width (dim 256; the 28-wide row
+    // above stays as the paper-shaped workload).
+    let (s2, dim2) = (2048usize, 256usize);
+    let x2: Vec<f32> = (0..s2 * dim2).map(|_| rng.normal_f32()).collect();
+    let y2: Vec<f32> = (0..s2).map(|_| if rng.bool(0.5) { 1.0 } else { -1.0 }).collect();
+    let order2: Vec<usize> = (0..s2).collect();
+    let lam_n2 = 0.01 * s2 as f32;
+    let scd_scalar = b
+        .bench("scd/dense_pass_scalar", || {
+            let mut alpha = vec![0.0f32; s2];
+            let mut v = vec![0.0f32; dim2];
+            let mut dv = vec![0.0f32; dim2];
+            scd_pass_dense_scalar(
+                &x2, dim2, &y2, &order2, &mut alpha, &mut v, &mut dv, lam_n2, 16.0,
+            );
+            v[0]
+        })
+        .p50;
+    let scd_simd = b
+        .bench("scd/dense_pass_simd", || {
+            let mut alpha = vec![0.0f32; s2];
+            let mut v = vec![0.0f32; dim2];
+            let mut dv = vec![0.0f32; dim2];
+            scd_pass_dense(&x2, dim2, &y2, &order2, &mut alpha, &mut v, &mut dv, lam_n2, 16.0);
+            v[0]
+        })
+        .p50;
+
     // --- NN grad steps (lSGD inner loop) ---
     let mlp = NativeModel::mlp_default();
     let mlp_params = mlp.init(1);
@@ -75,4 +118,19 @@ fn main() {
 
     b.write_tsv("results/bench_algos.tsv").unwrap();
     b_slow.write_tsv("results/bench_algos_cnn.tsv").unwrap();
+
+    // In-bench perf gates (PR-3/PR-5 pattern): asserted on the measured
+    // p50s only after the TSV artifacts are written, so a failure still
+    // leaves the numbers on disk. Skipped when the SIMD path is not live
+    // (feature off or no AVX2) — both pair sides would run scalar.
+    if kernels::simd_active() {
+        assert!(
+            fl_simd * 3 <= fl_scalar * 2,
+            "fused_linear SIMD p50 {fl_simd:?} not >=1.5x faster than scalar {fl_scalar:?}"
+        );
+        assert!(
+            scd_simd * 3 <= scd_scalar * 2,
+            "scd dense-pass SIMD p50 {scd_simd:?} not >=1.5x faster than scalar {scd_scalar:?}"
+        );
+    }
 }

@@ -19,7 +19,7 @@ use chicle::coordinator::{TaskState, Trainer};
 use chicle::data::{synth, FeatureMatrix, Labels};
 use chicle::sim::{makespan, microtask_iteration_time};
 use chicle::util::bench::Bencher;
-use chicle::util::Rng;
+use chicle::util::{kernels, Rng};
 
 /// An eval-every-iteration lSGD/MLP trainer (235k-parameter model, well
 /// above the parallel-merge threshold) for the eval-overlap benches:
@@ -92,6 +92,34 @@ fn main() {
         algo.merge(&mut model, &updates, 16);
         model[0]
     });
+
+    // --- merge-fold kernel pair: the elementwise weighted fold that
+    // merge_shard runs per shard, dispatched vs forced-scalar, at an
+    // L1-resident shard geometry (8 updates × 4096 f32 = 16 KiB shard +
+    // 16 KiB streamed delta) so the pair measures kernel throughput, not
+    // DRAM bandwidth. Fold order per element is identical on both sides
+    // (lane-per-element), so outputs are bit-equal; the ≥1.5× speedup is
+    // asserted after the TSV is written. ---
+    let fold_len = 4096usize;
+    let fold_deltas: Vec<Vec<f32>> =
+        (0..8).map(|i| vec![1e-6 * (i + 1) as f32; fold_len]).collect();
+    let mut fold_shard = vec![0.0f32; fold_len];
+    let fold_scalar = b
+        .bench("merge/fold_scalar", || {
+            for (i, d) in fold_deltas.iter().enumerate() {
+                kernels::scalar::axpy(&mut fold_shard, 1.0 / (i + 1) as f32, d);
+            }
+            fold_shard[0]
+        })
+        .p50;
+    let fold_simd = b
+        .bench("merge/fold_simd", || {
+            for (i, d) in fold_deltas.iter().enumerate() {
+                kernels::axpy(&mut fold_shard, 1.0 / (i + 1) as f32, d);
+            }
+            fold_shard[0]
+        })
+        .p50;
 
     // --- merge phase: serial fold vs work-stealing sharded reduction
     // through the worker pool (same updates, same model size). The pool
@@ -340,4 +368,13 @@ fn main() {
         snap_arc * 5 <= snap_deep,
         "state-only snapshot {snap_arc:?} must be ≥5× cheaper than deep-copy {snap_deep:?}"
     );
+
+    // Merge-fold kernel speedup, skipped when the SIMD path is not live
+    // (feature off or no AVX2 — both pair sides ran the scalar kernel).
+    if kernels::simd_active() {
+        assert!(
+            fold_simd * 3 <= fold_scalar * 2,
+            "merge fold SIMD p50 {fold_simd:?} not >=1.5x faster than scalar {fold_scalar:?}"
+        );
+    }
 }

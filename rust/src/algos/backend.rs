@@ -215,10 +215,9 @@ impl Backend {
                     // Same convention as the kernel/native pass: the local
                     // view v accumulates sigma'-scaled updates (CoCoA+),
                     // while dv stays unscaled for the global merge.
-                    for ((tv, vv), &d) in total_dv.iter_mut().zip(v.iter_mut()).zip(dv) {
-                        *tv += d;
-                        *vv += sigma * d;
-                    }
+                    // fused_axpy2 with scale = 1.0: u = 1.0·d is bitwise d,
+                    // so this matches the old elementwise loop exactly.
+                    crate::util::kernels::fused_axpy2(v, &mut total_dv, sigma, 1.0, dv);
                 }
                 Ok(total_dv)
             }

@@ -23,7 +23,7 @@ use anyhow::Result;
 use crate::chunks::Chunk;
 use crate::config::CocoaConfig;
 use crate::metrics::Metric;
-use crate::util::Rng;
+use crate::util::{kernels, Rng};
 
 use super::{Algorithm, Backend, LocalUpdate, ModelVec};
 
@@ -95,9 +95,7 @@ impl Algorithm for CocoaAlgo {
             let mut order = rng.permutation(n);
             order.truncate(take);
             let dv = self.backend.scd_chunk(chunk, &order, &mut v, lam_n, sigma)?;
-            for (d, &u) in delta.iter_mut().zip(&dv) {
-                *d += u;
-            }
+            kernels::acc(&mut delta, &dv);
             remaining -= take;
             processed += take;
         }
@@ -115,9 +113,10 @@ impl Algorithm for CocoaAlgo {
         // Pure elementwise sum in update order — shard-composable.
         let end = offset + shard.len();
         for u in updates {
-            for (m, &d) in shard.iter_mut().zip(&u.delta[offset..end]) {
-                *m += d;
-            }
+            // Lane-per-element accumulate: per-element fold order is this
+            // update loop, unchanged — shard-composable and bit-identical
+            // to the serial fold.
+            kernels::acc(shard, &u.delta[offset..end]);
         }
     }
 

@@ -19,7 +19,7 @@ use anyhow::{bail, Result};
 use crate::chunks::{Chunk, Samples};
 use crate::config::LsgdConfig;
 use crate::metrics::Metric;
-use crate::util::Rng;
+use crate::util::{kernels, Rng};
 
 use super::{Algorithm, Backend, LocalUpdate, ModelVec};
 
@@ -203,10 +203,11 @@ impl Algorithm for LsgdAlgo {
                 (g, loss)
             };
             loss_sum += loss;
-            for ((p, m), &g) in params.iter_mut().zip(&mut momentum).zip(&grads) {
-                *m = mu * *m + g;
-                *p -= lr * *m;
-            }
+            // m ← µ·m + g, then p ← p + (−lr)·m. Elementwise kernels;
+            // (−lr)·m is the exact IEEE negation of lr·m, so this is
+            // bit-identical to the fused `p -= lr * m` loop it replaces.
+            kernels::scale_add(&mut momentum, mu, &grads);
+            kernels::axpy(&mut params, -lr, &momentum);
         }
         let delta: Vec<f32> = params
             .iter()
@@ -234,9 +235,10 @@ impl Algorithm for LsgdAlgo {
         let end = offset + shard.len();
         for u in updates {
             let w = u.samples as f32 / total as f32;
-            for (m, &d) in shard.iter_mut().zip(&u.delta[offset..end]) {
-                *m += w * d;
-            }
+            // Lane-per-element axpy: fold order per element is exactly
+            // this update loop, so the merge stays elementwise and
+            // bit-identical to the serial fold at any shard geometry.
+            kernels::axpy(shard, w, &u.delta[offset..end]);
         }
     }
 

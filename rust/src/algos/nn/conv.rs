@@ -3,6 +3,7 @@
 //! `lax.reduce_window`), implemented via im2col + matmul.
 
 use super::linear::matmul;
+use crate::util::kernels;
 
 /// im2col for SAME padding, stride 1: output (n·h·w, ks·ks·c).
 pub fn im2col(x: &[f32], n: usize, h: usize, w: usize, c: usize, ks: usize) -> Vec<f32> {
@@ -65,9 +66,7 @@ pub fn col2im(
                         }
                         let dst = base + ((iy as usize * w) + ix as usize) * c;
                         let src = row + (ky * ks + kx) * c;
-                        for ch in 0..c {
-                            out[dst + ch] += dcol[src + ch];
-                        }
+                        kernels::acc(&mut out[dst..dst + c], &dcol[src..src + c]);
                     }
                 }
             }
@@ -95,10 +94,8 @@ pub fn conv2d_fwd(
     let mut y = vec![0.0f32; rows * cout];
     // wk is (ks,ks,cin,cout) = (inner, cout) row-major already.
     matmul(&col, wk, &mut y, rows, inner, cout);
-    for r in 0..rows {
-        for (o, &bv) in b.iter().enumerate() {
-            y[r * cout + o] += bv;
-        }
+    for row in y.chunks_exact_mut(cout) {
+        kernels::acc(row, b);
     }
     (y, col)
 }
@@ -126,10 +123,8 @@ pub fn conv2d_bwd(
     super::linear::matmul_a_bt(dy, wk, &mut dcol, rows, cout, inner);
     let dx = col2im(&dcol, n, h, w, cin, ks);
     let mut db = vec![0.0f32; cout];
-    for r in 0..rows {
-        for (o, dbv) in db.iter_mut().enumerate() {
-            *dbv += dy[r * cout + o];
-        }
+    for row in dy.chunks_exact(cout) {
+        kernels::acc(&mut db, row);
     }
     (dx, dw, db)
 }

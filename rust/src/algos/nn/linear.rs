@@ -1,98 +1,39 @@
 //! Dense linear algebra: matmul variants and the fused linear layer
 //! (native mirror of the Pallas `fused_linear` kernel).
+//!
+//! As of the SIMD-kernel port this module is a thin facade over
+//! [`crate::util::kernels`], which holds the cache-blocked,
+//! runtime-dispatched implementations. The old scalar ikj matmul here
+//! carried a per-element `av == 0.0` skip that pessimized dense inputs
+//! (a data-dependent branch per A element); the dense path is now
+//! branch-free and the skip lives in the explicit
+//! [`kernels::matmul_zero_skip`] sparse variant.
 
-/// Activation of a fused linear layer.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Act {
-    None,
-    Relu,
-    Gelu,
-}
+use crate::util::kernels;
 
-impl Act {
-    #[inline]
-    fn apply(&self, v: f32) -> f32 {
-        match self {
-            Act::None => v,
-            Act::Relu => v.max(0.0),
-            Act::Gelu => gelu(v),
-        }
-    }
-}
+pub use crate::util::kernels::{gelu, Act};
 
-/// tanh-free exact GELU: x·Φ(x) with Φ via erf — matches jax.nn.gelu
-/// (approximate=True default uses tanh; jax default IS approximate).
-/// We mirror jax's default tanh approximation.
-#[inline]
-pub fn gelu(x: f32) -> f32 {
-    const C: f32 = 0.7978845608; // sqrt(2/π)
-    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
-}
-
-#[inline]
-fn gelu_grad(x: f32) -> f32 {
-    const C: f32 = 0.7978845608;
-    let x3 = x * x * x;
-    let t = (C * (x + 0.044715 * x3)).tanh();
-    let sech2 = 1.0 - t * t;
-    0.5 * (1.0 + t) + 0.5 * x * sech2 * C * (1.0 + 3.0 * 0.044715 * x * x)
-}
-
-/// C(m,n) = A(m,k) · B(k,n). Cache-friendly ikj loop; `c` is overwritten.
+/// C(m,n) = A(m,k) · B(k,n), dense, cache-blocked; `c` is overwritten.
 pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    c.fill(0.0);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
-    }
+    kernels::matmul(a, b, c, m, k, n);
+}
+
+/// Sparse-A variant: skips B rows whose A coefficient is exactly zero.
+/// Use for post-ReLU activations and other zero-heavy operands; the
+/// dense [`matmul`] is faster when A is dense.
+pub fn matmul_zero_skip(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    kernels::matmul_zero_skip(a, b, c, m, k, n);
 }
 
 /// C(m,n) = Aᵀ(m,k stored k,m) · B(k,n) — i.e. A is (k, m) and we compute
 /// AᵀB. Used for dW = Xᵀ·dY.
 pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
-    assert_eq!(a.len(), k * m);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    c.fill(0.0);
-    for p in 0..k {
-        let arow = &a[p * m..(p + 1) * m];
-        let brow = &b[p * n..(p + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let crow = &mut c[i * n..(i + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
-    }
+    kernels::matmul_at_b(a, b, c, k, m, n);
 }
 
 /// C(m,k) = A(m,n) · Bᵀ(n,k stored k,n). Used for dX = dY·Wᵀ.
 pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
-    assert_eq!(a.len(), m * n);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * k);
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        let crow = &mut c[i * k..(i + 1) * k];
-        for (j, cv) in crow.iter_mut().enumerate() {
-            *cv = crate::algos::svm::dot(arow, &b[j * n..(j + 1) * n]);
-        }
-    }
+    kernels::matmul_a_bt(a, b, c, m, n, k);
 }
 
 /// Forward fused linear: y(m,n) = act(x(m,k)·w(k,n) + bias). Returns the
@@ -106,15 +47,7 @@ pub fn fused_linear_fwd(
     n: usize,
     act: Act,
 ) -> (Vec<f32>, Vec<f32>) {
-    let mut pre = vec![0.0f32; m * n];
-    matmul(x, w, &mut pre, m, k, n);
-    for row in 0..m {
-        for (j, &bv) in bias.iter().enumerate() {
-            pre[row * n + j] += bv;
-        }
-    }
-    let y: Vec<f32> = pre.iter().map(|&v| act.apply(v)).collect();
-    (y, pre)
+    kernels::fused_linear_fwd(x, w, bias, m, k, n, act)
 }
 
 /// Backward fused linear given upstream grad `dy`:
@@ -130,27 +63,7 @@ pub fn fused_linear_bwd(
     n: usize,
     act: Act,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    // d(pre) = dy ⊙ act'(pre)
-    let dpre: Vec<f32> = match act {
-        Act::None => dy.to_vec(),
-        Act::Relu => dy
-            .iter()
-            .zip(pre)
-            .map(|(&g, &p)| if p > 0.0 { g } else { 0.0 })
-            .collect(),
-        Act::Gelu => dy.iter().zip(pre).map(|(&g, &p)| g * gelu_grad(p)).collect(),
-    };
-    let mut dx = vec![0.0f32; m * k];
-    matmul_a_bt(&dpre, w, &mut dx, m, n, k);
-    let mut dw = vec![0.0f32; k * n];
-    matmul_at_b(x, &dpre, &mut dw, m, k, n);
-    let mut db = vec![0.0f32; n];
-    for row in 0..m {
-        for (j, dbv) in db.iter_mut().enumerate() {
-            *dbv += dpre[row * n + j];
-        }
-    }
-    (dx, dw, db)
+    kernels::fused_linear_bwd(x, w, pre, dy, m, k, n, act)
 }
 
 #[cfg(test)]

@@ -23,26 +23,32 @@ pub fn softmax_xent(
         }
         actually_valid += 1.0;
         let row = &logits[i * n_classes..(i + 1) * n_classes];
-        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let max = crate::util::kernels::vmax(row);
+        // One fused pass per row: shifted exponentials (stashed in the
+        // grad row and reused by the backward, so each exp is computed
+        // once), their sum, and the argmax. The `is_ge` update keeps the
+        // last maximum on ties, matching Iterator::max_by + total_cmp.
+        let drow = &mut dlogits[i * n_classes..(i + 1) * n_classes];
         let mut sum = 0.0f32;
-        for &v in row {
-            sum += (v - max).exp();
+        let mut best = f32::NEG_INFINITY;
+        let mut argmax = 0usize;
+        for (j, (&v, dv)) in row.iter().zip(drow.iter_mut()).enumerate() {
+            let e = (v - max).exp();
+            sum += e;
+            *dv = e;
+            if v.total_cmp(&best).is_ge() {
+                best = v;
+                argmax = j;
+            }
         }
         let log_sum = sum.ln() + max;
         let li = label as usize;
         loss_sum += (log_sum - row[li]) as f64;
-        let argmax = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.total_cmp(b.1))
-            .map(|(j, _)| j)
-            .unwrap();
         if argmax == li {
             correct += 1.0;
         }
-        let drow = &mut dlogits[i * n_classes..(i + 1) * n_classes];
         for (j, dv) in drow.iter_mut().enumerate() {
-            let p = (row[j] - log_sum).exp();
+            let p = *dv / sum;
             *dv = (p - if j == li { 1.0 } else { 0.0 }) / n_valid;
         }
     }

@@ -12,6 +12,49 @@
 //! ```
 
 use crate::chunks::{Chunk, Samples};
+use crate::util::kernels;
+
+type DotFn = fn(&[f32], &[f32]) -> f32;
+type FusedAxpy2Fn = fn(&mut [f32], &mut [f32], f32, f32, &[f32]);
+
+/// Shared dense-pass body, parameterized over the dot / fused-axpy
+/// kernels so the dispatched and scalar-reference entry points run the
+/// exact same row loop (and therefore produce bit-identical α, v, dv —
+/// the bench pair below measures pure kernel speedup).
+#[allow(clippy::too_many_arguments)]
+fn scd_pass_dense_with(
+    dot_fn: DotFn,
+    fax2: FusedAxpy2Fn,
+    x: &[f32],
+    dim: usize,
+    y: &[f32],
+    order: &[usize],
+    alpha: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+    lam_n: f32,
+    sigma: f32,
+) {
+    for &i in order {
+        let xi = &x[i * dim..(i + 1) * dim];
+        let sq = dot_fn(xi, xi);
+        if sq <= 0.0 {
+            continue;
+        }
+        let margin = y[i] * dot_fn(xi, v);
+        let step = (1.0 - margin) / (sigma * sq / lam_n);
+        let a_new = (alpha[i] + step).clamp(0.0, 1.0);
+        if a_new == alpha[i] {
+            // Clipped no-op (α pinned at its box bound) — skip the axpy.
+            continue;
+        }
+        let scale = (a_new - alpha[i]) * y[i] / lam_n;
+        alpha[i] = a_new;
+        // Fused axpy into both v (σ'-scaled CoCoA+ local view) and dv
+        // (raw delta for the global merge).
+        fax2(v, dv, sigma, scale, xi);
+    }
+}
 
 /// One local SDCA pass over a dense chunk: visit rows in `order`, mutate
 /// `alpha` (chunk state) and `v` in place, and accumulate the delta in
@@ -29,29 +72,48 @@ pub fn scd_pass_dense(
     lam_n: f32,
     sigma: f32,
 ) {
-    for &i in order {
-        let xi = &x[i * dim..(i + 1) * dim];
-        let sq: f32 = xi.iter().map(|a| a * a).sum();
-        if sq <= 0.0 {
-            continue;
-        }
-        let margin = y[i] * dot(xi, v);
-        let step = (1.0 - margin) / (sigma * sq / lam_n);
-        let a_new = (alpha[i] + step).clamp(0.0, 1.0);
-        if a_new == alpha[i] {
-            // Clipped no-op (α pinned at its box bound) — skip the axpy.
-            continue;
-        }
-        let scale = (a_new - alpha[i]) * y[i] / lam_n;
-        alpha[i] = a_new;
-        // Bounds-check-free fused axpy into both v (σ'-scaled CoCoA+
-        // local view) and dv (raw delta for the global merge).
-        for ((vv, dvv), &xv) in v.iter_mut().zip(dv.iter_mut()).zip(xi) {
-            let u = scale * xv;
-            *vv += sigma * u;
-            *dvv += u;
-        }
-    }
+    scd_pass_dense_with(
+        kernels::dot,
+        kernels::fused_axpy2,
+        x,
+        dim,
+        y,
+        order,
+        alpha,
+        v,
+        dv,
+        lam_n,
+        sigma,
+    )
+}
+
+/// Scalar-reference twin of [`scd_pass_dense`] (bench pairing / parity):
+/// same row loop, forced onto the scalar kernels. Bit-identical output.
+#[allow(clippy::too_many_arguments)]
+pub fn scd_pass_dense_scalar(
+    x: &[f32],
+    dim: usize,
+    y: &[f32],
+    order: &[usize],
+    alpha: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+    lam_n: f32,
+    sigma: f32,
+) {
+    scd_pass_dense_with(
+        kernels::scalar::dot,
+        kernels::scalar::fused_axpy2,
+        x,
+        dim,
+        y,
+        order,
+        alpha,
+        v,
+        dv,
+        lam_n,
+        sigma,
+    )
 }
 
 /// Sparse-row variant (Criteo-like workload).
@@ -130,24 +192,13 @@ pub fn duality_gap(total_hinge: f64, total_alpha: f64, n: usize, w: &[f32], lamb
     (total_hinge - total_alpha) / n as f64 + lambda * w_sq
 }
 
+/// Deterministic dot product (fixed-lane-split kernel: identical bits
+/// run-to-run and between the scalar and SIMD paths; see
+/// [`crate::util::kernels`]).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: autovectorizes well and is deterministic.
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        acc[0] += a[i] * b[i];
-        acc[1] += a[i + 1] * b[i + 1];
-        acc[2] += a[i + 2] * b[i + 2];
-        acc[3] += a[i + 3] * b[i + 3];
-    }
-    let mut tail = 0.0f32;
-    for i in chunks * 4..a.len() {
-        tail += a[i] * b[i];
-    }
-    acc[0] + acc[1] + acc[2] + acc[3] + tail
+    kernels::dot(a, b)
 }
 
 #[cfg(test)]

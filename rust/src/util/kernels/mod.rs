@@ -1,0 +1,562 @@
+//! Explicit-SIMD, cache-blocked compute primitives for the training hot
+//! paths: `dot`, `axpy`, `scale_add`, elementwise accumulates, a blocked
+//! `matmul` family, and the fused linear forward/backward (matmul + bias
+//! + activation in one pass) — the native port of the Pallas
+//! `fused_linear` kernel sketched in `python/compile/kernels/`.
+//!
+//! # Dispatch strategy
+//!
+//! Every public kernel has exactly two implementations with *identical
+//! arithmetic structure*:
+//!
+//! * [`scalar`] — the portable reference. Reductions are written as a
+//!   fixed [`LANES`]-wide accumulator split with a fixed pairwise
+//!   horizontal-sum tree; elementwise kernels are plain per-element
+//!   loops. This path compiles everywhere and auto-vectorizes to
+//!   whatever the baseline target offers (SSE2 on x86-64).
+//! * `x86` (private) — hand-written AVX2 intrinsics, compiled only under
+//!   `--features simd` on x86-64 and selected at runtime via
+//!   `is_x86_feature_detected!("avx2")` (cached). No FMA contraction is
+//!   used anywhere: every lane performs the same IEEE-754 single-rounded
+//!   `mul` and `add` as the scalar path.
+//!
+//! The top-level functions dispatch between the two; [`simd_active`]
+//! reports which path is live (benches gate their speedup assertions on
+//! it, and skip them when the fallback is running).
+//!
+//! # Determinism: why bit-identity survives vectorization
+//!
+//! Two rules, matching the ROADMAP merge invariant:
+//!
+//! * **Merge-path (elementwise) kernels vectorize across output
+//!   elements** — lane-per-element. Element `i` of the output depends
+//!   only on element `i` of the inputs, and the fold order *per element*
+//!   is exactly the caller's loop order, so `merge_shard` built on
+//!   [`acc`]/[`axpy`] stays elementwise and bit-identical to the serial
+//!   fold at any shard geometry, worker count, or claim interleaving.
+//! * **Reduction kernels use a fixed lane split** — [`dot`] accumulates
+//!   element `i` into accumulator lane `i % LANES` and combines lanes in
+//!   a fixed pairwise tree ([`scalar::hsum`]), with the tail (`len %
+//!   LANES`) summed serially. The split depends only on the input
+//!   length, never on worker count or timing, so results are identical
+//!   run-to-run — and, because AVX2 `mul`/`add` round exactly like their
+//!   scalar counterparts, identical between the scalar and SIMD paths
+//!   too (asserted bit-for-bit by `tests/kernel_parity.rs`).
+//!
+//! Inputs are expected to be finite: `NaN` propagation in [`vmax`]
+//! differs between `f32::max` and the AVX2 `maxps` semantics, which is
+//! the one place the two paths could disagree.
+
+pub mod scalar;
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86;
+
+/// Accumulator lanes used by the fixed-split reduction kernels (two
+/// 8-wide AVX2 registers; four 4-wide SSE2 registers after autovec).
+pub const LANES: usize = 16;
+
+/// K-dimension block for the cache-blocked matmul family: the B-panel
+/// (`BLOCK_K × BLOCK_N` f32) stays L2-resident and is reused across all
+/// M rows.
+const BLOCK_K: usize = 128;
+/// N-dimension block: one `BLOCK_N` f32 strip of C/B fits L1 comfortably.
+const BLOCK_N: usize = 512;
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+fn avx2() -> bool {
+    use std::sync::OnceLock;
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    *AVX2.get_or_init(|| std::is_x86_feature_detected!("avx2"))
+}
+
+/// Is the explicit-SIMD path live (feature compiled in *and* the CPU
+/// supports AVX2)? Benches consult this before asserting speedup ratios;
+/// when `false`, every kernel below is the scalar reference.
+pub fn simd_active() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        avx2()
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+// ------------------------------------------------------------ activation
+
+/// Activation of a fused linear layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    None,
+    Relu,
+    Gelu,
+}
+
+impl Act {
+    #[inline]
+    pub fn apply(&self, v: f32) -> f32 {
+        match self {
+            Act::None => v,
+            Act::Relu => v.max(0.0),
+            Act::Gelu => gelu(v),
+        }
+    }
+}
+
+/// jax's default tanh-approximate GELU: 0.5·x·(1 + tanh(√(2/π)·(x +
+/// 0.044715·x³))). Mirrored here so native and HLO paths agree.
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.7978845608; // sqrt(2/π)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// d gelu(x) / dx for the tanh approximation.
+#[inline]
+pub fn gelu_grad(x: f32) -> f32 {
+    const C: f32 = 0.7978845608;
+    let x3 = x * x * x;
+    let t = (C * (x + 0.044715 * x3)).tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * C * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+// ----------------------------------------------------- level-1 kernels
+
+/// Fixed-lane-split dot product: deterministic run-to-run and bit-equal
+/// between the scalar and SIMD paths (see module docs).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2() {
+            // SAFETY: avx2() confirmed the CPU supports AVX2.
+            return unsafe { x86::dot(a, b) };
+        }
+    }
+    scalar::dot(a, b)
+}
+
+/// Horizontal max with a fixed lane split. Inputs must be finite (NaN
+/// semantics differ between the paths).
+#[inline]
+pub fn vmax(x: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2() {
+            // SAFETY: avx2() confirmed the CPU supports AVX2.
+            return unsafe { x86::vmax(x) };
+        }
+    }
+    scalar::vmax(x)
+}
+
+/// Elementwise accumulate: `y[i] += x[i]`. Lane-per-element.
+#[inline]
+pub fn acc(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2() {
+            // SAFETY: avx2() confirmed the CPU supports AVX2.
+            unsafe { x86::acc(y, x) };
+            return;
+        }
+    }
+    scalar::acc(y, x)
+}
+
+/// `y[i] += a · x[i]`. Lane-per-element.
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2() {
+            // SAFETY: avx2() confirmed the CPU supports AVX2.
+            unsafe { x86::axpy(y, a, x) };
+            return;
+        }
+    }
+    scalar::axpy(y, a, x)
+}
+
+/// `y[i] = beta · y[i] + x[i]` (momentum-style update). Lane-per-element.
+#[inline]
+pub fn scale_add(y: &mut [f32], beta: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2() {
+            // SAFETY: avx2() confirmed the CPU supports AVX2.
+            unsafe { x86::scale_add(y, beta, x) };
+            return;
+        }
+    }
+    scalar::scale_add(y, beta, x)
+}
+
+/// The SCD/CoCoA dual-update fused axpy: with `u = scale · x[i]`, do
+/// `v[i] += sigma · u` and `dv[i] += u` in one pass. Lane-per-element.
+#[inline]
+pub fn fused_axpy2(v: &mut [f32], dv: &mut [f32], sigma: f32, scale: f32, x: &[f32]) {
+    debug_assert_eq!(v.len(), x.len());
+    debug_assert_eq!(dv.len(), x.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2() {
+            // SAFETY: avx2() confirmed the CPU supports AVX2.
+            unsafe { x86::fused_axpy2(v, dv, sigma, scale, x) };
+            return;
+        }
+    }
+    scalar::fused_axpy2(v, dv, sigma, scale, x)
+}
+
+// ----------------------------------------------------- blocked matmul
+
+#[inline]
+fn pick_axpy() -> fn(&mut [f32], f32, &[f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2() {
+            return x86::axpy_dispatched;
+        }
+    }
+    scalar::axpy
+}
+
+#[inline]
+fn pick_dot() -> fn(&[f32], &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2() {
+            return x86::dot_dispatched;
+        }
+    }
+    scalar::dot
+}
+
+/// Shared cache-blocked accumulate loop: `c(m,n) += a(m,k) · b(k,n)`,
+/// parameterized over the axpy kernel so the scalar and SIMD entry
+/// points run the *same* blocking (and therefore the same per-element
+/// accumulation order: `p` ascending for every `c[i][j]`, independent of
+/// block boundaries).
+pub(crate) fn matmul_acc_with(
+    axpy_fn: fn(&mut [f32], f32, &[f32]),
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    for p0 in (0..k).step_by(BLOCK_K) {
+        let p1 = (p0 + BLOCK_K).min(k);
+        for j0 in (0..n).step_by(BLOCK_N) {
+            let j1 = (j0 + BLOCK_N).min(n);
+            for i in 0..m {
+                let crow = &mut c[i * n + j0..i * n + j1];
+                for p in p0..p1 {
+                    axpy_fn(crow, a[i * k + p], &b[p * n + j0..p * n + j1]);
+                }
+            }
+        }
+    }
+}
+
+fn matmul_checked(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+}
+
+/// Dense `C(m,n) = A(m,k) · B(k,n)`, cache-blocked, `c` overwritten.
+///
+/// Unconditionally dense: no per-element zero test in the hot loop (the
+/// old scalar path's `av == 0.0` skip pessimized dense inputs with a
+/// branch per A element). For genuinely sparse A use [`matmul_zero_skip`].
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_checked(a, b, c, m, k, n);
+    c.fill(0.0);
+    matmul_acc_with(pick_axpy(), a, b, c, m, k, n);
+}
+
+/// The explicit sparse-A variant: identical accumulation order to
+/// [`matmul`], but rows of B whose A coefficient is exactly `0.0` are
+/// skipped. Worth it only when a substantial fraction of A is exact
+/// zeros (e.g. post-ReLU activations); bit-identical to [`matmul`]
+/// either way, since skipping `+= 0.0 · b` only ever adds exact zeros.
+///
+/// (Not quite: `0.0 · b` can be `-0.0` or NaN for infinite `b`; with
+/// finite inputs and `+0.0`-preserving accumulation the results match —
+/// `x + 0.0 == x` for every finite non-`-0.0` x accumulated here. The
+/// parity test pins the agreement on finite data.)
+pub fn matmul_zero_skip(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_checked(a, b, c, m, k, n);
+    c.fill(0.0);
+    let axpy_fn = pick_axpy();
+    for p0 in (0..k).step_by(BLOCK_K) {
+        let p1 = (p0 + BLOCK_K).min(k);
+        for j0 in (0..n).step_by(BLOCK_N) {
+            let j1 = (j0 + BLOCK_N).min(n);
+            for i in 0..m {
+                let crow = &mut c[i * n + j0..i * n + j1];
+                for p in p0..p1 {
+                    let av = a[i * k + p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    axpy_fn(crow, av, &b[p * n + j0..p * n + j1]);
+                }
+            }
+        }
+    }
+}
+
+/// `C(m,n) = Aᵀ · B` where A is stored `(k,m)` — i.e. `AᵀB`. Used for
+/// `dW = Xᵀ·dY`. Implemented as an explicit transpose of A followed by
+/// the blocked [`matmul`] accumulation (the transpose is O(km), dwarfed
+/// by the O(mkn) product, and buys the dense contiguous inner loop).
+pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let mut at = vec![0.0f32; m * k];
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        for (i, &av) in arow.iter().enumerate() {
+            at[i * k + p] = av;
+        }
+    }
+    c.fill(0.0);
+    matmul_acc_with(pick_axpy(), &at, b, c, m, k, n);
+}
+
+/// `C(m,k) = A(m,n) · Bᵀ` where B is stored `(k,n)`. Used for
+/// `dX = dY·Wᵀ`. Row-against-row [`dot`] products: both operands are
+/// contiguous, and the fixed lane split keeps every output element
+/// deterministic.
+pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * n);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * k);
+    let dot_fn = pick_dot();
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        let crow = &mut c[i * k..(i + 1) * k];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            *cv = dot_fn(arow, &b[j * n..(j + 1) * n]);
+        }
+    }
+}
+
+// ------------------------------------------------------- fused linear
+
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fused_linear_fwd_with(
+    axpy_fn: fn(&mut [f32], f32, &[f32]),
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    act: Act,
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    assert_eq!(bias.len(), n);
+    // Fused pass: seed each output row with the bias (so pre = bias + Σ,
+    // accumulated p-ascending), run the blocked matmul accumulate, then
+    // apply the activation while the rows are still hot.
+    let mut pre = vec![0.0f32; m * n];
+    for row in pre.chunks_exact_mut(n) {
+        row.copy_from_slice(bias);
+    }
+    matmul_acc_with(axpy_fn, x, w, &mut pre, m, k, n);
+    let y: Vec<f32> = pre.iter().map(|&v| act.apply(v)).collect();
+    (y, pre)
+}
+
+/// Forward fused linear: `y(m,n) = act(x(m,k)·w(k,n) + bias)`. Returns
+/// the pre-activation too (the gelu backward needs it).
+pub fn fused_linear_fwd(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    act: Act,
+) -> (Vec<f32>, Vec<f32>) {
+    fused_linear_fwd_with(pick_axpy(), x, w, bias, m, k, n, act)
+}
+
+/// Scalar-reference forward for bench pairing and parity tests:
+/// identical blocking and per-element accumulation order to
+/// [`fused_linear_fwd`], forced onto the scalar axpy kernel (so its
+/// output is bit-equal to the dispatched version — the pair measures
+/// pure kernel speedup, not algorithmic drift).
+pub fn fused_linear_fwd_scalar(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    act: Act,
+) -> (Vec<f32>, Vec<f32>) {
+    fused_linear_fwd_with(scalar::axpy, x, w, bias, m, k, n, act)
+}
+
+/// Backward fused linear given upstream grad `dy`: returns
+/// `(dx, dw, db)`. `pre` is the forward pre-activation.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_linear_bwd(
+    x: &[f32],
+    w: &[f32],
+    pre: &[f32],
+    dy: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    act: Act,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(pre.len(), m * n);
+    assert_eq!(dy.len(), m * n);
+    // d(pre) = dy ⊙ act'(pre) — elementwise, lane-per-element safe.
+    let dpre: Vec<f32> = match act {
+        Act::None => dy.to_vec(),
+        Act::Relu => dy
+            .iter()
+            .zip(pre)
+            .map(|(&g, &p)| if p > 0.0 { g } else { 0.0 })
+            .collect(),
+        Act::Gelu => dy.iter().zip(pre).map(|(&g, &p)| g * gelu_grad(p)).collect(),
+    };
+    let mut dx = vec![0.0f32; m * k];
+    matmul_a_bt(&dpre, w, &mut dx, m, n, k);
+    let mut dw = vec![0.0f32; k * n];
+    matmul_at_b(x, &dpre, &mut dw, m, k, n);
+    let mut db = vec![0.0f32; n];
+    for row in 0..m {
+        acc(&mut db, &dpre[row * n..(row + 1) * n]);
+    }
+    (dx, dw, db)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq(n: usize, f: impl Fn(usize) -> f32) -> Vec<f32> {
+        (0..n).map(f).collect()
+    }
+
+    #[test]
+    fn dot_matches_naive_within_ulp_bound() {
+        for n in [0usize, 1, 7, 15, 16, 17, 100, 1023] {
+            let a = seq(n, |i| (i as f32 * 0.37).sin());
+            let b = seq(n, |i| ((i + 3) as f32 * 0.11).cos());
+            let naive: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64) * (y as f64)).sum();
+            let got = dot(&a, &b) as f64;
+            assert!(
+                (got - naive).abs() < 1e-4 * (1.0 + naive.abs()),
+                "n={n}: {got} vs {naive}"
+            );
+        }
+    }
+
+    #[test]
+    fn dispatched_kernels_bit_equal_scalar_reference() {
+        let n = 203; // odd tail on purpose
+        let x = seq(n, |i| (i as f32 * 0.7).sin());
+        let mut y1 = seq(n, |i| (i as f32 * 0.3).cos());
+        let mut y2 = y1.clone();
+        axpy(&mut y1, 1.25, &x);
+        scalar::axpy(&mut y2, 1.25, &x);
+        assert_eq!(y1, y2);
+        scale_add(&mut y1, 0.9, &x);
+        scalar::scale_add(&mut y2, 0.9, &x);
+        assert_eq!(y1, y2);
+        acc(&mut y1, &x);
+        scalar::acc(&mut y2, &x);
+        assert_eq!(y1, y2);
+        assert_eq!(dot(&x, &y1).to_bits(), scalar::dot(&x, &y2).to_bits());
+        assert_eq!(vmax(&x).to_bits(), scalar::vmax(&x).to_bits());
+        let (mut v1, mut dv1) = (y1.clone(), vec![0.0f32; n]);
+        let (mut v2, mut dv2) = (y2.clone(), vec![0.0f32; n]);
+        fused_axpy2(&mut v1, &mut dv1, 4.0, 0.5, &x);
+        scalar::fused_axpy2(&mut v2, &mut dv2, 4.0, 0.5, &x);
+        assert_eq!(v1, v2);
+        assert_eq!(dv1, dv2);
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        // [[1,2],[3,4]] @ I = same
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![1.0, 0.0, 0.0, 1.0];
+        let mut c = vec![0.0; 4];
+        matmul(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn zero_skip_matches_dense_on_sparse_input() {
+        let (m, k, n) = (5, 37, 19);
+        let a = seq(m * k, |i| if i % 3 == 0 { 0.0 } else { (i as f32 * 0.1).sin() });
+        let b = seq(k * n, |i| (i as f32 * 0.05).cos());
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        matmul(&a, &b, &mut c1, m, k, n);
+        matmul_zero_skip(&a, &b, &mut c2, m, k, n);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn blocked_matmul_crosses_block_boundaries_correctly() {
+        // k and n straddle BLOCK_K/BLOCK_N so the block loops matter.
+        let (m, k, n) = (3usize, 130usize, 515usize);
+        let a = seq(m * k, |i| ((i % 23) as f32 - 11.0) * 0.09);
+        let b = seq(k * n, |i| ((i % 17) as f32 - 8.0) * 0.07);
+        let mut c = vec![0.0; m * n];
+        matmul(&a, &b, &mut c, m, k, n);
+        // Naive f64 reference.
+        for i in 0..m {
+            for j in [0usize, 511, 512, 514] {
+                let want: f64 = (0..k)
+                    .map(|p| (a[i * k + p] as f64) * (b[p * n + j] as f64))
+                    .sum();
+                let got = c[i * n + j] as f64;
+                assert!(
+                    (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                    "c[{i}][{j}] = {got}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn vmax_matches_fold() {
+        for n in [1usize, 7, 16, 33] {
+            let x = seq(n, |i| ((i * 7919) % 97) as f32 - 48.0);
+            let want = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert_eq!(vmax(&x), want);
+        }
+        assert_eq!(vmax(&[]), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        // jax.nn.gelu(1.0) ≈ 0.841192, gelu(-1.0) ≈ -0.158808 (tanh approx)
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+        assert_eq!(gelu(0.0), 0.0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Portable scalar reference kernels.
+//!
+//! These are not "naive" loops: the reduction kernels are written with
+//! the *same arithmetic structure* as the AVX2 implementations in
+//! `x86.rs` — a fixed [`LANES`]-wide accumulator split and a fixed
+//! pairwise horizontal-combine tree — so the two paths perform an
+//! identical sequence of IEEE-754 single-rounded operations and produce
+//! bit-identical results. The elementwise kernels are plain
+//! lane-per-element loops, which are order-identical by construction.
+//!
+//! The structure also happens to be what the baseline x86-64 target
+//! auto-vectorizes well (four SSE2 chains for [`dot`]), so the fallback
+//! is respectable, not a strawman.
+
+use super::LANES;
+
+/// Fixed pairwise horizontal-sum tree over the [`LANES`] accumulators:
+/// fold the upper half onto the lower (`l + l+8`), then `(i, i+4)`,
+/// `(i, i+2)`, `(0, 1)` — the exact add order of the AVX2
+/// `extractf128`/`movehl`/`shuffle` reduction in `x86.rs`.
+#[inline]
+pub fn hsum(acc: &[f32; LANES]) -> f32 {
+    let mut s = [0.0f32; 8];
+    for l in 0..8 {
+        s[l] = acc[l] + acc[l + 8];
+    }
+    let t = [s[0] + s[4], s[1] + s[5], s[2] + s[6], s[3] + s[7]];
+    let u = [t[0] + t[2], t[1] + t[3]];
+    u[0] + u[1]
+}
+
+/// Fixed pairwise horizontal-max tree over 8 lanes (same shape as
+/// [`hsum`]'s lower half). Finite inputs only.
+#[inline]
+pub fn hmax(m: &[f32; 8]) -> f32 {
+    let t = [m[0].max(m[4]), m[1].max(m[5]), m[2].max(m[6]), m[3].max(m[7])];
+    let u = [t[0].max(t[2]), t[1].max(t[3])];
+    u[0].max(u[1])
+}
+
+/// Fixed-lane-split dot product: element `i` accumulates into lane
+/// `i % LANES`; lanes combine via [`hsum`]; the `len % LANES` tail is
+/// added serially. The split depends only on `len`, so the result is
+/// identical run-to-run and bit-equal to the AVX2 path.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let base = c * LANES;
+        for (l, av) in acc.iter_mut().enumerate() {
+            *av += a[base + l] * b[base + l];
+        }
+    }
+    let mut s = hsum(&acc);
+    for i in chunks * LANES..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Fixed-lane-split horizontal max (8 lanes). Finite inputs only — NaN
+/// handling differs between `f32::max` and the AVX2 `maxps`.
+pub fn vmax(x: &[f32]) -> f32 {
+    const ML: usize = 8;
+    let chunks = x.len() / ML;
+    let mut m = [f32::NEG_INFINITY; ML];
+    for c in 0..chunks {
+        let base = c * ML;
+        for (l, mv) in m.iter_mut().enumerate() {
+            *mv = mv.max(x[base + l]);
+        }
+    }
+    let mut r = hmax(&m);
+    for &v in &x[chunks * ML..] {
+        r = r.max(v);
+    }
+    r
+}
+
+/// `y[i] += x[i]`.
+pub fn acc(y: &mut [f32], x: &[f32]) {
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += xv;
+    }
+}
+
+/// `y[i] += a · x[i]` (one mul, one add per element — no FMA).
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += a * xv;
+    }
+}
+
+/// `y[i] = beta · y[i] + x[i]`.
+pub fn scale_add(y: &mut [f32], beta: f32, x: &[f32]) {
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv = beta * *yv + xv;
+    }
+}
+
+/// With `u = scale · x[i]`: `v[i] += sigma · u`, `dv[i] += u`.
+pub fn fused_axpy2(v: &mut [f32], dv: &mut [f32], sigma: f32, scale: f32, x: &[f32]) {
+    for ((vv, dvv), &xv) in v.iter_mut().zip(dv.iter_mut()).zip(x) {
+        let u = scale * xv;
+        *vv += sigma * u;
+        *dvv += u;
+    }
+}

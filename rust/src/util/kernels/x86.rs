@@ -1,0 +1,175 @@
+//! AVX2 kernels, mirroring `scalar.rs` operation-for-operation.
+//!
+//! Compiled only under `--features simd` on x86-64; callers must gate on
+//! `is_x86_feature_detected!("avx2")` (the parent module's `avx2()`
+//! cache) before entering. Every kernel performs the same IEEE-754
+//! single-rounded `mul`/`add` sequence as its scalar twin — in
+//! particular **no FMA** (`_mm256_mul_ps` + `_mm256_add_ps`, never
+//! `_mm256_fmadd_ps`) — so results are bit-identical to the scalar path.
+
+#![allow(clippy::missing_safety_doc)] // safety contract documented once above
+
+use std::arch::x86_64::*;
+
+use super::LANES;
+
+/// Horizontal sum of one ymm register with the fixed tree from
+/// `scalar::hsum`: `(i, i+4)` via extractf128, `(i, i+2)` via movehl,
+/// `(0, 1)` via shuffle.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum8(s: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(s);
+    let hi = _mm256_extractf128_ps(s, 1);
+    let t = _mm_add_ps(lo, hi);
+    let u = _mm_add_ps(t, _mm_movehl_ps(t, t));
+    _mm_cvtss_f32(_mm_add_ss(u, _mm_shuffle_ps(u, u, 0b01)))
+}
+
+/// Horizontal max of one ymm register with the fixed tree from
+/// `scalar::hmax`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hmax8(s: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(s);
+    let hi = _mm256_extractf128_ps(s, 1);
+    let t = _mm_max_ps(lo, hi);
+    let u = _mm_max_ps(t, _mm_movehl_ps(t, t));
+    _mm_cvtss_f32(_mm_max_ss(u, _mm_shuffle_ps(u, u, 0b01)))
+}
+
+/// Two-accumulator dot (two ymm chains hide the 4-cycle add latency;
+/// a single chain would be no faster than the SSE2 autovec fallback).
+/// Lane `i % LANES` accumulates element `i`, exactly as in
+/// `scalar::dot`; `acc0 + acc1` is the `l + l+8` fold of `scalar::hsum`.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let chunks = n / LANES;
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    for c in 0..chunks {
+        let base = c * LANES;
+        let p0 = _mm256_mul_ps(_mm256_loadu_ps(ap.add(base)), _mm256_loadu_ps(bp.add(base)));
+        acc0 = _mm256_add_ps(acc0, p0);
+        let p1 =
+            _mm256_mul_ps(_mm256_loadu_ps(ap.add(base + 8)), _mm256_loadu_ps(bp.add(base + 8)));
+        acc1 = _mm256_add_ps(acc1, p1);
+    }
+    let mut s = hsum8(_mm256_add_ps(acc0, acc1));
+    for i in chunks * LANES..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// 8-lane running max + `hmax8` tree, matching `scalar::vmax` on finite
+/// inputs.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn vmax(x: &[f32]) -> f32 {
+    const ML: usize = 8;
+    let chunks = x.len() / ML;
+    let mut m = _mm256_set1_ps(f32::NEG_INFINITY);
+    let xp = x.as_ptr();
+    for c in 0..chunks {
+        m = _mm256_max_ps(m, _mm256_loadu_ps(xp.add(c * ML)));
+    }
+    let mut r = hmax8(m);
+    for &v in &x[chunks * ML..] {
+        r = r.max(v);
+    }
+    r
+}
+
+/// `y[i] += x[i]`, 8 elements per iteration, scalar tail.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn acc(y: &mut [f32], x: &[f32]) {
+    let n = y.len().min(x.len());
+    let chunks = n / 8;
+    let yp = y.as_mut_ptr();
+    let xp = x.as_ptr();
+    for c in 0..chunks {
+        let o = c * 8;
+        let v = _mm256_add_ps(_mm256_loadu_ps(yp.add(o)), _mm256_loadu_ps(xp.add(o)));
+        _mm256_storeu_ps(yp.add(o), v);
+    }
+    for i in chunks * 8..n {
+        y[i] += x[i];
+    }
+}
+
+/// `y[i] += a · x[i]` — mul then add, no FMA.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    let n = y.len().min(x.len());
+    let chunks = n / 8;
+    let va = _mm256_set1_ps(a);
+    let yp = y.as_mut_ptr();
+    let xp = x.as_ptr();
+    for c in 0..chunks {
+        let o = c * 8;
+        let prod = _mm256_mul_ps(va, _mm256_loadu_ps(xp.add(o)));
+        _mm256_storeu_ps(yp.add(o), _mm256_add_ps(_mm256_loadu_ps(yp.add(o)), prod));
+    }
+    for i in chunks * 8..n {
+        y[i] += a * x[i];
+    }
+}
+
+/// `y[i] = beta · y[i] + x[i]`.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn scale_add(y: &mut [f32], beta: f32, x: &[f32]) {
+    let n = y.len().min(x.len());
+    let chunks = n / 8;
+    let vb = _mm256_set1_ps(beta);
+    let yp = y.as_mut_ptr();
+    let xp = x.as_ptr();
+    for c in 0..chunks {
+        let o = c * 8;
+        let scaled = _mm256_mul_ps(vb, _mm256_loadu_ps(yp.add(o)));
+        _mm256_storeu_ps(yp.add(o), _mm256_add_ps(scaled, _mm256_loadu_ps(xp.add(o))));
+    }
+    for i in chunks * 8..n {
+        y[i] = beta * y[i] + x[i];
+    }
+}
+
+/// `u = scale · x[i]; v[i] += sigma · u; dv[i] += u`.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn fused_axpy2(v: &mut [f32], dv: &mut [f32], sigma: f32, scale: f32, x: &[f32]) {
+    let n = v.len().min(dv.len()).min(x.len());
+    let chunks = n / 8;
+    let vs = _mm256_set1_ps(sigma);
+    let vc = _mm256_set1_ps(scale);
+    let vp = v.as_mut_ptr();
+    let dp = dv.as_mut_ptr();
+    let xp = x.as_ptr();
+    for c in 0..chunks {
+        let o = c * 8;
+        let u = _mm256_mul_ps(vc, _mm256_loadu_ps(xp.add(o)));
+        let su = _mm256_mul_ps(vs, u);
+        _mm256_storeu_ps(vp.add(o), _mm256_add_ps(_mm256_loadu_ps(vp.add(o)), su));
+        _mm256_storeu_ps(dp.add(o), _mm256_add_ps(_mm256_loadu_ps(dp.add(o)), u));
+    }
+    for i in chunks * 8..n {
+        let u = scale * x[i];
+        v[i] += sigma * u;
+        dv[i] += u;
+    }
+}
+
+// Safe fn-pointer shims for the blocked matmul dispatch table. Only
+// installed after `avx2()` has returned true, which upholds the
+// target-feature contract of the unsafe fns they wrap.
+
+pub(super) fn axpy_dispatched(y: &mut [f32], a: f32, x: &[f32]) {
+    // SAFETY: parent module installs this pointer only when AVX2 is present.
+    unsafe { axpy(y, a, x) }
+}
+
+pub(super) fn dot_dispatched(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: parent module installs this pointer only when AVX2 is present.
+    unsafe { dot(a, b) }
+}

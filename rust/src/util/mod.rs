@@ -7,6 +7,7 @@
 
 pub mod bench;
 pub mod json;
+pub mod kernels;
 pub mod rng;
 
 pub use json::Json;

@@ -1,0 +1,212 @@
+//! Kernel parity suite: the dispatched (possibly AVX2) kernels must be
+//! *bit-identical* to the scalar reference — not merely close — because
+//! both paths are written with the same IEEE-754 operation order
+//! (lane-per-element for the elementwise merge-path kernels, fixed
+//! lane-split + fixed horizontal-combine tree for the reductions).
+//! Reductions are additionally checked ulp-close against a naive f64
+//! fold, and the sharded merge built on these kernels is checked
+//! bit-identical and run-to-run deterministic at 1/4/8 workers.
+//!
+//! Under `--no-default-features` the dispatched path *is* the scalar
+//! path and every assertion holds trivially — the suite then pins the
+//! scalar reference against the naive models instead.
+
+use std::sync::Arc;
+
+use chicle::algos::nn::linear::Act;
+use chicle::algos::svm::{scd_pass_dense, scd_pass_dense_scalar};
+use chicle::algos::{Algorithm, Backend, CocoaAlgo, LocalUpdate, LsgdAlgo};
+use chicle::chunks::SharedStore;
+use chicle::config::{CocoaConfig, LsgdConfig, ModelKind};
+use chicle::exec::{ReduceOptions, WorkerPool};
+use chicle::util::{kernels, Rng};
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32()).collect()
+}
+
+/// Lengths that exercise the empty case, sub-lane sizes, exact lane
+/// multiples, and odd tails around the 8- and 16-lane boundaries.
+const LENS: [usize; 9] = [0, 1, 7, 8, 15, 16, 17, 255, 1000];
+
+#[test]
+fn elementwise_kernels_bit_equal_scalar_reference() {
+    let mut rng = Rng::seed_from_u64(11);
+    for len in LENS {
+        let x = randv(&mut rng, len);
+        let y0 = randv(&mut rng, len);
+
+        let (mut a, mut b) = (y0.clone(), y0.clone());
+        kernels::acc(&mut a, &x);
+        kernels::scalar::acc(&mut b, &x);
+        assert_eq!(a, b, "acc len={len}");
+
+        let (mut a, mut b) = (y0.clone(), y0.clone());
+        kernels::axpy(&mut a, 0.7315, &x);
+        kernels::scalar::axpy(&mut b, 0.7315, &x);
+        assert_eq!(a, b, "axpy len={len}");
+
+        let (mut a, mut b) = (y0.clone(), y0.clone());
+        kernels::scale_add(&mut a, 0.9, &x);
+        kernels::scalar::scale_add(&mut b, 0.9, &x);
+        assert_eq!(a, b, "scale_add len={len}");
+
+        let (mut va, mut dva) = (y0.clone(), vec![0.25f32; len]);
+        let (mut vb, mut dvb) = (y0.clone(), vec![0.25f32; len]);
+        kernels::fused_axpy2(&mut va, &mut dva, 4.0, -0.31, &x);
+        kernels::scalar::fused_axpy2(&mut vb, &mut dvb, 4.0, -0.31, &x);
+        assert_eq!(va, vb, "fused_axpy2 v len={len}");
+        assert_eq!(dva, dvb, "fused_axpy2 dv len={len}");
+    }
+}
+
+#[test]
+fn reduction_kernels_bit_equal_scalar_and_close_to_naive() {
+    let mut rng = Rng::seed_from_u64(12);
+    for len in LENS {
+        let a = randv(&mut rng, len);
+        let b = randv(&mut rng, len);
+
+        // Exact-bit agreement between the dispatch and the reference.
+        let d = kernels::dot(&a, &b);
+        let ds = kernels::scalar::dot(&a, &b);
+        assert_eq!(d.to_bits(), ds.to_bits(), "dot len={len}");
+
+        // Bounded closeness to the naive f64 fold (the lane split only
+        // re-associates the sum, it cannot drift).
+        let naive: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64) * (y as f64)).sum();
+        assert!(
+            (d as f64 - naive).abs() <= 1e-4 * (1.0 + naive.abs()),
+            "dot len={len}: {d} vs naive {naive}"
+        );
+
+        let m = kernels::vmax(&a);
+        let ms = kernels::scalar::vmax(&a);
+        assert_eq!(m.to_bits(), ms.to_bits(), "vmax len={len}");
+        let fold = a.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert_eq!(m, fold, "vmax len={len} vs serial fold");
+    }
+}
+
+#[test]
+fn fused_linear_scalar_twin_bit_equal() {
+    let mut rng = Rng::seed_from_u64(13);
+    // Geometries straddling the cache-block boundaries (BLOCK_K = 128,
+    // BLOCK_N = 512) and the lane tails.
+    for (m, k, n) in [(1usize, 5usize, 3usize), (4, 130, 515), (8, 784, 256)] {
+        let x = randv(&mut rng, m * k);
+        let w = randv(&mut rng, k * n);
+        let bias = randv(&mut rng, n);
+        for act in [Act::None, Act::Relu, Act::Gelu] {
+            let (y1, pre1) = kernels::fused_linear_fwd(&x, &w, &bias, m, k, n, act);
+            let (y2, pre2) = kernels::fused_linear_fwd_scalar(&x, &w, &bias, m, k, n, act);
+            assert_eq!(pre1, pre2, "pre {m}x{k}x{n} {act:?}");
+            assert_eq!(y1, y2, "y {m}x{k}x{n} {act:?}");
+        }
+    }
+}
+
+#[test]
+fn scd_dense_pass_scalar_twin_bit_equal() {
+    let mut rng = Rng::seed_from_u64(14);
+    let (s, dim) = (256usize, 37usize); // odd dim: lane tails every row
+    let x = randv(&mut rng, s * dim);
+    let y: Vec<f32> = (0..s).map(|_| if rng.bool(0.5) { 1.0 } else { -1.0 }).collect();
+    let order: Vec<usize> = (0..s).collect();
+    let lam_n = 0.01 * s as f32;
+
+    let mut a1 = vec![0.0f32; s];
+    let mut v1 = vec![0.01f32; dim];
+    let mut dv1 = vec![0.0f32; dim];
+    scd_pass_dense(&x, dim, &y, &order, &mut a1, &mut v1, &mut dv1, lam_n, 4.0);
+
+    let mut a2 = vec![0.0f32; s];
+    let mut v2 = vec![0.01f32; dim];
+    let mut dv2 = vec![0.0f32; dim];
+    scd_pass_dense_scalar(&x, dim, &y, &order, &mut a2, &mut v2, &mut dv2, lam_n, 4.0);
+
+    assert_eq!(a1, a2, "alpha diverged");
+    assert_eq!(v1, v2, "v diverged");
+    assert_eq!(dv1, dv2, "dv diverged");
+}
+
+#[test]
+fn matmul_zero_skip_bit_equal_dense_on_mixed_input() {
+    let mut rng = Rng::seed_from_u64(15);
+    let (m, k, n) = (6usize, 133usize, 70usize);
+    // Post-ReLU-like A: roughly half exact zeros.
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32().max(0.0)).collect();
+    let b = randv(&mut rng, k * n);
+    let mut dense = vec![0.0f32; m * n];
+    let mut skip = vec![0.0f32; m * n];
+    kernels::matmul(&a, &b, &mut dense, m, k, n);
+    kernels::matmul_zero_skip(&a, &b, &mut skip, m, k, n);
+    assert_eq!(dense, skip);
+}
+
+fn pool_of(algo: &Arc<dyn Algorithm>, n_workers: usize) -> WorkerPool {
+    let mut pool = WorkerPool::new(Arc::clone(algo));
+    for i in 0..n_workers {
+        pool.spawn_worker(i as u32, SharedStore::new());
+    }
+    pool
+}
+
+/// Merge determinism on top of the vectorized fold kernels: the sharded
+/// reduction equals the serial fold bit-for-bit at 1, 4 and 8 workers,
+/// and repeated reductions at each worker count return identical bits
+/// (run-to-run determinism — the fixed lane split cannot depend on
+/// timing or claim interleaving).
+#[test]
+fn merge_fold_deterministic_at_1_4_8_workers() {
+    let algos: Vec<(&str, Arc<dyn Algorithm>)> = vec![
+        (
+            "cocoa",
+            Arc::new(CocoaAlgo::new(CocoaConfig::default(), Backend::native_cocoa(), 10_000, 4099))
+                as Arc<dyn Algorithm>,
+        ),
+        (
+            "lsgd-mlp",
+            Arc::new(
+                LsgdAlgo::new_classif(
+                    LsgdConfig::paper_defaults(ModelKind::Mlp),
+                    Backend::native_nn(chicle::algos::nn::NativeModel::mlp_default()),
+                    784,
+                    Vec::new(),
+                    Vec::new(),
+                    1,
+                )
+                .unwrap(),
+            ),
+        ),
+    ];
+    for (name, algo) in algos {
+        let len = algo.model_len();
+        let mut rng = Rng::seed_from_u64(16);
+        let model = Arc::new(algo.init_model().unwrap());
+        let updates: Arc<Vec<LocalUpdate>> = Arc::new(
+            (0..5)
+                .map(|_| LocalUpdate {
+                    delta: randv(&mut rng, len),
+                    samples: 1 + rng.below(2000),
+                    loss_sum: 0.0,
+                })
+                .collect(),
+        );
+        let mut serial = (*model).clone();
+        algo.merge(&mut serial, &updates, 5);
+        for n_workers in [1usize, 4, 8] {
+            let mut pool = pool_of(&algo, n_workers);
+            let (first, _) = pool
+                .reduce_model(&model, Arc::clone(&updates), 5, ReduceOptions::default())
+                .unwrap();
+            assert_eq!(first, serial, "{name}: {n_workers}w diverged from serial fold");
+            for round in 0..3 {
+                let (again, _) = pool
+                    .reduce_model(&model, Arc::clone(&updates), 5, ReduceOptions::default())
+                    .unwrap();
+                assert_eq!(again, first, "{name}: {n_workers}w round {round} not reproducible");
+            }
+        }
+    }
+}
