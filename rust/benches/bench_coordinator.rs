@@ -18,6 +18,7 @@ use chicle::coordinator::policy::{
 use chicle::coordinator::{TaskState, Trainer};
 use chicle::data::{synth, FeatureMatrix, Labels};
 use chicle::sim::{makespan, microtask_iteration_time};
+use chicle::transport::AllreduceKind;
 use chicle::util::bench::Bencher;
 use chicle::util::{kernels, Rng};
 
@@ -174,6 +175,48 @@ fn main() {
         });
     }
 
+    // --- merge strategy head-to-head: coordinator-side sharded reduce vs
+    // peer-to-peer ring-allreduce, k updates over k workers (one update
+    // per rank, as a collective requires). In-process the ring pays
+    // 2(k−1) serialized segment rounds — measured and asserted below,
+    // the same figure the metrics log reports per iteration — against
+    // the coordinator's single work-stealing fan-out, so these rows are
+    // an honest accounting of protocol overhead, not a claimed win: the
+    // ring's payoff is removing the coordinator from the data path, not
+    // in-process wallclock. The collective clones the updates per call
+    // exactly as `Trainer::phase_merge` does in production. ---
+    for w in [4usize, 8] {
+        let k_updates: Vec<LocalUpdate> = updates[..w].to_vec();
+        let order: Vec<u32> = (0..w as u32).map(|i| 3000 + i).collect();
+        let mut coord_pool = WorkerPool::new(Arc::clone(&merge_algo));
+        for &n in &order {
+            coord_pool.spawn_worker(n, SharedStore::new());
+        }
+        let k_arc = Arc::new(k_updates.clone());
+        b.bench(&format!("merge/coord_reduce_{w}w_{w}upd_877k"), || {
+            coord_pool
+                .reduce_model(&model_arc, Arc::clone(&k_arc), w, ReduceOptions::default())
+                .unwrap()
+                .0
+                .len()
+        });
+        let mut ring_pool = WorkerPool::new(Arc::clone(&merge_algo));
+        for &n in &order {
+            ring_pool.spawn_worker(n, SharedStore::new());
+        }
+        let out = ring_pool
+            .allreduce_model(&order, &model_arc, k_updates.clone(), w, AllreduceKind::Ring, 0)
+            .unwrap();
+        assert_eq!(out.rounds, 2 * (w - 1), "measured ring transport rounds");
+        b.bench(&format!("merge/allreduce_ring_{w}w_{w}upd_877k"), || {
+            ring_pool
+                .allreduce_model(&order, &model_arc, k_updates.clone(), w, AllreduceKind::Ring, 1)
+                .unwrap()
+                .model
+                .len()
+        });
+    }
+
     // --- eval-spanning overlap: one full eval-point iteration (compute +
     // merge + test-set evaluation), pipelined vs barriered. Barriered
     // pays the full pipeline flush — reduce round-trip, then evaluation,
@@ -300,6 +343,7 @@ fn main() {
             net: &net,
             moved_bytes: 0,
             moved_chunks: 0,
+            residency: chicle::transport::Residency::default(),
             rng: &mut rng,
         };
         p.apply(&mut ctx).unwrap();

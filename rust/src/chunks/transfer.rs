@@ -78,12 +78,16 @@ impl NetworkModel {
     /// Cost of migrating one chunk given its payload/state byte split.
     ///
     /// `warm` means the destination already holds the chunk's immutable
-    /// payload (e.g. it hosted the chunk before, or a replica is
-    /// resident), so only the per-sample state crosses the wire — the
-    /// scheduler's migration cost model can thereby price a
+    /// payload (it hosted the chunk before, while a group member), so
+    /// only the per-sample state crosses the wire — pricing a
     /// scale-in/scale-out round-trip at O(state) instead of O(dataset),
     /// matching what the in-process data plane actually does (payloads
     /// move by `Arc` clone). A cold transfer charges payload + state.
+    /// The scheduler reads `warm` from transport-membership residency
+    /// ([`crate::transport::Residency`], consulted per move by
+    /// `PolicyCtx::move_chunk`); residency is a pure function of the
+    /// movement + membership history, so priced vtime stays
+    /// deterministic.
     pub fn chunk_cost(&self, bytes: ChunkBytes, warm: bool) -> Duration {
         self.transfer_cost(bytes.wire_bytes(warm))
     }

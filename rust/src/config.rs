@@ -45,6 +45,58 @@ pub enum TaskModel {
     MicroTasks { k: usize },
 }
 
+/// How the per-iteration merge of task updates runs (see
+/// `docs/TRANSPORT.md`). Every strategy produces *bit-identical* merged
+/// models — the elementwise `merge_shard` invariant guarantees it and
+/// `tests/merge_strategies.rs` asserts it — so the choice trades only
+/// wall-clock shape and wire pattern, never the trajectory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MergeStrategy {
+    /// The coordinator-side work-stealing sharded reduction (the default;
+    /// the only strategy that supports the reduce/dispatch overlap).
+    #[default]
+    Coordinator,
+    /// Peer-to-peer ring-allreduce over the transport layer: `2(k−1)`
+    /// rounds of segment-sized messages, no coordinator on the data path.
+    Ring,
+    /// Peer-to-peer tree-allreduce: gather to rank 0, fold, broadcast —
+    /// `2·⌊log2 k⌋` rounds of full-model messages.
+    Tree,
+}
+
+impl MergeStrategy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MergeStrategy::Coordinator => "coordinator",
+            MergeStrategy::Ring => "ring",
+            MergeStrategy::Tree => "tree",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "coordinator" => MergeStrategy::Coordinator,
+            "ring" => MergeStrategy::Ring,
+            "tree" => MergeStrategy::Tree,
+            other => bail!("unknown merge strategy {other:?}"),
+        })
+    }
+
+    /// `CHICLE_MERGE_STRATEGY` override (read by the programmatic
+    /// constructors only, like `CHICLE_FAST`): lets CI exercise a whole
+    /// tier-1 leg under `ring` without touching any config file. An unset
+    /// or empty variable means no override; an unknown value fails loudly
+    /// rather than silently training on the wrong strategy.
+    fn env_override() -> Option<Self> {
+        match std::env::var("CHICLE_MERGE_STRATEGY") {
+            Ok(s) if !s.is_empty() => {
+                Some(Self::parse(&s).expect("CHICLE_MERGE_STRATEGY must be coordinator|ring|tree"))
+            }
+            _ => None,
+        }
+    }
+}
+
 /// Sample→chunk placement (paper §A.1: Snap ML splits contiguously, Chicle
 /// assigns randomly — this is the Criteo difference).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -346,6 +398,11 @@ pub struct SessionConfig {
     /// pins `shards_per_worker` without an `adaptive_spw` key keeps its
     /// fixed granularity (the pin is honored, not demoted to a seed).
     pub adaptive_spw: bool,
+    /// How the per-iteration merge runs: the coordinator-side sharded
+    /// reduction (default), or a peer-to-peer ring/tree allreduce over
+    /// the transport layer. Bit-identical results either way; collectives
+    /// are barriered, so `overlap` only takes effect under `Coordinator`.
+    pub merge_strategy: MergeStrategy,
 }
 
 impl SessionConfig {
@@ -370,6 +427,7 @@ impl SessionConfig {
             overlap: true,
             shards_per_worker: DEFAULT_SHARDS_PER_WORKER,
             adaptive_spw: true,
+            merge_strategy: MergeStrategy::env_override().unwrap_or_default(),
         }
     }
 
@@ -394,6 +452,7 @@ impl SessionConfig {
             overlap: true,
             shards_per_worker: DEFAULT_SHARDS_PER_WORKER,
             adaptive_spw: true,
+            merge_strategy: MergeStrategy::env_override().unwrap_or_default(),
         }
     }
 
@@ -419,6 +478,11 @@ impl SessionConfig {
 
     pub fn with_overlap(mut self, overlap: bool) -> Self {
         self.overlap = overlap;
+        self
+    }
+
+    pub fn with_merge_strategy(mut self, strategy: MergeStrategy) -> Self {
+        self.merge_strategy = strategy;
         self
     }
 
@@ -506,6 +570,7 @@ impl SessionConfig {
             ("overlap", Json::Bool(self.overlap)),
             ("shards_per_worker", Json::num(self.shards_per_worker as f64)),
             ("adaptive_spw", Json::Bool(self.adaptive_spw)),
+            ("merge_strategy", Json::str(self.merge_strategy.as_str())),
         ])
     }
 
@@ -589,6 +654,13 @@ impl SessionConfig {
                 .map(Json::as_bool)
                 .transpose()?
                 .unwrap_or(v.opt("shards_per_worker").is_none()),
+            // Absent in configs written before the transport layer; a
+            // saved config pins its strategy, so no env override here.
+            merge_strategy: v
+                .opt("merge_strategy")
+                .map(|m| MergeStrategy::parse(m.as_str()?))
+                .transpose()?
+                .unwrap_or_default(),
         })
     }
 
@@ -651,6 +723,28 @@ mod tests {
         let back = SessionConfig::from_json(&pinned).unwrap();
         assert!(!back.adaptive_spw, "explicit spw pin must stay fixed");
         assert_eq!(back.shards_per_worker, DEFAULT_SHARDS_PER_WORKER);
+    }
+
+    #[test]
+    fn merge_strategy_roundtrips_and_defaults() {
+        let cfg = SessionConfig::cocoa("ring", 4).with_merge_strategy(MergeStrategy::Ring);
+        let back = SessionConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back.merge_strategy, MergeStrategy::Ring);
+
+        // Configs written before the transport layer lack the key.
+        let legacy = match SessionConfig::cocoa("legacy", 2).to_json() {
+            Json::Obj(mut o) => {
+                o.remove("merge_strategy");
+                Json::Obj(o)
+            }
+            _ => unreachable!(),
+        };
+        let back = SessionConfig::from_json(&legacy).unwrap();
+        assert_eq!(back.merge_strategy, MergeStrategy::Coordinator);
+
+        assert!(MergeStrategy::parse("butterfly").is_err());
+        assert_eq!(MergeStrategy::parse("tree").unwrap().as_str(), "tree");
     }
 
     #[test]

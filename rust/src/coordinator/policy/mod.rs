@@ -15,8 +15,9 @@ pub use rebalance::RebalancePolicy;
 pub use shuffle::ShufflePolicy;
 pub use straggler::StragglerPolicy;
 
-use crate::chunks::NetworkModel;
+use crate::chunks::{ChunkBytes, NetworkModel};
 use crate::coordinator::task::TaskState;
+use crate::transport::Residency;
 use crate::Result;
 
 /// What policies see and mutate between iterations.
@@ -29,6 +30,11 @@ pub struct PolicyCtx<'a> {
     pub moved_bytes: usize,
     /// Chunks moved this boundary (diagnostics).
     pub moved_chunks: usize,
+    /// Which chunk payloads each live transport member already hosts
+    /// (shared with the session's [`crate::transport::ChannelGroup`]):
+    /// [`PolicyCtx::move_chunk`] prices moves to a warm destination as
+    /// state-only transfers.
+    pub residency: Residency,
     /// Deterministic per-boundary randomness.
     pub rng: &'a mut crate::util::Rng,
 }
@@ -38,20 +44,24 @@ impl<'a> PolicyCtx<'a> {
     /// transfer accounting.
     ///
     /// The in-process move is zero-copy (the `Chunk` value moves between
-    /// stores; its payload stays one `Arc` allocation), but the *virtual*
-    /// accounting deliberately charges a cold transfer (`size_bytes`, not
-    /// the warm [`crate::chunks::ChunkBytes`] state-only cost): in the
-    /// modeled cluster the destination node has never seen this chunk's
-    /// payload, and keeping the charge deterministic keeps vtime
-    /// trajectories reproducible. Schedulers that track payload residency
-    /// can price warm moves with [`NetworkModel::chunk_cost`].
+    /// stores; its payload stays one `Arc` allocation). The *virtual*
+    /// charge reads payload residency from transport membership: a
+    /// destination node that already hosts this chunk's immutable payload
+    /// (it held the chunk before and never left the group) pays the warm
+    /// [`ChunkBytes`] state-only cost, anyone else pays the cold payload
+    /// + state cost — the same split [`NetworkModel::chunk_cost`] prices.
+    /// Residency is a pure function of the movement and membership
+    /// history, so the priced vtime trajectory stays deterministic.
     pub fn move_chunk(&mut self, from: usize, to: usize, cid: crate::chunks::ChunkId) -> Result<()> {
         let chunk = self.tasks[from]
             .store
             .remove(cid)
             .ok_or_else(|| anyhow::anyhow!("chunk {cid} not on task {from}"))?;
-        self.moved_bytes += chunk.size_bytes();
+        let dest = self.tasks[to].node.id;
+        let warm = self.residency.resident(dest, cid);
+        self.moved_bytes += ChunkBytes::of(&chunk).wire_bytes(warm);
         self.moved_chunks += 1;
+        self.residency.record(dest, cid);
         self.tasks[to].store.add(chunk);
         Ok(())
     }

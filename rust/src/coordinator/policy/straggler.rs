@@ -116,6 +116,7 @@ mod tests {
                 net: &net,
                 moved_bytes: 0,
                 moved_chunks: 0,
+                residency: crate::transport::Residency::default(),
                 rng: &mut rng,
             };
             p.apply(&mut ctx).unwrap();

@@ -28,7 +28,12 @@
 //! Wallclock savings from the overlap show up in the measured
 //! `merge_wall`/`overlap_wall` TSV columns instead; the adaptive
 //! shards-per-worker controller likewise only ever appears as the `spw`
-//! column. Folding any of them into virtual time would make the projected
+//! column, and a `ring`/`tree` merge collective's *measured* transport
+//! reality only as `transport_rounds`/`transport_bytes` — logged next to
+//! the simulated `exchange_time` (this module's `2·⌈log2 k⌉` tree-reduce
+//! charge) precisely so the cost model can be audited against what the
+//! wire actually did, never silently replaced by it. Folding any of them
+//! into virtual time would make the projected
 //! trajectory depend on host scheduling (steal counts and overlap windows
 //! vary run to run) and break the determinism of scheduler projections —
 //! two runs with the same seed must report the same vtime series, which is

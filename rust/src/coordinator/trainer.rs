@@ -80,10 +80,11 @@ use anyhow::Result;
 use crate::algos::{Algorithm, LocalUpdate, ModelVec};
 use crate::chunks::{Chunk, NetworkModel};
 use crate::cluster::{NodeId, NodeSpec, ResourceEvent, ResourceManager, TraceResourceManager};
-use crate::config::{Partitioning, SessionConfig, TaskModel};
+use crate::config::{MergeStrategy, Partitioning, SessionConfig, TaskModel};
 use crate::exec::{ModelRef, PendingIteration, ReduceBuf, ReduceOptions, TaskRun, WorkerPool};
 use crate::metrics::{IterationRecord, Metric, MetricsLog, SwimlaneRecorder, TaskSpan};
 use crate::sim::VirtualClock;
+use crate::transport::AllreduceKind;
 use crate::util::Rng;
 
 use super::policy::{
@@ -114,17 +115,31 @@ const PARALLEL_MERGE_MIN_LEN: usize = 1 << 15;
 /// unaffected.
 const EVAL_SNAPSHOT_MAX_RATIO: usize = 4;
 
+/// What one merge phase reports back to `step` for the metrics log,
+/// whichever strategy ran it.
+struct MergeReport {
+    /// Wall of the merge (serial fold, sharded reduce, or collective; for
+    /// a pipelined iteration, the reduce-in-flight window).
+    merge_wall: Duration,
+    /// Shards claimed outside their home block during a coordinator
+    /// reduction (0 for collectives and serial folds).
+    steal_count: usize,
+    /// Shard granularity a coordinator reduction used (0 otherwise).
+    spw: usize,
+    /// *Measured* sequential transport rounds of a merge collective —
+    /// recorded next to the *simulated* `exchange_time` vtime charge,
+    /// never folded into it (0 under the coordinator strategy).
+    transport_rounds: usize,
+    /// Payload bytes the collective put on the wire, all ranks summed.
+    transport_bytes: usize,
+}
+
 /// What one engagement of the overlap pipeline reports back to `step`.
 struct PipelineOutcome {
-    /// Wall of the reduce-in-flight window (begin_reduce → collected).
-    merge_wall: Duration,
-    /// Shards claimed outside their home block during the reduction.
-    steal_count: usize,
+    report: MergeReport,
     /// How long the next iteration was in flight while the coordinator
     /// collected the reduce and (at eval points) ran the evaluation.
     overlap_wall: Duration,
-    /// Shard granularity the reduction used.
-    spw: usize,
     /// The metric, when this was an overlapped evaluation point.
     metric: Option<Metric>,
 }
@@ -247,6 +262,15 @@ impl Trainer {
         for task in &tasks {
             pool.spawn_worker(task.node.id, task.store.clone());
         }
+        // Seed the transport group's payload-residency map with the
+        // initial placement: a chunk later moving back to its first home
+        // is priced warm (state-only) by `PolicyCtx::move_chunk`.
+        let residency = pool.residency();
+        for task in &tasks {
+            for chunk in task.store.lock().iter() {
+                residency.record(task.node.id, chunk.id);
+            }
+        }
 
         let model = Arc::new(algo.init_model()?);
         let timing = TimeAccountant::new(&cfg);
@@ -357,6 +381,16 @@ impl Trainer {
                 }
             }
         }
+        // Refresh payload residency after the elastic moves: revoked
+        // members were already forgotten when their endpoints left the
+        // group (`shutdown_worker` joins the thread), and every orphan or
+        // redistributed chunk now resides wherever the deal landed it.
+        let residency = self.pool.residency();
+        for t in &self.tasks {
+            for chunk in t.store.lock().iter() {
+                residency.record(t.node.id, chunk.id);
+            }
+        }
         // Loads changed on these tasks; their learned runtimes are stale.
         // (A task whose chunks net out to the same sample count keeps its
         // history — the per-sample estimate is still valid.)
@@ -383,6 +417,7 @@ impl Trainer {
                 net: &self.net,
                 moved_bytes: 0,
                 moved_chunks: 0,
+                residency: self.pool.residency(),
                 rng: &mut self.rng,
             };
             p.apply(&mut ctx)?;
@@ -416,19 +451,52 @@ impl Trainer {
             .run_iteration(&plan, Arc::clone(&self.model), k, None)
     }
 
-    /// Phase 4 — merge task updates into the shared model, barriered.
-    /// Returns the merge wallclock, the stealing reducer's steal count,
-    /// and the shard granularity used (0 = serial fold).
+    /// Phase 4 — merge task updates into the shared model, barriered,
+    /// by whichever [`MergeStrategy`] the session configured.
     ///
-    /// Models below [`PARALLEL_MERGE_MIN_LEN`] take the serial fold —
-    /// workers dropped their snapshots before completing, so
-    /// `Arc::make_mut` merges in place, not on a copy. Larger models are
-    /// reduced by the work-stealing sharded fan-out across the resident
-    /// workers; fixed shard offsets make the result bit-identical to the
-    /// serial fold at any worker count, elastic resizes included.
-    fn phase_merge(&mut self, updates: &Arc<Vec<LocalUpdate>>) -> Result<(Duration, usize, usize)> {
+    /// **Coordinator** (default): models below [`PARALLEL_MERGE_MIN_LEN`]
+    /// take the serial fold — workers dropped their snapshots before
+    /// completing, so `Arc::make_mut` merges in place, not on a copy.
+    /// Larger models are reduced by the work-stealing sharded fan-out
+    /// across the resident workers; fixed shard offsets make the result
+    /// bit-identical to the serial fold at any worker count, elastic
+    /// resizes included.
+    ///
+    /// **Ring / Tree**: the updates move peer-to-peer over the transport
+    /// layer and the workers run the collective among themselves
+    /// ([`WorkerPool::allreduce_model`]) — the coordinator only dispatches
+    /// and collects. Same bits again (`tests/merge_strategies.rs` pins
+    /// it); what changes is the wire pattern, reported back as *measured*
+    /// transport rounds/bytes next to the simulated exchange charge.
+    fn phase_merge(&mut self, iter: usize, updates: &Arc<Vec<LocalUpdate>>) -> Result<MergeReport> {
         let t0 = Instant::now();
         let k = updates.len();
+        let kind = match self.cfg.merge_strategy {
+            MergeStrategy::Ring => Some(AllreduceKind::Ring),
+            MergeStrategy::Tree => Some(AllreduceKind::Tree),
+            MergeStrategy::Coordinator => None,
+        };
+        if let Some(kind) = kind {
+            // Rank order = task order: `updates[i]` belongs to `tasks[i]`,
+            // and the collective folds in exactly this order.
+            let order: Vec<NodeId> = self.tasks.iter().map(|t| t.node.id).collect();
+            let out = self.pool.allreduce_model(
+                &order,
+                &self.model,
+                updates.as_ref().clone(),
+                k,
+                kind,
+                iter as u64,
+            )?;
+            self.model = Arc::new(out.model);
+            return Ok(MergeReport {
+                merge_wall: t0.elapsed(),
+                steal_count: 0,
+                spw: 0,
+                transport_rounds: out.rounds,
+                transport_bytes: out.bytes,
+            });
+        }
         let (steals, spw) = if self.pool.len() >= 2 && self.model.len() >= PARALLEL_MERGE_MIN_LEN {
             let opts = self.reduce_opts();
             let (merged, stats) =
@@ -441,7 +509,13 @@ impl Trainer {
             self.algo.merge(model, updates, k);
             (0, 0)
         };
-        Ok((t0.elapsed(), steals, spw))
+        Ok(MergeReport {
+            merge_wall: t0.elapsed(),
+            steal_count: steals,
+            spw,
+            transport_rounds: 0,
+            transport_bytes: 0,
+        })
     }
 
     /// Phase 5 — time accounting over the configured model.
@@ -505,16 +579,13 @@ impl Trainer {
     }
 
     /// Phase 6c — append the iteration to the metrics log.
-    #[allow(clippy::too_many_arguments)]
     fn push_record(
         &mut self,
         iter: usize,
         updates: &[LocalUpdate],
         walls: &[Duration],
-        merge_wall: Duration,
-        steal_count: usize,
+        report: &MergeReport,
         overlap_wall: Duration,
-        spw: usize,
         metric: Option<Metric>,
     ) {
         let iter_samples: usize = updates.iter().map(|u| u.samples).sum();
@@ -526,10 +597,12 @@ impl Trainer {
             metric,
             vtime: self.clock.now(),
             wall: walls.iter().copied().max().unwrap_or(Duration::ZERO),
-            merge_wall,
-            steal_count,
+            merge_wall: report.merge_wall,
+            steal_count: report.steal_count,
             overlap_wall,
-            spw,
+            spw: report.spw,
+            transport_rounds: report.transport_rounds,
+            transport_bytes: report.transport_bytes,
             n_tasks: updates.len(),
             samples: iter_samples,
             train_loss: if steps > 0 { Some(loss_sum / steps as f64) } else { None },
@@ -562,7 +635,10 @@ impl Trainer {
     /// one stop the pipeline cannot predict — the metric reaching its
     /// target — is settled by `run()` draining the speculative iteration.
     fn should_overlap(&self, iter: usize) -> bool {
-        self.cfg.overlap
+        // Collectives are barriered — every rank both sends and receives —
+        // so only the coordinator-side reduce can hide the next dispatch.
+        self.cfg.merge_strategy == MergeStrategy::Coordinator
+            && self.cfg.overlap
             && iter + 1 < self.cfg.max_iters
             && self.epochs() < self.cfg.max_epochs
             && self.pool.len() >= 2
@@ -723,10 +799,17 @@ impl Trainer {
             moved_bytes: moved,
         });
         Ok(PipelineOutcome {
-            merge_wall,
-            steal_count: stats.steals,
+            report: MergeReport {
+                merge_wall,
+                steal_count: stats.steals,
+                spw: opts.shards_per_worker,
+                // The pipeline only engages under the coordinator
+                // strategy (`should_overlap`), which never touches the
+                // transport.
+                transport_rounds: 0,
+                transport_bytes: 0,
+            },
             overlap_wall,
-            spw: opts.shards_per_worker,
             metric,
         })
     }
@@ -784,25 +867,15 @@ impl Trainer {
         let overlap_now = allow_overlap
             && self.should_overlap(iter)
             && (!eval_point || self.eval_overlap_affordable());
-        let (metric, merge_wall, steal_count, overlap_wall, spw) =
-            if overlap_now {
-                let out = self.pipeline_next(iter, &updates, eval_point)?;
-                (out.metric, out.merge_wall, out.steal_count, out.overlap_wall, out.spw)
-            } else {
-                let (mw, steals, spw) = self.phase_merge(&updates)?;
-                let metric = if eval_point { Some(self.evaluate_now()?) } else { None };
-                (metric, mw, steals, Duration::ZERO, spw)
-            };
-        self.push_record(
-            iter,
-            &updates,
-            &walls,
-            merge_wall,
-            steal_count,
-            overlap_wall,
-            spw,
-            metric,
-        );
+        let (metric, report, overlap_wall) = if overlap_now {
+            let out = self.pipeline_next(iter, &updates, eval_point)?;
+            (out.metric, out.report, out.overlap_wall)
+        } else {
+            let report = self.phase_merge(iter, &updates)?;
+            let metric = if eval_point { Some(self.evaluate_now()?) } else { None };
+            (metric, report, Duration::ZERO)
+        };
+        self.push_record(iter, &updates, &walls, &report, overlap_wall, metric);
         Ok(metric)
     }
 

@@ -26,6 +26,7 @@
 //! |----------------------------------------------|----------------------|
 //! | `RunIteration { model: ModelRef, k_tasks, seed, budget }` | `Iteration(TaskRun)` |
 //! | `ReduceShards { model, updates, queue, buf, slot, k_tasks }` | `ShardsDone { shards, steals }` |
+//! | `Allreduce { model, update, task_idx, order, epoch, iter, kind, .. }` | `AllreduceDone(AllreduceRun)` |
 //! | `SetReduceSlowdown(ns_per_elem)`             | — (fire and forget)  |
 //! | `InstallChunks(chunks)`                      | — (fire and forget)  |
 //! | `DrainChunks`                                | `Drained(chunks)`    |
@@ -67,6 +68,23 @@
 //! Because geometry never affects the merged bits, both adaptations are
 //! invisible to the trajectory.
 //!
+//! ## Peer-to-peer merge collectives
+//!
+//! `SessionConfig::merge_strategy` can swap the coordinator-side sharded
+//! reduction for a transport-level collective: [`WorkerPool::begin_allreduce`]
+//! hands every rank its *own* update and the rank order, and the workers
+//! run ring- or tree-allreduce among themselves over their
+//! [`crate::transport`] endpoints (joined at spawn, left at thread exit).
+//! The ring's segments reuse the fixed-offset geometry above and each
+//! segment's owner folds all `k` update slices in task order, so the
+//! collective result is bit-identical to the serial fold too — the same
+//! invariant, a different wire. Collectives are barriered (every rank
+//! both sends and receives), so the reduce/dispatch overlap below applies
+//! only to the default coordinator strategy. A mid-collective revoke is
+//! safe the same way a mid-reduce one is: FIFO ordering makes the revoked
+//! rank finish the collective its peers are blocked on before draining,
+//! and its completion is stashed for [`WorkerPool::collect_allreduce`].
+//!
 //! ## Reduce/dispatch overlap
 //!
 //! `RunIteration` takes a [`ModelRef`]: either a ready snapshot or the
@@ -103,7 +121,7 @@ pub mod pool;
 pub mod reduce;
 pub mod worker;
 
-pub use pool::{PendingIteration, PendingReduce, WorkerPool};
+pub use pool::{AllreduceOutcome, PendingAllreduce, PendingIteration, PendingReduce, WorkerPool};
 pub use reduce::{
     ModelRef, ReduceBuf, ReduceOptions, ReduceStats, ShardQueue, SpwController, SPW_MAX, SPW_MIN,
 };

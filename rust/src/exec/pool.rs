@@ -10,6 +10,7 @@ use anyhow::{anyhow, Result};
 use crate::algos::{Algorithm, LocalUpdate, ModelVec};
 use crate::chunks::{Chunk, SharedStore};
 use crate::cluster::NodeId;
+use crate::transport::{AllreduceKind, AllreduceRun, ChannelGroup, Residency};
 
 use super::reduce::{ModelRef, ReduceBuf, ReduceOptions, ReduceStats, ShardQueue, SpwController};
 use super::worker::{worker_loop, Command, Reply, TaskRun};
@@ -56,6 +57,25 @@ pub struct PendingIteration {
     nodes: Vec<(NodeId, bool)>,
 }
 
+/// A merge collective in flight: which ranks owe an `AllreduceDone`
+/// reply, in rank (= task) order.
+pub struct PendingAllreduce {
+    nodes: Vec<(NodeId, bool)>,
+}
+
+/// Coordinator-side outcome of one merge collective.
+pub struct AllreduceOutcome {
+    /// The merged model (bit-identical to the serial fold).
+    pub model: ModelVec,
+    /// Sequential protocol rounds the collective took — the same on every
+    /// rank (`2(k−1)` ring, `2·⌊log2 k⌋` tree), surfaced so the metrics
+    /// log can put *measured* transport reality next to the simulated
+    /// `NetworkModel::reduce_rounds` charge.
+    pub rounds: usize,
+    /// Payload bytes put on the wire, summed over all ranks.
+    pub bytes: usize,
+}
+
 /// One long-lived worker per uni-task, addressed by node id.
 ///
 /// All methods are called from the coordinator thread between iterations;
@@ -63,10 +83,20 @@ pub struct PendingIteration {
 pub struct WorkerPool {
     algo: Arc<dyn Algorithm>,
     workers: Vec<WorkerHandle>,
+    /// The session's transport group: every worker joins on spawn and
+    /// holds its endpoint until its thread exits, so membership — and the
+    /// payload [`Residency`] the scheduler prices warm transfers from —
+    /// tracks the live pool exactly.
+    group: Arc<ChannelGroup>,
     /// `ShardsDone` replies swallowed by `shutdown_worker` while a
     /// reduction was in flight (mid-reduce revoke): `collect_reduce`
     /// counts them in place of the departed worker's reply.
     stashed_shards: Vec<(NodeId, usize, usize)>,
+    /// `AllreduceDone` replies swallowed by `shutdown_worker` while a
+    /// collective was in flight (FIFO guarantees the revoked rank
+    /// finished the collective before draining): `collect_allreduce`
+    /// consumes them in place of the departed rank's reply.
+    stashed_allreduce: Vec<(NodeId, Result<AllreduceRun>)>,
     /// Adaptive shards-per-worker controller, fed by every collected
     /// reduction's steal count (see [`SpwController`]). `None` = fixed
     /// granularity (callers pass whatever `ReduceOptions` they like).
@@ -85,10 +115,25 @@ impl WorkerPool {
         WorkerPool {
             algo,
             workers: Vec::new(),
+            group: ChannelGroup::new(),
             stashed_shards: Vec::new(),
+            stashed_allreduce: Vec::new(),
             spw_ctl: None,
             steal_victim: None,
         }
+    }
+
+    /// The transport group's payload-residency map: which immutable chunk
+    /// payloads each live member has ever hosted. Handed to the policy
+    /// layer so chunk moves to a node that already holds the payload are
+    /// priced warm (state-only) instead of always cold.
+    pub fn residency(&self) -> Residency {
+        self.group.residency().clone()
+    }
+
+    /// The current transport membership epoch (tests/diagnostics).
+    pub fn transport_epoch(&self) -> u64 {
+        self.group.membership().epoch
     }
 
     /// The straggler identified by the last clean reduction (most shards
@@ -133,9 +178,13 @@ impl WorkerPool {
         let (cmd_tx, cmd_rx) = channel();
         let (reply_tx, reply_rx) = channel();
         let algo = Arc::clone(&self.algo);
+        // The worker owns its transport endpoint for life: the endpoint's
+        // drop (thread exit) is what leaves the group, so membership can
+        // never outlive — or predecease — the rank it belongs to.
+        let endpoint = self.group.join(node);
         let thread = std::thread::Builder::new()
             .name(format!("uni-task-{node}"))
-            .spawn(move || worker_loop(algo, store, cmd_rx, reply_tx))
+            .spawn(move || worker_loop(algo, store, Box::new(endpoint), cmd_rx, reply_tx))
             .expect("spawn uni-task worker thread");
         self.workers.push(WorkerHandle {
             node,
@@ -196,6 +245,12 @@ impl WorkerPool {
                     // Mid-reduce revoke: keep the reduction accountable.
                     Ok(Reply::ShardsDone { shards, steals }) => {
                         self.stashed_shards.push((node, shards, steals));
+                    }
+                    // Mid-collective revoke: the rank finished its side of
+                    // the allreduce before draining (FIFO); its completion
+                    // belongs to the eventual `collect_allreduce`.
+                    Ok(Reply::AllreduceDone(run)) => {
+                        self.stashed_allreduce.push((node, run));
                     }
                     Ok(_) => break Err(anyhow!("unexpected reply during drain")),
                     Err(_) => break Err(anyhow!("worker {node} died during drain")),
@@ -436,6 +491,133 @@ impl WorkerPool {
         let buf = pending.buf();
         let stats = self.collect_reduce(pending)?;
         Ok((buf.into_model(), stats))
+    }
+
+    /// Start a peer-to-peer merge collective (ring- or tree-allreduce)
+    /// across the ranks in `order` — which must be the *task order*:
+    /// `updates[i]` is rank `i`'s own update and `order[i]` its node. The
+    /// coordinator only dispatches and collects; update data moves
+    /// worker-to-worker over the transport, and the result is
+    /// bit-identical to the serial fold (see
+    /// [`crate::transport::allreduce`]).
+    ///
+    /// Safe to revoke a rank while the collective is in flight: commands
+    /// are FIFO per worker, so the rank completes the collective — its
+    /// peers are blocked on its slices — before draining; its
+    /// `AllreduceDone` is stashed for [`WorkerPool::collect_allreduce`].
+    pub fn begin_allreduce(
+        &mut self,
+        order: &[NodeId],
+        model: &Arc<ModelVec>,
+        updates: Vec<LocalUpdate>,
+        k_tasks: usize,
+        kind: AllreduceKind,
+        iter: u64,
+    ) -> Result<PendingAllreduce> {
+        anyhow::ensure!(!order.is_empty(), "no ranks to allreduce over");
+        anyhow::ensure!(
+            order.len() == updates.len(),
+            "rank order and updates must align ({} vs {})",
+            order.len(),
+            updates.len()
+        );
+        // Resolve every rank before dispatching anything: a collective
+        // with a missing rank deadlocks its peers, so unlike an
+        // iteration there is no partial dispatch to fall back on.
+        for node in order {
+            self.worker(*node)?;
+        }
+        self.stashed_allreduce.clear();
+        let epoch = self.group.membership().epoch;
+        let order_arc = Arc::new(order.to_vec());
+        let mut nodes = Vec::with_capacity(order.len());
+        for (task_idx, (node, update)) in order.iter().zip(updates).enumerate() {
+            let dispatched = self
+                .worker(*node)?
+                .commands
+                .send(Command::Allreduce {
+                    model: Arc::clone(model),
+                    update: Box::new(update),
+                    task_idx,
+                    k_tasks,
+                    order: Arc::clone(&order_arc),
+                    epoch,
+                    iter,
+                    kind,
+                })
+                .is_ok();
+            nodes.push((*node, dispatched));
+        }
+        Ok(PendingAllreduce { nodes })
+    }
+
+    /// Collect every rank's `AllreduceDone` (stashed replies from a
+    /// mid-collective revoke included). The returned model is rank 0's;
+    /// every rank finishes with the same bits by construction, and the
+    /// transport tests assert it.
+    pub fn collect_allreduce(&mut self, pending: PendingAllreduce) -> Result<AllreduceOutcome> {
+        let mut model = None;
+        let mut rounds = 0usize;
+        let mut bytes = 0usize;
+        let mut first_err: Option<anyhow::Error> = None;
+        for (i, (node, dispatched)) in pending.nodes.iter().enumerate() {
+            if !dispatched {
+                first_err.get_or_insert(anyhow!("rank {i} (node {node}) was never dispatched"));
+                continue;
+            }
+            let reply = if let Some(j) =
+                self.stashed_allreduce.iter().position(|(n, _)| n == node)
+            {
+                self.stashed_allreduce.swap_remove(j).1
+            } else {
+                match self.worker(*node).map(|w| w.replies.recv()) {
+                    Ok(Ok(Reply::AllreduceDone(r))) => r,
+                    Ok(Ok(_)) => Err(anyhow!("unexpected reply from rank {i} (node {node})")),
+                    Ok(Err(_)) | Err(_) => {
+                        Err(anyhow!("rank {i} (node {node}) died mid-collective"))
+                    }
+                }
+            };
+            match reply {
+                Ok(run) => {
+                    rounds = rounds.max(run.stats.rounds);
+                    bytes += run.stats.bytes_sent;
+                    if i == 0 {
+                        model = Some(run.model);
+                    }
+                }
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        match (first_err, model) {
+            (Some(e), _) => Err(e),
+            (None, Some(model)) => Ok(AllreduceOutcome { model, rounds, bytes }),
+            (None, None) => Err(anyhow!("collective produced no model")),
+        }
+    }
+
+    /// Barriered merge collective: dispatch, collect, return the merged
+    /// model. A single-rank order folds inline on the coordinator — the
+    /// same bits, without a transport round (mirroring
+    /// [`WorkerPool::reduce_model`]'s small-pool path).
+    pub fn allreduce_model(
+        &mut self,
+        order: &[NodeId],
+        model: &Arc<ModelVec>,
+        updates: Vec<LocalUpdate>,
+        k_tasks: usize,
+        kind: AllreduceKind,
+        iter: u64,
+    ) -> Result<AllreduceOutcome> {
+        if order.len() <= 1 {
+            let mut out = (**model).clone();
+            self.algo.merge_shard(&mut out, 0, &updates, k_tasks);
+            return Ok(AllreduceOutcome { model: out, rounds: 0, bytes: 0 });
+        }
+        let pending = self.begin_allreduce(order, model, updates, k_tasks, kind, iter)?;
+        self.collect_allreduce(pending)
     }
 
     fn worker(&self, node: NodeId) -> Result<&WorkerHandle> {

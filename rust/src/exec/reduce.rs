@@ -28,6 +28,27 @@
 //!   blocks on before computing. This is the reduce/dispatch overlap: the
 //!   coordinator may enqueue iteration *i+1* while iteration *i*'s merge
 //!   is still in flight.
+//!
+//! # The fixed-offset geometry invariant
+//!
+//! This is the canonical statement of the invariant every parallel merge
+//! in the system is built on. Tile a `model_len`-element model into `n`
+//! ranges with `per = ⌈model_len / n⌉`; range `i` covers exactly
+//! `[i·per, min((i+1)·per, model_len))`. The geometry is a **pure
+//! function of `(model_len, n)`** — independent of worker count, claim
+//! order, stealing, block layout, or OS scheduling — and
+//! [`crate::algos::Algorithm::merge_shard`] is elementwise with updates
+//! folded in task order, so merging each range independently and
+//! reassembling at the same offsets is bit-identical to the serial fold.
+//!
+//! Two consumers share the invariant: [`ShardQueue::shard_range`] here
+//! (at `n = shards_per_worker × workers`, granularity a free tuning
+//! knob) and the transport layer's ring-allreduce segments
+//! ([`crate::transport::segment_range`], pinned at exactly `n = k` ranks
+//! so every rank owns one segment). A new consumer of model tiling
+//! should define its ranges in these terms rather than invent a second
+//! geometry — the property tests (`tests/prop_merge_equivalence.rs`,
+//! `tests/transport_allreduce.rs`) all lean on this one definition.
 
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -282,7 +303,11 @@ impl ShardQueue {
         self.block_start[slot + 1] - self.block_start[slot]
     }
 
-    /// Fixed `(offset, len)` range of shard `idx`.
+    /// Fixed `(offset, len)` range of shard `idx` — an instance of the
+    /// [fixed-offset geometry invariant](self#the-fixed-offset-geometry-invariant):
+    /// a pure function of `(model_len, n_shards)`, never of who claims
+    /// the shard. [`crate::transport::segment_range`] computes the same
+    /// ranges at one shard per rank.
     pub fn shard_range(&self, idx: usize) -> (usize, usize) {
         let offset = idx * self.per;
         (offset, self.per.min(self.model_len - offset))

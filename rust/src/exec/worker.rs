@@ -13,10 +13,14 @@
 //! * **FIFO per worker** — commands are processed strictly in send
 //!   order. This is what makes a mid-reduce revoke safe: the
 //!   `DrainChunks` queued behind a `ReduceShards` cannot overtake it,
-//!   so the revoked worker always finishes its shard claims first.
+//!   so the revoked worker always finishes its shard claims first. The
+//!   same rule covers a mid-*collective* revoke: a `DrainChunks` behind
+//!   an `Allreduce` waits for the collective to finish — which it must,
+//!   because the revoked rank's peers are blocked on its slices.
 //! * **Exactly one reply per replying command** — `RunIteration` ⇒
-//!   `Iteration`, `ReduceShards` ⇒ `ShardsDone`, `DrainChunks` ⇒
-//!   `Drained`; `InstallChunks`/`SetReduceSlowdown`/`Shutdown` never
+//!   `Iteration`, `ReduceShards` ⇒ `ShardsDone`, `Allreduce` ⇒
+//!   `AllreduceDone`, `DrainChunks` ⇒ `Drained`;
+//!   `InstallChunks`/`SetReduceSlowdown`/`Shutdown` never
 //!   reply. Every dispatched replying command must eventually be
 //!   collected, even on error paths — an uncollected reply desyncs the
 //!   worker's whole channel.
@@ -32,6 +36,10 @@ use anyhow::{anyhow, Result};
 
 use crate::algos::{Algorithm, LocalUpdate, ModelVec};
 use crate::chunks::{Chunk, SharedStore};
+use crate::cluster::NodeId;
+use crate::transport::{
+    ring_allreduce, tree_allreduce, AllreduceKind, AllreduceRun, CollectiveCtx, Transport,
+};
 
 use super::reduce::{ModelRef, ReduceBuf, ShardQueue};
 
@@ -61,6 +69,28 @@ pub enum Command {
         slot: usize,
         k_tasks: usize,
     },
+    /// Participate in a peer-to-peer merge collective over the worker's
+    /// transport endpoint: ring- or tree-allreduce of every rank's update
+    /// into the replicated model, bit-identical to the serial fold (see
+    /// [`crate::transport::allreduce`]). `order` is the rank order — the
+    /// task order of the fold — and `epoch` the membership snapshot the
+    /// collective validates incoming traffic against. Ends with one
+    /// `AllreduceDone` reply carrying this rank's merged model and
+    /// measured transport stats.
+    Allreduce {
+        /// The replicated pre-merge model (every rank holds these bits).
+        model: Arc<ModelVec>,
+        /// This rank's own update — collectives move updates peer-to-peer,
+        /// never through the coordinator.
+        update: Box<LocalUpdate>,
+        /// This rank's position in the task-order fold.
+        task_idx: usize,
+        k_tasks: usize,
+        order: Arc<Vec<NodeId>>,
+        epoch: u64,
+        iter: u64,
+        kind: AllreduceKind,
+    },
     /// Simulate a slow node: busy the worker for this many nanoseconds per
     /// model element before reducing each claimed shard (straggler benches
     /// and tests; 0 = full speed). Applies until overwritten.
@@ -86,6 +116,10 @@ pub enum Reply {
     /// This worker's share of a sharded reduction is done (its claims are
     /// already written to the shared buffer).
     ShardsDone { shards: usize, steals: usize },
+    /// This rank's side of a merge collective completed (or failed): the
+    /// merged model — every rank ends with the full result — plus the
+    /// measured transport rounds/bytes.
+    AllreduceDone(Result<AllreduceRun>),
     Drained(Vec<Chunk>),
 }
 
@@ -99,9 +133,15 @@ pub struct TaskRun {
 }
 
 /// The long-lived worker loop (runs on the worker's own thread).
+///
+/// `transport` is this uni-task's endpoint in the session's peer group;
+/// the worker owns it for its whole life, so dropping out of this loop
+/// (shutdown or channel disconnect) is what leaves the group — after any
+/// in-flight collective has completed, never during one.
 pub(crate) fn worker_loop(
     algo: Arc<dyn Algorithm>,
     store: SharedStore,
+    mut transport: Box<dyn Transport>,
     commands: Receiver<Command>,
     replies: Sender<Reply>,
 ) {
@@ -142,6 +182,28 @@ pub(crate) fn worker_loop(
                 drop(queue);
                 drop(buf);
                 if replies.send(Reply::ShardsDone { shards, steals }).is_err() {
+                    break;
+                }
+            }
+            Command::Allreduce { model, update, task_idx, k_tasks, order, epoch, iter, kind } => {
+                let ctx = CollectiveCtx {
+                    algo: algo.as_ref(),
+                    model: &model,
+                    update: update.as_ref(),
+                    task_idx,
+                    k_tasks,
+                    order: &order,
+                    epoch,
+                    iter,
+                };
+                let result = match kind {
+                    AllreduceKind::Ring => ring_allreduce(transport.as_mut(), &ctx),
+                    AllreduceKind::Tree => tree_allreduce(transport.as_mut(), &ctx),
+                }
+                .map_err(|e| anyhow!("{kind:?} allreduce rank {task_idx}: {e}"));
+                drop(model);
+                drop(order);
+                if replies.send(Reply::AllreduceDone(result)).is_err() {
                     break;
                 }
             }

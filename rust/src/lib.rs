@@ -48,6 +48,7 @@ pub mod harness;
 pub mod metrics;
 pub mod runtime;
 pub mod sim;
+pub mod transport;
 pub mod util;
 
 /// Convenience re-exports for the common entry points.

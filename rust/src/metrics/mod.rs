@@ -62,6 +62,15 @@ pub struct IterationRecord {
     /// so spikes in `steal_count` show up as a widening `spw` a few
     /// iterations later.
     pub spw: usize,
+    /// *Measured* sequential transport rounds of this iteration's merge
+    /// collective (`2(k−1)` ring, `2·⌊log2 k⌋` tree; 0 under the
+    /// coordinator-side reduce, which never touches the transport).
+    /// Recorded next to the *simulated* exchange charge folded into
+    /// `vtime` so the two can be compared; never fed into virtual time.
+    pub transport_rounds: usize,
+    /// Payload bytes the merge collective put on the wire, summed over
+    /// all ranks (0 under the coordinator-side reduce).
+    pub transport_bytes: usize,
     /// Number of tasks/nodes active during this iteration.
     pub n_tasks: usize,
     /// Samples processed across all tasks this iteration.
@@ -158,11 +167,11 @@ impl MetricsLog {
     pub fn to_tsv(&self) -> String {
         let mut out = String::from(
             "iter\tepochs\tvtime_s\twall_s\tmerge_wall_s\tsteal_count\toverlap_wall_s\tspw\t\
-             n_tasks\tsamples\tmetric\ttrain_loss\n",
+             transport_rounds\ttransport_bytes\tn_tasks\tsamples\tmetric\ttrain_loss\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{}\t{:.4}\t{:.4}\t{:.4}\t{:.6}\t{}\t{:.6}\t{}\t{}\t{}\t{}\t{}\n",
+                "{}\t{:.4}\t{:.4}\t{:.4}\t{:.6}\t{}\t{:.6}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
                 r.iter,
                 r.epochs,
                 r.vtime.as_secs_f64(),
@@ -171,6 +180,8 @@ impl MetricsLog {
                 r.steal_count,
                 r.overlap_wall.as_secs_f64(),
                 r.spw,
+                r.transport_rounds,
+                r.transport_bytes,
                 r.n_tasks,
                 r.samples,
                 r.metric.map_or("".into(), |m| format!("{:.6}", m.value())),
@@ -196,6 +207,8 @@ mod tests {
             steal_count: 0,
             overlap_wall: Duration::ZERO,
             spw: 0,
+            transport_rounds: 0,
+            transport_bytes: 0,
             n_tasks: 4,
             samples: 100,
             train_loss: None,
@@ -233,6 +246,10 @@ mod tests {
         let header = tsv.lines().next().unwrap();
         assert!(header.contains("steal_count") && header.contains("overlap_wall_s"));
         assert!(header.contains("\tspw\t"), "adaptive-spw column present");
+        assert!(
+            header.contains("\ttransport_rounds\ttransport_bytes\t"),
+            "measured-transport columns present"
+        );
         // Every row has exactly as many cells as the header.
         let cols = header.split('\t').count();
         assert!(tsv.lines().all(|l| l.split('\t').count() == cols));

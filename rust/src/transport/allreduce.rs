@@ -1,0 +1,518 @@
+//! Ring- and tree-allreduce for the merge phase, over any [`Transport`].
+//!
+//! Both collectives produce the *exact bits* of the serial fold
+//! (`Algorithm::merge`), for any rank count — the property the whole
+//! trainer is built on. The trick is that neither collective ever folds
+//! in arrival order:
+//!
+//! * **Ring** (`2(k−1)` rounds, segment-sized messages): phase 1
+//!   *scatters* — in round `t`, rank `r` sends its own update's slice of
+//!   segment `(r+t) mod k` straight to that segment's owner, so after
+//!   `k−1` rounds the owner of segment `s` holds all `k` update slices
+//!   for its fixed-offset range. It sorts them by `task_idx` and folds
+//!   **once**, in task order, with `merge_shard` — not pairwise along the
+//!   ring, which would fold in rotation order and (f32 addition being
+//!   non-associative) break bit-identity. Slices carry their update's
+//!   `samples` so sample-weighted merges (lSGD's `Σ samples` normalizer)
+//!   see every weight exactly as the serial fold does. Phase 2 is a
+//!   standard ring all-gather of the merged segments.
+//! * **Tree** (`2·⌊log2 k⌋` rounds, full-model messages): updates gather
+//!   up a binary tree (children `2r+1`, `2r+2`) to rank 0, which performs
+//!   the *literal* serial fold in task order and broadcasts the merged
+//!   model back down. The simulated cost model
+//!   (`NetworkModel::reduce_rounds`, `2·⌈log2 k⌉`) can now be compared
+//!   against this measured round count per iteration.
+//!
+//! Both lean on the elementwise `merge_shard` invariant
+//! ([`crate::algos::Algorithm::merge_shard`]): element `i` of the merged
+//! model depends only on element `i` of the inputs plus shard-independent
+//! scalars, with `offset` used solely to select the sub-range. That is
+//! what licenses handing `merge_shard` a *pre-sliced* delta at offset 0 —
+//! the ring owner's fold — and still getting the serial fold's bits.
+//!
+//! # Robustness rules (shared by both collectives)
+//!
+//! * **Staleness** — incoming collective traffic is dropped (counted in
+//!   [`CollectiveStats::stale_dropped`]) when stamped with an epoch older
+//!   than the membership snapshot this collective was launched with, or
+//!   when sent by a node outside the rank order. Iteration tags guard the
+//!   payload level the same way.
+//! * **Rejoin service** — [`Payload::StateRequest`] is exempt from both
+//!   checks (a rejoining node is cross-epoch by design): every
+//!   participant answers requests inline — queued ones at collective
+//!   entry, new ones whenever it is blocked in a receive — with its
+//!   latest complete (pre-merge) model, so a rejoining peer can
+//!   [`fetch_state`] from *any* member without a coordinator round-trip.
+//! * **Mid-collective revoke** — revocation is queued *behind* the
+//!   collective command (FIFO per worker), so a revoked rank always
+//!   completes the in-flight collective first; its peers depend on its
+//!   slices, and its endpoint leaves the group only when the worker
+//!   thread exits. The pool stashes its completion for the eventual
+//!   collect (`WorkerPool::collect_allreduce`).
+
+use std::time::{Duration, Instant};
+
+use crate::algos::{Algorithm, LocalUpdate, ModelVec};
+use crate::cluster::NodeId;
+
+use super::{segment_range, Message, Payload, Transport, TransportError, UpdatePart};
+
+/// How long a collective waits on any single receive before declaring the
+/// group wedged. Generous: the only way to hit it is a peer that died
+/// without the pool noticing (a protocol bug, not a slow node).
+pub const COLLECTIVE_RECV_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Which collective runs the merge phase.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllreduceKind {
+    Ring,
+    Tree,
+}
+
+/// What one rank measured while participating in a collective.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CollectiveStats {
+    /// Ranks in the collective.
+    pub peers: usize,
+    /// This participant's rank in the fold order.
+    pub rank: usize,
+    /// Sequential protocol rounds: `2(k−1)` for ring, `2·⌊log2 k⌋` for
+    /// tree, `0` for the single-rank degenerate case. Measured transport
+    /// reality, to be compared against the *simulated*
+    /// `NetworkModel::reduce_rounds` — never fed into virtual time.
+    pub rounds: usize,
+    /// Payload bytes this rank put on the wire (collective traffic only;
+    /// rejoin-service replies are excluded so the figure is comparable
+    /// across iterations).
+    pub bytes_sent: usize,
+    /// Messages dropped by the staleness rule.
+    pub stale_dropped: usize,
+    /// Rejoin state requests served inline.
+    pub state_served: usize,
+}
+
+/// One rank's completed collective: the merged model (every rank ends
+/// with the full result — that is what "allreduce" means) plus its stats.
+#[derive(Clone, Debug)]
+pub struct AllreduceRun {
+    pub model: ModelVec,
+    pub stats: CollectiveStats,
+}
+
+/// Everything a rank needs to participate in one merge collective.
+pub struct CollectiveCtx<'a> {
+    pub algo: &'a dyn Algorithm,
+    /// The pre-merge model (every rank holds the same bits — the model is
+    /// replicated; this is also what rejoin state requests are served
+    /// from).
+    pub model: &'a ModelVec,
+    /// This rank's own local update.
+    pub update: &'a LocalUpdate,
+    /// This rank's position in the task-order fold (== its rank: the
+    /// order is the task order).
+    pub task_idx: usize,
+    pub k_tasks: usize,
+    /// Rank order of the collective — the task order the serial fold
+    /// uses. `order[s]` owns ring segment `s`.
+    pub order: &'a [NodeId],
+    /// Membership epoch snapshotted at launch (the staleness floor).
+    pub epoch: u64,
+    /// Iteration tag carried by every collective payload.
+    pub iter: u64,
+}
+
+/// Ring-allreduce: reduce-scatter (slices to segment owners, task-order
+/// fold at the owner) + ring all-gather. `2(k−1)` rounds of segment-sized
+/// messages; bit-identical to the serial fold. See the module docs for
+/// why the fold happens once at the owner instead of pairwise.
+pub fn ring_allreduce(
+    tp: &mut dyn Transport,
+    ctx: &CollectiveCtx,
+) -> Result<AllreduceRun, TransportError> {
+    let (k, rank, mut stats, mut stash) = enter(tp, ctx)?;
+    if k == 1 {
+        return Ok(AllreduceRun { model: local_fold(ctx), stats });
+    }
+    let len = ctx.model.len();
+
+    // Phase 1 — scatter: round t sends my slice of segment (rank+t) mod k
+    // straight to its owner. All sends are independent, so they go out
+    // before any receive (channels are unbounded; a real backend windows).
+    for t in 1..k {
+        let seg = (rank + t) % k;
+        let (off, l) = segment_range(len, k, seg);
+        let payload = Payload::UpdateSlice {
+            iter: ctx.iter,
+            seg,
+            part: UpdatePart {
+                task_idx: ctx.task_idx,
+                samples: ctx.update.samples,
+                delta: ctx.update.delta[off..off + l].to_vec(),
+            },
+        };
+        stats.bytes_sent += payload.wire_bytes();
+        tp.send(ctx.order[seg], payload)?;
+    }
+
+    // Collect the other k−1 slices of my own segment, then fold all k in
+    // task order — one merge_shard call, exactly like the serial fold
+    // restricted to this fixed-offset range.
+    let (my_off, my_len) = segment_range(len, k, rank);
+    let mut parts = Vec::with_capacity(k);
+    parts.push(UpdatePart {
+        task_idx: ctx.task_idx,
+        samples: ctx.update.samples,
+        delta: ctx.update.delta[my_off..my_off + my_len].to_vec(),
+    });
+    while parts.len() < k {
+        let msg = recv_matching(tp, ctx, &mut stash, &mut stats, |p| {
+            matches!(p, Payload::UpdateSlice { iter, seg, .. }
+                     if *iter == ctx.iter && *seg == rank)
+        })?;
+        let Payload::UpdateSlice { part, .. } = msg.payload else { unreachable!() };
+        if part.delta.len() != my_len {
+            return Err(TransportError::Protocol("update slice length mismatch"));
+        }
+        parts.push(part);
+    }
+    let slices = into_fold_order(parts)?;
+    let mut seg = ctx.model[my_off..my_off + my_len].to_vec();
+    ctx.algo.merge_shard(&mut seg, 0, &slices, ctx.k_tasks);
+
+    // Phase 2 — ring all-gather: each round, forward the segment received
+    // last round to the right neighbor; after k−1 rounds every rank holds
+    // every merged segment.
+    let right = ctx.order[(rank + 1) % k];
+    let mut segments: Vec<Option<Vec<f32>>> = (0..k).map(|_| None).collect();
+    let mut travel = (rank, seg.clone());
+    segments[rank] = Some(seg);
+    for t in 1..k {
+        let payload = Payload::Segment { iter: ctx.iter, seg: travel.0, data: travel.1 };
+        stats.bytes_sent += payload.wire_bytes();
+        tp.send(right, payload)?;
+        let expect = (rank + k - t) % k;
+        let msg = recv_matching(tp, ctx, &mut stash, &mut stats, |p| {
+            matches!(p, Payload::Segment { iter, seg, .. }
+                     if *iter == ctx.iter && *seg == expect)
+        })?;
+        let Payload::Segment { data, .. } = msg.payload else { unreachable!() };
+        segments[expect] = Some(data.clone());
+        travel = (expect, data);
+    }
+
+    // Assemble at the fixed offsets.
+    let mut out = ctx.model.clone();
+    for (s, data) in segments.into_iter().enumerate() {
+        let (off, l) = segment_range(len, k, s);
+        let data = data.expect("every segment received by construction");
+        if data.len() != l {
+            return Err(TransportError::Protocol("merged segment length mismatch"));
+        }
+        out[off..off + l].copy_from_slice(&data);
+    }
+    stats.rounds = 2 * (k - 1);
+    Ok(AllreduceRun { model: out, stats })
+}
+
+/// Tree-allreduce: gather every update up a binary tree to rank 0, fold
+/// serially in task order at the root, broadcast the merged model back
+/// down. `2·⌊log2 k⌋` rounds of full-model messages — trivially
+/// bit-identical (the root runs the literal serial fold), at the price of
+/// root-bound bandwidth; the ring trades that for `2(k−1)` segment-sized
+/// rounds.
+pub fn tree_allreduce(
+    tp: &mut dyn Transport,
+    ctx: &CollectiveCtx,
+) -> Result<AllreduceRun, TransportError> {
+    let (k, rank, mut stats, mut stash) = enter(tp, ctx)?;
+    if k == 1 {
+        return Ok(AllreduceRun { model: local_fold(ctx), stats });
+    }
+    let children: Vec<usize> =
+        [2 * rank + 1, 2 * rank + 2].into_iter().filter(|&c| c < k).collect();
+
+    // Gather: my own update plus both children's subtrees.
+    let mut parts = vec![UpdatePart {
+        task_idx: ctx.task_idx,
+        samples: ctx.update.samples,
+        delta: ctx.update.delta.clone(),
+    }];
+    for _ in &children {
+        let msg = recv_matching(tp, ctx, &mut stash, &mut stats, |p| {
+            matches!(p, Payload::Updates { iter, .. } if *iter == ctx.iter)
+        })?;
+        let Payload::Updates { parts: got, .. } = msg.payload else { unreachable!() };
+        parts.extend(got);
+    }
+
+    let model = if rank == 0 {
+        if parts.len() != k {
+            return Err(TransportError::Protocol("tree gather missed updates"));
+        }
+        if parts.iter().any(|p| p.delta.len() != ctx.model.len()) {
+            return Err(TransportError::Protocol("tree update length mismatch"));
+        }
+        let updates = into_fold_order(parts)?;
+        // The literal serial fold, in task order.
+        let mut out = ctx.model.clone();
+        ctx.algo.merge_shard(&mut out, 0, &updates, ctx.k_tasks);
+        out
+    } else {
+        let parent = ctx.order[(rank - 1) / 2];
+        let payload = Payload::Updates { iter: ctx.iter, parts };
+        stats.bytes_sent += payload.wire_bytes();
+        tp.send(parent, payload)?;
+        let msg = recv_matching(tp, ctx, &mut stash, &mut stats, |p| {
+            matches!(p, Payload::Model { iter, .. } if *iter == ctx.iter)
+        })?;
+        let Payload::Model { data, .. } = msg.payload else { unreachable!() };
+        data
+    };
+
+    // Broadcast down.
+    for &c in &children {
+        let payload = Payload::Model { iter: ctx.iter, data: model.clone() };
+        stats.bytes_sent += payload.wire_bytes();
+        tp.send(ctx.order[c], payload)?;
+    }
+    // Height of a k-node binary heap — the sequential depth of both the
+    // gather and the broadcast wave.
+    stats.rounds = 2 * k.ilog2() as usize;
+    Ok(AllreduceRun { model, stats })
+}
+
+/// The rejoin protocol, requester side: ask `from` for its latest
+/// complete model. Any live peer can answer (requests are served inline
+/// while peers sit in a collective — see the module docs), so a rejoining
+/// node never needs the coordinator.
+pub fn fetch_state(
+    tp: &mut dyn Transport,
+    from: NodeId,
+    timeout: Duration,
+) -> Result<ModelVec, TransportError> {
+    tp.send(from, Payload::StateRequest)?;
+    let deadline = Instant::now() + timeout;
+    loop {
+        let left = deadline
+            .checked_duration_since(Instant::now())
+            .ok_or(TransportError::Timeout)?;
+        if let Payload::Model { data, .. } = tp.recv(left)?.payload {
+            return Ok(data);
+        }
+        // Anything else predates this endpoint's (re)join — skip it.
+    }
+}
+
+/// Common collective entry: resolve the caller's rank, then drain the
+/// receive queue — queued rejoin requests get served even on ranks that
+/// will never block in a receive (the single-rank degenerate case).
+fn enter(
+    tp: &mut dyn Transport,
+    ctx: &CollectiveCtx,
+) -> Result<(usize, usize, CollectiveStats, Vec<Message>), TransportError> {
+    let k = ctx.order.len();
+    let me = tp.node();
+    let rank = ctx
+        .order
+        .iter()
+        .position(|&n| n == me)
+        .ok_or(TransportError::Protocol("caller not in the collective order"))?;
+    let mut stats = CollectiveStats { peers: k, rank, ..Default::default() };
+    let mut stash = Vec::new();
+    while let Some(msg) = tp.try_recv() {
+        if let Some(m) = sieve(msg, tp, ctx, &mut stats) {
+            stash.push(m);
+        }
+    }
+    Ok((k, rank, stats, stash))
+}
+
+/// The single-rank degenerate collective: the local serial fold (0
+/// rounds, 0 bytes — a ring of one is a no-op transport-wise).
+fn local_fold(ctx: &CollectiveCtx) -> ModelVec {
+    let mut out = ctx.model.clone();
+    ctx.algo
+        .merge_shard(&mut out, 0, std::slice::from_ref(ctx.update), ctx.k_tasks);
+    out
+}
+
+/// Sort gathered parts into task order and convert them to the
+/// `LocalUpdate` slice `merge_shard` folds. Duplicate task indices mean
+/// cross-regime traffic leaked past the staleness rule — refuse to fold.
+fn into_fold_order(mut parts: Vec<UpdatePart>) -> Result<Vec<LocalUpdate>, TransportError> {
+    parts.sort_by_key(|p| p.task_idx);
+    if parts.windows(2).any(|w| w[0].task_idx == w[1].task_idx) {
+        return Err(TransportError::Protocol("duplicate task index in fold"));
+    }
+    Ok(parts
+        .into_iter()
+        .map(|p| LocalUpdate { delta: p.delta, samples: p.samples, loss_sum: 0.0 })
+        .collect())
+}
+
+/// Triage one incoming message: serve rejoin requests inline, drop stale
+/// or foreign traffic, pass current collective traffic through.
+fn sieve(
+    msg: Message,
+    tp: &mut dyn Transport,
+    ctx: &CollectiveCtx,
+    stats: &mut CollectiveStats,
+) -> Option<Message> {
+    if matches!(msg.payload, Payload::StateRequest) {
+        // Reply with the latest *complete* model — the pre-merge snapshot
+        // every rank holds. A failed reply is the requester's problem
+        // (it may have timed out and left); the collective must not fail.
+        let _ = tp.send(msg.from, Payload::Model { iter: ctx.iter, data: ctx.model.clone() });
+        stats.state_served += 1;
+        return None;
+    }
+    if msg.epoch < ctx.epoch || !ctx.order.contains(&msg.from) {
+        stats.stale_dropped += 1;
+        return None;
+    }
+    Some(msg)
+}
+
+/// Receive until a message matching `want` arrives, stashing current
+/// collective traffic that belongs to a later step (out-of-order arrival
+/// across *senders* is expected — per-pair FIFO is all the transport
+/// guarantees).
+fn recv_matching(
+    tp: &mut dyn Transport,
+    ctx: &CollectiveCtx,
+    stash: &mut Vec<Message>,
+    stats: &mut CollectiveStats,
+    want: impl Fn(&Payload) -> bool,
+) -> Result<Message, TransportError> {
+    if let Some(i) = stash.iter().position(|m| want(&m.payload)) {
+        return Ok(stash.swap_remove(i));
+    }
+    loop {
+        let msg = tp.recv(COLLECTIVE_RECV_TIMEOUT)?;
+        match sieve(msg, tp, ctx, stats) {
+            Some(m) if want(&m.payload) => return Ok(m),
+            Some(m) => stash.push(m),
+            None => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::{Backend, CocoaAlgo};
+    use crate::config::CocoaConfig;
+    use crate::transport::ChannelGroup;
+    use std::sync::Arc;
+
+    fn algo(len: usize) -> Arc<dyn Algorithm> {
+        Arc::new(CocoaAlgo::new(CocoaConfig::default(), Backend::native_cocoa(), 100, len))
+    }
+
+    #[test]
+    fn single_rank_ring_degenerates_to_local_fold() {
+        let len = 17;
+        let algo = algo(len);
+        let model: ModelVec = (0..len).map(|i| i as f32 * 0.5).collect();
+        let update = LocalUpdate { delta: vec![0.25; len], samples: 9, loss_sum: 0.0 };
+        let mut serial = model.clone();
+        algo.merge(&mut serial, std::slice::from_ref(&update), 1);
+
+        let g = ChannelGroup::new();
+        let mut ep = g.join(5);
+        let ctx = CollectiveCtx {
+            algo: algo.as_ref(),
+            model: &model,
+            update: &update,
+            task_idx: 0,
+            k_tasks: 1,
+            order: &[5],
+            epoch: g.membership().epoch,
+            iter: 0,
+        };
+        for kind in [AllreduceKind::Ring, AllreduceKind::Tree] {
+            let run = match kind {
+                AllreduceKind::Ring => ring_allreduce(&mut ep, &ctx).unwrap(),
+                AllreduceKind::Tree => tree_allreduce(&mut ep, &ctx).unwrap(),
+            };
+            assert_eq!(run.model, serial, "{kind:?}");
+            assert_eq!(run.stats.rounds, 0, "a ring of one never touches the wire");
+            assert_eq!(run.stats.bytes_sent, 0);
+        }
+    }
+
+    #[test]
+    fn single_rank_collective_serves_queued_state_requests() {
+        // The entry drain is what guarantees a rejoiner is answered even
+        // by a rank that never blocks in a receive.
+        let len = 8;
+        let algo = algo(len);
+        let model = vec![1.0f32; len];
+        let update = LocalUpdate { delta: vec![0.5; len], samples: 4, loss_sum: 0.0 };
+        let g = ChannelGroup::new();
+        let mut worker = g.join(1);
+        let mut rejoiner = g.join(2);
+        rejoiner.send(1, Payload::StateRequest).unwrap();
+        let ctx = CollectiveCtx {
+            algo: algo.as_ref(),
+            model: &model,
+            update: &update,
+            task_idx: 0,
+            k_tasks: 1,
+            order: &[1],
+            epoch: g.membership().epoch,
+            iter: 3,
+        };
+        let run = ring_allreduce(&mut worker, &ctx).unwrap();
+        assert_eq!(run.stats.state_served, 1);
+        // The rejoiner gets the latest *complete* (pre-merge) model.
+        // (fetch_state sends its own second request — unserved, the
+        // collective already finished — but the first reply is queued.)
+        let state = fetch_state(&mut rejoiner, 1, Duration::from_millis(50))
+            .expect("reply was already queued");
+        assert_eq!(state, model);
+    }
+
+    #[test]
+    fn caller_outside_the_order_is_a_protocol_error() {
+        let len = 4;
+        let algo = algo(len);
+        let model = vec![0.0f32; len];
+        let update = LocalUpdate { delta: vec![0.0; len], samples: 1, loss_sum: 0.0 };
+        let g = ChannelGroup::new();
+        let mut ep = g.join(9);
+        let ctx = CollectiveCtx {
+            algo: algo.as_ref(),
+            model: &model,
+            update: &update,
+            task_idx: 0,
+            k_tasks: 2,
+            order: &[1, 2],
+            epoch: 0,
+            iter: 0,
+        };
+        assert!(matches!(
+            ring_allreduce(&mut ep, &ctx),
+            Err(TransportError::Protocol(_))
+        ));
+    }
+
+    #[test]
+    fn duplicate_task_indices_refuse_to_fold() {
+        let parts = vec![
+            UpdatePart { task_idx: 1, samples: 1, delta: vec![0.0] },
+            UpdatePart { task_idx: 1, samples: 2, delta: vec![1.0] },
+        ];
+        assert!(matches!(
+            into_fold_order(parts),
+            Err(TransportError::Protocol(_))
+        ));
+        let parts = vec![
+            UpdatePart { task_idx: 1, samples: 1, delta: vec![0.0] },
+            UpdatePart { task_idx: 0, samples: 2, delta: vec![1.0] },
+        ];
+        let updates = into_fold_order(parts).unwrap();
+        assert_eq!(updates[0].samples, 2, "sorted into task order");
+        assert_eq!(updates[1].samples, 1);
+    }
+}

@@ -1,0 +1,227 @@
+//! The in-process channel backend of the [`Transport`] contract.
+//!
+//! One [`ChannelGroup`] per training session; every uni-task worker
+//! [`ChannelGroup::join`]s on spawn and holds a [`ChannelEndpoint`] for
+//! its lifetime. Delivery is an `mpsc` send into the receiver's queue —
+//! which gives the contract's per-pair FIFO for free (std channels
+//! preserve per-sender order) — and membership is a shared map guarded by
+//! one mutex, touched only at join/leave/send time, never inside the
+//! per-element merge loops.
+//!
+//! Dropping an endpoint *is* leaving: the epoch bumps and the node's
+//! payload [`Residency`] is forgotten, exactly as a departed node's
+//! storage would be reclaimed in a real cluster. This makes the revoke
+//! path automatic — a revoked worker's thread exits, its endpoint drops,
+//! and the group converges without any coordinator involvement.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::cluster::NodeId;
+
+use super::{Membership, Message, Payload, Residency, Transport, TransportError};
+
+struct GroupInner {
+    epoch: u64,
+    members: HashMap<NodeId, Sender<Message>>,
+}
+
+/// The shared membership map of the in-process backend.
+///
+/// Holds one `Sender` per member (so a member's receive queue stays alive
+/// exactly as long as its endpoint does) plus the group's payload
+/// [`Residency`]. All mutation goes through [`ChannelGroup::join`] and
+/// endpoint drop; both bump the epoch.
+pub struct ChannelGroup {
+    inner: Mutex<GroupInner>,
+    residency: Residency,
+}
+
+impl ChannelGroup {
+    pub fn new() -> Arc<Self> {
+        Arc::new(ChannelGroup {
+            inner: Mutex::new(GroupInner { epoch: 0, members: HashMap::new() }),
+            residency: Residency::default(),
+        })
+    }
+
+    /// Add `node` to the group and hand back its endpoint. Bumps the
+    /// epoch. Panics if the node is already a member — a rejoining worker
+    /// must have dropped its previous endpoint first (the worker thread's
+    /// exit guarantees this on the revoke path).
+    pub fn join(self: &Arc<Self>, node: NodeId) -> ChannelEndpoint {
+        let (tx, rx) = channel();
+        let mut inner = self.inner.lock().expect("transport group lock");
+        assert!(
+            inner.members.insert(node, tx).is_none(),
+            "node {node} already in the transport group"
+        );
+        inner.epoch += 1;
+        ChannelEndpoint { group: Arc::clone(self), node, rx }
+    }
+
+    /// Current membership snapshot (epoch + sorted members).
+    pub fn membership(&self) -> Membership {
+        let inner = self.inner.lock().expect("transport group lock");
+        let mut members: Vec<NodeId> = inner.members.keys().copied().collect();
+        members.sort_unstable();
+        Membership { epoch: inner.epoch, members }
+    }
+
+    /// The group's payload-residency map (shared with the scheduler).
+    pub fn residency(&self) -> &Residency {
+        &self.residency
+    }
+
+    fn leave(&self, node: NodeId) {
+        let mut inner = self.inner.lock().expect("transport group lock");
+        if inner.members.remove(&node).is_some() {
+            inner.epoch += 1;
+        }
+        drop(inner);
+        // A departed node's storage is reclaimed: its payloads are no
+        // longer resident anywhere the scheduler may price a warm move to.
+        self.residency.forget(node);
+    }
+
+    /// `(sender, epoch)` for a live member, under one lock acquisition so
+    /// the stamped epoch is the one the member was observed at.
+    fn sender_to(&self, to: NodeId) -> Result<(Sender<Message>, u64), TransportError> {
+        let inner = self.inner.lock().expect("transport group lock");
+        match inner.members.get(&to) {
+            Some(tx) => Ok((tx.clone(), inner.epoch)),
+            None => Err(TransportError::NoSuchPeer(to)),
+        }
+    }
+}
+
+/// One member's handle on a [`ChannelGroup`]: its receive queue plus the
+/// shared membership map. Owned by exactly one worker thread; dropping it
+/// leaves the group (epoch bump + residency forgotten).
+pub struct ChannelEndpoint {
+    group: Arc<ChannelGroup>,
+    node: NodeId,
+    rx: Receiver<Message>,
+}
+
+impl Transport for ChannelEndpoint {
+    fn node(&self) -> NodeId {
+        self.node
+    }
+
+    fn membership(&self) -> Membership {
+        self.group.membership()
+    }
+
+    fn send(&mut self, to: NodeId, payload: Payload) -> Result<(), TransportError> {
+        let (tx, epoch) = self.group.sender_to(to)?;
+        tx.send(Message { from: self.node, epoch, payload })
+            .map_err(|_| TransportError::Closed(to))
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Message, TransportError> {
+        use std::sync::mpsc::RecvTimeoutError;
+        self.rx.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => TransportError::Timeout,
+            // Only possible once this endpoint has left the group (the
+            // group itself keeps a sender alive for every member).
+            RecvTimeoutError::Disconnected => TransportError::Closed(self.node),
+        })
+    }
+
+    fn try_recv(&mut self) -> Option<Message> {
+        self.rx.try_recv().ok()
+    }
+}
+
+impl Drop for ChannelEndpoint {
+    fn drop(&mut self) {
+        self.group.leave(self.node);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn join_leave_bump_epoch_and_sort_members() {
+        let g = ChannelGroup::new();
+        assert_eq!(g.membership().epoch, 0);
+        assert!(g.membership().is_empty());
+        let a = g.join(3);
+        let b = g.join(1);
+        let m = g.membership();
+        assert_eq!(m.epoch, 2);
+        assert_eq!(m.members, vec![1, 3]);
+        assert!(m.contains(3) && !m.contains(2));
+        drop(a);
+        let m = g.membership();
+        assert_eq!(m.epoch, 3);
+        assert_eq!(m.members, vec![1]);
+        drop(b);
+        assert_eq!(g.membership().epoch, 4);
+        assert!(g.membership().is_empty());
+    }
+
+    #[test]
+    fn send_recv_roundtrip_stamps_sender_and_epoch() {
+        let g = ChannelGroup::new();
+        let mut a = g.join(10);
+        let mut b = g.join(20);
+        a.send(20, Payload::Segment { iter: 7, seg: 1, data: vec![1.0, 2.0] })
+            .unwrap();
+        let msg = b.recv(Duration::from_secs(1)).unwrap();
+        assert_eq!(msg.from, 10);
+        assert_eq!(msg.epoch, 2, "stamped with the epoch at send time");
+        match msg.payload {
+            Payload::Segment { iter: 7, seg: 1, ref data } => assert_eq!(data, &[1.0, 2.0]),
+            ref p => panic!("unexpected payload {p:?}"),
+        }
+        assert!(b.try_recv().is_none());
+        assert!(matches!(
+            b.recv(Duration::from_millis(5)),
+            Err(TransportError::Timeout)
+        ));
+    }
+
+    #[test]
+    fn per_pair_fifo_is_preserved() {
+        let g = ChannelGroup::new();
+        let mut a = g.join(1);
+        let mut b = g.join(2);
+        for seg in 0..10usize {
+            a.send(2, Payload::Segment { iter: 0, seg, data: vec![] }).unwrap();
+        }
+        for seg in 0..10usize {
+            match b.recv(Duration::from_secs(1)).unwrap().payload {
+                Payload::Segment { seg: s, .. } => assert_eq!(s, seg, "FIFO violated"),
+                ref p => panic!("unexpected payload {p:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn send_to_departed_peer_errors() {
+        let g = ChannelGroup::new();
+        let mut a = g.join(1);
+        let b = g.join(2);
+        drop(b);
+        assert!(matches!(
+            a.send(2, Payload::StateRequest),
+            Err(TransportError::NoSuchPeer(2))
+        ));
+    }
+
+    #[test]
+    fn leaving_forgets_residency() {
+        let g = ChannelGroup::new();
+        let a = g.join(1);
+        g.residency().record(1, 42);
+        assert!(g.residency().resident(1, 42));
+        drop(a);
+        assert!(!g.residency().resident(1, 42));
+    }
+}

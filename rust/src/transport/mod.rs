@@ -1,0 +1,372 @@
+//! The pluggable transport layer: the system's first wire contract.
+//!
+//! Everything in this crate runs as threads in one process, but the merge
+//! phase no longer has to *pretend* there is a network: this module
+//! defines the [`Transport`] trait — point-to-point send/recv of model
+//! shards between uni-task peers, plus group membership with epochs — and
+//! [`allreduce`] builds ring- and tree-allreduce on top of it, selectable
+//! via `SessionConfig::merge_strategy`. The contract is specified in
+//! prose in `docs/TRANSPORT.md` (ordering, membership epochs, the rejoin
+//! protocol, and what a backend must guarantee for bit-identity); a
+//! future TCP/shared-memory backend implements the same trait and
+//! inherits the property tests.
+//!
+//! Three guarantees every backend must provide (see `docs/TRANSPORT.md`
+//! § "Backend obligations" for the full list):
+//!
+//! * **FIFO per ordered pair** — messages from peer A to peer B arrive
+//!   in send order. Messages from *different* senders interleave
+//!   arbitrarily; the collectives match on `(iter, segment)` tags, never
+//!   on arrival order.
+//! * **Membership epochs** — every join/leave bumps the group epoch, and
+//!   every message is stamped with the sender's epoch at send time. A
+//!   collective drops messages stamped *older* than the membership
+//!   snapshot it was launched with ([`allreduce`]'s staleness rule), so a
+//!   straggling message from a pre-resize regime can never corrupt a
+//!   newer collective.
+//! * **No reordering with loss** — a backend either delivers a message or
+//!   errors the send; silent drops would deadlock a barriered collective.
+//!
+//! The in-process backend is [`channel::ChannelGroup`] /
+//! [`channel::ChannelEndpoint`] (mpsc channels, a shared membership map).
+//!
+//! # Segment geometry
+//!
+//! Ring-allreduce tiles the model into exactly `k` *fixed-offset*
+//! segments — [`segment_range`] — reusing the principle of
+//! [`crate::exec::ShardQueue::shard_range`]: geometry is a pure function
+//! of `(model_len, k)` and never depends on who sends what when. Combined
+//! with the elementwise `merge_shard` invariant
+//! ([`crate::algos::Algorithm::merge_shard`]), a ring segment is just
+//! another contiguous shard, so the collective's result is bit-identical
+//! to the serial fold (see [`allreduce`] for how the fold order is
+//! preserved).
+//!
+//! # Payload residency
+//!
+//! The group additionally tracks which immutable chunk payloads each
+//! member has ever hosted ([`Residency`]). Payloads are write-once
+//! (`chunks` module privacy enforces it), so residency is sticky while a
+//! node stays a member and forgotten when it leaves — this is what lets
+//! the scheduler's `NetworkModel::chunk_cost(warm|cold)` pricing read
+//! *real* membership instead of always charging cold
+//! (`coordinator::policy::PolicyCtx::move_chunk`).
+
+pub mod allreduce;
+pub mod channel;
+
+pub use allreduce::{
+    fetch_state, ring_allreduce, tree_allreduce, AllreduceKind, AllreduceRun, CollectiveCtx,
+    CollectiveStats,
+};
+pub use channel::{ChannelEndpoint, ChannelGroup};
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::chunks::ChunkId;
+use crate::cluster::NodeId;
+
+/// A point-in-time snapshot of a transport group's membership.
+///
+/// `epoch` increments on every join or leave; collectives capture the
+/// snapshot once at launch and validate incoming traffic against it
+/// (messages stamped with an older epoch are stale by definition — they
+/// were sent under a membership regime that no longer exists).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Membership {
+    pub epoch: u64,
+    /// Member node ids, sorted ascending (a canonical order so two peers
+    /// snapshotting the same epoch agree on ranks).
+    pub members: Vec<NodeId>,
+}
+
+impl Membership {
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn contains(&self, node: NodeId) -> bool {
+        self.members.contains(&node)
+    }
+}
+
+/// One update's contribution as it travels through a collective: the
+/// task's position in the fold order, its merge weight, and its delta
+/// (the full vector for tree gather, one segment's slice for ring
+/// scatter).
+#[derive(Clone, Debug)]
+pub struct UpdatePart {
+    /// Position in the task-order fold — the serial `merge` folds updates
+    /// in this order, and so must every collective (bit-identity).
+    pub task_idx: usize,
+    /// The update's sample count (lSGD's merge normalizer sums these, so
+    /// a slice must carry it even though the delta is partial).
+    pub samples: usize,
+    pub delta: Vec<f32>,
+}
+
+/// What moves over the wire. Every collective payload is tagged with the
+/// iteration it belongs to: collectives are barriered per iteration, so
+/// the tag (plus the epoch stamp on [`Message`]) is what lets a receiver
+/// reject traffic from another regime instead of mis-folding it.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Ring scatter: the sender's own update restricted to segment `seg`,
+    /// bound for that segment's owner.
+    UpdateSlice {
+        iter: u64,
+        seg: usize,
+        part: UpdatePart,
+    },
+    /// Ring all-gather: a fully merged fixed-offset segment.
+    Segment { iter: u64, seg: usize, data: Vec<f32> },
+    /// Tree gather: every update in the sender's subtree (full deltas).
+    Updates { iter: u64, parts: Vec<UpdatePart> },
+    /// Tree broadcast — and the reply to a [`Payload::StateRequest`]: a
+    /// complete model vector.
+    Model { iter: u64, data: Vec<f32> },
+    /// Rejoin protocol: ask any peer for its latest complete model. The
+    /// only payload exempt from epoch staleness checks — a rejoining node
+    /// is cross-epoch by design.
+    StateRequest,
+}
+
+impl Payload {
+    /// Bytes this payload would occupy on a real wire (f32 data only;
+    /// framing is backend-specific and excluded on purpose so the
+    /// recorded byte counts are backend-independent).
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Payload::UpdateSlice { part, .. } => part.delta.len() * 4,
+            Payload::Segment { data, .. } => data.len() * 4,
+            Payload::Updates { parts, .. } => {
+                parts.iter().map(|p| p.delta.len() * 4).sum()
+            }
+            Payload::Model { data, .. } => data.len() * 4,
+            Payload::StateRequest => 0,
+        }
+    }
+}
+
+/// A delivered payload plus its provenance: who sent it and under which
+/// membership epoch.
+#[derive(Clone, Debug)]
+pub struct Message {
+    pub from: NodeId,
+    /// The sender's group epoch at send time (the staleness stamp).
+    pub epoch: u64,
+    pub payload: Payload,
+}
+
+/// Transport-level failures. Deliberately small: a collective either
+/// completes bit-identically or surfaces one of these — there is no
+/// partial-success state.
+#[derive(Debug)]
+pub enum TransportError {
+    /// The peer's receive side is gone (its endpoint was dropped).
+    Closed(NodeId),
+    /// Send target is not a current group member.
+    NoSuchPeer(NodeId),
+    /// `recv` exceeded its timeout with nothing delivered.
+    Timeout,
+    /// The collective's invariants were violated (wrong part count,
+    /// caller not in the rank order, …).
+    Protocol(&'static str),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Closed(n) => write!(f, "peer {n} closed its endpoint"),
+            TransportError::NoSuchPeer(n) => write!(f, "no such peer {n} in the group"),
+            TransportError::Timeout => write!(f, "transport recv timed out"),
+            TransportError::Protocol(msg) => write!(f, "collective protocol violation: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Point-to-point transport between uni-task peers — the wire contract.
+///
+/// One endpoint per member; methods take `&mut self` because an endpoint
+/// is owned by exactly one worker thread (receive queues are not shared).
+/// The contract a backend must satisfy — FIFO per ordered sender/receiver
+/// pair, epoch stamping, deliver-or-error — is specified in
+/// `docs/TRANSPORT.md`; [`crate::transport::allreduce`]'s property tests
+/// are written against the trait, so a new backend inherits them.
+pub trait Transport: Send {
+    /// This endpoint's node id.
+    fn node(&self) -> NodeId;
+
+    /// Current membership snapshot (epoch + sorted members).
+    fn membership(&self) -> Membership;
+
+    /// Deliver `payload` to `to`, stamped with the current epoch.
+    /// Either delivers or errors — a backend must never drop silently.
+    fn send(&mut self, to: NodeId, payload: Payload) -> Result<(), TransportError>;
+
+    /// Block for the next message, up to `timeout`.
+    fn recv(&mut self, timeout: Duration) -> Result<Message, TransportError>;
+
+    /// Non-blocking receive; `None` when the queue is empty.
+    fn try_recv(&mut self) -> Option<Message>;
+}
+
+/// Which immutable chunk payloads each group member has ever hosted.
+///
+/// Payloads are write-once, so hosting once means the bytes are still
+/// valid forever — residency is *sticky* while the node remains a member
+/// and forgotten when its endpoint leaves the group (a departed node's
+/// storage is reclaimed in the modeled cluster). The scheduler reads this
+/// through [`crate::coordinator::policy::PolicyCtx`] to price chunk moves
+/// warm (state-only) vs cold (payload + state) with
+/// `NetworkModel::chunk_cost`; because residency is a pure function of
+/// the movement history, the priced virtual time stays deterministic.
+#[derive(Clone, Default)]
+pub struct Residency {
+    inner: Arc<Mutex<HashMap<NodeId, HashSet<ChunkId>>>>,
+}
+
+impl Residency {
+    /// Record that `node` now hosts `chunk`'s payload.
+    pub fn record(&self, node: NodeId, chunk: ChunkId) {
+        self.inner
+            .lock()
+            .expect("residency lock")
+            .entry(node)
+            .or_default()
+            .insert(chunk);
+    }
+
+    /// Does `node` already hold `chunk`'s payload (a warm destination)?
+    pub fn resident(&self, node: NodeId, chunk: ChunkId) -> bool {
+        self.inner
+            .lock()
+            .expect("residency lock")
+            .get(&node)
+            .is_some_and(|s| s.contains(&chunk))
+    }
+
+    /// Forget everything `node` hosted (it left the group).
+    pub fn forget(&self, node: NodeId) {
+        self.inner.lock().expect("residency lock").remove(&node);
+    }
+
+    /// Distinct payloads recorded for `node` (diagnostics/tests).
+    pub fn count(&self, node: NodeId) -> usize {
+        self.inner
+            .lock()
+            .expect("residency lock")
+            .get(&node)
+            .map_or(0, |s| s.len())
+    }
+}
+
+/// Fixed `(offset, len)` range of ring segment `seg` out of `k`.
+///
+/// The same fixed-offset principle as [`crate::exec::ShardQueue::shard_range`]
+/// — geometry is a pure function of `(model_len, k)` — specialized to
+/// *exactly* `k` segments so every rank owns one: segment length is
+/// `⌈model_len / k⌉` and, when the model is smaller than the ring, tail
+/// segments are empty (their owners send and receive zero-length slices
+/// but still participate in every round, keeping the protocol uniform).
+/// Non-empty segments coincide exactly with the shards of a
+/// `ShardQueue` laid out at one shard per worker.
+pub fn segment_range(model_len: usize, k: usize, seg: usize) -> (usize, usize) {
+    assert!(k > 0 && seg < k, "segment {seg} of {k}");
+    if model_len == 0 {
+        return (0, 0);
+    }
+    let per = model_len.div_ceil(k);
+    let offset = (seg * per).min(model_len);
+    (offset, per.min(model_len - offset))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{ReduceOptions, ShardQueue};
+
+    #[test]
+    fn segments_tile_the_model_in_order() {
+        for (len, k) in [(97usize, 4usize), (100, 8), (5, 8), (1, 1), (16, 16), (3, 7)] {
+            let mut at = 0usize;
+            for s in 0..k {
+                let (off, l) = segment_range(len, k, s);
+                assert_eq!(off, at.min(len), "len={len} k={k} seg={s}");
+                at = off + l;
+            }
+            assert_eq!(at, len, "len={len} k={k}: segments must cover the model");
+        }
+    }
+
+    #[test]
+    fn model_smaller_than_ring_leaves_empty_tail_segments() {
+        // 3 elements over 8 ranks: per = 1, segments 0..3 hold one element
+        // each, segments 3..8 are empty but well-formed.
+        for s in 0..8 {
+            let (off, l) = segment_range(3, 8, s);
+            if s < 3 {
+                assert_eq!((off, l), (s, 1));
+            } else {
+                assert_eq!((off, l), (3, 0), "seg {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn nonempty_segments_match_one_shard_per_worker_geometry() {
+        // The ring reuses exec/reduce.rs's fixed-offset shard geometry:
+        // with `shards_per_worker = 1` the ShardQueue's shards are exactly
+        // the non-empty ring segments.
+        for (len, k) in [(97usize, 4usize), (1000, 8), (64, 2)] {
+            let q = ShardQueue::new(len, k, ReduceOptions { shards_per_worker: 1, stealing: true });
+            for i in 0..q.n_shards() {
+                assert_eq!(q.shard_range(i), segment_range(len, k, i), "len={len} k={k} i={i}");
+            }
+            for s in q.n_shards()..k {
+                assert_eq!(segment_range(len, k, s).1, 0, "tail segment {s} must be empty");
+            }
+        }
+    }
+
+    #[test]
+    fn residency_is_sticky_until_forgotten() {
+        let r = Residency::default();
+        assert!(!r.resident(1, 7));
+        r.record(1, 7);
+        r.record(1, 8);
+        r.record(2, 7);
+        assert!(r.resident(1, 7) && r.resident(1, 8) && r.resident(2, 7));
+        assert!(!r.resident(2, 8));
+        assert_eq!(r.count(1), 2);
+        // Re-recording is idempotent.
+        r.record(1, 7);
+        assert_eq!(r.count(1), 2);
+        // Leaving forgets only the departed node.
+        r.forget(1);
+        assert!(!r.resident(1, 7));
+        assert!(r.resident(2, 7));
+        assert_eq!(r.count(1), 0);
+    }
+
+    #[test]
+    fn wire_bytes_count_f32_data_only() {
+        let part = UpdatePart { task_idx: 0, samples: 3, delta: vec![0.0; 10] };
+        assert_eq!(Payload::UpdateSlice { iter: 0, seg: 0, part: part.clone() }.wire_bytes(), 40);
+        assert_eq!(Payload::Segment { iter: 0, seg: 0, data: vec![0.0; 5] }.wire_bytes(), 20);
+        assert_eq!(
+            Payload::Updates { iter: 0, parts: vec![part.clone(), part] }.wire_bytes(),
+            80
+        );
+        assert_eq!(Payload::Model { iter: 0, data: vec![0.0; 7] }.wire_bytes(), 28);
+        assert_eq!(Payload::StateRequest.wire_bytes(), 0);
+    }
+}

@@ -1,0 +1,140 @@
+//! `merge_strategy` must be invisible to the science: a session run with
+//! ring- or tree-allreduce produces a *bit-identical* trajectory — same
+//! metrics, same virtual times, same epochs, same final model — to the
+//! default coordinator-side sharded reduce, through elastic resizes. Only
+//! the measured transport columns (`transport_rounds`, `transport_bytes`)
+//! and wallclock columns may differ.
+//!
+//! Every config in this file pins `merge_strategy` explicitly via the
+//! builder (which wins over the `CHICLE_MERGE_STRATEGY` env override), so
+//! the env test below cannot race the trajectory tests.
+
+use std::time::Duration;
+
+use chicle::config::{
+    AlgoConfig, ElasticSpec, MergeStrategy, ModelKind, SessionConfig,
+};
+use chicle::coordinator::TrainingSession;
+use chicle::data::synth;
+use chicle::metrics::MetricsLog;
+
+/// An elastic lSGD/MLP session (235k-parameter model, 4 → 2 nodes) under
+/// the given merge strategy. Mirrors `overlap_pipeline.rs`'s session so
+/// a strategy-induced divergence cannot hide behind a trivial workload.
+fn mlp_log(strategy: MergeStrategy, overlap: bool) -> MetricsLog {
+    let ds = synth::fmnist_like(1200, 7);
+    let mut cfg = SessionConfig::lsgd("merge-strategy", ModelKind::Mlp, 4)
+        .with_seed(17)
+        .with_overlap(overlap)
+        .with_merge_strategy(strategy)
+        .with_elastic(ElasticSpec::Gradual { from: 4, to: 2, interval_s: 3.0 });
+    cfg.chunk_bytes = 32 * 1024;
+    cfg.max_iters = 10;
+    if let AlgoConfig::Lsgd(l) = &mut cfg.algo {
+        l.eval_every = 4;
+        l.target_acc = 2.0; // unreachable: run all iterations
+    }
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    s.run().unwrap()
+}
+
+/// An elastic CoCoA session under the given merge strategy — the
+/// sample-weighted-free merge family, scaling 2 → 4 (scale *out*, so
+/// ranks join mid-run too).
+fn cocoa_log(strategy: MergeStrategy) -> MetricsLog {
+    let ds = synth::higgs_like(3000, 5);
+    let mut cfg = SessionConfig::cocoa("merge-strategy-cocoa", 2)
+        .with_seed(29)
+        .with_merge_strategy(strategy)
+        .with_elastic(ElasticSpec::Gradual { from: 2, to: 4, interval_s: 3.0 });
+    cfg.max_iters = 10;
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    s.run().unwrap()
+}
+
+fn assert_same_science(a: &MetricsLog, b: &MetricsLog, label: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: record counts");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.iter, y.iter, "{label}");
+        assert_eq!(x.metric, y.metric, "{label} iter {}", x.iter);
+        assert_eq!(x.vtime, y.vtime, "{label} iter {}", x.iter);
+        assert_eq!(x.epochs, y.epochs, "{label} iter {}", x.iter);
+        assert_eq!(x.n_tasks, y.n_tasks, "{label} iter {}", x.iter);
+        assert_eq!(x.samples, y.samples, "{label} iter {}", x.iter);
+        assert_eq!(x.train_loss, y.train_loss, "{label} iter {}", x.iter);
+    }
+}
+
+#[test]
+fn ring_and_tree_trajectories_match_coordinator_reduce() {
+    let coord = mlp_log(MergeStrategy::Coordinator, false);
+    let ring = mlp_log(MergeStrategy::Ring, false);
+    let tree = mlp_log(MergeStrategy::Tree, false);
+    assert_same_science(&coord, &ring, "ring");
+    assert_same_science(&coord, &tree, "tree");
+
+    // The coordinator reduce never touches the transport; the collectives
+    // record their measured protocol rounds — 2(k−1) for ring,
+    // 2·⌊log2 k⌋ for tree — exactly, per iteration, through the resize.
+    for r in &coord.records {
+        assert_eq!((r.transport_rounds, r.transport_bytes), (0, 0), "iter {}", r.iter);
+    }
+    for r in &ring.records {
+        let k = r.n_tasks;
+        let want = if k > 1 { 2 * (k - 1) } else { 0 };
+        assert_eq!(r.transport_rounds, want, "ring iter {}", r.iter);
+        assert_eq!(r.transport_bytes > 0, k > 1, "ring iter {}", r.iter);
+    }
+    for r in &tree.records {
+        let k = r.n_tasks;
+        let want = if k > 1 { 2 * k.ilog2() as usize } else { 0 };
+        assert_eq!(r.transport_rounds, want, "tree iter {}", r.iter);
+    }
+    // The elastic scale-in really ran under the collectives.
+    assert_eq!(ring.records.last().unwrap().n_tasks, 2);
+}
+
+#[test]
+fn cocoa_scale_out_trajectories_match_across_strategies() {
+    let coord = cocoa_log(MergeStrategy::Coordinator);
+    let ring = cocoa_log(MergeStrategy::Ring);
+    let tree = cocoa_log(MergeStrategy::Tree);
+    assert_same_science(&coord, &ring, "ring");
+    assert_same_science(&coord, &tree, "tree");
+    // Ranks joined mid-run and folded in task order all the same.
+    assert_eq!(ring.records.last().unwrap().n_tasks, 4);
+}
+
+/// Collectives are barriered: under `merge_strategy = ring` the overlap
+/// pipeline must stand down (no speculative iteration can run while the
+/// merged model only exists inside the collective) — and the trajectory
+/// must *still* match an overlapped coordinator run bit for bit.
+#[test]
+fn collectives_force_the_barriered_schedule() {
+    let ring = mlp_log(MergeStrategy::Ring, true);
+    assert!(
+        ring.records.iter().all(|r| r.overlap_wall == Duration::ZERO),
+        "overlap must never engage under a collective merge"
+    );
+    let coord_piped = mlp_log(MergeStrategy::Coordinator, true);
+    assert_same_science(&coord_piped, &ring, "ring-vs-overlapped-coordinator");
+}
+
+/// `CHICLE_MERGE_STRATEGY` steers freshly constructed configs (the CI
+/// tier-1 ring leg uses this); configs built with the explicit builder —
+/// every other test in this file — are immune to it.
+#[test]
+fn env_override_steers_new_configs_only() {
+    std::env::set_var("CHICLE_MERGE_STRATEGY", "tree");
+    let fresh = SessionConfig::cocoa("env-fresh", 2);
+    let pinned = SessionConfig::cocoa("env-pinned", 2)
+        .with_merge_strategy(MergeStrategy::Ring);
+    std::env::remove_var("CHICLE_MERGE_STRATEGY");
+    assert_eq!(fresh.merge_strategy, MergeStrategy::Tree);
+    assert_eq!(pinned.merge_strategy, MergeStrategy::Ring);
+    assert_eq!(
+        SessionConfig::cocoa("env-unset", 2).merge_strategy,
+        MergeStrategy::Coordinator,
+        "no override once the variable is gone"
+    );
+}
