@@ -97,6 +97,22 @@ impl MergeStrategy {
     }
 }
 
+/// `CHICLE_LOGICAL_TASKS` override (programmatic constructors only,
+/// mirroring [`MergeStrategy::env_override`]): lets CI run a whole tier-1
+/// leg with K logical uni-tasks multiplexed onto however many worker
+/// threads each test's elastic spec provides, without touching any config
+/// file. Unset, empty, or `0` means no override; junk fails loudly rather
+/// than silently training at the wrong parallelism degree.
+fn logical_tasks_env() -> Option<usize> {
+    match std::env::var("CHICLE_LOGICAL_TASKS") {
+        Ok(s) if !s.is_empty() => Some(
+            s.parse()
+                .expect("CHICLE_LOGICAL_TASKS must be a non-negative integer"),
+        ),
+        _ => None,
+    }
+}
+
 /// Sample→chunk placement (paper §A.1: Snap ML splits contiguously, Chicle
 /// assigns randomly — this is the Criteo difference).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -403,6 +419,16 @@ pub struct SessionConfig {
     /// the transport layer. Bit-identical results either way; collectives
     /// are barriered, so `overlap` only takes effect under `Coordinator`.
     pub merge_strategy: MergeStrategy,
+    /// Decouple the algorithmic parallelism degree K from the worker
+    /// thread count W (uni-tasks only): `logical_tasks = K > 0` fixes K
+    /// logical uni-tasks that are multiplexed round-robin onto however
+    /// many worker threads the elastic schedule currently provides, and
+    /// the iterate trajectory is bit-identical across any 1 ≤ W at that
+    /// fixed K (threads beyond K sit idle). 0 — the default — keeps the
+    /// legacy coupling where one task owns one thread and K tracks the
+    /// node count. Ignored under micro-task emulation, which already
+    /// fixes K its own way (and pays the wave model for it).
+    pub logical_tasks: usize,
 }
 
 impl SessionConfig {
@@ -428,6 +454,7 @@ impl SessionConfig {
             shards_per_worker: DEFAULT_SHARDS_PER_WORKER,
             adaptive_spw: true,
             merge_strategy: MergeStrategy::env_override().unwrap_or_default(),
+            logical_tasks: logical_tasks_env().unwrap_or(0),
         }
     }
 
@@ -453,6 +480,17 @@ impl SessionConfig {
             shards_per_worker: DEFAULT_SHARDS_PER_WORKER,
             adaptive_spw: true,
             merge_strategy: MergeStrategy::env_override().unwrap_or_default(),
+            logical_tasks: logical_tasks_env().unwrap_or(0),
+        }
+    }
+
+    /// The decoupled logical-task count, when task/thread decoupling is
+    /// active: uni-tasks with `logical_tasks > 0`. Micro-task emulation
+    /// and the legacy one-task-per-thread schedule both return `None`.
+    pub fn decoupled_tasks(&self) -> Option<usize> {
+        match self.task_model {
+            TaskModel::UniTasks if self.logical_tasks > 0 => Some(self.logical_tasks),
+            _ => None,
         }
     }
 
@@ -483,6 +521,13 @@ impl SessionConfig {
 
     pub fn with_merge_strategy(mut self, strategy: MergeStrategy) -> Self {
         self.merge_strategy = strategy;
+        self
+    }
+
+    /// Pin the logical-task count K explicitly (wins over the
+    /// `CHICLE_LOGICAL_TASKS` env override the constructors read).
+    pub fn with_logical_tasks(mut self, k: usize) -> Self {
+        self.logical_tasks = k;
         self
     }
 
@@ -571,6 +616,7 @@ impl SessionConfig {
             ("shards_per_worker", Json::num(self.shards_per_worker as f64)),
             ("adaptive_spw", Json::Bool(self.adaptive_spw)),
             ("merge_strategy", Json::str(self.merge_strategy.as_str())),
+            ("logical_tasks", Json::num(self.logical_tasks as f64)),
         ])
     }
 
@@ -661,6 +707,13 @@ impl SessionConfig {
                 .map(|m| MergeStrategy::parse(m.as_str()?))
                 .transpose()?
                 .unwrap_or_default(),
+            // Absent in configs written before task/thread decoupling; a
+            // saved config pins its K, so no env override here either.
+            logical_tasks: v
+                .opt("logical_tasks")
+                .map(Json::as_usize)
+                .transpose()?
+                .unwrap_or(0),
         })
     }
 
@@ -745,6 +798,34 @@ mod tests {
 
         assert!(MergeStrategy::parse("butterfly").is_err());
         assert_eq!(MergeStrategy::parse("tree").unwrap().as_str(), "tree");
+    }
+
+    #[test]
+    fn logical_tasks_roundtrips_and_defaults() {
+        // The env-override precedence itself is covered in
+        // tests/logical_tasks.rs (its own process, like the merge-strategy
+        // env test) — mutating the variable here could race parallel unit
+        // tests that construct configs through the env-reading paths.
+        let cfg = SessionConfig::cocoa("k8", 4).with_logical_tasks(8);
+        assert_eq!(cfg.decoupled_tasks(), Some(8));
+        let back = SessionConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back.logical_tasks, 8);
+
+        // Micro-task emulation fixes K its own way; decoupling stands down.
+        assert_eq!(cfg.with_microtasks(16).decoupled_tasks(), None);
+
+        // Configs written before task/thread decoupling lack the key.
+        let legacy = match SessionConfig::cocoa("legacy", 2).to_json() {
+            Json::Obj(mut o) => {
+                o.remove("logical_tasks");
+                Json::Obj(o)
+            }
+            _ => unreachable!(),
+        };
+        let back = SessionConfig::from_json(&legacy).unwrap();
+        assert_eq!(back.logical_tasks, 0);
+        assert_eq!(back.decoupled_tasks(), None);
     }
 
     #[test]

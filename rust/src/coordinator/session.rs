@@ -134,11 +134,15 @@ impl TrainingSession {
         };
 
         let chunks = make_chunks(&train, cfg.chunk_bytes);
+        // Enough chunks to give every task at least one: tasks are nodes
+        // under the legacy coupling, but a fixed K logical tasks under
+        // the decoupled schedule.
+        let min_tasks = cfg.elastic.max_nodes().max(cfg.decoupled_tasks().unwrap_or(0));
         anyhow::ensure!(
-            chunks.len() >= cfg.elastic.max_nodes(),
-            "only {} chunks for up to {} nodes — reduce chunk_bytes",
+            chunks.len() >= min_tasks,
+            "only {} chunks for up to {} tasks — reduce chunk_bytes",
             chunks.len(),
-            cfg.elastic.max_nodes()
+            min_tasks
         );
         let trainer = Trainer::new(cfg, algo, chunks)?;
         Ok(TrainingSession { trainer, name })

@@ -71,6 +71,15 @@
 //! (each with its own resident worker) regardless of node count and
 //! projects iteration time with the wave model; convergence per epoch then
 //! only depends on K, exactly as the paper argues.
+//!
+//! The *decoupled schedule* (`SessionConfig::logical_tasks` = K > 0,
+//! uni-tasks mode) goes further: K logical uni-tasks are a session
+//! constant, worker threads are interchangeable hosts, and elasticity
+//! resizes the thread count W — rebinding task→thread assignments
+//! round-robin — while the iterate trajectory stays bit-identical at
+//! fixed K for any 1 ≤ W ≤ K, mid-run resizes included (see
+//! `docs/ARCHITECTURE.md`, "Logical-task multiplexing", and
+//! `tests/logical_tasks.rs`, which pins the W-sweep).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -81,7 +90,9 @@ use crate::algos::{Algorithm, LocalUpdate, ModelVec};
 use crate::chunks::{Chunk, NetworkModel};
 use crate::cluster::{NodeId, NodeSpec, ResourceEvent, ResourceManager, TraceResourceManager};
 use crate::config::{MergeStrategy, Partitioning, SessionConfig, TaskModel};
-use crate::exec::{ModelRef, PendingIteration, ReduceBuf, ReduceOptions, TaskRun, WorkerPool};
+use crate::exec::{
+    ModelRef, PendingIteration, ReduceBuf, ReduceOptions, TaskRun, TaskSlot, WorkerPool,
+};
 use crate::metrics::{IterationRecord, Metric, MetricsLog, SwimlaneRecorder, TaskSpan};
 use crate::sim::VirtualClock;
 use crate::transport::AllreduceKind;
@@ -160,8 +171,19 @@ pub struct Trainer {
     cfg: SessionConfig,
     algo: Arc<dyn Algorithm>,
     tasks: Vec<TaskState>,
-    /// The persistent uni-task executor: one resident worker per task.
+    /// The persistent uni-task executor: one resident worker per task
+    /// under the legacy coupling, one per *thread* (hosting a set of
+    /// logical tasks) under the decoupled schedule.
     pool: WorkerPool,
+    /// Decoupled schedule only (`cfg.decoupled_tasks()`): the live worker
+    /// threads, in resource-manager assignment order. Empty under the
+    /// legacy coupling and micro-task emulation.
+    threads: Vec<NodeId>,
+    /// Decoupled schedule only: `assignment[i]` is the thread currently
+    /// hosting logical task `i`. Rebound round-robin over `threads` after
+    /// every elastic event; rebinds move *bindings*, never chunks — the
+    /// stores are shared `Arc`s between the trainer and the workers.
+    assignment: Vec<NodeId>,
     rm: TraceResourceManager,
     clock: VirtualClock,
     net: NetworkModel,
@@ -190,17 +212,27 @@ impl Trainer {
         let mut rng = Rng::seed_from_u64(cfg.seed);
         let n_total: usize = chunks.iter().map(|c| c.n_samples()).sum();
 
-        // Initial task set.
+        // Initial task set. Under the decoupled schedule the K logical
+        // tasks get *synthetic* unit-speed specs: virtual time projects
+        // per logical task (`super::timing`), so unit speeds make the
+        // vtime trajectory a function of K alone — bit-identical at any
+        // worker-thread count W, which is the whole point.
         let window = cfg.policies.rebalance_window;
-        let tasks: Vec<TaskState> = match cfg.task_model {
-            TaskModel::UniTasks => rm
-                .assigned()
-                .iter()
-                .map(|n| TaskState::new(n.clone(), window))
-                .collect(),
-            TaskModel::MicroTasks { k } => (0..k)
+        let tasks: Vec<TaskState> = if let Some(k) = cfg.decoupled_tasks() {
+            (0..k)
                 .map(|i| TaskState::new(NodeSpec::new(i as u32, 1.0), window))
-                .collect(),
+                .collect()
+        } else {
+            match cfg.task_model {
+                TaskModel::UniTasks => rm
+                    .assigned()
+                    .iter()
+                    .map(|n| TaskState::new(n.clone(), window))
+                    .collect(),
+                TaskModel::MicroTasks { k } => (0..k)
+                    .map(|i| TaskState::new(NodeSpec::new(i as u32, 1.0), window))
+                    .collect(),
+            }
         };
         anyhow::ensure!(!tasks.is_empty(), "no tasks at t=0");
 
@@ -253,22 +285,52 @@ impl Trainer {
             crate::config::AlgoConfig::Lsgd(l) => l.eval_every.max(1),
         };
 
-        // Bring up the persistent executor: one resident worker per task,
-        // sharing the task's chunk store.
+        // Task → thread multiplexing (decoupled schedule): the RM's
+        // assigned nodes are worker *threads*, and logical task `i` is
+        // dealt to thread `i mod W`. Legacy coupling keeps both empty.
+        let (threads, assignment): (Vec<NodeId>, Vec<NodeId>) =
+            if cfg.decoupled_tasks().is_some() {
+                let threads: Vec<NodeId> = rm.assigned().iter().map(|n| n.id).collect();
+                anyhow::ensure!(!threads.is_empty(), "no worker threads at t=0");
+                let assignment =
+                    (0..tasks.len()).map(|i| threads[i % threads.len()]).collect();
+                (threads, assignment)
+            } else {
+                (Vec::new(), Vec::new())
+            };
+
+        // Bring up the persistent executor — one resident worker per task
+        // (legacy), or one per thread hosting its dealt set of logical-
+        // task contexts (decoupled) — sharing the tasks' chunk stores.
         let mut pool = WorkerPool::new(Arc::clone(&algo));
         if cfg.adaptive_spw {
             pool.enable_adaptive_spw(cfg.shards_per_worker.max(1));
         }
-        for task in &tasks {
-            pool.spawn_worker(task.node.id, task.store.clone());
+        if cfg.decoupled_tasks().is_some() {
+            for &th in &threads {
+                let hosted: Vec<_> = assignment
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, a)| **a == th)
+                    .map(|(i, _)| (i, tasks[i].store.clone()))
+                    .collect();
+                pool.spawn_worker_with_tasks(th, hosted);
+            }
+        } else {
+            for task in &tasks {
+                pool.spawn_worker(task.node.id, task.store.clone());
+            }
         }
         // Seed the transport group's payload-residency map with the
         // initial placement: a chunk later moving back to its first home
-        // is priced warm (state-only) by `PolicyCtx::move_chunk`.
+        // is priced warm (state-only) by `PolicyCtx::move_chunk`. In the
+        // decoupled schedule the group members are threads, so a hosted
+        // chunk is resident on its task's current host.
         let residency = pool.residency();
-        for task in &tasks {
+        for (i, task) in tasks.iter().enumerate() {
+            let home = assignment.get(i).copied().unwrap_or(task.node.id);
             for chunk in task.store.lock().iter() {
-                residency.record(task.node.id, chunk.id);
+                residency.record(home, chunk.id);
             }
         }
 
@@ -279,6 +341,8 @@ impl Trainer {
             algo,
             tasks,
             pool,
+            threads,
+            assignment,
             rm,
             clock: VirtualClock::new(),
             net: NetworkModel::default(),
@@ -320,6 +384,9 @@ impl Trainer {
     /// spawn a worker per assigned node, drain-then-shutdown revoked ones
     /// through the executor. Returns bytes moved for transfer accounting.
     fn phase_elasticity(&mut self) -> Result<usize> {
+        if self.cfg.decoupled_tasks().is_some() {
+            return self.phase_elasticity_decoupled();
+        }
         if !matches!(self.cfg.task_model, TaskModel::UniTasks) {
             // Micro-task emulation keeps K fixed, but the RM must still
             // advance so the wave model projects over the *current* node
@@ -406,6 +473,66 @@ impl Trainer {
         Ok(moved)
     }
 
+    /// Phase 1, decoupled schedule: elastic events change the worker
+    /// *thread* set W, never the logical task set K. A revoked thread is
+    /// released without draining (its tasks' stores are shared with the
+    /// trainer, so the chunks never move); a newly assigned thread starts
+    /// empty; then every logical task is rebound round-robin over the
+    /// surviving thread list. The whole phase moves zero bytes, consumes
+    /// no RNG and touches no task state or history — which is exactly why
+    /// the iterate trajectory at fixed K is bit-identical across any
+    /// resize schedule of W.
+    fn phase_elasticity_decoupled(&mut self) -> Result<usize> {
+        let events = self.rm.poll(self.clock.now());
+        if events.is_empty() {
+            return Ok(0);
+        }
+        for ev in events {
+            match ev {
+                ResourceEvent::RevokeNotice(ids) => {
+                    for id in &ids {
+                        if self.pool.has_worker(*id) {
+                            self.pool.release_worker(*id)?;
+                        }
+                        self.threads.retain(|t| t != id);
+                    }
+                    anyhow::ensure!(!self.threads.is_empty(), "all worker threads revoked");
+                }
+                ResourceEvent::Assigned(nodes) => {
+                    // Thread speeds are irrelevant to vtime here (the
+                    // projection runs over the synthetic unit-speed task
+                    // specs); the id is all the pool needs.
+                    for n in nodes {
+                        self.pool.spawn_worker_with_tasks(n.id, Vec::new());
+                        self.threads.push(n.id);
+                    }
+                }
+            }
+        }
+        // Rebind task → thread, round-robin over the new thread list.
+        // FIFO command ordering makes this race-free: the install lands
+        // before any iteration dispatched after this phase.
+        let w = self.threads.len();
+        for i in 0..self.tasks.len() {
+            let want = self.threads[i % w];
+            if self.assignment[i] != want {
+                let old = self.assignment[i];
+                if self.pool.has_worker(old) {
+                    self.pool.revoke_task(old, i)?;
+                }
+                self.pool.install_task(want, i, self.tasks[i].store.clone())?;
+                // The task's payloads now reside on the new host (warm-
+                // transfer pricing for any later policy move).
+                let residency = self.pool.residency();
+                for chunk in self.tasks[i].store.lock().iter() {
+                    residency.record(want, chunk.id);
+                }
+                self.assignment[i] = want;
+            }
+        }
+        Ok(0)
+    }
+
     /// Phase 2 — between-iteration policies (scheduler owns the chunks).
     /// Returns bytes moved.
     fn phase_policies(&mut self, iter: usize) -> Result<usize> {
@@ -426,20 +553,72 @@ impl Trainer {
         Ok(moved_bytes)
     }
 
-    /// The per-task dispatch plan for one iteration: `(node, task_seed)`,
-    /// seeds keyed by `(session seed, iteration, task index)` so the
-    /// trajectory never depends on worker scheduling or pipelining.
-    fn iteration_plan(&self, iter: usize) -> Vec<(NodeId, u64)> {
+    /// The dispatch plan for one iteration: each entry is a worker node
+    /// plus the logical-task slots it hosts. Seeds are keyed by
+    /// `(session seed, iteration, logical task index)` — never by thread
+    /// — so the trajectory depends on neither worker scheduling,
+    /// pipelining, nor (decoupled schedule) the thread count W or where a
+    /// rebind happens to place a task.
+    fn iteration_plan(&self, iter: usize) -> Vec<(NodeId, Vec<TaskSlot>)> {
         let base_seed = self
             .cfg
             .seed
             .wrapping_mul(0x9E3779B97F4A7C15)
             .wrapping_add(iter as u64);
-        self.tasks
-            .iter()
-            .enumerate()
-            .map(|(t, task)| (task.node.id, base_seed.wrapping_add((t as u64) << 32)))
-            .collect()
+        let seed_for = |t: usize| base_seed.wrapping_add((t as u64) << 32);
+        if self.cfg.decoupled_tasks().is_some() {
+            // One entry per thread hosting at least one task, hosted
+            // tasks in ascending task order.
+            self.threads
+                .iter()
+                .filter_map(|&th| {
+                    let slots: Vec<TaskSlot> = self
+                        .assignment
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, a)| **a == th)
+                        .map(|(i, _)| TaskSlot { task: i, seed: seed_for(i) })
+                        .collect();
+                    (!slots.is_empty()).then_some((th, slots))
+                })
+                .collect()
+        } else {
+            // Legacy coupling: one slot per worker, and the logical task
+            // index is the node id (the key `spawn_worker` registered).
+            // The *seed* stays keyed by position in task order, exactly
+            // as before the decoupling.
+            self.tasks
+                .iter()
+                .enumerate()
+                .map(|(t, task)| {
+                    (
+                        task.node.id,
+                        vec![TaskSlot { task: task.node.id as usize, seed: seed_for(t) }],
+                    )
+                })
+                .collect()
+        }
+    }
+
+    /// Collect a dispatched iteration's runs in *logical task order*. The
+    /// pool returns them in dispatch order (flattened per worker), which
+    /// under the decoupled schedule interleaves by hosting thread — so
+    /// they are sorted back by task index, and the cover is checked:
+    /// exactly one run per logical task, or the merge fold would be
+    /// silently wrong.
+    fn collect_runs(&self, pending: PendingIteration) -> Result<Vec<TaskRun>> {
+        let mut runs = self.pool.collect_iteration(pending)?;
+        if self.cfg.decoupled_tasks().is_some() {
+            runs.sort_by_key(|r| r.task);
+            anyhow::ensure!(
+                runs.len() == self.tasks.len()
+                    && runs.iter().enumerate().all(|(i, r)| r.task == i),
+                "iteration covered {} of {} logical tasks",
+                runs.len(),
+                self.tasks.len()
+            );
+        }
+        Ok(runs)
     }
 
     /// Phase 3 — dispatch the iteration to every resident worker and
@@ -447,8 +626,10 @@ impl Trainer {
     fn phase_execute(&mut self, iter: usize) -> Result<Vec<TaskRun>> {
         let k = self.tasks.len();
         let plan = self.iteration_plan(iter);
-        self.pool
-            .run_iteration(&plan, Arc::clone(&self.model), k, None)
+        let pending =
+            self.pool
+                .dispatch_tasks(&plan, ModelRef::Ready(Arc::clone(&self.model)), k, None)?;
+        self.collect_runs(pending)
     }
 
     /// Phase 4 — merge task updates into the shared model, barriered,
@@ -477,17 +658,46 @@ impl Trainer {
             MergeStrategy::Coordinator => None,
         };
         if let Some(kind) = kind {
-            // Rank order = task order: `updates[i]` belongs to `tasks[i]`,
-            // and the collective folds in exactly this order.
-            let order: Vec<NodeId> = self.tasks.iter().map(|t| t.node.id).collect();
-            let out = self.pool.allreduce_model(
-                &order,
-                &self.model,
-                updates.as_ref().clone(),
-                k,
-                kind,
-                iter as u64,
-            )?;
+            let out = if self.cfg.decoupled_tasks().is_some() {
+                // Decoupled schedule: ranks are *threads* (those hosting
+                // at least one task), and each rank carries one
+                // `(task_idx, update)` part per hosted task — k parts
+                // across the collective in total. Owners sort all parts
+                // into task order before the single fold, so the bits
+                // match the serial fold at any thread count W.
+                let order: Vec<NodeId> = self
+                    .threads
+                    .iter()
+                    .copied()
+                    .filter(|th| self.assignment.contains(th))
+                    .collect();
+                let parts: Vec<Vec<(usize, LocalUpdate)>> = order
+                    .iter()
+                    .map(|th| {
+                        self.assignment
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, a)| *a == th)
+                            .map(|(i, _)| (i, updates[i].clone()))
+                            .collect()
+                    })
+                    .collect();
+                self.pool
+                    .allreduce_model_parts(&order, &self.model, parts, k, kind, iter as u64)?
+            } else {
+                // Legacy coupling: rank order = task order — `updates[i]`
+                // belongs to `tasks[i]`, and the collective folds in
+                // exactly this order.
+                let order: Vec<NodeId> = self.tasks.iter().map(|t| t.node.id).collect();
+                self.pool.allreduce_model(
+                    &order,
+                    &self.model,
+                    updates.as_ref().clone(),
+                    k,
+                    kind,
+                    iter as u64,
+                )?
+            };
             self.model = Arc::new(out.model);
             return Ok(MergeReport {
                 merge_wall: t0.elapsed(),
@@ -604,6 +814,7 @@ impl Trainer {
             transport_rounds: report.transport_rounds,
             transport_bytes: report.transport_bytes,
             n_tasks: updates.len(),
+            n_threads: self.pool.len(),
             samples: iter_samples,
             train_loss: if steps > 0 { Some(loss_sum / steps as f64) } else { None },
         });
@@ -741,7 +952,7 @@ impl Trainer {
         let plan = self.iteration_plan(iter + 1);
         let k_next = self.tasks.len();
         let t_dispatch = Instant::now();
-        let iteration = match self.pool.dispatch_iteration(
+        let iteration = match self.pool.dispatch_tasks(
             &plan,
             ModelRef::Pending(Arc::clone(&buf)),
             k_next,
@@ -841,7 +1052,7 @@ impl Trainer {
                     "pipelined iteration {} pending, step({iter}) requested",
                     p.iter
                 );
-                let runs = self.pool.collect_iteration(p.iteration)?;
+                let runs = self.collect_runs(p.iteration)?;
                 // Workers dropped their buffer handles before replying, so
                 // this is the zero-copy hand-over of the merged model.
                 self.model = Arc::new(p.buf.into_model());
@@ -1022,6 +1233,36 @@ mod tests {
         tr.run().unwrap();
         assert_eq!(tr.tasks().len(), 16);
         assert!(tr.metrics.records.iter().all(|r| r.n_tasks == 16));
+    }
+
+    #[test]
+    fn decoupled_mode_keeps_k_tasks_across_thread_scale_in() {
+        // 8 logical tasks on 4 threads scaling in to 2: K (and the
+        // per-iteration task count in the log) must never budge, the
+        // thread column must shrink, and no chunk may be lost — the
+        // stores are shared, rebinds move bindings only.
+        let ds = synth::higgs_like(2000, 5);
+        let chunks = make_chunks(&ds, 2 * 1024);
+        let algo = Arc::new(CocoaAlgo::new(
+            CocoaConfig::default(),
+            Backend::native_cocoa(),
+            ds.n_samples(),
+            ds.dim(),
+        ));
+        let mut cfg = SessionConfig::cocoa("t", 4)
+            .with_logical_tasks(8)
+            .with_elastic(ElasticSpec::Gradual { from: 4, to: 2, interval_s: 5.0 });
+        cfg.max_iters = 25;
+        let mut tr = Trainer::new(cfg, algo, chunks).unwrap();
+        tr.run().unwrap();
+        assert_eq!(tr.tasks().len(), 8, "K is a session constant");
+        assert!(tr.metrics.records.iter().all(|r| r.n_tasks == 8));
+        let first = tr.metrics.records.first().unwrap();
+        let last = tr.metrics.records.last().unwrap();
+        assert_eq!(first.n_threads, 4);
+        assert_eq!(last.n_threads, 2, "scale-in should have fired");
+        let total: usize = tr.tasks().iter().map(|t| t.n_samples()).sum();
+        assert_eq!(total, 2000, "rebinds must conserve chunks");
     }
 
     #[test]

@@ -5,10 +5,14 @@
 //! survives across iterations, with only data (chunks) and roles moving on
 //! scaling events (paper §3). This module is that runtime:
 //!
-//! * [`worker`] — one OS thread per uni-task, spawned once when the node is
+//! * [`worker`] — one OS thread per worker, spawned once when the node is
 //!   assigned and alive until revocation or session end. The thread owns a
-//!   handle to the task's [`crate::chunks::SharedStore`] and executes
-//!   solver iterations against it.
+//!   *set* of logical-task contexts — each a handle to that task's
+//!   [`crate::chunks::SharedStore`] — and executes solver iterations
+//!   against them round-robin in slot order. The legacy coupling is the
+//!   one-context case (the logical task index is the node id); the
+//!   decoupled schedule multiplexes K logical tasks over W ≤ K threads,
+//!   with `InstallTask`/`RevokeTask` rebinding tasks between threads.
 //! * [`pool`] — the coordinator-side [`WorkerPool`]: spawns workers, routes
 //!   commands, and collects completions in a deterministic order.
 //! * [`reduce`] — the work-stealing sharded-reduction primitives: the
@@ -24,9 +28,11 @@
 //!
 //! | command                                      | reply                |
 //! |----------------------------------------------|----------------------|
-//! | `RunIteration { model: ModelRef, k_tasks, seed, budget }` | `Iteration(TaskRun)` |
+//! | `RunIteration { model: ModelRef, k_tasks, slots, budget }` | `Iteration(Vec<TaskRun>)` |
 //! | `ReduceShards { model, updates, queue, buf, slot, k_tasks }` | `ShardsDone { shards, steals }` |
-//! | `Allreduce { model, update, task_idx, order, epoch, iter, kind, .. }` | `AllreduceDone(AllreduceRun)` |
+//! | `Allreduce { model, parts, k_tasks, order, epoch, iter, kind }` | `AllreduceDone(AllreduceRun)` |
+//! | `InstallTask { task, store }`                | — (fire and forget)  |
+//! | `RevokeTask { task }`                        | — (fire and forget)  |
 //! | `SetReduceSlowdown(ns_per_elem)`             | — (fire and forget)  |
 //! | `InstallChunks(chunks)`                      | — (fire and forget)  |
 //! | `DrainChunks`                                | `Drained(chunks)`    |
@@ -72,11 +78,12 @@
 //!
 //! `SessionConfig::merge_strategy` can swap the coordinator-side sharded
 //! reduction for a transport-level collective: [`WorkerPool::begin_allreduce`]
-//! hands every rank its *own* update and the rank order, and the workers
-//! run ring- or tree-allreduce among themselves over their
-//! [`crate::transport`] endpoints (joined at spawn, left at thread exit).
+//! hands every rank its *own* `(task_idx, update)` parts — one per hosted
+//! logical task — and the rank order, and the workers run ring- or
+//! tree-allreduce among themselves over their [`crate::transport`]
+//! endpoints (joined at spawn, left at thread exit).
 //! The ring's segments reuse the fixed-offset geometry above and each
-//! segment's owner folds all `k` update slices in task order, so the
+//! segment's owner folds all `k_tasks` update slices in task order, so the
 //! collective result is bit-identical to the serial fold too — the same
 //! invariant, a different wire. Collectives are barriered (every rank
 //! both sends and receives), so the reduce/dispatch overlap below applies
@@ -110,12 +117,14 @@
 //! ## Determinism
 //!
 //! Task execution is deterministic regardless of worker scheduling: each
-//! task's RNG stream is keyed by `(seed, task index, iteration)`, chunk
-//! stores are only mutated by their own worker during an iteration, and
-//! results are merged in task order (sharded stealing reduction preserves
-//! this — see above). Two runs with the same seed produce identical
-//! `MetricsLog` records (modulo measured wallclock), with or without the
-//! overlap pipeline.
+//! task's RNG stream is keyed by `(seed, task index, iteration)` via its
+//! slot — never by the hosting thread — chunk stores are only mutated by
+//! their own worker during an iteration, and results are merged in task
+//! order (sharded stealing reduction preserves this — see above). Two
+//! runs with the same seed produce identical `MetricsLog` records (modulo
+//! measured wallclock), with or without the overlap pipeline — and, under
+//! the decoupled schedule, for any worker-thread count `1 ≤ W ≤ K`
+//! (`tests/logical_tasks.rs` pins the W-sweep bit-for-bit).
 
 pub mod pool;
 pub mod reduce;
@@ -125,4 +134,4 @@ pub use pool::{AllreduceOutcome, PendingAllreduce, PendingIteration, PendingRedu
 pub use reduce::{
     ModelRef, ReduceBuf, ReduceOptions, ReduceStats, ShardQueue, SpwController, SPW_MAX, SPW_MIN,
 };
-pub use worker::{Command, Reply, TaskRun};
+pub use worker::{Command, Reply, TaskRun, TaskSlot};

@@ -13,7 +13,7 @@ use crate::cluster::NodeId;
 use crate::transport::{AllreduceKind, AllreduceRun, ChannelGroup, Residency};
 
 use super::reduce::{ModelRef, ReduceBuf, ReduceOptions, ReduceStats, ShardQueue, SpwController};
-use super::worker::{worker_loop, Command, Reply, TaskRun};
+use super::worker::{worker_loop, Command, Reply, TaskRun, TaskSlot};
 
 /// Channels + join handle of one resident worker.
 struct WorkerHandle {
@@ -170,10 +170,19 @@ impl WorkerPool {
         self.workers.iter().any(|w| w.node == node)
     }
 
-    /// Spawn the persistent worker thread for one uni-task. `store` is the
-    /// same shared handle the coordinator's `TaskState` keeps, so chunks
-    /// installed by policies between iterations are immediately visible.
+    /// Spawn the persistent worker thread for one uni-task (the legacy
+    /// one-task-per-thread schedule: the logical task index is the node
+    /// id). `store` is the same shared handle the coordinator's
+    /// `TaskState` keeps, so chunks installed by policies between
+    /// iterations are immediately visible.
     pub fn spawn_worker(&mut self, node: NodeId, store: SharedStore) {
+        self.spawn_worker_with_tasks(node, vec![(node as usize, store)]);
+    }
+
+    /// Spawn a worker thread hosting an explicit set of logical-task
+    /// contexts (the decoupled schedule; may be empty — a freshly
+    /// assigned thread gets its share via [`WorkerPool::install_task`]).
+    pub fn spawn_worker_with_tasks(&mut self, node: NodeId, contexts: Vec<(usize, SharedStore)>) {
         assert!(!self.has_worker(node), "worker for node {node} already exists");
         let (cmd_tx, cmd_rx) = channel();
         let (reply_tx, reply_rx) = channel();
@@ -184,7 +193,7 @@ impl WorkerPool {
         let endpoint = self.group.join(node);
         let thread = std::thread::Builder::new()
             .name(format!("uni-task-{node}"))
-            .spawn(move || worker_loop(algo, store, Box::new(endpoint), cmd_rx, reply_tx))
+            .spawn(move || worker_loop(algo, contexts, Box::new(endpoint), cmd_rx, reply_tx))
             .expect("spawn uni-task worker thread");
         self.workers.push(WorkerHandle {
             node,
@@ -192,6 +201,26 @@ impl WorkerPool {
             replies: reply_rx,
             thread: Some(thread),
         });
+    }
+
+    /// Bind logical task `task`'s context to `node`'s worker (decoupled
+    /// schedule). Fire-and-forget and idempotent — re-installing replaces
+    /// the store handle. FIFO ordering makes the rebind race-free: the
+    /// context is in place before any iteration dispatched after this.
+    pub fn install_task(&self, node: NodeId, task: usize, store: SharedStore) -> Result<()> {
+        self.worker(node)?
+            .commands
+            .send(Command::InstallTask { task, store })
+            .map_err(|_| anyhow!("worker for node {node} is gone"))
+    }
+
+    /// Unbind logical task `task` from `node`'s worker (the other half of
+    /// a task→thread rebind). The store survives — the trainer shares it.
+    pub fn revoke_task(&self, node: NodeId, task: usize) -> Result<()> {
+        self.worker(node)?
+            .commands
+            .send(Command::RevokeTask { task })
+            .map_err(|_| anyhow!("worker for node {node} is gone"))
     }
 
     /// Install chunks into a worker's store through the command channel.
@@ -264,13 +293,53 @@ impl WorkerPool {
         result
     }
 
-    /// Dispatch one iteration to every worker in `plan` order — each entry
-    /// is `(node, task_seed)`. The model may be a pending reduction
+    /// Shut a worker thread down *without* draining its chunk stores —
+    /// the decoupled trainer's thread-revocation path. Every hosted
+    /// context's store is shared with the trainer's `TaskState`, so the
+    /// chunks never move: the thread is released and the logical tasks
+    /// are rebound to survivors via [`WorkerPool::install_task`].
+    ///
+    /// Mirrors [`WorkerPool::shutdown_worker`]'s stash discipline: any
+    /// `ShardsDone`/`AllreduceDone` the thread sent before exiting (the
+    /// `Shutdown` queues FIFO behind in-flight commands) is stashed for
+    /// the eventual collect.
+    pub fn release_worker(&mut self, node: NodeId) -> Result<()> {
+        let idx = self
+            .workers
+            .iter()
+            .position(|w| w.node == node)
+            .ok_or_else(|| anyhow!("no worker for node {node}"))?;
+        let mut w = self.workers.remove(idx);
+        if self.steal_victim == Some(node) {
+            self.steal_victim = None;
+        }
+        let _ = w.commands.send(Command::Shutdown);
+        if let Some(t) = w.thread.take() {
+            let _ = t.join();
+        }
+        while let Ok(reply) = w.replies.try_recv() {
+            match reply {
+                Reply::ShardsDone { shards, steals } => {
+                    self.stashed_shards.push((node, shards, steals));
+                }
+                Reply::AllreduceDone(run) => {
+                    self.stashed_allreduce.push((node, run));
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Dispatch one iteration to every worker in `plan` order — each
+    /// entry is a worker node plus the logical-task slots it hosts, run
+    /// round-robin in slot order (the legacy schedule is the
+    /// one-slot-per-entry case). The model may be a pending reduction
     /// ([`ModelRef::Pending`]): workers then start the instant its last
     /// shard lands, with no coordinator round-trip in between.
-    pub fn dispatch_iteration(
+    pub fn dispatch_tasks(
         &self,
-        plan: &[(NodeId, u64)],
+        plan: &[(NodeId, Vec<TaskSlot>)],
         model: ModelRef,
         k_tasks: usize,
         budget: Option<usize>,
@@ -285,13 +354,13 @@ impl WorkerPool {
         // and keep dispatching so every live worker still gets exactly
         // one command this round.
         let mut nodes = Vec::with_capacity(plan.len());
-        for (handle, (node, seed)) in handles.iter().zip(plan) {
+        for (handle, (node, slots)) in handles.iter().zip(plan) {
             let dispatched = handle
                 .commands
                 .send(Command::RunIteration {
                     model: model.clone(),
                     k_tasks,
-                    seed: *seed,
+                    slots: slots.clone(),
                     budget,
                 })
                 .is_ok();
@@ -301,11 +370,29 @@ impl WorkerPool {
         Ok(PendingIteration { nodes })
     }
 
-    /// Collect the replies of a dispatched iteration, in dispatch order.
-    /// Per-worker completion channels make collection deterministic
-    /// regardless of which worker finishes first. Every reply is drained
-    /// before surfacing any error — returning early would leave replies
-    /// queued and desync the per-worker command/reply protocol.
+    /// Legacy dispatch: each plan entry is `(node, task_seed)` and the
+    /// node hosts exactly the task its own `spawn_worker` registered.
+    pub fn dispatch_iteration(
+        &self,
+        plan: &[(NodeId, u64)],
+        model: ModelRef,
+        k_tasks: usize,
+        budget: Option<usize>,
+    ) -> Result<PendingIteration> {
+        let plan: Vec<(NodeId, Vec<TaskSlot>)> = plan
+            .iter()
+            .map(|&(node, seed)| (node, vec![TaskSlot { task: node as usize, seed }]))
+            .collect();
+        self.dispatch_tasks(&plan, model, k_tasks, budget)
+    }
+
+    /// Collect the replies of a dispatched iteration: one reply per
+    /// worker, in dispatch order, flattened into the runs of every hosted
+    /// slot (still in slot order within each worker). Per-worker
+    /// completion channels make collection deterministic regardless of
+    /// which worker finishes first. Every reply is drained before
+    /// surfacing any error — returning early would leave replies queued
+    /// and desync the per-worker command/reply protocol.
     pub fn collect_iteration(&self, pending: PendingIteration) -> Result<Vec<TaskRun>> {
         let mut results = Vec::with_capacity(pending.nodes.len());
         for (node, dispatched) in &pending.nodes {
@@ -320,10 +407,24 @@ impl WorkerPool {
                 }
             });
         }
-        results.into_iter().collect()
+        let mut runs = Vec::new();
+        let mut first_err: Option<anyhow::Error> = None;
+        for r in results {
+            match r {
+                Ok(worker_runs) => runs.extend(worker_runs),
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(runs),
+        }
     }
 
-    /// Dispatch + collect one iteration against a ready model snapshot.
+    /// Dispatch + collect one iteration against a ready model snapshot
+    /// (legacy plan shape).
     pub fn run_iteration(
         &self,
         plan: &[(NodeId, u64)],
@@ -495,11 +596,11 @@ impl WorkerPool {
 
     /// Start a peer-to-peer merge collective (ring- or tree-allreduce)
     /// across the ranks in `order` — which must be the *task order*:
-    /// `updates[i]` is rank `i`'s own update and `order[i]` its node. The
-    /// coordinator only dispatches and collects; update data moves
-    /// worker-to-worker over the transport, and the result is
-    /// bit-identical to the serial fold (see
-    /// [`crate::transport::allreduce`]).
+    /// `updates[i]` is rank `i`'s own update and `order[i]` its node
+    /// (the legacy one-task-per-rank schedule). The coordinator only
+    /// dispatches and collects; update data moves worker-to-worker over
+    /// the transport, and the result is bit-identical to the serial fold
+    /// (see [`crate::transport::allreduce`]).
     ///
     /// Safe to revoke a rank while the collective is in flight: commands
     /// are FIFO per worker, so the rank completes the collective — its
@@ -514,12 +615,38 @@ impl WorkerPool {
         kind: AllreduceKind,
         iter: u64,
     ) -> Result<PendingAllreduce> {
-        anyhow::ensure!(!order.is_empty(), "no ranks to allreduce over");
         anyhow::ensure!(
             order.len() == updates.len(),
             "rank order and updates must align ({} vs {})",
             order.len(),
             updates.len()
+        );
+        let parts = updates.into_iter().enumerate().map(|(i, u)| vec![(i, u)]).collect();
+        self.begin_allreduce_parts(order, model, parts, k_tasks, kind, iter)
+    }
+
+    /// Start a merge collective where each rank may carry *several*
+    /// logical tasks' updates (the decoupled schedule): `parts[r]` is
+    /// rank `r`'s `(task_idx, update)` parts, and `k_tasks` the total
+    /// part count K across all ranks. A thread hosting m tasks
+    /// contributes m slices to every fold; owners still sort all K parts
+    /// into task order before the single `merge_shard`, so the result is
+    /// bit-identical to the serial fold at any rank count.
+    pub fn begin_allreduce_parts(
+        &mut self,
+        order: &[NodeId],
+        model: &Arc<ModelVec>,
+        parts: Vec<Vec<(usize, LocalUpdate)>>,
+        k_tasks: usize,
+        kind: AllreduceKind,
+        iter: u64,
+    ) -> Result<PendingAllreduce> {
+        anyhow::ensure!(!order.is_empty(), "no ranks to allreduce over");
+        anyhow::ensure!(
+            order.len() == parts.len(),
+            "rank order and parts must align ({} vs {})",
+            order.len(),
+            parts.len()
         );
         // Resolve every rank before dispatching anything: a collective
         // with a missing rank deadlocks its peers, so unlike an
@@ -531,14 +658,13 @@ impl WorkerPool {
         let epoch = self.group.membership().epoch;
         let order_arc = Arc::new(order.to_vec());
         let mut nodes = Vec::with_capacity(order.len());
-        for (task_idx, (node, update)) in order.iter().zip(updates).enumerate() {
+        for (node, rank_parts) in order.iter().zip(parts) {
             let dispatched = self
                 .worker(*node)?
                 .commands
                 .send(Command::Allreduce {
                     model: Arc::clone(model),
-                    update: Box::new(update),
-                    task_idx,
+                    parts: rank_parts,
                     k_tasks,
                     order: Arc::clone(&order_arc),
                     epoch,
@@ -611,12 +737,33 @@ impl WorkerPool {
         kind: AllreduceKind,
         iter: u64,
     ) -> Result<AllreduceOutcome> {
+        let parts = updates.into_iter().enumerate().map(|(i, u)| vec![(i, u)]).collect();
+        self.allreduce_model_parts(order, model, parts, k_tasks, kind, iter)
+    }
+
+    /// Barriered multi-part merge collective (decoupled schedule; see
+    /// [`WorkerPool::begin_allreduce_parts`]). A single-rank order folds
+    /// inline on the coordinator — all its parts sorted into task order,
+    /// one `merge_shard`, zero rounds and bytes — which is exactly the
+    /// W = 1 case of the decoupled trainer under a collective strategy.
+    pub fn allreduce_model_parts(
+        &mut self,
+        order: &[NodeId],
+        model: &Arc<ModelVec>,
+        parts: Vec<Vec<(usize, LocalUpdate)>>,
+        k_tasks: usize,
+        kind: AllreduceKind,
+        iter: u64,
+    ) -> Result<AllreduceOutcome> {
         if order.len() <= 1 {
+            let mut all: Vec<(usize, LocalUpdate)> = parts.into_iter().flatten().collect();
+            all.sort_by_key(|(task_idx, _)| *task_idx);
+            let updates: Vec<LocalUpdate> = all.into_iter().map(|(_, u)| u).collect();
             let mut out = (**model).clone();
             self.algo.merge_shard(&mut out, 0, &updates, k_tasks);
             return Ok(AllreduceOutcome { model: out, rounds: 0, bytes: 0 });
         }
-        let pending = self.begin_allreduce(order, model, updates, k_tasks, kind, iter)?;
+        let pending = self.begin_allreduce_parts(order, model, parts, k_tasks, kind, iter)?;
         self.collect_allreduce(pending)
     }
 
@@ -666,8 +813,55 @@ mod tests {
         let model = Arc::new(vec![0.0f32; 4]);
         let runs = p.run_iteration(&[(3, 1)], model, 1, None).unwrap();
         assert_eq!(runs.len(), 1);
+        // Legacy schedule: the logical task index is the node id.
+        assert_eq!(runs[0].task, 3);
         assert_eq!(runs[0].update.samples, 0);
         assert_eq!(runs[0].update.delta, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn multi_context_worker_runs_hosted_slots_in_order() {
+        let mut p = pool();
+        // One thread hosting tasks {0, 2}; a second hosting {1}.
+        p.spawn_worker_with_tasks(7, vec![(0, SharedStore::new()), (2, SharedStore::new())]);
+        p.spawn_worker_with_tasks(8, vec![(1, SharedStore::new())]);
+        assert_eq!(p.len(), 2);
+        let model = Arc::new(vec![0.0f32; 4]);
+        let plan: Vec<(NodeId, Vec<TaskSlot>)> = vec![
+            (7, vec![TaskSlot { task: 0, seed: 10 }, TaskSlot { task: 2, seed: 12 }]),
+            (8, vec![TaskSlot { task: 1, seed: 11 }]),
+        ];
+        let pending = p
+            .dispatch_tasks(&plan, ModelRef::Ready(Arc::clone(&model)), 3, None)
+            .unwrap();
+        let runs = p.collect_iteration(pending).unwrap();
+        // Flattened in dispatch order, slot order within each worker.
+        assert_eq!(runs.iter().map(|r| r.task).collect::<Vec<_>>(), vec![0, 2, 1]);
+
+        // Rebind task 2 onto the other thread: the old host must no
+        // longer accept it, the new one must.
+        p.revoke_task(7, 2).unwrap();
+        p.install_task(8, 2, SharedStore::new()).unwrap();
+        let stale: Vec<(NodeId, Vec<TaskSlot>)> =
+            vec![(7, vec![TaskSlot { task: 2, seed: 0 }])];
+        assert!(p
+            .dispatch_tasks(&stale, ModelRef::Ready(Arc::clone(&model)), 3, None)
+            .and_then(|pend| p.collect_iteration(pend))
+            .is_err());
+        let rebound: Vec<(NodeId, Vec<TaskSlot>)> = vec![
+            (7, vec![TaskSlot { task: 0, seed: 20 }]),
+            (8, vec![TaskSlot { task: 1, seed: 21 }, TaskSlot { task: 2, seed: 22 }]),
+        ];
+        let runs = p
+            .dispatch_tasks(&rebound, ModelRef::Ready(model), 3, None)
+            .and_then(|pend| p.collect_iteration(pend))
+            .unwrap();
+        assert_eq!(runs.iter().map(|r| r.task).collect::<Vec<_>>(), vec![0, 1, 2]);
+
+        // Releasing a thread keeps the pool addressable and consistent.
+        p.release_worker(7).unwrap();
+        assert!(!p.has_worker(7));
+        assert_eq!(p.len(), 1);
     }
 
     #[test]

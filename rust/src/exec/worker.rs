@@ -1,9 +1,16 @@
-//! The uni-task worker loop: one persistent thread per task.
+//! The worker loop: one persistent thread hosting a *set* of logical
+//! uni-task contexts.
 //!
 //! A worker is spawned once (node assignment or session start) and then
 //! processes [`Command`]s until `Shutdown` or channel disconnect. It holds
-//! a clone of the task's [`SharedStore`] and locks it only while running
-//! an iteration — the ownership window the coordinator grants it.
+//! the contexts of the logical tasks currently bound to it — each context
+//! is a `(task index, SharedStore)` pair — and runs them round-robin
+//! within an iteration, locking each store only while running that task's
+//! body. In the legacy one-task-per-thread schedule a worker hosts
+//! exactly one context; with `SessionConfig::logical_tasks` the trainer
+//! multiplexes K contexts onto W ≤ K threads and rebinds them with
+//! [`Command::InstallTask`]/[`Command::RevokeTask`] as threads come and
+//! go — the tasks (and their chunk stores) never notice.
 //!
 //! # Protocol invariants
 //!
@@ -16,14 +23,17 @@
 //!   so the revoked worker always finishes its shard claims first. The
 //!   same rule covers a mid-*collective* revoke: a `DrainChunks` behind
 //!   an `Allreduce` waits for the collective to finish — which it must,
-//!   because the revoked rank's peers are blocked on its slices.
+//!   because the revoked rank's peers are blocked on its slices. Task
+//!   rebinds obey it too: an `InstallTask` sent after a `RunIteration`
+//!   cannot add a context to an iteration already dispatched.
 //! * **Exactly one reply per replying command** — `RunIteration` ⇒
-//!   `Iteration`, `ReduceShards` ⇒ `ShardsDone`, `Allreduce` ⇒
-//!   `AllreduceDone`, `DrainChunks` ⇒ `Drained`;
-//!   `InstallChunks`/`SetReduceSlowdown`/`Shutdown` never
-//!   reply. Every dispatched replying command must eventually be
-//!   collected, even on error paths — an uncollected reply desyncs the
-//!   worker's whole channel.
+//!   `Iteration` (one reply carrying one [`TaskRun`] per hosted slot),
+//!   `ReduceShards` ⇒ `ShardsDone`, `Allreduce` ⇒ `AllreduceDone`,
+//!   `DrainChunks` ⇒ `Drained`;
+//!   `InstallTask`/`RevokeTask`/`InstallChunks`/`SetReduceSlowdown`/
+//!   `Shutdown` never reply. Every dispatched replying command must
+//!   eventually be collected, even on error paths — an uncollected reply
+//!   desyncs the worker's whole channel.
 //! * **Handles dropped before replying** — a worker releases its model /
 //!   reduce-buffer handles before signalling completion, so the
 //!   coordinator's collect can reclaim buffers zero-copy.
@@ -43,16 +53,30 @@ use crate::transport::{
 
 use super::reduce::{ModelRef, ReduceBuf, ShardQueue};
 
-/// Commands the coordinator sends a uni-task worker.
+/// One logical task's slot in a worker's round-robin iteration plan: the
+/// task's index (its position in the merge fold order) plus the seed its
+/// solver body draws from this iteration. Seeds are keyed by *task*, not
+/// thread, so the K per-task sample streams are identical at any W.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskSlot {
+    /// Logical task index — the fold position in `merge_shard`.
+    pub task: usize,
+    /// This task's iteration seed.
+    pub seed: u64,
+}
+
+/// Commands the coordinator sends a worker.
 pub enum Command {
-    /// Run one solver iteration against the model snapshot — which may be
-    /// the output buffer of a reduction still in flight
-    /// ([`ModelRef::Pending`]): the worker then blocks until the last
-    /// shard lands and starts computing without a coordinator round-trip.
+    /// Run one solver iteration for every listed slot, round-robin in
+    /// slot order, against the model snapshot — which may be the output
+    /// buffer of a reduction still in flight ([`ModelRef::Pending`]): the
+    /// worker then blocks until the last shard lands and starts computing
+    /// without a coordinator round-trip. Slots must name tasks this
+    /// worker currently hosts.
     RunIteration {
         model: ModelRef,
         k_tasks: usize,
-        seed: u64,
+        slots: Vec<TaskSlot>,
         budget: Option<usize>,
     },
     /// Participate in a work-stealing sharded reduction: claim shards from
@@ -70,41 +94,52 @@ pub enum Command {
         k_tasks: usize,
     },
     /// Participate in a peer-to-peer merge collective over the worker's
-    /// transport endpoint: ring- or tree-allreduce of every rank's update
+    /// transport endpoint: ring- or tree-allreduce of every rank's parts
     /// into the replicated model, bit-identical to the serial fold (see
-    /// [`crate::transport::allreduce`]). `order` is the rank order — the
-    /// task order of the fold — and `epoch` the membership snapshot the
-    /// collective validates incoming traffic against. Ends with one
-    /// `AllreduceDone` reply carrying this rank's merged model and
-    /// measured transport stats.
+    /// [`crate::transport::allreduce`]). `order` is the rank order;
+    /// `epoch` the membership snapshot the collective validates incoming
+    /// traffic against. Ends with one `AllreduceDone` reply carrying this
+    /// rank's merged model and measured transport stats.
     Allreduce {
         /// The replicated pre-merge model (every rank holds these bits).
         model: Arc<ModelVec>,
-        /// This rank's own update — collectives move updates peer-to-peer,
-        /// never through the coordinator.
-        update: Box<LocalUpdate>,
-        /// This rank's position in the task-order fold.
-        task_idx: usize,
+        /// The `(task_idx, update)` parts this rank carries into the fold
+        /// — one per logical task the thread hosts (exactly one in the
+        /// legacy schedule). Collectives move updates peer-to-peer, never
+        /// through the coordinator.
+        parts: Vec<(usize, LocalUpdate)>,
+        /// Total logical tasks K across all ranks (the merge normalizer).
         k_tasks: usize,
         order: Arc<Vec<NodeId>>,
         epoch: u64,
         iter: u64,
         kind: AllreduceKind,
     },
+    /// Bind a logical task's context to this worker (decoupled schedule;
+    /// fire-and-forget). Idempotent: re-installing a task replaces its
+    /// store handle.
+    InstallTask { task: usize, store: SharedStore },
+    /// Unbind a logical task's context (its store lives on — the trainer
+    /// shares it — and is typically re-installed on another worker in the
+    /// same boundary). Fire-and-forget; unknown tasks are a no-op.
+    RevokeTask { task: usize },
     /// Simulate a slow node: busy the worker for this many nanoseconds per
     /// model element before reducing each claimed shard (straggler benches
     /// and tests; 0 = full speed). Applies until overwritten.
     SetReduceSlowdown(u64),
-    /// Add chunks to the worker's store over the channel. The trainer
-    /// installs chunks by writing the shared store directly between
-    /// iterations; this command serves coordinators without a store
-    /// handle. Zero-copy either way: the `Chunk` values move, and their
-    /// immutable payloads are `Arc`-shared — a coordinator that retains
-    /// copies (clone before install) pays only the per-sample state.
+    /// Add chunks to the worker's *first* hosted context over the channel
+    /// (the legacy one-task-per-thread path, where it is the only one).
+    /// The trainer installs chunks by writing the shared store directly
+    /// between iterations; this command serves coordinators without a
+    /// store handle. Zero-copy either way: the `Chunk` values move, and
+    /// their immutable payloads are `Arc`-shared — a coordinator that
+    /// retains copies (clone before install) pays only the per-sample
+    /// state.
     InstallChunks(Vec<Chunk>),
-    /// Hand every local chunk back to the coordinator (revocation drain).
-    /// The chunks move out with their payload `Arc`s intact — an elastic
-    /// revoke/reinstall round-trip never touches sample bytes.
+    /// Hand every local chunk — across *all* hosted contexts — back to
+    /// the coordinator (revocation drain). The chunks move out with their
+    /// payload `Arc`s intact — an elastic revoke/reinstall round-trip
+    /// never touches sample bytes.
     DrainChunks,
     /// Exit the worker loop.
     Shutdown,
@@ -112,7 +147,9 @@ pub enum Command {
 
 /// Replies a worker sends on its completion channel.
 pub enum Reply {
-    Iteration(Result<TaskRun>),
+    /// One `TaskRun` per slot of the triggering `RunIteration`, in slot
+    /// order.
+    Iteration(Result<Vec<TaskRun>>),
     /// This worker's share of a sharded reduction is done (its claims are
     /// already written to the shared buffer).
     ShardsDone { shards: usize, steals: usize },
@@ -123,9 +160,11 @@ pub enum Reply {
     Drained(Vec<Chunk>),
 }
 
-/// One completed task iteration.
+/// One completed logical-task iteration.
 #[derive(Clone, Debug)]
 pub struct TaskRun {
+    /// The logical task this run belongs to (its `TaskSlot::task`).
+    pub task: usize,
     pub update: LocalUpdate,
     /// Wallclock compute time of the task body (excludes any wait on an
     /// in-flight reduction).
@@ -134,24 +173,27 @@ pub struct TaskRun {
 
 /// The long-lived worker loop (runs on the worker's own thread).
 ///
-/// `transport` is this uni-task's endpoint in the session's peer group;
-/// the worker owns it for its whole life, so dropping out of this loop
-/// (shutdown or channel disconnect) is what leaves the group — after any
-/// in-flight collective has completed, never during one.
+/// `contexts` are the logical tasks bound at spawn; `InstallTask` /
+/// `RevokeTask` rebind them later. `transport` is this worker's endpoint
+/// in the session's peer group; the worker owns it for its whole life, so
+/// dropping out of this loop (shutdown or channel disconnect) is what
+/// leaves the group — after any in-flight collective has completed, never
+/// during one.
 pub(crate) fn worker_loop(
     algo: Arc<dyn Algorithm>,
-    store: SharedStore,
+    contexts: Vec<(usize, SharedStore)>,
     mut transport: Box<dyn Transport>,
     commands: Receiver<Command>,
     replies: Sender<Reply>,
 ) {
+    let mut contexts = contexts;
     // Artificial per-element reduce delay (straggler simulation).
     let mut slow_ns_per_elem = 0u64;
     while let Ok(cmd) = commands.recv() {
         match cmd {
-            Command::RunIteration { model, k_tasks, seed, budget } => {
+            Command::RunIteration { model, k_tasks, slots, budget } => {
                 let result = match model.wait() {
-                    Some(m) => run_iteration(algo.as_ref(), &store, m, k_tasks, seed, budget),
+                    Some(m) => run_slots(algo.as_ref(), &contexts, m, k_tasks, &slots, budget),
                     None => Err(anyhow!("model reduction was abandoned")),
                 };
                 // Release the model snapshot before signalling completion
@@ -185,12 +227,12 @@ pub(crate) fn worker_loop(
                     break;
                 }
             }
-            Command::Allreduce { model, update, task_idx, k_tasks, order, epoch, iter, kind } => {
+            Command::Allreduce { model, parts, k_tasks, order, epoch, iter, kind } => {
+                let me = transport.node();
                 let ctx = CollectiveCtx {
                     algo: algo.as_ref(),
                     model: &model,
-                    update: update.as_ref(),
-                    task_idx,
+                    parts: &parts,
                     k_tasks,
                     order: &order,
                     epoch,
@@ -200,22 +242,34 @@ pub(crate) fn worker_loop(
                     AllreduceKind::Ring => ring_allreduce(transport.as_mut(), &ctx),
                     AllreduceKind::Tree => tree_allreduce(transport.as_mut(), &ctx),
                 }
-                .map_err(|e| anyhow!("{kind:?} allreduce rank {task_idx}: {e}"));
+                .map_err(|e| anyhow!("{kind:?} allreduce node {me}: {e}"));
                 drop(model);
                 drop(order);
                 if replies.send(Reply::AllreduceDone(result)).is_err() {
                     break;
                 }
             }
+            Command::InstallTask { task, store } => {
+                match contexts.iter_mut().find(|(t, _)| *t == task) {
+                    Some(ctx) => ctx.1 = store,
+                    None => contexts.push((task, store)),
+                }
+            }
+            Command::RevokeTask { task } => contexts.retain(|(t, _)| *t != task),
             Command::SetReduceSlowdown(ns) => slow_ns_per_elem = ns,
             Command::InstallChunks(chunks) => {
-                let mut store = store.lock();
-                for chunk in chunks {
-                    store.add(chunk);
+                if let Some((_, store)) = contexts.first() {
+                    let mut store = store.lock();
+                    for chunk in chunks {
+                        store.add(chunk);
+                    }
                 }
             }
             Command::DrainChunks => {
-                let drained = store.lock().drain();
+                let mut drained = Vec::new();
+                for (_, store) in &contexts {
+                    drained.extend(store.lock().drain());
+                }
                 if replies.send(Reply::Drained(drained)).is_err() {
                     break;
                 }
@@ -239,12 +293,36 @@ fn spin_for(d: Duration) {
     }
 }
 
+/// Run every slot of one `RunIteration`, in slot order, each against its
+/// own hosted context. A slot naming a task this worker does not host is
+/// a dispatch bug and errors the whole command (never a silent skip — a
+/// missing run would shrink the fold).
+fn run_slots(
+    algo: &dyn Algorithm,
+    contexts: &[(usize, SharedStore)],
+    model: &ModelVec,
+    k_tasks: usize,
+    slots: &[TaskSlot],
+    budget: Option<usize>,
+) -> Result<Vec<TaskRun>> {
+    let mut runs = Vec::with_capacity(slots.len());
+    for slot in slots {
+        let store = contexts
+            .iter()
+            .find(|(t, _)| *t == slot.task)
+            .map(|(_, s)| s)
+            .ok_or_else(|| anyhow!("logical task {} is not hosted by this worker", slot.task))?;
+        runs.push(run_iteration(algo, store, model, k_tasks, slot, budget)?);
+    }
+    Ok(runs)
+}
+
 fn run_iteration(
     algo: &dyn Algorithm,
     store: &SharedStore,
     model: &ModelVec,
     k_tasks: usize,
-    seed: u64,
+    slot: &TaskSlot,
     budget: Option<usize>,
 ) -> Result<TaskRun> {
     let mut store = store.lock();
@@ -252,6 +330,7 @@ fn run_iteration(
         // A task without chunks contributes a zero update (it can receive
         // chunks next boundary — e.g. a freshly assigned node).
         return Ok(TaskRun {
+            task: slot.task,
             update: LocalUpdate {
                 delta: vec![0.0; algo.model_len()],
                 samples: 0,
@@ -261,6 +340,6 @@ fn run_iteration(
         });
     }
     let t0 = Instant::now();
-    let update = algo.task_iterate(store.chunks_mut(), model, k_tasks, seed, budget)?;
-    Ok(TaskRun { update, wall: t0.elapsed() })
+    let update = algo.task_iterate(store.chunks_mut(), model, k_tasks, slot.seed, budget)?;
+    Ok(TaskRun { task: slot.task, update, wall: t0.elapsed() })
 }

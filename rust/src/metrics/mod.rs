@@ -71,8 +71,16 @@ pub struct IterationRecord {
     /// Payload bytes the merge collective put on the wire, summed over
     /// all ranks (0 under the coordinator-side reduce).
     pub transport_bytes: usize,
-    /// Number of tasks/nodes active during this iteration.
+    /// Number of logical tasks active during this iteration (the
+    /// algorithmic parallelism K; equals the node count under the legacy
+    /// one-task-per-thread coupling).
     pub n_tasks: usize,
+    /// Number of worker threads hosting those tasks. Equals `n_tasks`
+    /// under the legacy coupling and micro-task emulation; at most
+    /// `n_tasks` under the decoupled schedule
+    /// (`SessionConfig::logical_tasks`), where `n_tasks / n_threads` is
+    /// the per-thread occupancy.
+    pub n_threads: usize,
     /// Samples processed across all tasks this iteration.
     pub samples: usize,
     /// Training loss if the algorithm reports one.
@@ -167,11 +175,12 @@ impl MetricsLog {
     pub fn to_tsv(&self) -> String {
         let mut out = String::from(
             "iter\tepochs\tvtime_s\twall_s\tmerge_wall_s\tsteal_count\toverlap_wall_s\tspw\t\
-             transport_rounds\ttransport_bytes\tn_tasks\tsamples\tmetric\ttrain_loss\n",
+             transport_rounds\ttransport_bytes\tn_tasks\tn_threads\toccupancy\tsamples\t\
+             metric\ttrain_loss\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{}\t{:.4}\t{:.4}\t{:.4}\t{:.6}\t{}\t{:.6}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\n",
+                "{}\t{:.4}\t{:.4}\t{:.4}\t{:.6}\t{}\t{:.6}\t{}\t{}\t{}\t{}\t{}\t{:.2}\t{}\t{}\t{}\n",
                 r.iter,
                 r.epochs,
                 r.vtime.as_secs_f64(),
@@ -183,6 +192,8 @@ impl MetricsLog {
                 r.transport_rounds,
                 r.transport_bytes,
                 r.n_tasks,
+                r.n_threads,
+                r.n_tasks as f64 / r.n_threads.max(1) as f64,
                 r.samples,
                 r.metric.map_or("".into(), |m| format!("{:.6}", m.value())),
                 r.train_loss.map_or("".into(), |l| format!("{:.6}", l)),
@@ -210,6 +221,7 @@ mod tests {
             transport_rounds: 0,
             transport_bytes: 0,
             n_tasks: 4,
+            n_threads: 4,
             samples: 100,
             train_loss: None,
         }
@@ -249,6 +261,10 @@ mod tests {
         assert!(
             header.contains("\ttransport_rounds\ttransport_bytes\t"),
             "measured-transport columns present"
+        );
+        assert!(
+            header.contains("\tn_tasks\tn_threads\toccupancy\t"),
+            "decoupled-schedule occupancy columns present"
         );
         // Every row has exactly as many cells as the header.
         let cols = header.split('\t').count();

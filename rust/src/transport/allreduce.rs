@@ -6,9 +6,11 @@
 //! in arrival order:
 //!
 //! * **Ring** (`2(k−1)` rounds, segment-sized messages): phase 1
-//!   *scatters* — in round `t`, rank `r` sends its own update's slice of
-//!   segment `(r+t) mod k` straight to that segment's owner, so after
-//!   `k−1` rounds the owner of segment `s` holds all `k` update slices
+//!   *scatters* — in round `t`, rank `r` sends, for each logical task it
+//!   hosts, that update's slice of segment `(r+t) mod k` straight to the
+//!   segment's owner (a thread multiplexing `m` uni-tasks contributes
+//!   `m` slices per round), so after `k−1` rounds the owner of segment
+//!   `s` holds all `k_tasks` update slices
 //!   for its fixed-offset range. It sorts them by `task_idx` and folds
 //!   **once**, in task order, with `merge_shard` — not pairwise along the
 //!   ring, which would fold in rotation order and (f32 addition being
@@ -106,14 +108,21 @@ pub struct CollectiveCtx<'a> {
     /// replicated; this is also what rejoin state requests are served
     /// from).
     pub model: &'a ModelVec,
-    /// This rank's own local update.
-    pub update: &'a LocalUpdate,
-    /// This rank's position in the task-order fold (== its rank: the
-    /// order is the task order).
-    pub task_idx: usize,
+    /// The logical-task updates this rank carries into the fold, as
+    /// `(task_idx, update)` pairs. Under the legacy one-task-per-thread
+    /// coupling this is a single entry whose index equals the rank; a
+    /// thread hosting `m` logical tasks contributes `m` entries (and the
+    /// ring sends `m` slices per scatter round). The fold itself is
+    /// keyed purely by `task_idx`, so where a task happens to be hosted
+    /// never changes the merged bits.
+    pub parts: &'a [(usize, LocalUpdate)],
+    /// Total logical tasks across *all* ranks — the serial fold's K.
+    /// Equals the rank count only under the legacy coupling.
     pub k_tasks: usize,
-    /// Rank order of the collective — the task order the serial fold
-    /// uses. `order[s]` owns ring segment `s`.
+    /// Rank order of the collective. `order[s]` owns ring segment `s`.
+    /// With one task per rank this is also the task order; with
+    /// multiplexed tasks the ordering burden moves entirely to
+    /// `into_fold_order`'s sort by `task_idx`.
     pub order: &'a [NodeId],
     /// Membership epoch snapshotted at launch (the staleness floor).
     pub epoch: u64,
@@ -131,40 +140,47 @@ pub fn ring_allreduce(
 ) -> Result<AllreduceRun, TransportError> {
     let (k, rank, mut stats, mut stash) = enter(tp, ctx)?;
     if k == 1 {
-        return Ok(AllreduceRun { model: local_fold(ctx), stats });
+        return Ok(AllreduceRun { model: local_fold(ctx)?, stats });
     }
     let len = ctx.model.len();
 
-    // Phase 1 — scatter: round t sends my slice of segment (rank+t) mod k
-    // straight to its owner. All sends are independent, so they go out
-    // before any receive (channels are unbounded; a real backend windows).
+    // Phase 1 — scatter: round t sends my slices of segment (rank+t) mod
+    // k straight to its owner — one `UpdateSlice` per logical task this
+    // rank hosts (a round is a protocol step, not a message count). All
+    // sends are independent, so they go out before any receive (channels
+    // are unbounded; a real backend windows).
     for t in 1..k {
         let seg = (rank + t) % k;
         let (off, l) = segment_range(len, k, seg);
-        let payload = Payload::UpdateSlice {
-            iter: ctx.iter,
-            seg,
-            part: UpdatePart {
-                task_idx: ctx.task_idx,
-                samples: ctx.update.samples,
-                delta: ctx.update.delta[off..off + l].to_vec(),
-            },
-        };
-        stats.bytes_sent += payload.wire_bytes();
-        tp.send(ctx.order[seg], payload)?;
+        for (task_idx, update) in ctx.parts {
+            let payload = Payload::UpdateSlice {
+                iter: ctx.iter,
+                seg,
+                part: UpdatePart {
+                    task_idx: *task_idx,
+                    samples: update.samples,
+                    delta: update.delta[off..off + l].to_vec(),
+                },
+            };
+            stats.bytes_sent += payload.wire_bytes();
+            tp.send(ctx.order[seg], payload)?;
+        }
     }
 
-    // Collect the other k−1 slices of my own segment, then fold all k in
-    // task order — one merge_shard call, exactly like the serial fold
-    // restricted to this fixed-offset range.
+    // Collect the remaining slices of my own segment — k_tasks in total,
+    // counting my own — then fold all of them in task order: one
+    // merge_shard call, exactly like the serial fold restricted to this
+    // fixed-offset range.
     let (my_off, my_len) = segment_range(len, k, rank);
-    let mut parts = Vec::with_capacity(k);
-    parts.push(UpdatePart {
-        task_idx: ctx.task_idx,
-        samples: ctx.update.samples,
-        delta: ctx.update.delta[my_off..my_off + my_len].to_vec(),
-    });
-    while parts.len() < k {
+    let mut parts = Vec::with_capacity(ctx.k_tasks);
+    for (task_idx, update) in ctx.parts {
+        parts.push(UpdatePart {
+            task_idx: *task_idx,
+            samples: update.samples,
+            delta: update.delta[my_off..my_off + my_len].to_vec(),
+        });
+    }
+    while parts.len() < ctx.k_tasks {
         let msg = recv_matching(tp, ctx, &mut stash, &mut stats, |p| {
             matches!(p, Payload::UpdateSlice { iter, seg, .. }
                      if *iter == ctx.iter && *seg == rank)
@@ -226,17 +242,21 @@ pub fn tree_allreduce(
 ) -> Result<AllreduceRun, TransportError> {
     let (k, rank, mut stats, mut stash) = enter(tp, ctx)?;
     if k == 1 {
-        return Ok(AllreduceRun { model: local_fold(ctx), stats });
+        return Ok(AllreduceRun { model: local_fold(ctx)?, stats });
     }
     let children: Vec<usize> =
         [2 * rank + 1, 2 * rank + 2].into_iter().filter(|&c| c < k).collect();
 
-    // Gather: my own update plus both children's subtrees.
-    let mut parts = vec![UpdatePart {
-        task_idx: ctx.task_idx,
-        samples: ctx.update.samples,
-        delta: ctx.update.delta.clone(),
-    }];
+    // Gather: my own hosted updates plus both children's subtrees.
+    let mut parts: Vec<UpdatePart> = ctx
+        .parts
+        .iter()
+        .map(|(task_idx, update)| UpdatePart {
+            task_idx: *task_idx,
+            samples: update.samples,
+            delta: update.delta.clone(),
+        })
+        .collect();
     for _ in &children {
         let msg = recv_matching(tp, ctx, &mut stash, &mut stats, |p| {
             matches!(p, Payload::Updates { iter, .. } if *iter == ctx.iter)
@@ -246,7 +266,7 @@ pub fn tree_allreduce(
     }
 
     let model = if rank == 0 {
-        if parts.len() != k {
+        if parts.len() != ctx.k_tasks {
             return Err(TransportError::Protocol("tree gather missed updates"));
         }
         if parts.iter().any(|p| p.delta.len() != ctx.model.len()) {
@@ -328,12 +348,19 @@ fn enter(
 }
 
 /// The single-rank degenerate collective: the local serial fold (0
-/// rounds, 0 bytes — a ring of one is a no-op transport-wise).
-fn local_fold(ctx: &CollectiveCtx) -> ModelVec {
+/// rounds, 0 bytes — a ring of one is a no-op transport-wise). The lone
+/// rank may still host many logical tasks, so the fold sorts them into
+/// task order first, exactly like the distributed paths do.
+fn local_fold(ctx: &CollectiveCtx) -> Result<ModelVec, TransportError> {
+    let mut own: Vec<&(usize, LocalUpdate)> = ctx.parts.iter().collect();
+    own.sort_by_key(|(task_idx, _)| *task_idx);
+    if own.windows(2).any(|w| w[0].0 == w[1].0) {
+        return Err(TransportError::Protocol("duplicate task index in fold"));
+    }
+    let updates: Vec<LocalUpdate> = own.into_iter().map(|(_, u)| u.clone()).collect();
     let mut out = ctx.model.clone();
-    ctx.algo
-        .merge_shard(&mut out, 0, std::slice::from_ref(ctx.update), ctx.k_tasks);
-    out
+    ctx.algo.merge_shard(&mut out, 0, &updates, ctx.k_tasks);
+    Ok(out)
 }
 
 /// Sort gathered parts into task order and convert them to the
@@ -420,11 +447,11 @@ mod tests {
 
         let g = ChannelGroup::new();
         let mut ep = g.join(5);
+        let parts = vec![(0usize, update.clone())];
         let ctx = CollectiveCtx {
             algo: algo.as_ref(),
             model: &model,
-            update: &update,
-            task_idx: 0,
+            parts: &parts,
             k_tasks: 1,
             order: &[5],
             epoch: g.membership().epoch,
@@ -442,6 +469,47 @@ mod tests {
     }
 
     #[test]
+    fn single_rank_hosting_many_tasks_folds_in_task_order() {
+        // One thread multiplexing all K logical tasks must still produce
+        // the serial fold's bits — including when its hosted parts arrive
+        // out of task order (rebinds don't promise sorted hosting).
+        let len = 23;
+        let algo = algo(len);
+        let model: ModelVec = (0..len).map(|i| (i as f32).sin()).collect();
+        let updates: Vec<LocalUpdate> = (0..3)
+            .map(|t| LocalUpdate {
+                delta: (0..len).map(|i| (t * len + i) as f32 * 0.1).collect(),
+                samples: 5 + t,
+                loss_sum: 0.0,
+            })
+            .collect();
+        let mut serial = model.clone();
+        algo.merge(&mut serial, &updates, 3);
+
+        let g = ChannelGroup::new();
+        let mut ep = g.join(7);
+        let parts =
+            vec![(2usize, updates[2].clone()), (0, updates[0].clone()), (1, updates[1].clone())];
+        let ctx = CollectiveCtx {
+            algo: algo.as_ref(),
+            model: &model,
+            parts: &parts,
+            k_tasks: 3,
+            order: &[7],
+            epoch: g.membership().epoch,
+            iter: 0,
+        };
+        for kind in [AllreduceKind::Ring, AllreduceKind::Tree] {
+            let run = match kind {
+                AllreduceKind::Ring => ring_allreduce(&mut ep, &ctx).unwrap(),
+                AllreduceKind::Tree => tree_allreduce(&mut ep, &ctx).unwrap(),
+            };
+            assert_eq!(run.model, serial, "{kind:?}");
+            assert_eq!(run.stats.rounds, 0);
+        }
+    }
+
+    #[test]
     fn single_rank_collective_serves_queued_state_requests() {
         // The entry drain is what guarantees a rejoiner is answered even
         // by a rank that never blocks in a receive.
@@ -453,11 +521,11 @@ mod tests {
         let mut worker = g.join(1);
         let mut rejoiner = g.join(2);
         rejoiner.send(1, Payload::StateRequest).unwrap();
+        let parts = vec![(0usize, update.clone())];
         let ctx = CollectiveCtx {
             algo: algo.as_ref(),
             model: &model,
-            update: &update,
-            task_idx: 0,
+            parts: &parts,
             k_tasks: 1,
             order: &[1],
             epoch: g.membership().epoch,
@@ -481,11 +549,11 @@ mod tests {
         let update = LocalUpdate { delta: vec![0.0; len], samples: 1, loss_sum: 0.0 };
         let g = ChannelGroup::new();
         let mut ep = g.join(9);
+        let parts = vec![(0usize, update.clone())];
         let ctx = CollectiveCtx {
             algo: algo.as_ref(),
             model: &model,
-            update: &update,
-            task_idx: 0,
+            parts: &parts,
             k_tasks: 2,
             order: &[1, 2],
             epoch: 0,

@@ -1,0 +1,206 @@
+//! The decoupled schedule's headline property: with `logical_tasks = K`
+//! fixed, the iterate trajectory — metrics, virtual times, epochs, and
+//! the final model's exact bits — is identical for any worker-thread
+//! count `1 ≤ W ≤ K`, through mid-run W resizes, under both the
+//! coordinator-side sharded reduce and the ring-allreduce merge. Only the
+//! `n_threads`/occupancy columns (and wallclock) may differ: convergence
+//! is governed by the algorithmic parallelism K alone, which is Chicle's
+//! central claim.
+//!
+//! K defaults to 8 and is steered by `CHICLE_LOGICAL_TASKS` (the CI
+//! oversubscription leg runs this suite with it set explicitly). The
+//! variable is read *once*, so the env test below cannot race the
+//! trajectory tests; every trajectory config additionally pins K via the
+//! builder, which wins over the env.
+
+use std::sync::OnceLock;
+
+use chicle::config::{AlgoConfig, ElasticSpec, MergeStrategy, ModelKind, SessionConfig};
+use chicle::coordinator::TrainingSession;
+use chicle::data::synth;
+use chicle::metrics::MetricsLog;
+
+/// The sweep's logical parallelism degree.
+fn k() -> usize {
+    static K: OnceLock<usize> = OnceLock::new();
+    *K.get_or_init(|| match std::env::var("CHICLE_LOGICAL_TASKS") {
+        Ok(s) if !s.is_empty() => s.parse().expect("CHICLE_LOGICAL_TASKS must be an integer"),
+        _ => 8,
+    })
+}
+
+/// Run an elastic lSGD/MLP session (235k-parameter model — large enough
+/// for the sharded pool reduce and the overlap pipeline to engage) with K
+/// logical tasks on the given thread schedule. Returns the metrics log
+/// and the final model's exact bits.
+fn run_mlp(
+    k_tasks: usize,
+    elastic: ElasticSpec,
+    strategy: MergeStrategy,
+) -> (MetricsLog, Vec<u32>) {
+    let ds = synth::fmnist_like(1200, 7);
+    let mut cfg = SessionConfig::lsgd("logical-tasks", ModelKind::Mlp, 4)
+        .with_seed(23)
+        .with_merge_strategy(strategy)
+        .with_logical_tasks(k_tasks)
+        .with_elastic(elastic);
+    cfg.chunk_bytes = 32 * 1024;
+    cfg.max_iters = 10;
+    if let AlgoConfig::Lsgd(l) = &mut cfg.algo {
+        l.eval_every = 4;
+        l.target_acc = 2.0; // unreachable: run all iterations
+    }
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    let log = s.run().unwrap();
+    let bits = s.trainer().model().iter().map(|x| x.to_bits()).collect();
+    (log, bits)
+}
+
+/// Same shape for CoCoA (the sample-weighted merge family, serial-fold
+/// sized model).
+fn run_cocoa(
+    k_tasks: usize,
+    elastic: ElasticSpec,
+    strategy: MergeStrategy,
+) -> (MetricsLog, Vec<u32>) {
+    let ds = synth::higgs_like(3000, 5);
+    let mut cfg = SessionConfig::cocoa("logical-tasks-cocoa", 2)
+        .with_seed(31)
+        .with_merge_strategy(strategy)
+        .with_logical_tasks(k_tasks)
+        .with_elastic(elastic);
+    cfg.chunk_bytes = 8 * 1024;
+    cfg.max_iters = 10;
+    let mut s = TrainingSession::new(cfg, ds).unwrap();
+    let log = s.run().unwrap();
+    let bits = s.trainer().model().iter().map(|x| x.to_bits()).collect();
+    (log, bits)
+}
+
+/// Everything that defines the science must match; `n_threads` (and the
+/// wallclock columns) are exactly what the decoupling is *allowed* to
+/// change, so they are deliberately not compared here.
+fn assert_same_science(a: &MetricsLog, b: &MetricsLog, label: &str) {
+    assert_eq!(a.records.len(), b.records.len(), "{label}: record counts");
+    for (x, y) in a.records.iter().zip(&b.records) {
+        assert_eq!(x.iter, y.iter, "{label}");
+        assert_eq!(x.metric, y.metric, "{label} iter {}", x.iter);
+        assert_eq!(x.vtime, y.vtime, "{label} iter {}", x.iter);
+        assert_eq!(x.epochs, y.epochs, "{label} iter {}", x.iter);
+        assert_eq!(x.n_tasks, y.n_tasks, "{label} iter {}", x.iter);
+        assert_eq!(x.samples, y.samples, "{label} iter {}", x.iter);
+        assert_eq!(x.train_loss, y.train_loss, "{label} iter {}", x.iter);
+    }
+}
+
+/// The tentpole property, coordinator-reduce leg: W ∈ {1, 2, K/2, K}
+/// rigid schedules plus scale-in and scale-out resizes all produce the
+/// reference trajectory and the reference model, bit for bit.
+#[test]
+fn final_model_bits_identical_across_w_sweep_and_resizes() {
+    let k = k();
+    let (base_log, base_bits) =
+        run_mlp(k, ElasticSpec::Rigid { nodes: k }, MergeStrategy::Coordinator);
+    assert!(base_log.records.iter().all(|r| r.n_tasks == k), "K is pinned");
+    assert!(base_log.records.iter().all(|r| r.n_threads == k));
+
+    for w in [1, 2, k / 2] {
+        let w = w.max(1);
+        let (log, bits) =
+            run_mlp(k, ElasticSpec::Rigid { nodes: w }, MergeStrategy::Coordinator);
+        assert_same_science(&base_log, &log, &format!("W={w}"));
+        assert!(log.records.iter().all(|r| r.n_threads == w), "W={w}");
+        assert_eq!(bits, base_bits, "final model bits diverged at W={w}");
+    }
+
+    // Mid-run resizes in both directions: threads leave (tasks rebind to
+    // survivors) and threads join (tasks spread back out).
+    for (label, elastic) in [
+        ("scale-in", ElasticSpec::Gradual { from: k, to: 2, interval_s: 3.0 }),
+        ("scale-out", ElasticSpec::Gradual { from: 2, to: k, interval_s: 3.0 }),
+    ] {
+        let (log, bits) = run_mlp(k, elastic, MergeStrategy::Coordinator);
+        assert_same_science(&base_log, &log, label);
+        assert_eq!(bits, base_bits, "final model bits diverged under {label}");
+        let threads: Vec<usize> = log.records.iter().map(|r| r.n_threads).collect();
+        assert!(
+            threads.windows(2).any(|w| w[0] != w[1]),
+            "{label}: the resize must actually have fired ({threads:?})"
+        );
+        assert!(log.records.iter().all(|r| r.n_tasks == k), "{label}: K never budges");
+    }
+}
+
+/// The ring-allreduce leg: a thread hosting m logical tasks contributes m
+/// slices per scatter round, owners fold all K parts in task order — so
+/// the same W-sweep invariance holds with updates moving peer-to-peer.
+#[test]
+fn ring_allreduce_w_sweep_matches_coordinator_reduce() {
+    let k = k();
+    let (base_log, base_bits) =
+        run_cocoa(k, ElasticSpec::Rigid { nodes: k }, MergeStrategy::Coordinator);
+
+    for w in [1, 2, k.max(2)] {
+        let (log, bits) = run_cocoa(k, ElasticSpec::Rigid { nodes: w }, MergeStrategy::Ring);
+        assert_same_science(&base_log, &log, &format!("ring W={w}"));
+        assert_eq!(bits, base_bits, "ring final model bits diverged at W={w}");
+        // Rounds follow the *rank* count W (every hosted thread is a
+        // rank), not K: 2(W−1) per iteration, 0 for the inline W=1 fold.
+        let want = if w > 1 { 2 * (w - 1) } else { 0 };
+        assert!(
+            log.records.iter().all(|r| r.transport_rounds == want),
+            "ring W={w} rounds"
+        );
+    }
+
+    let (log, bits) = run_cocoa(
+        k,
+        ElasticSpec::Gradual { from: k.max(2), to: 2, interval_s: 3.0 },
+        MergeStrategy::Ring,
+    );
+    assert_same_science(&base_log, &log, "ring scale-in");
+    assert_eq!(bits, base_bits, "ring final model bits diverged through the resize");
+}
+
+/// W = K decoupled is the legacy coupling with different bookkeeping: the
+/// trajectory and model must match a `logical_tasks = 0` session bit for
+/// bit (same seed, same rigid schedule), so enabling the feature at full
+/// width is a pure no-op for the science.
+#[test]
+fn w_equals_k_matches_legacy_coupling_bit_for_bit() {
+    let k = k();
+    let (legacy_log, legacy_bits) =
+        run_mlp(0, ElasticSpec::Rigid { nodes: k }, MergeStrategy::Coordinator);
+    let (dec_log, dec_bits) =
+        run_mlp(k, ElasticSpec::Rigid { nodes: k }, MergeStrategy::Coordinator);
+    assert_same_science(&legacy_log, &dec_log, "legacy-vs-decoupled");
+    assert_eq!(dec_bits, legacy_bits, "decoupled W=K must be a bitwise no-op");
+    assert!(dec_log.records.iter().all(|r| r.n_threads == r.n_tasks));
+}
+
+/// `CHICLE_LOGICAL_TASKS` steers freshly constructed configs (the CI
+/// oversubscription leg uses this); configs built with the explicit
+/// builder — every trajectory test above — are immune to it. Mirrors
+/// `merge_strategies.rs`'s env test for `CHICLE_MERGE_STRATEGY`.
+#[test]
+fn env_override_steers_new_configs_only() {
+    let _ = k(); // pin the sweep's K before mutating the variable
+    std::env::set_var("CHICLE_LOGICAL_TASKS", "5");
+    let fresh = SessionConfig::cocoa("env-fresh", 2);
+    let pinned = SessionConfig::cocoa("env-pinned", 2).with_logical_tasks(3);
+    std::env::remove_var("CHICLE_LOGICAL_TASKS");
+    assert_eq!(fresh.logical_tasks, 5);
+    assert_eq!(fresh.decoupled_tasks(), Some(5));
+    assert_eq!(pinned.logical_tasks, 3, "builder pin wins over the env");
+    let unset = SessionConfig::cocoa("env-unset", 2);
+    assert_eq!(unset.logical_tasks, 0, "no override once the variable is gone");
+    assert_eq!(unset.decoupled_tasks(), None, "0 keeps the legacy coupling");
+    // Micro-task emulation ignores the knob entirely.
+    assert_eq!(
+        SessionConfig::cocoa("micro", 2)
+            .with_logical_tasks(4)
+            .with_microtasks(16)
+            .decoupled_tasks(),
+        None
+    );
+}

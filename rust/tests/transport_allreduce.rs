@@ -89,11 +89,11 @@ fn run_collective(
                 let order = &order;
                 let algo = Arc::clone(algo);
                 s.spawn(move || {
+                    let parts = vec![(rank, updates[rank].clone())];
                     let ctx = CollectiveCtx {
                         algo: algo.as_ref(),
                         model,
-                        update: &updates[rank],
-                        task_idx: rank,
+                        parts: &parts,
                         k_tasks: updates.len(),
                         order,
                         epoch,
@@ -213,11 +213,11 @@ fn stale_cross_regime_traffic_is_dropped_not_folded() {
             .map(|(rank, mut ep)| {
                 let (algo, model, updates, order) = (&algo, &model, &updates, &order);
                 s.spawn(move || {
+                    let parts = vec![(rank, updates[rank].clone())];
                     let ctx = CollectiveCtx {
                         algo: algo.as_ref(),
                         model,
-                        update: &updates[rank],
-                        task_idx: rank,
+                        parts: &parts,
                         k_tasks: 2,
                         order,
                         epoch,
@@ -358,11 +358,11 @@ fn rejoining_node_fetches_state_from_any_peer() {
             .map(|(rank, mut ep)| {
                 let (algo, model, updates, order) = (&algo, &model, &updates, &order);
                 s.spawn(move || {
+                    let parts = vec![(rank, updates[rank].clone())];
                     let ctx = CollectiveCtx {
                         algo: algo.as_ref(),
                         model,
-                        update: &updates[rank],
-                        task_idx: rank,
+                        parts: &parts,
                         k_tasks: 3,
                         order,
                         epoch,
