@@ -97,6 +97,55 @@ impl MergeStrategy {
     }
 }
 
+/// Which [`Transport`](crate::transport::Transport) backend the session's
+/// worker pool joins its ranks into (see `docs/TRANSPORT.md`). Both
+/// backends satisfy the same wire contract and the backend-generic
+/// conformance suite pins bit-identical collectives across them, so the
+/// choice trades only how bytes physically move — in-process queues vs
+/// real framed sockets — never the trajectory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// In-process mpsc channels (the default: zero-copy, no framing).
+    #[default]
+    Channel,
+    /// Loopback TCP sockets with length-prefixed framing — every
+    /// collective byte is really encoded, written, read, and decoded;
+    /// the measured framing overhead lands in the
+    /// `transport_frame_bytes` TSV column.
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TransportKind::Channel => "channel",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "channel" => TransportKind::Channel,
+            "tcp" => TransportKind::Tcp,
+            other => bail!("unknown transport backend {other:?}"),
+        })
+    }
+
+    /// `CHICLE_TRANSPORT` override (programmatic constructors only,
+    /// mirroring [`MergeStrategy::env_override`]): lets CI run a whole
+    /// tier-1 leg over real sockets without touching any config file.
+    /// Unset or empty means no override; junk fails loudly rather than
+    /// silently training over the wrong wire.
+    fn env_override() -> Option<Self> {
+        match std::env::var("CHICLE_TRANSPORT") {
+            Ok(s) if !s.is_empty() => {
+                Some(Self::parse(&s).expect("CHICLE_TRANSPORT must be channel|tcp"))
+            }
+            _ => None,
+        }
+    }
+}
+
 /// `CHICLE_LOGICAL_TASKS` override (programmatic constructors only,
 /// mirroring [`MergeStrategy::env_override`]): lets CI run a whole tier-1
 /// leg with K logical uni-tasks multiplexed onto however many worker
@@ -429,6 +478,12 @@ pub struct SessionConfig {
     /// node count. Ignored under micro-task emulation, which already
     /// fixes K its own way (and pays the wave model for it).
     pub logical_tasks: usize,
+    /// Which transport backend the pool's ranks join: in-process
+    /// channels (default) or loopback TCP with real framed sockets.
+    /// Bit-identical trajectory either way (the conformance suite pins
+    /// it); the `CHICLE_TRANSPORT` env var steers freshly constructed
+    /// configs, which is how CI runs the `tier1-tcp` leg.
+    pub transport: TransportKind,
 }
 
 impl SessionConfig {
@@ -455,6 +510,7 @@ impl SessionConfig {
             adaptive_spw: true,
             merge_strategy: MergeStrategy::env_override().unwrap_or_default(),
             logical_tasks: logical_tasks_env().unwrap_or(0),
+            transport: TransportKind::env_override().unwrap_or_default(),
         }
     }
 
@@ -481,6 +537,7 @@ impl SessionConfig {
             adaptive_spw: true,
             merge_strategy: MergeStrategy::env_override().unwrap_or_default(),
             logical_tasks: logical_tasks_env().unwrap_or(0),
+            transport: TransportKind::env_override().unwrap_or_default(),
         }
     }
 
@@ -521,6 +578,13 @@ impl SessionConfig {
 
     pub fn with_merge_strategy(mut self, strategy: MergeStrategy) -> Self {
         self.merge_strategy = strategy;
+        self
+    }
+
+    /// Pin the transport backend explicitly (wins over the
+    /// `CHICLE_TRANSPORT` env override the constructors read).
+    pub fn with_transport(mut self, transport: TransportKind) -> Self {
+        self.transport = transport;
         self
     }
 
@@ -617,6 +681,7 @@ impl SessionConfig {
             ("adaptive_spw", Json::Bool(self.adaptive_spw)),
             ("merge_strategy", Json::str(self.merge_strategy.as_str())),
             ("logical_tasks", Json::num(self.logical_tasks as f64)),
+            ("transport", Json::str(self.transport.as_str())),
         ])
     }
 
@@ -714,6 +779,13 @@ impl SessionConfig {
                 .map(Json::as_usize)
                 .transpose()?
                 .unwrap_or(0),
+            // Absent in configs written before the TCP backend; a saved
+            // config pins its backend, so no env override here either.
+            transport: v
+                .opt("transport")
+                .map(|t| TransportKind::parse(t.as_str()?))
+                .transpose()?
+                .unwrap_or_default(),
         })
     }
 
@@ -798,6 +870,32 @@ mod tests {
 
         assert!(MergeStrategy::parse("butterfly").is_err());
         assert_eq!(MergeStrategy::parse("tree").unwrap().as_str(), "tree");
+    }
+
+    #[test]
+    fn transport_roundtrips_and_defaults() {
+        // The env-override precedence is covered by CI's tier1-tcp leg
+        // (its own process) — mutating CHICLE_TRANSPORT here could race
+        // parallel unit tests that construct configs through the
+        // env-reading paths.
+        let cfg = SessionConfig::cocoa("tcp", 4).with_transport(TransportKind::Tcp);
+        let back = SessionConfig::from_json(&Json::parse(&cfg.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back.transport, TransportKind::Tcp);
+
+        // Configs written before the TCP backend lack the key.
+        let legacy = match SessionConfig::cocoa("legacy", 2).to_json() {
+            Json::Obj(mut o) => {
+                o.remove("transport");
+                Json::Obj(o)
+            }
+            _ => unreachable!(),
+        };
+        let back = SessionConfig::from_json(&legacy).unwrap();
+        assert_eq!(back.transport, TransportKind::Channel);
+
+        assert!(TransportKind::parse("udp").is_err());
+        assert_eq!(TransportKind::parse("tcp").unwrap().as_str(), "tcp");
     }
 
     #[test]

@@ -143,6 +143,10 @@ struct MergeReport {
     transport_rounds: usize,
     /// Payload bytes the collective put on the wire, all ranks summed.
     transport_bytes: usize,
+    /// Non-payload framing bytes the transport backend added (length
+    /// prefixes, tags, handshakes), all ranks summed. Zero for the
+    /// in-process channel backend and for the coordinator strategy.
+    transport_frame_bytes: usize,
 }
 
 /// What one engagement of the overlap pipeline reports back to `step`.
@@ -302,7 +306,7 @@ impl Trainer {
         // Bring up the persistent executor — one resident worker per task
         // (legacy), or one per thread hosting its dealt set of logical-
         // task contexts (decoupled) — sharing the tasks' chunk stores.
-        let mut pool = WorkerPool::new(Arc::clone(&algo));
+        let mut pool = WorkerPool::new_with_transport(Arc::clone(&algo), cfg.transport);
         if cfg.adaptive_spw {
             pool.enable_adaptive_spw(cfg.shards_per_worker.max(1));
         }
@@ -705,6 +709,7 @@ impl Trainer {
                 spw: 0,
                 transport_rounds: out.rounds,
                 transport_bytes: out.bytes,
+                transport_frame_bytes: out.frame_bytes,
             });
         }
         let (steals, spw) = if self.pool.len() >= 2 && self.model.len() >= PARALLEL_MERGE_MIN_LEN {
@@ -725,6 +730,7 @@ impl Trainer {
             spw,
             transport_rounds: 0,
             transport_bytes: 0,
+            transport_frame_bytes: 0,
         })
     }
 
@@ -813,6 +819,7 @@ impl Trainer {
             spw: report.spw,
             transport_rounds: report.transport_rounds,
             transport_bytes: report.transport_bytes,
+            transport_frame_bytes: report.transport_frame_bytes,
             n_tasks: updates.len(),
             n_threads: self.pool.len(),
             samples: iter_samples,
@@ -1019,6 +1026,7 @@ impl Trainer {
                 // transport.
                 transport_rounds: 0,
                 transport_bytes: 0,
+                transport_frame_bytes: 0,
             },
             overlap_wall,
             metric,

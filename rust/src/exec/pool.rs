@@ -10,7 +10,8 @@ use anyhow::{anyhow, Result};
 use crate::algos::{Algorithm, LocalUpdate, ModelVec};
 use crate::chunks::{Chunk, SharedStore};
 use crate::cluster::NodeId;
-use crate::transport::{AllreduceKind, AllreduceRun, ChannelGroup, Residency};
+use crate::config::TransportKind;
+use crate::transport::{AllreduceKind, AllreduceRun, GroupHandle, Residency};
 
 use super::reduce::{ModelRef, ReduceBuf, ReduceOptions, ReduceStats, ShardQueue, SpwController};
 use super::worker::{worker_loop, Command, Reply, TaskRun, TaskSlot};
@@ -74,6 +75,10 @@ pub struct AllreduceOutcome {
     pub rounds: usize,
     /// Payload bytes put on the wire, summed over all ranks.
     pub bytes: usize,
+    /// Non-payload framing bytes the backend added (length prefixes,
+    /// tags, handshakes), summed over all ranks. Zero for the in-process
+    /// channel backend, which has no wire format.
+    pub frame_bytes: usize,
 }
 
 /// One long-lived worker per uni-task, addressed by node id.
@@ -86,8 +91,9 @@ pub struct WorkerPool {
     /// The session's transport group: every worker joins on spawn and
     /// holds its endpoint until its thread exits, so membership — and the
     /// payload [`Residency`] the scheduler prices warm transfers from —
-    /// tracks the live pool exactly.
-    group: Arc<ChannelGroup>,
+    /// tracks the live pool exactly. Backend-erased: in-process channels
+    /// or loopback TCP, per `SessionConfig::transport`.
+    group: GroupHandle,
     /// `ShardsDone` replies swallowed by `shutdown_worker` while a
     /// reduction was in flight (mid-reduce revoke): `collect_reduce`
     /// counts them in place of the departed worker's reply.
@@ -112,10 +118,22 @@ pub struct WorkerPool {
 
 impl WorkerPool {
     pub fn new(algo: Arc<dyn Algorithm>) -> Self {
+        Self::new_with_transport(algo, TransportKind::Channel)
+    }
+
+    /// A pool whose workers join the given transport backend. The backend
+    /// changes how collective bytes move (in-process queues vs real
+    /// framed sockets), never what is computed — the conformance suite
+    /// pins bit-identical merges across backends.
+    pub fn new_with_transport(algo: Arc<dyn Algorithm>, transport: TransportKind) -> Self {
+        let group = match transport {
+            TransportKind::Channel => GroupHandle::channel(),
+            TransportKind::Tcp => GroupHandle::tcp(),
+        };
         WorkerPool {
             algo,
             workers: Vec::new(),
-            group: ChannelGroup::new(),
+            group,
             stashed_shards: Vec::new(),
             stashed_allreduce: Vec::new(),
             spw_ctl: None,
@@ -193,7 +211,7 @@ impl WorkerPool {
         let endpoint = self.group.join(node);
         let thread = std::thread::Builder::new()
             .name(format!("uni-task-{node}"))
-            .spawn(move || worker_loop(algo, contexts, Box::new(endpoint), cmd_rx, reply_tx))
+            .spawn(move || worker_loop(algo, contexts, endpoint, cmd_rx, reply_tx))
             .expect("spawn uni-task worker thread");
         self.workers.push(WorkerHandle {
             node,
@@ -685,6 +703,7 @@ impl WorkerPool {
         let mut model = None;
         let mut rounds = 0usize;
         let mut bytes = 0usize;
+        let mut frame_bytes = 0usize;
         let mut first_err: Option<anyhow::Error> = None;
         for (i, (node, dispatched)) in pending.nodes.iter().enumerate() {
             if !dispatched {
@@ -708,6 +727,7 @@ impl WorkerPool {
                 Ok(run) => {
                     rounds = rounds.max(run.stats.rounds);
                     bytes += run.stats.bytes_sent;
+                    frame_bytes += run.stats.frame_bytes;
                     if i == 0 {
                         model = Some(run.model);
                     }
@@ -719,7 +739,7 @@ impl WorkerPool {
         }
         match (first_err, model) {
             (Some(e), _) => Err(e),
-            (None, Some(model)) => Ok(AllreduceOutcome { model, rounds, bytes }),
+            (None, Some(model)) => Ok(AllreduceOutcome { model, rounds, bytes, frame_bytes }),
             (None, None) => Err(anyhow!("collective produced no model")),
         }
     }
@@ -761,7 +781,7 @@ impl WorkerPool {
             let updates: Vec<LocalUpdate> = all.into_iter().map(|(_, u)| u).collect();
             let mut out = (**model).clone();
             self.algo.merge_shard(&mut out, 0, &updates, k_tasks);
-            return Ok(AllreduceOutcome { model: out, rounds: 0, bytes: 0 });
+            return Ok(AllreduceOutcome { model: out, rounds: 0, bytes: 0, frame_bytes: 0 });
         }
         let pending = self.begin_allreduce_parts(order, model, parts, k_tasks, kind, iter)?;
         self.collect_allreduce(pending)

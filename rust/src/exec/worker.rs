@@ -238,10 +238,18 @@ pub(crate) fn worker_loop(
                     epoch,
                     iter,
                 };
+                // Framing overhead is a property of the endpoint, not the
+                // collective: snapshot the counter around the run so each
+                // rank's stats carry only this collective's framing bytes.
+                let frames_before = transport.frame_bytes();
                 let result = match kind {
                     AllreduceKind::Ring => ring_allreduce(transport.as_mut(), &ctx),
                     AllreduceKind::Tree => tree_allreduce(transport.as_mut(), &ctx),
                 }
+                .map(|mut run| {
+                    run.stats.frame_bytes = transport.frame_bytes() - frames_before;
+                    run
+                })
                 .map_err(|e| anyhow!("{kind:?} allreduce node {me}: {e}"));
                 drop(model);
                 drop(order);

@@ -71,6 +71,12 @@ pub struct IterationRecord {
     /// Payload bytes the merge collective put on the wire, summed over
     /// all ranks (0 under the coordinator-side reduce).
     pub transport_bytes: usize,
+    /// Non-payload framing bytes the transport backend added on top of
+    /// the payload (length prefixes, tags, handshakes), summed over all
+    /// ranks. Zero for the in-process channel backend, whose messages
+    /// never cross a wire format; over TCP this is the measured framing
+    /// overhead next to `transport_bytes`.
+    pub transport_frame_bytes: usize,
     /// Number of logical tasks active during this iteration (the
     /// algorithmic parallelism K; equals the node count under the legacy
     /// one-task-per-thread coupling).
@@ -175,12 +181,12 @@ impl MetricsLog {
     pub fn to_tsv(&self) -> String {
         let mut out = String::from(
             "iter\tepochs\tvtime_s\twall_s\tmerge_wall_s\tsteal_count\toverlap_wall_s\tspw\t\
-             transport_rounds\ttransport_bytes\tn_tasks\tn_threads\toccupancy\tsamples\t\
-             metric\ttrain_loss\n",
+             transport_rounds\ttransport_bytes\ttransport_frame_bytes\tn_tasks\tn_threads\t\
+             occupancy\tsamples\tmetric\ttrain_loss\n",
         );
         for r in &self.records {
             out.push_str(&format!(
-                "{}\t{:.4}\t{:.4}\t{:.4}\t{:.6}\t{}\t{:.6}\t{}\t{}\t{}\t{}\t{}\t{:.2}\t{}\t{}\t{}\n",
+                "{}\t{:.4}\t{:.4}\t{:.4}\t{:.6}\t{}\t{:.6}\t{}\t{}\t{}\t{}\t{}\t{}\t{:.2}\t{}\t{}\t{}\n",
                 r.iter,
                 r.epochs,
                 r.vtime.as_secs_f64(),
@@ -191,6 +197,7 @@ impl MetricsLog {
                 r.spw,
                 r.transport_rounds,
                 r.transport_bytes,
+                r.transport_frame_bytes,
                 r.n_tasks,
                 r.n_threads,
                 r.n_tasks as f64 / r.n_threads.max(1) as f64,
@@ -220,6 +227,7 @@ mod tests {
             spw: 0,
             transport_rounds: 0,
             transport_bytes: 0,
+            transport_frame_bytes: 0,
             n_tasks: 4,
             n_threads: 4,
             samples: 100,
@@ -259,7 +267,7 @@ mod tests {
         assert!(header.contains("steal_count") && header.contains("overlap_wall_s"));
         assert!(header.contains("\tspw\t"), "adaptive-spw column present");
         assert!(
-            header.contains("\ttransport_rounds\ttransport_bytes\t"),
+            header.contains("\ttransport_rounds\ttransport_bytes\ttransport_frame_bytes\t"),
             "measured-transport columns present"
         );
         assert!(

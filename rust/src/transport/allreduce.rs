@@ -91,6 +91,11 @@ pub struct CollectiveStats {
     pub stale_dropped: usize,
     /// Rejoin state requests served inline.
     pub state_served: usize,
+    /// Non-payload framing bytes the transport backend charged this rank
+    /// for the collective (length prefixes, tags, handshakes). Zero on
+    /// the in-process channel backend; filled in by the worker loop from
+    /// `Transport::frame_bytes` deltas, not by the collective itself.
+    pub frame_bytes: usize,
 }
 
 /// One rank's completed collective: the merged model (every rank ends

@@ -1,0 +1,465 @@
+//! Deterministic fault injection for any [`Transport`] backend.
+//!
+//! [`FaultTransport`] wraps an endpoint and perturbs its *send* side
+//! according to an explicit [`FaultPlan`]: per-edge drop, duplicate,
+//! reorder, and delay, plus whole-endpoint death after N emissions
+//! (kill-peer-at-round-N). Everything is a pure function of the plan and
+//! the operation sequence — no clocks, no randomness at injection time —
+//! so a failing schedule replays exactly. The chaos property suite
+//! (`rust/tests/transport_chaos.rs`) uses this to assert the collectives'
+//! central robustness claim: under any injected fault the merge is either
+//! **bit-identical** to the serial fold or **fails loudly** — there is no
+//! silent-corruption outcome. `docs/TRANSPORT.md` § "Fault-injection
+//! matrix" maps each fault class to the rule that absorbs it.
+//!
+//! Faults are keyed by *emission* index per destination edge, not by
+//! send-call index: a duplicated message's copy is itself emission
+//! `n + 1` and can be targeted by further rules. That is what makes the
+//! canonical absorbed-drop schedule expressible — `Duplicate{nth: i}`
+//! followed by `Drop{nth: i + 1}` kills exactly the redundant copy, so
+//! the wire carries precisely the original traffic.
+//!
+//! Time is modeled as *operation ticks* (every `send`/`recv`/`try_recv`
+//! advances the clock by one), so a `Delay` releases after a fixed number
+//! of the wrapped endpoint's own operations — deterministic where a
+//! wall-clock delay would race.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use crate::cluster::NodeId;
+use crate::util::Rng;
+
+use super::{Membership, Message, Payload, Transport, TransportError};
+
+/// One injected fault. `nth` counts emissions on the edge to `to`,
+/// starting at 0.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Silently swallow the edge's `nth` emission — the one fault class
+    /// that deliberately violates deliver-or-error, to prove a lost
+    /// essential message surfaces as a loud timeout (never wrong bits).
+    Drop { to: NodeId, nth: usize },
+    /// Emit the edge's `nth` emission twice; the copy becomes emission
+    /// `nth + 1` and is itself subject to the plan.
+    Duplicate { to: NodeId, nth: usize },
+    /// Hold the edge's `nth` emission and release it *after* the edge's
+    /// next wire emission — adjacent messages on one pair swap places,
+    /// the minimal FIFO violation.
+    Reorder { to: NodeId, nth: usize },
+    /// Hold the edge's `nth` emission for `ops` operation ticks, then
+    /// release it at the start of a later operation (or at drop).
+    Delay { to: NodeId, nth: usize, ops: usize },
+    /// The endpoint dies once it has emitted `after` messages in total:
+    /// every later operation returns `Closed(self)` and held messages
+    /// are discarded — a crashed peer mid-collective.
+    KillAfterSends { after: usize },
+}
+
+/// A deterministic fault schedule plus an optional receive-timeout cap.
+///
+/// The cap exists because the collectives' `recv` backstop is generous
+/// (10 s): a chaos schedule that starves a rank *should* fail loudly, and
+/// the cap makes it fail in milliseconds so sweeping many seeds stays
+/// cheap. It never changes the outcome, only how long a doomed wait lasts.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+    pub recv_cap: Option<Duration>,
+}
+
+impl FaultPlan {
+    pub fn new(faults: Vec<Fault>) -> Self {
+        FaultPlan { faults, recv_cap: None }
+    }
+
+    pub fn with_recv_cap(mut self, cap: Duration) -> Self {
+        self.recv_cap = Some(cap);
+        self
+    }
+
+    /// An empty plan: the decorator becomes a transparent wrapper (used
+    /// for ranks that carry no faults in a seeded schedule).
+    pub fn clean() -> Self {
+        FaultPlan::default()
+    }
+}
+
+/// One seeded fault schedule over a rank order: for each rank, a plan.
+///
+/// Derived deterministically from `seed` with the crate's own
+/// [`Rng`] — the same seed always yields the same schedule, which is what
+/// lets CI upload a failing seed and a developer replay it locally
+/// (`CHICLE_CHAOS_SEED=n cargo test --test transport_chaos`). Each
+/// schedule injects one to three faults of random class on random edges;
+/// every class is reachable.
+pub fn seeded_schedule(seed: u64, order: &[NodeId]) -> Vec<FaultPlan> {
+    let k = order.len();
+    let mut rng = Rng::seed_from_u64(seed ^ 0x5eed_fa17u64.wrapping_mul(k as u64));
+    let mut plans = vec![FaultPlan::clean(); k];
+    if k < 2 {
+        return plans;
+    }
+    let n_faults = 1 + rng.below(3);
+    for _ in 0..n_faults {
+        let rank = rng.below(k);
+        let to = order[(rank + 1 + rng.below(k - 1)) % k];
+        let nth = rng.below(4);
+        let fault = match rng.below(5) {
+            0 => Fault::Drop { to, nth },
+            1 => Fault::Duplicate { to, nth },
+            2 => Fault::Reorder { to, nth },
+            3 => Fault::Delay { to, nth, ops: 1 + rng.below(4) },
+            _ => Fault::KillAfterSends { after: 1 + rng.below(2 * k) },
+        };
+        plans[rank].faults.push(fault);
+    }
+    plans
+}
+
+/// A [`Transport`] decorator that applies a [`FaultPlan`] to the wrapped
+/// endpoint. See the module docs for the fault semantics.
+pub struct FaultTransport {
+    inner: Option<Box<dyn Transport>>,
+    plan: FaultPlan,
+    /// Emission counter per destination edge.
+    emitted: HashMap<NodeId, usize>,
+    total_emitted: usize,
+    /// Messages held by a `Reorder`, keyed by edge, released after the
+    /// edge's next wire emission.
+    reorder_held: HashMap<NodeId, Vec<Payload>>,
+    /// Messages held by a `Delay`, released once `ticks` passes the due
+    /// tick (or at drop).
+    delay_held: Vec<(NodeId, Payload, usize)>,
+    ticks: usize,
+    dead: bool,
+}
+
+impl FaultTransport {
+    pub fn new(inner: Box<dyn Transport>, plan: FaultPlan) -> Self {
+        FaultTransport {
+            inner: Some(inner),
+            plan,
+            emitted: HashMap::new(),
+            total_emitted: 0,
+            reorder_held: HashMap::new(),
+            delay_held: Vec::new(),
+            ticks: 0,
+            dead: false,
+        }
+    }
+
+    /// Unwrap the decorator, flushing held messages first. Lets a chaos
+    /// scenario keep using a "crashed" rank's underlying endpoint — e.g.
+    /// to model straggling traffic from a dead regime arriving after the
+    /// survivors relaunched.
+    pub fn into_inner(mut self) -> Box<dyn Transport> {
+        if !self.dead {
+            self.flush_held();
+        }
+        self.delay_held.clear();
+        self.reorder_held.clear();
+        self.inner.take().expect("fault transport already unwrapped")
+    }
+
+    fn t(&mut self) -> &mut dyn Transport {
+        self.inner.as_mut().expect("fault transport inner").as_mut()
+    }
+
+    /// Advance the operation clock; release due delays; apply the kill
+    /// switch. Returns the error every operation must surface once dead.
+    fn tick(&mut self) -> Result<(), TransportError> {
+        if !self.dead
+            && self.plan.faults.iter().any(
+                |f| matches!(f, Fault::KillAfterSends { after } if self.total_emitted >= *after),
+            )
+        {
+            self.dead = true;
+            self.delay_held.clear();
+            self.reorder_held.clear();
+        }
+        if self.dead {
+            let me = self.t().node();
+            return Err(TransportError::Closed(me));
+        }
+        self.ticks += 1;
+        let due: Vec<(NodeId, Payload)> = {
+            let ticks = self.ticks;
+            let mut released = Vec::new();
+            self.delay_held.retain(|(to, payload, due_tick)| {
+                if *due_tick <= ticks {
+                    released.push((*to, payload.clone()));
+                    false
+                } else {
+                    true
+                }
+            });
+            released
+        };
+        for (to, payload) in due {
+            let _ = self.t().send(to, payload);
+        }
+        Ok(())
+    }
+
+    fn flush_held(&mut self) {
+        let delayed: Vec<(NodeId, Payload)> =
+            self.delay_held.drain(..).map(|(to, p, _)| (to, p)).collect();
+        for (to, p) in delayed {
+            let _ = self.t().send(to, p);
+        }
+        let reordered: Vec<(NodeId, Payload)> = self
+            .reorder_held
+            .drain()
+            .flat_map(|(to, held)| held.into_iter().map(move |p| (to, p)))
+            .collect();
+        for (to, p) in reordered {
+            let _ = self.t().send(to, p);
+        }
+    }
+
+    /// Emit one message on an edge, applying whatever fault targets this
+    /// emission index. A `Duplicate` recurses so the copy gets the next
+    /// index and is itself subject to the plan.
+    fn emit(&mut self, to: NodeId, payload: Payload) -> Result<(), TransportError> {
+        let n = {
+            let c = self.emitted.entry(to).or_insert(0);
+            let n = *c;
+            *c += 1;
+            n
+        };
+        self.total_emitted += 1;
+        let fault = self
+            .plan
+            .faults
+            .iter()
+            .find(|f| match f {
+                Fault::Drop { to: t, nth }
+                | Fault::Duplicate { to: t, nth }
+                | Fault::Reorder { to: t, nth }
+                | Fault::Delay { to: t, nth, .. } => *t == to && *nth == n,
+                Fault::KillAfterSends { .. } => false,
+            })
+            .cloned();
+        match fault {
+            Some(Fault::Drop { .. }) => Ok(()), // swallowed: the fault under test
+            Some(Fault::Reorder { .. }) => {
+                self.reorder_held.entry(to).or_default().push(payload);
+                Ok(())
+            }
+            Some(Fault::Delay { ops, .. }) => {
+                self.delay_held.push((to, payload, self.ticks + ops));
+                Ok(())
+            }
+            Some(Fault::Duplicate { .. }) => {
+                self.wire(to, payload.clone())?;
+                self.emit(to, payload)
+            }
+            _ => self.wire(to, payload),
+        }
+    }
+
+    /// Put a message on the actual wire, then release anything a
+    /// `Reorder` was holding on this edge (it now travels *behind* the
+    /// message that overtook it).
+    fn wire(&mut self, to: NodeId, payload: Payload) -> Result<(), TransportError> {
+        self.t().send(to, payload)?;
+        if let Some(held) = self.reorder_held.remove(&to) {
+            for p in held {
+                self.t().send(to, p)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Transport for FaultTransport {
+    fn node(&self) -> NodeId {
+        self.inner.as_ref().expect("fault transport inner").node()
+    }
+
+    fn membership(&self) -> Membership {
+        self.inner.as_ref().expect("fault transport inner").membership()
+    }
+
+    fn send(&mut self, to: NodeId, payload: Payload) -> Result<(), TransportError> {
+        self.tick()?;
+        self.emit(to, payload)
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Message, TransportError> {
+        self.tick()?;
+        let capped = match self.plan.recv_cap {
+            Some(cap) => timeout.min(cap),
+            None => timeout,
+        };
+        self.t().recv(capped)
+    }
+
+    fn try_recv(&mut self) -> Option<Message> {
+        if self.tick().is_err() {
+            return None;
+        }
+        self.t().try_recv()
+    }
+
+    fn frame_bytes(&self) -> usize {
+        self.inner.as_ref().expect("fault transport inner").frame_bytes()
+    }
+}
+
+impl Drop for FaultTransport {
+    fn drop(&mut self) {
+        // A live endpoint flushes held messages on the way out (a delayed
+        // message is late, not lost); a dead one keeps nothing.
+        if self.inner.is_some() && !self.dead {
+            self.flush_held();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::ChannelGroup;
+
+    fn seg(seg: usize) -> Payload {
+        Payload::Segment { iter: 0, seg, data: vec![seg as f32] }
+    }
+
+    fn recv_segs(ep: &mut dyn Transport, n: usize) -> Vec<usize> {
+        (0..n)
+            .map(|_| match ep.recv(Duration::from_secs(1)).unwrap().payload {
+                Payload::Segment { seg, .. } => seg,
+                p => panic!("unexpected payload {p:?}"),
+            })
+            .collect()
+    }
+
+    fn pair(plan: FaultPlan) -> (FaultTransport, Box<dyn Transport>) {
+        let g = ChannelGroup::new();
+        let a = g.join(1);
+        let b = g.join(2);
+        (FaultTransport::new(Box::new(a), plan), Box::new(b))
+    }
+
+    #[test]
+    fn drop_swallows_exactly_the_nth_emission() {
+        let (mut a, mut b) =
+            pair(FaultPlan::new(vec![Fault::Drop { to: 2, nth: 1 }]));
+        for s in 0..3 {
+            a.send(2, seg(s)).unwrap();
+        }
+        assert_eq!(recv_segs(b.as_mut(), 2), vec![0, 2]);
+        assert!(b.try_recv().is_none());
+    }
+
+    #[test]
+    fn duplicate_emits_twice_and_dup_plus_drop_nets_the_original() {
+        let (mut a, mut b) =
+            pair(FaultPlan::new(vec![Fault::Duplicate { to: 2, nth: 0 }]));
+        a.send(2, seg(7)).unwrap();
+        assert_eq!(recv_segs(b.as_mut(), 2), vec![7, 7]);
+
+        // The copy is emission 1; dropping it restores the exact wire.
+        let (mut a, mut b) = pair(FaultPlan::new(vec![
+            Fault::Duplicate { to: 2, nth: 0 },
+            Fault::Drop { to: 2, nth: 1 },
+        ]));
+        a.send(2, seg(7)).unwrap();
+        a.send(2, seg(8)).unwrap();
+        assert_eq!(recv_segs(b.as_mut(), 2), vec![7, 8]);
+        assert!(b.try_recv().is_none());
+    }
+
+    #[test]
+    fn reorder_swaps_adjacent_messages_on_one_edge() {
+        let (mut a, mut b) =
+            pair(FaultPlan::new(vec![Fault::Reorder { to: 2, nth: 1 }]));
+        for s in 0..4 {
+            a.send(2, seg(s)).unwrap();
+        }
+        assert_eq!(recv_segs(b.as_mut(), 4), vec![0, 2, 1, 3]);
+    }
+
+    #[test]
+    fn delay_releases_after_the_configured_operation_ticks() {
+        let (mut a, mut b) =
+            pair(FaultPlan::new(vec![Fault::Delay { to: 2, nth: 0, ops: 2 }]));
+        a.send(2, seg(0)).unwrap(); // held, due at tick 3
+        a.send(2, seg(1)).unwrap(); // tick 2
+        assert_eq!(recv_segs(b.as_mut(), 1), vec![1]);
+        assert!(b.try_recv().is_none(), "delayed message released too early");
+        a.send(2, seg(2)).unwrap(); // tick 3: releases seg 0 first
+        assert_eq!(recv_segs(b.as_mut(), 2), vec![0, 2]);
+    }
+
+    #[test]
+    fn held_messages_are_flushed_at_drop_not_lost() {
+        let (mut a, mut b) = pair(FaultPlan::new(vec![
+            Fault::Delay { to: 2, nth: 0, ops: 1000 },
+            Fault::Reorder { to: 2, nth: 1 },
+        ]));
+        a.send(2, seg(0)).unwrap();
+        a.send(2, seg(1)).unwrap();
+        assert!(b.try_recv().is_none());
+        drop(a);
+        assert_eq!(recv_segs(b.as_mut(), 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn kill_after_sends_makes_every_later_operation_fail_closed() {
+        let (mut a, mut b) =
+            pair(FaultPlan::new(vec![Fault::KillAfterSends { after: 2 }]));
+        a.send(2, seg(0)).unwrap();
+        a.send(2, seg(1)).unwrap();
+        assert!(matches!(a.send(2, seg(2)), Err(TransportError::Closed(1))));
+        assert!(matches!(a.recv(Duration::from_millis(5)), Err(TransportError::Closed(1))));
+        assert!(a.try_recv().is_none());
+        assert_eq!(recv_segs(b.as_mut(), 2), vec![0, 1]);
+        assert!(b.try_recv().is_none());
+    }
+
+    #[test]
+    fn recv_cap_shortens_a_doomed_wait() {
+        let (mut a, _b) = pair(
+            FaultPlan::new(vec![]).with_recv_cap(Duration::from_millis(10)),
+        );
+        let t0 = std::time::Instant::now();
+        assert!(matches!(a.recv(Duration::from_secs(10)), Err(TransportError::Timeout)));
+        assert!(t0.elapsed() < Duration::from_secs(5), "cap was not applied");
+    }
+
+    #[test]
+    fn seeded_schedules_are_reproducible_and_cover_all_classes() {
+        let order = [1u32, 2, 3, 4];
+        for seed in 0..64u64 {
+            assert_eq!(
+                seeded_schedule(seed, &order)
+                    .iter()
+                    .map(|p| p.faults.clone())
+                    .collect::<Vec<_>>(),
+                seeded_schedule(seed, &order)
+                    .iter()
+                    .map(|p| p.faults.clone())
+                    .collect::<Vec<_>>(),
+                "seed {seed} not reproducible"
+            );
+        }
+        let mut classes = [false; 5];
+        for seed in 0..256u64 {
+            for plan in seeded_schedule(seed, &order) {
+                for f in &plan.faults {
+                    classes[match f {
+                        Fault::Drop { .. } => 0,
+                        Fault::Duplicate { .. } => 1,
+                        Fault::Reorder { .. } => 2,
+                        Fault::Delay { .. } => 3,
+                        Fault::KillAfterSends { .. } => 4,
+                    }] = true;
+                }
+            }
+        }
+        assert!(classes.iter().all(|&c| c), "a fault class is unreachable: {classes:?}");
+    }
+}

@@ -27,8 +27,18 @@
 //! * **No reordering with loss** — a backend either delivers a message or
 //!   errors the send; silent drops would deadlock a barriered collective.
 //!
-//! The in-process backend is [`channel::ChannelGroup`] /
-//! [`channel::ChannelEndpoint`] (mpsc channels, a shared membership map).
+//! Two backends implement the contract: the in-process
+//! [`channel::ChannelGroup`] / [`channel::ChannelEndpoint`] (mpsc
+//! channels, a shared membership map) and the real-socket
+//! [`tcp::TcpGroup`] / [`tcp::TcpEndpoint`] (length-prefixed frames over
+//! loopback `TcpStream`s, one listener/acceptor per endpoint, per-peer
+//! writer threads). [`GroupHandle`] abstracts over them so the worker
+//! pool can be pointed at either via `SessionConfig::transport`
+//! (`channel` | `tcp`, `CHICLE_TRANSPORT` env). Both pass the same
+//! backend-generic conformance suite
+//! (`rust/tests/transport_conformance/`), and [`fault::FaultTransport`]
+//! can wrap either with a deterministic fault schedule for the chaos
+//! suite.
 //!
 //! # Segment geometry
 //!
@@ -54,12 +64,16 @@
 
 pub mod allreduce;
 pub mod channel;
+pub mod fault;
+pub mod tcp;
 
 pub use allreduce::{
     fetch_state, ring_allreduce, tree_allreduce, AllreduceKind, AllreduceRun, CollectiveCtx,
     CollectiveStats,
 };
 pub use channel::{ChannelEndpoint, ChannelGroup};
+pub use fault::{seeded_schedule, Fault, FaultPlan, FaultTransport};
+pub use tcp::{TcpEndpoint, TcpGroup};
 
 use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
@@ -217,6 +231,64 @@ pub trait Transport: Send {
 
     /// Non-blocking receive; `None` when the queue is empty.
     fn try_recv(&mut self) -> Option<Message>;
+
+    /// Cumulative *framing overhead* bytes this endpoint has written:
+    /// every wire byte that is not f32 payload (length prefixes, tags,
+    /// handshakes). Zero for backends with no wire format — the
+    /// in-process channel moves `Message` values, so the default stands.
+    /// Measured per endpoint where the bytes are written, so summing over
+    /// a collective's ranks never double-counts; the metrics log reports
+    /// the sum as `transport_frame_bytes` next to the backend-independent
+    /// `transport_bytes`.
+    fn frame_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// A backend-erased transport group: the worker pool holds one of these
+/// and `join`s workers into whichever backend the session configured
+/// (`SessionConfig::transport`). Backend selection changes *how* bytes
+/// move, never what is computed — both variants satisfy the same
+/// contract and the conformance suite pins bit-identity across them.
+pub enum GroupHandle {
+    Channel(Arc<ChannelGroup>),
+    Tcp(Arc<TcpGroup>),
+}
+
+impl GroupHandle {
+    /// A fresh in-process channel group (the default backend).
+    pub fn channel() -> Self {
+        GroupHandle::Channel(ChannelGroup::new())
+    }
+
+    /// A fresh loopback TCP group (real sockets, framed wire format).
+    pub fn tcp() -> Self {
+        GroupHandle::Tcp(TcpGroup::new())
+    }
+
+    /// Add `node` to the group and hand back its (boxed) endpoint.
+    pub fn join(&self, node: NodeId) -> Box<dyn Transport> {
+        match self {
+            GroupHandle::Channel(g) => Box::new(g.join(node)),
+            GroupHandle::Tcp(g) => Box::new(g.join(node)),
+        }
+    }
+
+    /// Current membership snapshot (epoch + sorted members).
+    pub fn membership(&self) -> Membership {
+        match self {
+            GroupHandle::Channel(g) => g.membership(),
+            GroupHandle::Tcp(g) => g.membership(),
+        }
+    }
+
+    /// The group's payload-residency map (shared with the scheduler).
+    pub fn residency(&self) -> &Residency {
+        match self {
+            GroupHandle::Channel(g) => g.residency(),
+            GroupHandle::Tcp(g) => g.residency(),
+        }
+    }
 }
 
 /// Which immutable chunk payloads each group member has ever hosted.

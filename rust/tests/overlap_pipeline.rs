@@ -292,13 +292,17 @@ fn metric_early_stop_drains_the_pipeline() {
 /// eval-every-iteration MLP session must run faster pipelined than
 /// barriered (the barriered schedule pays compute → reduce round-trip →
 /// evaluation sequentially; the pipelined one hides the evaluation under
-/// the next iteration's compute). Timing-sensitive, so ignored by
-/// default — run explicitly with `cargo test -- --ignored`; the
-/// CI-tracked equivalent is the `merge/eval_overlap_mlp_4w_*` bench
-/// pair.
+/// the next iteration's compute). Timing-sensitive, so gated on
+/// `CHICLE_TIMING_TESTS=1` — the nightly CI timing job sets it (a quiet,
+/// pinned runner); on a loaded dev box or a shared PR runner the test
+/// skips itself instead of flaking. The CI-tracked equivalent is the
+/// `merge/eval_overlap_mlp_4w_*` bench pair.
 #[test]
-#[ignore = "timing-sensitive; the bench gate tracks the CI numbers"]
 fn eval_overlap_beats_barriered_flush() {
+    if std::env::var("CHICLE_TIMING_TESTS").map_or(true, |v| v != "1") {
+        eprintln!("eval_overlap_beats_barriered_flush: skipped (set CHICLE_TIMING_TESTS=1)");
+        return;
+    }
     let timed = |overlap: bool| {
         let mut best = Duration::MAX;
         for rep in 0..3 {

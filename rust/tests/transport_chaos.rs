@@ -1,0 +1,497 @@
+//! Chaos property suite: the merge collectives under injected transport
+//! faults are **bit-identical or loudly failed** — never silently wrong.
+//!
+//! Two layers:
+//!
+//! * **Per-class deterministic scenarios** — for each fault class (drop,
+//!   duplicate, reorder, delay, peer-death) one hand-built schedule that
+//!   the staleness rules / tag matching / task-order fold *provably
+//!   absorb* (the collective completes with the serial fold's exact
+//!   bits), plus — where the class can starve a rank — a schedule that
+//!   must fail loudly instead. These run on the channel backend, where
+//!   delivery is synchronous and the outcome is exactly reproducible.
+//! * **A seeded sweep** — [`seeded_schedule`] generates random fault
+//!   schedules; every rank that returns `Ok` must hold the serial fold's
+//!   bits. `CHICLE_CHAOS_SEEDS=n` widens the sweep (the nightly CI job
+//!   uses 32), `CHICLE_CHAOS_SEED=s` replays one seed; failing seeds are
+//!   written to `results/chaos_failures.txt` so CI can upload them as an
+//!   artifact for replay.
+//!
+//! The emission geometry the hand-built schedules rely on (one part per
+//! rank, ring): edge `r → right(r)` carries the scatter `UpdateSlice` as
+//! emission 0 and then `k−1` all-gather `Segment`s; every other edge
+//! `r → s` carries exactly one `UpdateSlice`.
+
+mod transport_conformance;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use chicle::algos::{Algorithm, Backend, CocoaAlgo, LocalUpdate, ModelVec};
+use chicle::config::CocoaConfig;
+use chicle::transport::{
+    fetch_state, ring_allreduce, seeded_schedule, tree_allreduce, AllreduceKind, AllreduceRun,
+    CollectiveCtx, Fault, FaultPlan, FaultTransport, GroupHandle, Payload, Transport,
+    TransportError, UpdatePart,
+};
+use chicle::util::Rng;
+
+use transport_conformance as conf;
+
+/// Doomed waits fail in milliseconds, not the collectives' 10 s backstop.
+const RECV_CAP: Duration = Duration::from_millis(150);
+
+fn cocoa(len: usize) -> Arc<dyn Algorithm> {
+    Arc::new(CocoaAlgo::new(CocoaConfig::default(), Backend::native_cocoa(), 100, len))
+}
+
+/// Non-contiguous node ids (rank ≠ id), shared by schedules and runner.
+fn chaos_order(k: usize) -> Vec<u32> {
+    (0..k as u32).map(|i| 7 * i + 2).collect()
+}
+
+/// Run one collective with a [`FaultPlan`] per rank. Threads hand their
+/// wrapped endpoints back (nothing is dropped mid-scope), so held
+/// messages stay held and a "dead" rank's endpoint survives for the
+/// rejoin scenarios. Results are returned, not unwrapped — failing
+/// loudly is an acceptable chaos outcome.
+#[allow(clippy::type_complexity)]
+fn run_faulted(
+    make: conf::GroupCtor,
+    algo: &Arc<dyn Algorithm>,
+    model: &ModelVec,
+    updates: &[LocalUpdate],
+    kind: AllreduceKind,
+    plans: &[FaultPlan],
+) -> (GroupHandle, Vec<(Result<AllreduceRun, TransportError>, FaultTransport)>) {
+    let k = updates.len();
+    assert_eq!(plans.len(), k, "one plan per rank");
+    let order = chaos_order(k);
+    let group = make();
+    let endpoints: Vec<FaultTransport> = order
+        .iter()
+        .zip(plans)
+        .map(|(&n, plan)| FaultTransport::new(group.join(n), plan.clone()))
+        .collect();
+    let epoch = group.membership().epoch;
+    let outs = std::thread::scope(|s| {
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut ep)| {
+                let order = &order;
+                let algo = Arc::clone(algo);
+                s.spawn(move || {
+                    let parts = vec![(rank, updates[rank].clone())];
+                    let ctx = CollectiveCtx {
+                        algo: algo.as_ref(),
+                        model,
+                        parts: &parts,
+                        k_tasks: updates.len(),
+                        order,
+                        epoch,
+                        iter: 42,
+                    };
+                    let result = match kind {
+                        AllreduceKind::Ring => ring_allreduce(&mut ep, &ctx),
+                        AllreduceKind::Tree => tree_allreduce(&mut ep, &ctx),
+                    };
+                    (result, ep)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    (group, outs)
+}
+
+/// The chaos invariant, checked rank by rank: `Ok` means the serial
+/// fold's exact bits; `Err` is a loud failure and always acceptable.
+fn assert_bits_or_loud(
+    tag: &str,
+    serial: &ModelVec,
+    outs: &[(Result<AllreduceRun, TransportError>, FaultTransport)],
+) {
+    for (rank, (result, _)) in outs.iter().enumerate() {
+        if let Ok(run) = result {
+            assert_eq!(&run.model, serial, "{tag}: rank {rank} silently corrupted the merge");
+        }
+    }
+}
+
+/// Shorthand for the absorbed scenarios: every rank must complete *and*
+/// match the serial fold — the schedule is supposed to be invisible.
+fn assert_absorbed(
+    tag: &str,
+    serial: &ModelVec,
+    outs: &[(Result<AllreduceRun, TransportError>, FaultTransport)],
+) {
+    assert_bits_or_loud(tag, serial, outs);
+    for (rank, (result, _)) in outs.iter().enumerate() {
+        assert!(
+            result.is_ok(),
+            "{tag}: rank {rank} failed a schedule the rules should absorb: {:?}",
+            result.as_ref().err()
+        );
+    }
+}
+
+fn serial_fold(algo: &Arc<dyn Algorithm>, model: &ModelVec, updates: &[LocalUpdate]) -> ModelVec {
+    let mut out = model.clone();
+    algo.merge(&mut out, updates, updates.len());
+    out
+}
+
+/// **Drop, absorbed**: `Duplicate{nth: i}` + `Drop{nth: i+1}` kills
+/// exactly the redundant copy — the wire carries precisely the original
+/// traffic, so the collective cannot tell the schedule from a clean run.
+#[test]
+fn absorbed_drop_of_a_duplicated_emission_changes_nothing() {
+    let algo = cocoa(50);
+    let model = vec![0.75f32; 50];
+    let mut rng = Rng::seed_from_u64(101);
+    let updates = conf::random_updates(&mut rng, 2, 50);
+    let serial = serial_fold(&algo, &model, &updates);
+
+    let order = chaos_order(2);
+    let mut plans = vec![FaultPlan::clean().with_recv_cap(RECV_CAP); 2];
+    plans[0].faults = vec![
+        Fault::Duplicate { to: order[1], nth: 0 },
+        Fault::Drop { to: order[1], nth: 1 },
+    ];
+    let (_g, outs) = run_faulted(
+        GroupHandle::channel,
+        &algo,
+        &model,
+        &updates,
+        AllreduceKind::Ring,
+        &plans,
+    );
+    assert_absorbed("dup+drop", &serial, &outs);
+}
+
+/// **Drop, loud**: swallowing an essential all-gather segment starves
+/// its receiver into a timeout. The starved rank fails loudly; any rank
+/// that does complete still holds the serial bits (rank 0 here — its
+/// inbound traffic is untouched).
+#[test]
+fn loud_drop_of_an_essential_segment_times_out_not_corrupts() {
+    let algo = cocoa(50);
+    let model = vec![-1.25f32; 50];
+    let mut rng = Rng::seed_from_u64(103);
+    let updates = conf::random_updates(&mut rng, 2, 50);
+    let serial = serial_fold(&algo, &model, &updates);
+
+    let order = chaos_order(2);
+    let mut plans = vec![FaultPlan::clean().with_recv_cap(RECV_CAP); 2];
+    // Edge 0→1, emission 1 = rank 0's only all-gather Segment.
+    plans[0].faults = vec![Fault::Drop { to: order[1], nth: 1 }];
+    let (_g, outs) = run_faulted(
+        GroupHandle::channel,
+        &algo,
+        &model,
+        &updates,
+        AllreduceKind::Ring,
+        &plans,
+    );
+    assert_bits_or_loud("loud drop", &serial, &outs);
+    assert!(
+        matches!(outs[1].0, Err(TransportError::Timeout)),
+        "the starved rank must time out loudly, got {:?}",
+        outs[1].0.as_ref().map(|_| "Ok")
+    );
+    let ok = outs[0].0.as_ref().expect("rank 0's inbound traffic is untouched");
+    assert_eq!(ok.model, serial, "the completing rank must still hold the serial bits");
+}
+
+/// **Duplicate, absorbed**: a duplicated scatter slice arrives after the
+/// owner already collected its `k_tasks` parts; `recv_matching` stashes
+/// the straggler (it never matches a later step's tag) and it dies in
+/// the stash — the fold is keyed by tag and task order, not arrival
+/// count.
+#[test]
+fn absorbed_duplicate_slice_is_stashed_not_double_folded() {
+    let algo = cocoa(64);
+    let model = vec![2.0f32; 64];
+    let mut rng = Rng::seed_from_u64(107);
+    let updates = conf::random_updates(&mut rng, 2, 64);
+    let serial = serial_fold(&algo, &model, &updates);
+
+    let order = chaos_order(2);
+    let mut plans = vec![FaultPlan::clean().with_recv_cap(RECV_CAP); 2];
+    plans[0].faults = vec![Fault::Duplicate { to: order[1], nth: 0 }];
+    let (_g, outs) = run_faulted(
+        GroupHandle::channel,
+        &algo,
+        &model,
+        &updates,
+        AllreduceKind::Ring,
+        &plans,
+    );
+    assert_absorbed("duplicate", &serial, &outs);
+}
+
+/// **Reorder, absorbed**: swapping rank 1's scatter slice behind its
+/// first all-gather segment on the edge to rank 2 delivers `Segment`
+/// before the `UpdateSlice` rank 2 is still collecting — the stash
+/// absorbs the early segment and replays it when the all-gather asks.
+#[test]
+fn absorbed_reorder_is_replayed_from_the_stash() {
+    let algo = cocoa(97);
+    let model: ModelVec = (0..97).map(|i| i as f32 * 0.5).collect();
+    let mut rng = Rng::seed_from_u64(109);
+    let updates = conf::random_updates(&mut rng, 4, 97);
+    let serial = serial_fold(&algo, &model, &updates);
+
+    let order = chaos_order(4);
+    let mut plans = vec![FaultPlan::clean().with_recv_cap(RECV_CAP); 4];
+    // Edge 1→2 (= right of 1): hold the UpdateSlice (emission 0) until
+    // the Segment behind it (emission 1) hits the wire.
+    plans[1].faults = vec![Fault::Reorder { to: order[2], nth: 0 }];
+    let (_g, outs) = run_faulted(
+        GroupHandle::channel,
+        &algo,
+        &model,
+        &updates,
+        AllreduceKind::Ring,
+        &plans,
+    );
+    assert_absorbed("reorder", &serial, &outs);
+}
+
+/// **Delay, absorbed**: a scatter slice held for a few of the sender's
+/// own operation ticks releases while its receiver is still blocked
+/// collecting — late, but matched by tag exactly like an on-time
+/// arrival.
+#[test]
+fn absorbed_delay_arrives_late_but_exact() {
+    let algo = cocoa(81);
+    let model = vec![0.125f32; 81];
+    let mut rng = Rng::seed_from_u64(113);
+    let updates = conf::random_updates(&mut rng, 3, 81);
+    let serial = serial_fold(&algo, &model, &updates);
+
+    let order = chaos_order(3);
+    let mut plans = vec![FaultPlan::clean().with_recv_cap(RECV_CAP); 3];
+    plans[0].faults = vec![Fault::Delay { to: order[1], nth: 0, ops: 3 }];
+    let (_g, outs) = run_faulted(
+        GroupHandle::channel,
+        &algo,
+        &model,
+        &updates,
+        AllreduceKind::Ring,
+        &plans,
+    );
+    assert_absorbed("delay", &serial, &outs);
+}
+
+/// **Peer-death**: phase A — a rank killed after its scatter sends
+/// starves the all-gather; every survivor fails loudly and nobody holds
+/// wrong bits. Phase B — the survivors regroup (new epoch, new order),
+/// the dead regime's straggling slice is sieved by the staleness rule,
+/// a rejoiner is served state from a peer mid-entry, and the survivor
+/// collective is bit-identical to its serial fold: the full
+/// revoke/rejoin story under churn.
+#[test]
+fn peer_death_fails_loud_then_the_next_regime_absorbs_the_stragglers() {
+    let algo = cocoa(60);
+    let model: ModelVec = (0..60).map(|i| i as f32 * 0.25 - 3.0).collect();
+    let mut rng = Rng::seed_from_u64(13);
+    let updates = conf::random_updates(&mut rng, 3, 60);
+    let serial = serial_fold(&algo, &model, &updates);
+
+    let order = chaos_order(3);
+    let mut plans = vec![FaultPlan::clean().with_recv_cap(RECV_CAP); 3];
+    // Rank 2 dies right after its two scatter slices — before any
+    // all-gather traffic, so both survivors starve deterministically.
+    plans[2].faults = vec![Fault::KillAfterSends { after: 2 }];
+    let (group, outs) = run_faulted(
+        GroupHandle::channel,
+        &algo,
+        &model,
+        &updates,
+        AllreduceKind::Ring,
+        &plans,
+    );
+
+    // Phase A: loud everywhere, wrong nowhere.
+    assert_bits_or_loud("peer death", &serial, &outs);
+    let (results, mut endpoints): (Vec<_>, Vec<_>) = outs.into_iter().unzip();
+    assert!(
+        matches!(results[2], Err(TransportError::Closed(_))),
+        "the killed rank must observe its own death, got {results:?}"
+    );
+    assert!(
+        results[..2].iter().all(|r| r.is_err()),
+        "losing a peer before the all-gather must starve both survivors: {results:?}"
+    );
+
+    // Phase B: the dead rank's endpoint outlives its wrapper just long
+    // enough to model a straggler from the dead regime — a slice shaped
+    // exactly like rank 1's contribution to the *next* collective, the
+    // payload that would corrupt the merge if the sieve let it through.
+    let mut straggler = endpoints.remove(2).into_inner();
+    straggler
+        .send(
+            order[0],
+            Payload::UpdateSlice {
+                iter: 43,
+                seg: 0,
+                part: UpdatePart { task_idx: 1, samples: 5, delta: vec![2.5; 30] },
+            },
+        )
+        .unwrap();
+    drop(straggler); // leave: the epoch moves past the straggler's stamp
+
+    let mut rejoiner = group.join(99);
+    rejoiner.send(order[0], Payload::StateRequest).unwrap();
+
+    let survivors: Vec<Box<dyn Transport>> =
+        endpoints.into_iter().map(|ep| ep.into_inner()).collect();
+    let updates2 = conf::random_updates(&mut rng, 2, 60);
+    let serial2 = serial_fold(&algo, &model, &updates2);
+    let new_order = [order[0], order[1]];
+    let epoch = group.membership().epoch;
+    let (runs, _live_eps): (Vec<AllreduceRun>, Vec<_>) = std::thread::scope(|s| {
+        let handles: Vec<_> = survivors
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut ep)| {
+                let (algo, model, updates2, new_order) = (&algo, &model, &updates2, &new_order);
+                s.spawn(move || {
+                    let parts = vec![(rank, updates2[rank].clone())];
+                    let ctx = CollectiveCtx {
+                        algo: algo.as_ref(),
+                        model,
+                        parts: &parts,
+                        k_tasks: 2,
+                        order: new_order,
+                        epoch,
+                        iter: 43,
+                    };
+                    let run = ring_allreduce(ep.as_mut(), &ctx).unwrap();
+                    (run, ep)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).unzip()
+    });
+    for (rank, run) in runs.iter().enumerate() {
+        assert_eq!(run.model, serial2, "post-churn rank {rank} diverged from the serial fold");
+    }
+    assert!(
+        runs[0].stats.stale_dropped >= 1,
+        "the dead regime's straggler must be sieved, not folded"
+    );
+    assert_eq!(runs[0].stats.state_served, 1, "the rejoin request must be served at entry");
+    let state = fetch_state(rejoiner.as_mut(), order[0], Duration::from_secs(1))
+        .expect("the rejoin reply was queued before the collective");
+    assert_eq!(state, model, "rejoin state must be the pre-merge model");
+}
+
+/// One seed's sweep: wrap every rank in its seeded plan and check the
+/// chaos invariant. Returns a replayable description on violation.
+fn sweep_one(
+    make: conf::GroupCtor,
+    seed: u64,
+    kind: AllreduceKind,
+    algo: &Arc<dyn Algorithm>,
+    model: &ModelVec,
+    updates: &[LocalUpdate],
+    serial: &ModelVec,
+) -> Result<(), String> {
+    let order = chaos_order(updates.len());
+    let plans: Vec<FaultPlan> = seeded_schedule(seed, &order)
+        .into_iter()
+        .map(|p| p.with_recv_cap(RECV_CAP))
+        .collect();
+    let (_g, outs) = run_faulted(make, algo, model, updates, kind, &plans);
+    for (rank, (result, _)) in outs.iter().enumerate() {
+        if let Ok(run) = result {
+            if run.model != *serial {
+                return Err(format!(
+                    "seed={seed} kind={kind:?} rank={rank} faults={:?}: silent corruption",
+                    plans[rank].faults
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn sweep_seeds() -> Vec<u64> {
+    if let Ok(s) = std::env::var("CHICLE_CHAOS_SEED") {
+        return vec![s.parse().expect("CHICLE_CHAOS_SEED must be a u64")];
+    }
+    let n: u64 = std::env::var("CHICLE_CHAOS_SEEDS")
+        .map(|v| v.parse().expect("CHICLE_CHAOS_SEEDS must be a u64 count"))
+        .unwrap_or(6);
+    (0..n).collect()
+}
+
+/// The seeded sweep over the channel backend: random schedules, both
+/// collectives, k = 4. Any rank that claims success with non-serial bits
+/// fails the run; the offending seeds land in
+/// `results/chaos_failures.txt` for CI to upload and a developer to
+/// replay with `CHICLE_CHAOS_SEED=<seed>`.
+#[test]
+fn seeded_sweep_finds_no_silent_corruption() {
+    let algo = cocoa(97);
+    let model: ModelVec = (0..97).map(|i| (i as f32).sin()).collect();
+    let mut rng = Rng::seed_from_u64(127);
+    let updates = conf::random_updates(&mut rng, 4, 97);
+    let serial = serial_fold(&algo, &model, &updates);
+
+    let mut failures = Vec::new();
+    for &seed in &sweep_seeds() {
+        for kind in [AllreduceKind::Ring, AllreduceKind::Tree] {
+            if let Err(desc) =
+                sweep_one(GroupHandle::channel, seed, kind, &algo, &model, &updates, &serial)
+            {
+                failures.push(desc);
+            }
+        }
+    }
+    if !failures.is_empty() {
+        std::fs::create_dir_all("results").ok();
+        std::fs::write("results/chaos_failures.txt", failures.join("\n") + "\n").ok();
+        panic!(
+            "chaos sweep found silent corruption (replay with CHICLE_CHAOS_SEED=<seed>):\n{}",
+            failures.join("\n")
+        );
+    }
+}
+
+/// Chaos over real sockets: a handful of seeded schedules plus the
+/// absorbed-duplicate scenario on the TCP backend. Socket timing makes
+/// loud-vs-absorbed outcomes nondeterministic, so only the invariant
+/// that never depends on timing is asserted: bits-or-loud.
+#[test]
+fn tcp_chaos_smoke_bits_or_loud() {
+    let algo = cocoa(64);
+    let model = vec![1.5f32; 64];
+    let mut rng = Rng::seed_from_u64(131);
+    let updates = conf::random_updates(&mut rng, 3, 64);
+    let serial = serial_fold(&algo, &model, &updates);
+
+    for seed in [0u64, 1, 2] {
+        for kind in [AllreduceKind::Ring, AllreduceKind::Tree] {
+            if let Err(desc) =
+                sweep_one(GroupHandle::tcp, seed, kind, &algo, &model, &updates, &serial)
+            {
+                panic!("tcp chaos smoke: {desc}");
+            }
+        }
+    }
+
+    // The duplicate-absorption argument (stash + tag matching) does not
+    // depend on delivery timing, so it must hold over TCP too.
+    let updates = conf::random_updates(&mut rng, 2, 64);
+    let serial = serial_fold(&algo, &model, &updates);
+    let order = chaos_order(2);
+    let mut plans = vec![FaultPlan::clean().with_recv_cap(Duration::from_secs(2)); 2];
+    plans[0].faults = vec![Fault::Duplicate { to: order[1], nth: 0 }];
+    let (_g, outs) =
+        run_faulted(GroupHandle::tcp, &algo, &model, &updates, AllreduceKind::Ring, &plans);
+    assert_absorbed("tcp duplicate", &serial, &outs);
+}

@@ -1,0 +1,426 @@
+//! Backend-generic conformance harness for the transport contract.
+//!
+//! Every property `docs/TRANSPORT.md` promises of a backend lives here
+//! once, parameterized over a group constructor ([`GroupCtor`]) for the
+//! transport-level properties and over [`TransportKind`] for the
+//! pool-level ones. Each backend gets a thin test binary that
+//! instantiates the same functions — `transport_allreduce.rs` pins the
+//! in-process channel backend, `transport_tcp.rs` pins loopback TCP —
+//! so "passes the suite unchanged" is literal: one body, N backends,
+//! byte-for-byte identical expectations.
+//!
+//! proptest is not available in the offline crate set, so properties are
+//! checked over seeded random cases (deterministic, reproducible).
+//!
+//! Two properties (staleness sieve, rejoin service) observe a message
+//! *racing* a collective. The channel backend delivers synchronously, so
+//! one attempt always suffices; a real socket delivers through kernel
+//! buffers and a reader thread, so those properties settle briefly and
+//! retry with a fresh group if the racing message had not yet landed.
+//! The bit-identity assertion is unconditional on every attempt — only
+//! the *observation* of the race is allowed to need another try.
+
+// Each instantiating binary uses a subset of the harness; the unused
+// remainder is not dead weight, it is the other binary's half.
+#![allow(dead_code)]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use chicle::algos::nn::NativeModel;
+use chicle::algos::{Algorithm, Backend, CocoaAlgo, LocalUpdate, LsgdAlgo, ModelVec};
+use chicle::chunks::SharedStore;
+use chicle::config::{CocoaConfig, LsgdConfig, ModelKind, TransportKind};
+use chicle::exec::{ReduceOptions, WorkerPool};
+use chicle::transport::{
+    fetch_state, ring_allreduce, tree_allreduce, AllreduceKind, AllreduceRun, CollectiveCtx,
+    GroupHandle, Payload, Transport, UpdatePart,
+};
+use chicle::util::Rng;
+
+/// A fresh, empty group of whichever backend the test binary pins.
+pub type GroupCtor = fn() -> GroupHandle;
+
+/// How long a racing message gets to cross a real socket before the
+/// collective launches. Generous next to loopback latency (~µs), small
+/// next to the test budget.
+const SETTLE: Duration = Duration::from_millis(30);
+
+/// Fresh-group retries for the two race-observing properties.
+const ATTEMPTS: usize = 5;
+
+/// One representative per algorithm family: CoCoA's merge is a plain
+/// accumulate, lSGD's is sample-weighted (`Σ samples` normalizer) — the
+/// case that would break if slices lost their weights in transit. The
+/// CoCoA dim is a prime so no rank count divides the model evenly.
+pub fn families() -> Vec<(&'static str, Arc<dyn Algorithm>)> {
+    vec![
+        (
+            "cocoa",
+            Arc::new(CocoaAlgo::new(
+                CocoaConfig::default(),
+                Backend::native_cocoa(),
+                10_000,
+                4099,
+            )) as Arc<dyn Algorithm>,
+        ),
+        (
+            "lsgd-mlp",
+            Arc::new(
+                LsgdAlgo::new_classif(
+                    LsgdConfig::paper_defaults(ModelKind::Mlp),
+                    Backend::native_nn(NativeModel::mlp_default()),
+                    784,
+                    Vec::new(),
+                    Vec::new(),
+                    1,
+                )
+                .unwrap(),
+            ),
+        ),
+    ]
+}
+
+pub fn random_updates(rng: &mut Rng, k: usize, len: usize) -> Vec<LocalUpdate> {
+    (0..k)
+        .map(|_| LocalUpdate {
+            delta: (0..len).map(|_| rng.normal_f32()).collect(),
+            samples: 1 + rng.below(2000),
+            loss_sum: 0.0,
+        })
+        .collect()
+}
+
+/// Run one `kind` collective over `k` fresh endpoints of the given
+/// backend (one OS thread per rank, like the worker pool) and return
+/// every rank's result in rank order. Node ids are deliberately
+/// non-contiguous so rank ≠ id.
+pub fn run_collective(
+    make: GroupCtor,
+    algo: &Arc<dyn Algorithm>,
+    model: &ModelVec,
+    updates: &[LocalUpdate],
+    kind: AllreduceKind,
+) -> Vec<AllreduceRun> {
+    let k = updates.len();
+    let order: Vec<u32> = (0..k as u32).map(|i| 10 * i + 3).collect();
+    let group = make();
+    let endpoints: Vec<_> = order.iter().map(|&n| group.join(n)).collect();
+    let epoch = group.membership().epoch;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = endpoints
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut ep)| {
+                let order = &order;
+                let algo = Arc::clone(algo);
+                s.spawn(move || {
+                    let parts = vec![(rank, updates[rank].clone())];
+                    let ctx = CollectiveCtx {
+                        algo: algo.as_ref(),
+                        model,
+                        parts: &parts,
+                        k_tasks: updates.len(),
+                        order,
+                        epoch,
+                        iter: 42,
+                    };
+                    match kind {
+                        AllreduceKind::Ring => ring_allreduce(ep.as_mut(), &ctx),
+                        AllreduceKind::Tree => tree_allreduce(ep.as_mut(), &ctx),
+                    }
+                    .unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Every rank of both collectives ends with the serial fold's exact bits,
+/// for 1–8 ranks and both algorithm families, and the measured round
+/// count matches the protocol's arithmetic.
+pub fn ring_and_tree_match_serial_fold_on_every_rank(make: GroupCtor) {
+    for (name, algo) in families() {
+        let len = algo.model_len();
+        let mut rng = Rng::seed_from_u64(11);
+        let model = algo.init_model().unwrap();
+        for k in 1..=8usize {
+            let updates = random_updates(&mut rng, k, len);
+            let mut serial = model.clone();
+            algo.merge(&mut serial, &updates, k);
+            for kind in [AllreduceKind::Ring, AllreduceKind::Tree] {
+                let runs = run_collective(make, &algo, &model, &updates, kind);
+                let expected_rounds = match kind {
+                    _ if k == 1 => 0,
+                    AllreduceKind::Ring => 2 * (k - 1),
+                    AllreduceKind::Tree => 2 * k.ilog2() as usize,
+                };
+                for (rank, run) in runs.iter().enumerate() {
+                    assert_eq!(
+                        run.model, serial,
+                        "{name}: {kind:?} k={k} rank={rank} diverged from serial fold"
+                    );
+                    assert_eq!(run.stats.rounds, expected_rounds, "{name} {kind:?} k={k}");
+                }
+                let wire: usize = runs.iter().map(|r| r.stats.bytes_sent).sum();
+                if k == 1 {
+                    assert_eq!(wire, 0, "a collective of one must not touch the wire");
+                } else {
+                    assert!(wire > 0, "{name}: {kind:?} k={k} moved no bytes");
+                }
+            }
+        }
+    }
+}
+
+/// A model smaller than the ring: tail segments are empty, their owners
+/// ship zero-length slices, and the result is still exact on every rank.
+pub fn model_smaller_than_ring_still_allreduces_exactly(make: GroupCtor) {
+    let algo: Arc<dyn Algorithm> =
+        Arc::new(CocoaAlgo::new(CocoaConfig::default(), Backend::native_cocoa(), 100, 3));
+    let model = vec![1.0f32, -2.0, 0.5];
+    let mut rng = Rng::seed_from_u64(23);
+    for k in [4usize, 8] {
+        let updates = random_updates(&mut rng, k, 3);
+        let mut serial = model.clone();
+        algo.merge(&mut serial, &updates, k);
+        for kind in [AllreduceKind::Ring, AllreduceKind::Tree] {
+            let runs = run_collective(make, &algo, &model, &updates, kind);
+            for (rank, run) in runs.iter().enumerate() {
+                assert_eq!(run.model, serial, "{kind:?} k={k} rank={rank}");
+            }
+        }
+    }
+}
+
+/// Messages from a membership regime older than the collective's launch
+/// snapshot (or from a sender outside the rank order) are dropped, not
+/// folded: a stray pre-resize segment must bump `stale_dropped` and leave
+/// the merged bits untouched.
+pub fn stale_cross_regime_traffic_is_dropped_not_folded(make: GroupCtor) {
+    let algo: Arc<dyn Algorithm> =
+        Arc::new(CocoaAlgo::new(CocoaConfig::default(), Backend::native_cocoa(), 100, 64));
+    let model = vec![0.5f32; 64];
+    let mut rng = Rng::seed_from_u64(31);
+    let updates = random_updates(&mut rng, 2, 64);
+    let mut serial = model.clone();
+    algo.merge(&mut serial, &updates, 2);
+
+    for _attempt in 0..ATTEMPTS {
+        let group = make();
+        let order = [1u32, 2u32];
+        let eps: Vec<_> = order.iter().map(|&n| group.join(n)).collect();
+        {
+            // A member from a doomed regime sends collective-shaped
+            // traffic with plausible tags, then leaves (bumping the epoch
+            // past its stamp). Without the staleness rule this would be
+            // folded as rank 1's segment-0 contribution.
+            let mut stray = group.join(9);
+            stray
+                .send(
+                    1,
+                    Payload::UpdateSlice {
+                        iter: 42,
+                        seg: 0,
+                        part: UpdatePart { task_idx: 1, samples: 7, delta: vec![9.0; 32] },
+                    },
+                )
+                .unwrap();
+        }
+        // Let the stray frame land before the collective snapshots its
+        // epoch (a real socket delivers through a reader thread).
+        std::thread::sleep(SETTLE);
+        let epoch = group.membership().epoch;
+        let runs: Vec<AllreduceRun> = std::thread::scope(|s| {
+            let handles: Vec<_> = eps
+                .into_iter()
+                .enumerate()
+                .map(|(rank, mut ep)| {
+                    let (algo, model, updates, order) = (&algo, &model, &updates, &order);
+                    s.spawn(move || {
+                        let parts = vec![(rank, updates[rank].clone())];
+                        let ctx = CollectiveCtx {
+                            algo: algo.as_ref(),
+                            model,
+                            parts: &parts,
+                            k_tasks: 2,
+                            order,
+                            epoch,
+                            iter: 42,
+                        };
+                        ring_allreduce(ep.as_mut(), &ctx).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // Bit-identity is unconditional: whether the sieve saw the stray
+        // slice or it was still in flight, the fold must be exact.
+        for run in &runs {
+            assert_eq!(run.model, serial, "stale traffic leaked into the fold");
+        }
+        if runs[0].stats.stale_dropped == 1 {
+            return;
+        }
+    }
+    panic!("the stray slice was never observed by the staleness sieve in {ATTEMPTS} attempts");
+}
+
+/// Pool-level mid-collective revoke: `DrainChunks` queues behind the
+/// `Allreduce` command (FIFO per worker), so the revoked rank completes
+/// the collective its peers are blocked on, its reply is stashed, and
+/// `collect_allreduce` still assembles the serial fold's exact bits.
+pub fn mid_collective_revoke_preserves_merge(transport: TransportKind) {
+    for (name, algo) in families() {
+        let len = algo.model_len();
+        let mut rng = Rng::seed_from_u64(5);
+        let model = Arc::new(algo.init_model().unwrap());
+        for kind in [AllreduceKind::Ring, AllreduceKind::Tree] {
+            let updates = random_updates(&mut rng, 4, len);
+            let mut serial = (*model).clone();
+            algo.merge(&mut serial, &updates, 4);
+
+            let mut pool = WorkerPool::new_with_transport(Arc::clone(&algo), transport);
+            let order: Vec<u32> = (0..4).collect();
+            for &n in &order {
+                pool.spawn_worker(n, SharedStore::new());
+            }
+            let pending = pool
+                .begin_allreduce(&order, &model, updates, 4, kind, 0)
+                .unwrap();
+            // Revoke rank 2 while the collective is in flight.
+            let drained = pool.shutdown_worker(2).unwrap();
+            assert!(drained.is_empty());
+            assert!(!pool.has_worker(2));
+
+            let out = pool.collect_allreduce(pending).unwrap();
+            assert_eq!(out.model, serial, "{name}: {kind:?} mid-collective revoke diverged");
+            assert!(out.rounds > 0 && out.bytes > 0, "{name}: {kind:?} stats lost in stash");
+        }
+    }
+}
+
+/// The pool's two merge fan-outs agree with each other and with the
+/// serial fold: coordinator sharded reduce, ring, and tree all produce
+/// the same bits from the same inputs.
+pub fn pool_allreduce_matches_pool_reduce_bit_for_bit(transport: TransportKind) {
+    for (name, algo) in families() {
+        let len = algo.model_len();
+        let mut rng = Rng::seed_from_u64(77);
+        let model = Arc::new(algo.init_model().unwrap());
+        let updates = random_updates(&mut rng, 4, len);
+        let mut serial = (*model).clone();
+        algo.merge(&mut serial, &updates, 4);
+
+        let mut pool = WorkerPool::new_with_transport(Arc::clone(&algo), transport);
+        let order: Vec<u32> = (0..4).collect();
+        for &n in &order {
+            pool.spawn_worker(n, SharedStore::new());
+        }
+        let (reduced, _) = pool
+            .reduce_model(&model, Arc::new(updates.clone()), 4, ReduceOptions::default())
+            .unwrap();
+        assert_eq!(reduced, serial, "{name}: coordinator reduce diverged");
+        for kind in [AllreduceKind::Ring, AllreduceKind::Tree] {
+            let out = pool
+                .allreduce_model(&order, &model, updates.clone(), 4, kind, 1)
+                .unwrap();
+            assert_eq!(out.model, serial, "{name}: {kind:?} collective diverged");
+        }
+    }
+}
+
+/// A single-rank order never touches the transport: the pool folds
+/// inline, reporting zero rounds and zero bytes (mirroring
+/// `reduce_model`'s small-pool path).
+pub fn single_rank_pool_allreduce_folds_inline(transport: TransportKind) {
+    let algo: Arc<dyn Algorithm> =
+        Arc::new(CocoaAlgo::new(CocoaConfig::default(), Backend::native_cocoa(), 100, 17));
+    let model = Arc::new(vec![0.25f32; 17]);
+    let mut rng = Rng::seed_from_u64(3);
+    let updates = random_updates(&mut rng, 1, 17);
+    let mut serial = (*model).clone();
+    algo.merge(&mut serial, &updates, 1);
+
+    let mut pool = WorkerPool::new_with_transport(Arc::clone(&algo), transport);
+    pool.spawn_worker(0, SharedStore::new());
+    for kind in [AllreduceKind::Ring, AllreduceKind::Tree] {
+        let out = pool
+            .allreduce_model(&[0], &model, updates.clone(), 1, kind, 0)
+            .unwrap();
+        assert_eq!(out.model, serial, "{kind:?}");
+        assert_eq!((out.rounds, out.bytes), (0, 0), "{kind:?} must not touch the wire");
+        assert_eq!(out.frame_bytes, 0, "{kind:?} inline fold must add no framing");
+    }
+}
+
+/// The rejoin protocol: a node outside the collective asks *peers* (not
+/// the coordinator) for the latest complete model. Requests queued before
+/// the collective are served at entry; the replies carry the pre-merge
+/// snapshot every rank holds.
+pub fn rejoining_node_fetches_state_from_any_peer(make: GroupCtor) {
+    let algo: Arc<dyn Algorithm> =
+        Arc::new(CocoaAlgo::new(CocoaConfig::default(), Backend::native_cocoa(), 100, 128));
+    let model: ModelVec = (0..128).map(|i| i as f32 * 0.01).collect();
+    let mut rng = Rng::seed_from_u64(41);
+    let updates = random_updates(&mut rng, 3, 128);
+
+    for _attempt in 0..ATTEMPTS {
+        let group = make();
+        let order = [4u32, 5, 6];
+        let eps: Vec<_> = order.iter().map(|&n| group.join(n)).collect();
+        let mut rejoiner = group.join(99);
+        // Ask two *different* peers before the collective starts: any
+        // member must be able to answer — no coordinator bottleneck.
+        rejoiner.send(4, Payload::StateRequest).unwrap();
+        rejoiner.send(6, Payload::StateRequest).unwrap();
+        // Let the requests land in the peers' queues before the
+        // collective launches (serve-at-entry is what is under test).
+        std::thread::sleep(SETTLE);
+        let epoch = group.membership().epoch;
+        // Threads hand their endpoints back so the peers stay group
+        // members while the rejoiner fetches (a departed peer cannot be
+        // sent to).
+        let (runs, _live_eps): (Vec<AllreduceRun>, Vec<_>) = std::thread::scope(|s| {
+            let handles: Vec<_> = eps
+                .into_iter()
+                .enumerate()
+                .map(|(rank, mut ep)| {
+                    let (algo, model, updates, order) = (&algo, &model, &updates, &order);
+                    s.spawn(move || {
+                        let parts = vec![(rank, updates[rank].clone())];
+                        let ctx = CollectiveCtx {
+                            algo: algo.as_ref(),
+                            model,
+                            parts: &parts,
+                            k_tasks: 3,
+                            order,
+                            epoch,
+                            iter: 7,
+                        };
+                        let run = ring_allreduce(ep.as_mut(), &ctx).unwrap();
+                        (run, ep)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).unzip()
+        });
+        let served: usize = runs.iter().map(|r| r.stats.state_served).sum();
+        if served != 2 {
+            // A request was still crossing the socket when its peer
+            // entered (and left) the collective; try a fresh group.
+            continue;
+        }
+        // `fetch_state` consumes the first queued reply; the second is
+        // read raw to prove both peers sent the same pre-merge snapshot.
+        let state = fetch_state(rejoiner.as_mut(), 4, Duration::from_secs(1))
+            .expect("reply was already queued");
+        assert_eq!(state, model, "rejoin state must be the pre-merge model");
+        let second = fetch_state(rejoiner.as_mut(), 6, Duration::from_secs(1))
+            .expect("second peer's reply was also queued");
+        assert_eq!(second, model);
+        return;
+    }
+    panic!("both rejoin requests were never served pre-entry in {ATTEMPTS} attempts");
+}
