@@ -7,10 +7,12 @@ use std::time::Duration;
 
 use chicle::algos::nn::linear::{fused_linear_fwd, Act};
 use chicle::algos::nn::NativeModel;
-use chicle::algos::svm::{scd_pass_dense, scd_pass_dense_scalar, scd_pass_sparse};
-use chicle::data::{synth, FeatureMatrix};
+use chicle::algos::svm::{
+    scd_pass_dense, scd_pass_dense_scalar, scd_pass_sparse, scd_pass_sparse_scalar,
+};
+use chicle::data::{synth, FeatureMatrix, SparseVec};
 use chicle::util::bench::Bencher;
-use chicle::util::{kernels, Rng};
+use chicle::util::{kernels, Rng, Workspace};
 
 fn main() {
     let mut b = Bencher::new(Duration::from_secs(2));
@@ -69,6 +71,27 @@ fn main() {
         })
         .p50;
 
+    // Packed-B matmul at a width past BLOCK_N (N = 1024 > 512), where
+    // the packed panels keep every axpy row contiguous. Output and pack
+    // scratch are hoisted so the pair measures pure matmul time.
+    let (pm, pk, pn) = (64usize, 256usize, 1024usize);
+    let pa: Vec<f32> = (0..pm * pk).map(|_| rng.normal_f32()).collect();
+    let pb: Vec<f32> = (0..pk * pn).map(|_| rng.normal_f32()).collect();
+    let mut pc = vec![0.0f32; pm * pn];
+    let mut pack = vec![0.0f32; kernels::packed_b_len(pk, pn)];
+    let mm_scalar = b
+        .bench("nn/matmul_packed_scalar", || {
+            kernels::matmul_packed_scalar(&pa, &pb, &mut pc, pm, pk, pn, &mut pack);
+            pc[0]
+        })
+        .p50;
+    let mm_simd = b
+        .bench("nn/matmul_packed_simd", || {
+            kernels::matmul_packed(&pa, &pb, &mut pc, pm, pk, pn, &mut pack);
+            pc[0]
+        })
+        .p50;
+
     // SCD dense pass at a SIMD-friendly width (dim 256; the 28-wide row
     // above stays as the paper-shaped workload).
     let (s2, dim2) = (2048usize, 256usize);
@@ -97,6 +120,51 @@ fn main() {
         })
         .p50;
 
+    // Sparse SCD pass with wide rows (nnz 256 on dim 4096): the
+    // gather-dot and scatter-axpy dominate, isolating the sparse kernel
+    // speedup. State buffers are hoisted and reset by fill so both
+    // sides measure pure pass time.
+    let (sn, snnz, ssdim) = (4096usize, 256usize, 4096usize);
+    let srows: Vec<SparseVec> = (0..sn)
+        .map(|_| {
+            let mut idx = 0u32;
+            SparseVec::new(
+                (0..snnz)
+                    .map(|_| {
+                        idx += 1 + rng.below(ssdim / snnz - 1) as u32;
+                        (idx, rng.normal_f32())
+                    })
+                    .collect(),
+            )
+        })
+        .collect();
+    let sy: Vec<f32> = (0..sn).map(|_| if rng.bool(0.5) { 1.0 } else { -1.0 }).collect();
+    let sorder: Vec<usize> = (0..sn).collect();
+    let slam_n = 0.01 * sn as f32;
+    let mut salpha = vec![0.0f32; sn];
+    let mut sv = vec![0.0f32; ssdim];
+    let mut sdv = vec![0.0f32; ssdim];
+    let sp_scalar = b
+        .bench("scd/sparse_pass_scalar", || {
+            salpha.fill(0.0);
+            sv.fill(0.0);
+            sdv.fill(0.0);
+            scd_pass_sparse_scalar(
+                &srows, &sy, &sorder, &mut salpha, &mut sv, &mut sdv, slam_n, 16.0,
+            );
+            sv[0]
+        })
+        .p50;
+    let sp_simd = b
+        .bench("scd/sparse_pass_simd", || {
+            salpha.fill(0.0);
+            sv.fill(0.0);
+            sdv.fill(0.0);
+            scd_pass_sparse(&srows, &sy, &sorder, &mut salpha, &mut sv, &mut sdv, slam_n, 16.0);
+            sv[0]
+        })
+        .p50;
+
     // --- NN grad steps (lSGD inner loop) ---
     let mlp = NativeModel::mlp_default();
     let mlp_params = mlp.init(1);
@@ -110,6 +178,21 @@ fn main() {
     let cy: Vec<i32> = (0..8).map(|_| rng.below(10) as i32).collect();
     let mut b_slow = Bencher::new(Duration::from_secs(3)).with_iters(5, 1_000);
     b_slow.bench("cnn_grad/L8", || cnn.grad(&cnn_params, &cx, &cy).1);
+
+    // Fresh-allocation vs warm-workspace CNN step: identical bits (the
+    // workspace contract), the pair measures what pooling the ~5 MB of
+    // per-step intermediates is worth.
+    let cnn_fresh = b_slow
+        .bench("nn/cnn_step_fresh", || cnn.grad(&cnn_params, &cx, &cy).1)
+        .p50;
+    let mut cnn_ws_pool = Workspace::new();
+    let cnn_ws = b_slow
+        .bench("nn/cnn_step_workspace", || {
+            let (g, loss, ..) = cnn.grad_ws(&cnn_params, &cx, &cy, &mut cnn_ws_pool);
+            cnn_ws_pool.put(g);
+            loss
+        })
+        .p50;
 
     // Eval paths.
     let ex: Vec<f32> = (0..256 * 784).map(|_| rng.normal_f32()).collect();
@@ -132,5 +215,19 @@ fn main() {
             scd_simd * 3 <= scd_scalar * 2,
             "scd dense-pass SIMD p50 {scd_simd:?} not >=1.5x faster than scalar {scd_scalar:?}"
         );
+        assert!(
+            mm_simd * 3 <= mm_scalar * 2,
+            "packed matmul SIMD p50 {mm_simd:?} not >=1.5x faster than scalar {mm_scalar:?}"
+        );
+        assert!(
+            sp_simd * 3 <= sp_scalar * 2,
+            "scd sparse-pass SIMD p50 {sp_simd:?} not >=1.5x faster than scalar {sp_scalar:?}"
+        );
     }
+    // The workspace CNN step skips ~5 MB of allocation + zeroing per
+    // call; it must beat the fresh-allocation step regardless of SIMD.
+    assert!(
+        cnn_ws < cnn_fresh,
+        "workspace CNN step p50 {cnn_ws:?} not faster than fresh-alloc step {cnn_fresh:?}"
+    );
 }

@@ -13,6 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::chunks::{Chunk, Samples};
 use crate::runtime::{HloService, HostTensor, Manifest};
+use crate::util::Workspace;
 
 use super::nn::NativeModel;
 use super::svm;
@@ -66,7 +67,12 @@ impl Backend {
     }
 
     /// HLO backend for CoCoA over dense (S, F) chunk blocks.
-    pub fn hlo_cocoa(service: HloService, manifest: &Manifest, s: usize, f: usize) -> Result<Backend> {
+    pub fn hlo_cocoa(
+        service: HloService,
+        manifest: &Manifest,
+        s: usize,
+        f: usize,
+    ) -> Result<Backend> {
         let scd_artifact = format!("scd_chunk_s{s}_f{f}");
         let eval_artifact = format!("linear_eval_s{s}_f{f}");
         manifest.artifact(&scd_artifact)?;
@@ -119,6 +125,7 @@ impl Backend {
     ///
     /// Mutates the chunk's per-sample dual state in place, adds the model
     /// delta into `v` and returns it. `order` indexes rows of the chunk.
+    /// Allocating wrapper over [`Backend::scd_chunk_ws`].
     pub fn scd_chunk(
         &self,
         chunk: &mut Chunk,
@@ -127,9 +134,26 @@ impl Backend {
         lam_n: f32,
         sigma: f32,
     ) -> Result<Vec<f32>> {
+        self.scd_chunk_ws(chunk, order, v, lam_n, sigma, &mut Workspace::new())
+    }
+
+    /// Workspace-backed [`Backend::scd_chunk`]: on the native path the
+    /// returned `dv` buffer is checked out of `ws` (callers `put` it back
+    /// once folded into their delta, making steady-state passes
+    /// allocation-free). The HLO path is transfer-dominated and keeps its
+    /// allocating block loop.
+    pub fn scd_chunk_ws(
+        &self,
+        chunk: &mut Chunk,
+        order: &[usize],
+        v: &mut [f32],
+        lam_n: f32,
+        sigma: f32,
+        ws: &mut Workspace,
+    ) -> Result<Vec<f32>> {
         match self {
             Backend::Native { .. } => {
-                let mut dv = vec![0.0f32; v.len()];
+                let mut dv = ws.take_zeroed(v.len());
                 // Split borrow: read-only sample data, mutable α state.
                 let (samples, state) = chunk.samples_and_state_mut();
                 match samples {
@@ -301,11 +325,26 @@ impl Backend {
     }
 
     /// Loss + grads on one mini-batch: returns (grads, loss, correct).
+    /// Allocating wrapper over [`Backend::nn_grad_ws`].
     pub fn nn_grad(&self, params: &[f32], x: &[f32], y: &[i32]) -> Result<(Vec<f32>, f64, f64)> {
+        self.nn_grad_ws(params, x, y, &mut Workspace::new())
+    }
+
+    /// Workspace-backed [`Backend::nn_grad`]: on the native path all
+    /// intermediates and the returned gradient vector come from `ws`
+    /// (callers `put` the grads back once consumed). The HLO path
+    /// round-trips through PJRT and keeps its allocating transfers.
+    pub fn nn_grad_ws(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        ws: &mut Workspace,
+    ) -> Result<(Vec<f32>, f64, f64)> {
         match self {
             Backend::Native { nn } => {
                 let model = nn.as_ref().context("no NN model")?;
-                let (g, loss, correct, _) = model.grad(params, x, y);
+                let (g, loss, correct, _) = model.grad_ws(params, x, y, ws);
                 Ok((g, loss, correct))
             }
             Backend::Hlo { service, nn, .. } => {
@@ -354,7 +393,13 @@ impl Backend {
 
     /// Eval on a labelled set: returns (loss_mean, correct, n). Handles
     /// batching/padding internally.
-    pub fn nn_eval(&self, params: &[f32], x: &[f32], y: &[i32], dim: usize) -> Result<(f64, f64, f64)> {
+    pub fn nn_eval(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        dim: usize,
+    ) -> Result<(f64, f64, f64)> {
         match self {
             Backend::Native { nn } => {
                 let model = nn.as_ref().context("no NN model")?;

@@ -67,8 +67,30 @@ impl Algorithm for CocoaAlgo {
         task_seed: u64,
         budget_samples: Option<usize>,
     ) -> Result<LocalUpdate> {
+        self.task_iterate_ws(
+            chunks,
+            model,
+            k_tasks,
+            task_seed,
+            budget_samples,
+            &mut crate::util::Workspace::new(),
+        )
+    }
+
+    fn task_iterate_ws(
+        &self,
+        chunks: &mut [Chunk],
+        model: &ModelVec,
+        k_tasks: usize,
+        task_seed: u64,
+        budget_samples: Option<usize>,
+        ws: &mut crate::util::Workspace,
+    ) -> Result<LocalUpdate> {
         let mut rng = Rng::seed_from_u64(task_seed);
-        let mut v = model.clone();
+        let mut v = ws.take_copy(model);
+        // The delta is handed off inside LocalUpdate, so it is the one
+        // buffer that cannot come from the workspace: exactly one
+        // allocation per steady-state iteration.
         let mut delta = vec![0.0f32; self.dim];
         let sigma = k_tasks.max(1) as f32;
         let lam_n = self.lam_n();
@@ -83,7 +105,9 @@ impl Algorithm for CocoaAlgo {
         // permutation (block-SCD at chunk granularity — the solver still
         // sees every local sample each iteration, matching the paper's
         // "full random access to all task-local data chunks").
-        let mut chunk_order: Vec<usize> = (0..chunks.len()).collect();
+        // take_usize_seq + shuffle makes the same RNG draws as the old
+        // Rng::permutation, so trajectories are bit-identical.
+        let mut chunk_order = ws.take_usize_seq(chunks.len());
         rng.shuffle(&mut chunk_order);
         for &ci in &chunk_order {
             if remaining == 0 {
@@ -92,13 +116,18 @@ impl Algorithm for CocoaAlgo {
             let chunk = &mut chunks[ci];
             let n = chunk.n_samples();
             let take = n.min(remaining);
-            let mut order = rng.permutation(n);
+            let mut order = ws.take_usize_seq(n);
+            rng.shuffle(&mut order);
             order.truncate(take);
-            let dv = self.backend.scd_chunk(chunk, &order, &mut v, lam_n, sigma)?;
+            let dv = self.backend.scd_chunk_ws(chunk, &order, &mut v, lam_n, sigma, ws)?;
             kernels::acc(&mut delta, &dv);
+            ws.put(dv);
+            ws.put_usize(order);
             remaining -= take;
             processed += take;
         }
+        ws.put_usize(chunk_order);
+        ws.put(v);
         Ok(LocalUpdate { delta, samples: processed, loss_sum: 0.0 })
     }
 

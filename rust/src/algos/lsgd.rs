@@ -96,18 +96,24 @@ impl LsgdAlgo {
     }
 
     /// Assemble one (x, y) mini-batch of `l` samples from local chunks.
-    fn sample_batch_classif(
+    /// The batch buffers come from `ws` (empty but capacity-retaining),
+    /// so warm iterations fill them without allocating; callers `put`
+    /// them back after the grad step.
+    fn sample_batch_classif_ws(
         &self,
         chunks: &[Chunk],
         rng: &mut Rng,
         l: usize,
+        ws: &mut crate::util::Workspace,
     ) -> Result<(Vec<f32>, Vec<i32>)> {
         let total: usize = chunks.iter().map(|c| c.n_samples()).sum();
         if total == 0 {
             bail!("task has no local samples");
         }
-        let mut x = Vec::with_capacity(l * self.input_dim);
-        let mut y = Vec::with_capacity(l);
+        let mut x = ws.take_cleared();
+        let mut y = ws.take_i32_cleared();
+        x.reserve(l * self.input_dim);
+        y.reserve(l);
         for _ in 0..l {
             let mut k = rng.below(total);
             for chunk in chunks {
@@ -176,6 +182,25 @@ impl Algorithm for LsgdAlgo {
         task_seed: u64,
         budget_samples: Option<usize>,
     ) -> Result<LocalUpdate> {
+        self.task_iterate_ws(
+            chunks,
+            model,
+            k_tasks,
+            task_seed,
+            budget_samples,
+            &mut crate::util::Workspace::new(),
+        )
+    }
+
+    fn task_iterate_ws(
+        &self,
+        chunks: &mut [Chunk],
+        model: &ModelVec,
+        k_tasks: usize,
+        task_seed: u64,
+        budget_samples: Option<usize>,
+        ws: &mut crate::util::Workspace,
+    ) -> Result<LocalUpdate> {
         let mut rng = Rng::seed_from_u64(task_seed);
         let lr = (if self.cfg.scale_lr {
             self.cfg.lr * (k_tasks.max(1) as f64).sqrt()
@@ -189,31 +214,42 @@ impl Algorithm for LsgdAlgo {
             None => self.cfg.h,
         };
 
-        let mut params = model.clone();
-        let mut momentum = vec![0.0f32; self.param_count];
+        let mut params = ws.take_copy(model);
+        let mut momentum = ws.take_zeroed(self.param_count);
         let mut loss_sum = 0.0f64;
         for _ in 0..h {
-            let (grads, loss) = if self.is_lm {
+            let loss = if self.is_lm {
+                // LM workloads are HLO-only (transfer-dominated); keep the
+                // allocating path.
                 let tokens = self.sample_batch_tokens(chunks, &mut rng, l)?;
                 let (g, loss) = self.backend.lm_grad(&params, &tokens, l)?;
-                (g, loss)
+                kernels::scale_add(&mut momentum, mu, &g);
+                loss
             } else {
-                let (x, y) = self.sample_batch_classif(chunks, &mut rng, l)?;
-                let (g, loss, _correct) = self.backend.nn_grad(&params, &x, &y)?;
-                (g, loss)
+                let (x, y) = self.sample_batch_classif_ws(chunks, &mut rng, l, ws)?;
+                let (g, loss, _correct) = self.backend.nn_grad_ws(&params, &x, &y, ws)?;
+                ws.put(x);
+                ws.put_i32(y);
+                kernels::scale_add(&mut momentum, mu, &g);
+                ws.put(g);
+                loss
             };
             loss_sum += loss;
-            // m ← µ·m + g, then p ← p + (−lr)·m. Elementwise kernels;
-            // (−lr)·m is the exact IEEE negation of lr·m, so this is
-            // bit-identical to the fused `p -= lr * m` loop it replaces.
-            kernels::scale_add(&mut momentum, mu, &grads);
+            // m ← µ·m + g (folded above), then p ← p + (−lr)·m.
+            // Elementwise kernels; (−lr)·m is the exact IEEE negation of
+            // lr·m, so this is bit-identical to the fused `p -= lr * m`
+            // loop it replaces.
             kernels::axpy(&mut params, -lr, &momentum);
         }
+        // The delta is handed off inside LocalUpdate: the one allocation
+        // per steady-state iteration.
         let delta: Vec<f32> = params
             .iter()
             .zip(model)
             .map(|(p, m)| p - m)
             .collect();
+        ws.put(momentum);
+        ws.put(params);
         // Report the *mean* local-step loss (comparable across H values).
         Ok(LocalUpdate { delta, samples: l * h, loss_sum: loss_sum / h as f64 })
     }

@@ -24,6 +24,7 @@ pub use lsgd::LsgdAlgo;
 
 use crate::chunks::Chunk;
 use crate::metrics::Metric;
+use crate::util::Workspace;
 use crate::Result;
 
 /// The shared model vector exchanged between driver and tasks each
@@ -64,6 +65,27 @@ pub trait Algorithm: Send + Sync {
         task_seed: u64,
         budget_samples: Option<usize>,
     ) -> Result<LocalUpdate>;
+
+    /// Workspace-backed variant of [`Algorithm::task_iterate`]: identical
+    /// math and RNG draws, but scratch buffers (local model copies,
+    /// permutations, gradients, per-chunk deltas) are checked out of the
+    /// caller's per-task [`Workspace`] so steady-state iterations stop
+    /// allocating. The default implementation ignores the workspace and
+    /// delegates, so third-party / test algorithms keep working unchanged;
+    /// the built-in algorithms override it. Workspace reuse is
+    /// bit-invisible: `tests/kernel_parity.rs` asserts a dirty workspace
+    /// yields the same bits as a fresh one.
+    fn task_iterate_ws(
+        &self,
+        chunks: &mut [Chunk],
+        model: &ModelVec,
+        k_tasks: usize,
+        task_seed: u64,
+        budget_samples: Option<usize>,
+        _ws: &mut Workspace,
+    ) -> Result<LocalUpdate> {
+        self.task_iterate(chunks, model, k_tasks, task_seed, budget_samples)
+    }
 
     /// Merge one contiguous model shard: fold the sub-range
     /// `offset .. offset + shard.len()` of every task update into `shard`

@@ -1,82 +1,152 @@
 //! 2-D convolution (SAME padding, stride 1, NHWC/HWIO) and 2×2 max-pool —
 //! the native mirror of the L2 CNN graph (`lax.conv_general_dilated` +
 //! `lax.reduce_window`), implemented via im2col + matmul.
+//!
+//! Every entry point comes in two forms: an `_into`/`_ws` variant that
+//! writes into caller buffers and checks scratch out of a
+//! [`Workspace`] (the allocation-free training hot path), and an
+//! allocating wrapper with the original signature. The wrappers run the
+//! identical code against a throwaway workspace, so both forms are
+//! bit-identical by construction.
+//!
+//! The im2col/col2im inner loops are span-merged: for stride-1 SAME
+//! padding, the valid `kx` range of a fixed `(img, oy, ox, ky)` cell is
+//! contiguous in *both* the image (consecutive `ix`) and the column
+//! matrix (consecutive `kx`), so the per-tap bounds checks collapse
+//! into one `copy_from_slice` (forward) or one [`kernels::acc`]
+//! (backward) over `(kx_hi − kx_lo) · c` floats. Each destination
+//! element still receives exactly the contributions it did before, in
+//! the same outer-loop order — bit-identical, just without the
+//! per-element branch.
 
-use super::linear::matmul;
 use crate::util::kernels;
+use crate::util::workspace::Workspace;
 
-/// im2col for SAME padding, stride 1: output (n·h·w, ks·ks·c).
-pub fn im2col(x: &[f32], n: usize, h: usize, w: usize, c: usize, ks: usize) -> Vec<f32> {
+/// im2col for SAME padding, stride 1, into a caller buffer of shape
+/// (n·h·w, ks·ks·c). `out` is fully overwritten (padding taps zeroed).
+pub fn im2col_into(x: &[f32], n: usize, h: usize, w: usize, c: usize, ks: usize, out: &mut [f32]) {
     let pad = ks / 2;
     let cols = ks * ks * c;
-    let mut out = vec![0.0f32; n * h * w * cols];
+    assert_eq!(x.len(), n * h * w * c);
+    assert_eq!(out.len(), n * h * w * cols);
+    out.fill(0.0);
     for img in 0..n {
         let base = img * h * w * c;
         for oy in 0..h {
             for ox in 0..w {
                 let row = ((img * h + oy) * w + ox) * cols;
+                // Valid kx span: 0 ≤ ox + kx − pad < w.
+                let kx_lo = pad.saturating_sub(ox);
+                let kx_hi = ks.min(w + pad - ox);
+                if kx_lo >= kx_hi {
+                    continue;
+                }
+                let span = (kx_hi - kx_lo) * c;
+                let ix0 = ox + kx_lo - pad;
                 for ky in 0..ks {
                     let iy = oy as isize + ky as isize - pad as isize;
                     if iy < 0 || iy >= h as isize {
                         continue;
                     }
-                    for kx in 0..ks {
-                        let ix = ox as isize + kx as isize - pad as isize;
-                        if ix < 0 || ix >= w as isize {
-                            continue;
-                        }
-                        let src = base + ((iy as usize * w) + ix as usize) * c;
-                        let dst = row + (ky * ks + kx) * c;
-                        out[dst..dst + c].copy_from_slice(&x[src..src + c]);
-                    }
+                    let src = base + (iy as usize * w + ix0) * c;
+                    let dst = row + (ky * ks + kx_lo) * c;
+                    out[dst..dst + span].copy_from_slice(&x[src..src + span]);
                 }
             }
         }
     }
+}
+
+/// im2col for SAME padding, stride 1: output (n·h·w, ks·ks·c).
+pub fn im2col(x: &[f32], n: usize, h: usize, w: usize, c: usize, ks: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * h * w * ks * ks * c];
+    im2col_into(x, n, h, w, c, ks, &mut out);
     out
 }
 
-/// Scatter-add of an im2col-shaped gradient back to image layout
-/// (the adjoint of [`im2col`]).
-pub fn col2im(
+/// Scatter-add of an im2col-shaped gradient back to image layout (the
+/// adjoint of [`im2col`]), into a caller buffer. `out` is zero-seeded
+/// then accumulated, so a dirty buffer is fine.
+pub fn col2im_into(
     dcol: &[f32],
     n: usize,
     h: usize,
     w: usize,
     c: usize,
     ks: usize,
-) -> Vec<f32> {
+    out: &mut [f32],
+) {
     let pad = ks / 2;
     let cols = ks * ks * c;
-    let mut out = vec![0.0f32; n * h * w * c];
+    assert_eq!(dcol.len(), n * h * w * cols);
+    assert_eq!(out.len(), n * h * w * c);
+    out.fill(0.0);
     for img in 0..n {
         let base = img * h * w * c;
         for oy in 0..h {
             for ox in 0..w {
                 let row = ((img * h + oy) * w + ox) * cols;
+                let kx_lo = pad.saturating_sub(ox);
+                let kx_hi = ks.min(w + pad - ox);
+                if kx_lo >= kx_hi {
+                    continue;
+                }
+                let span = (kx_hi - kx_lo) * c;
+                let ix0 = ox + kx_lo - pad;
                 for ky in 0..ks {
                     let iy = oy as isize + ky as isize - pad as isize;
                     if iy < 0 || iy >= h as isize {
                         continue;
                     }
-                    for kx in 0..ks {
-                        let ix = ox as isize + kx as isize - pad as isize;
-                        if ix < 0 || ix >= w as isize {
-                            continue;
-                        }
-                        let dst = base + ((iy as usize * w) + ix as usize) * c;
-                        let src = row + (ky * ks + kx) * c;
-                        kernels::acc(&mut out[dst..dst + c], &dcol[src..src + c]);
-                    }
+                    let dst = base + (iy as usize * w + ix0) * c;
+                    let src = row + (ky * ks + kx_lo) * c;
+                    kernels::acc(&mut out[dst..dst + span], &dcol[src..src + span]);
                 }
             }
         }
     }
+}
+
+/// Scatter-add of an im2col-shaped gradient back to image layout
+/// (the adjoint of [`im2col`]).
+pub fn col2im(dcol: &[f32], n: usize, h: usize, w: usize, c: usize, ks: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * h * w * c];
+    col2im_into(dcol, n, h, w, c, ks, &mut out);
     out
 }
 
 /// conv2d SAME/stride-1 forward: x (n,h,w,cin) · w (ks,ks,cin,cout) + b.
-/// Returns (y (n,h,w,cout), im2col matrix — kept as the backward residual).
+/// Returns (y (n,h,w,cout), im2col matrix — kept as the backward
+/// residual). Both buffers are checked out of `ws`; the caller `put`s
+/// them back once the backward pass has consumed them.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_fwd_ws(
+    x: &[f32],
+    wk: &[f32],
+    b: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    ks: usize,
+    cout: usize,
+    ws: &mut Workspace,
+) -> (Vec<f32>, Vec<f32>) {
+    let rows = n * h * w;
+    let inner = ks * ks * cin;
+    let mut col = ws.take(rows * inner);
+    im2col_into(x, n, h, w, cin, ks, &mut col);
+    let mut y = ws.take(rows * cout);
+    // wk is (ks,ks,cin,cout) = (inner, cout) row-major already.
+    kernels::matmul(&col, wk, &mut y, rows, inner, cout);
+    for row in y.chunks_exact_mut(cout) {
+        kernels::acc(row, b);
+    }
+    (y, col)
+}
+
+/// Allocating wrapper over [`conv2d_fwd_ws`].
+#[allow(clippy::too_many_arguments)]
 pub fn conv2d_fwd(
     x: &[f32],
     wk: &[f32],
@@ -88,19 +158,45 @@ pub fn conv2d_fwd(
     ks: usize,
     cout: usize,
 ) -> (Vec<f32>, Vec<f32>) {
-    let col = im2col(x, n, h, w, cin, ks);
-    let rows = n * h * w;
-    let inner = ks * ks * cin;
-    let mut y = vec![0.0f32; rows * cout];
-    // wk is (ks,ks,cin,cout) = (inner, cout) row-major already.
-    matmul(&col, wk, &mut y, rows, inner, cout);
-    for row in y.chunks_exact_mut(cout) {
-        kernels::acc(row, b);
-    }
-    (y, col)
+    conv2d_fwd_ws(x, wk, b, n, h, w, cin, ks, cout, &mut Workspace::new())
 }
 
-/// conv2d backward: returns (dx, dw, db).
+/// conv2d backward into caller buffers: `dx` (n·h·w·cin), `dw`
+/// (ks·ks·cin·cout), `db` (cout) are fully overwritten — `dw`/`db` may
+/// be disjoint slices of a flat gradient vector. Scratch from `ws`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bwd_into(
+    col: &[f32],
+    wk: &[f32],
+    dy: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    cin: usize,
+    ks: usize,
+    cout: usize,
+    dx: &mut [f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    ws: &mut Workspace,
+) {
+    let rows = n * h * w;
+    let inner = ks * ks * cin;
+    // dW(inner, cout) = colᵀ(rows, inner)ᵀ · dy(rows, cout)
+    kernels::matmul_at_b_ws(col, dy, dw, rows, inner, cout, ws);
+    // dcol(rows, inner) = dy · wkᵀ
+    let mut dcol = ws.take(rows * inner);
+    kernels::matmul_a_bt(dy, wk, &mut dcol, rows, cout, inner);
+    col2im_into(&dcol, n, h, w, cin, ks, dx);
+    ws.put(dcol);
+    db.fill(0.0);
+    for row in dy.chunks_exact(cout) {
+        kernels::acc(db, row);
+    }
+}
+
+/// conv2d backward: returns (dx, dw, db). Allocating wrapper over
+/// [`conv2d_bwd_into`].
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_bwd(
     col: &[f32],
@@ -113,67 +209,92 @@ pub fn conv2d_bwd(
     ks: usize,
     cout: usize,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let rows = n * h * w;
     let inner = ks * ks * cin;
-    // dW(inner, cout) = colᵀ(rows, inner)ᵀ · dy(rows, cout)
+    let mut dx = vec![0.0f32; n * h * w * cin];
     let mut dw = vec![0.0f32; inner * cout];
-    super::linear::matmul_at_b(col, dy, &mut dw, rows, inner, cout);
-    // dcol(rows, inner) = dy · wkᵀ
-    let mut dcol = vec![0.0f32; rows * inner];
-    super::linear::matmul_a_bt(dy, wk, &mut dcol, rows, cout, inner);
-    let dx = col2im(&dcol, n, h, w, cin, ks);
     let mut db = vec![0.0f32; cout];
-    for row in dy.chunks_exact(cout) {
-        kernels::acc(&mut db, row);
-    }
+    conv2d_bwd_into(
+        col,
+        wk,
+        dy,
+        n,
+        h,
+        w,
+        cin,
+        ks,
+        cout,
+        &mut dx,
+        &mut dw,
+        &mut db,
+        &mut Workspace::new(),
+    );
     (dx, dw, db)
 }
 
-/// 2×2 max-pool, stride 2, VALID. Returns (y (n,h/2,w/2,c), argmax indices
-/// into the input for the backward pass).
-pub fn maxpool2_fwd(
+/// 2×2 max-pool, stride 2, VALID, into caller buffers (`y` and `arg`
+/// fully overwritten). The channel loop runs through
+/// [`kernels::maxpool4`] — lane-per-channel, candidates in `(dy, dx)`
+/// order with strict-`>` first-max-wins tie-breaking, exactly the
+/// original scalar semantics.
+pub fn maxpool2_fwd_into(
     x: &[f32],
     n: usize,
     h: usize,
     w: usize,
     c: usize,
-) -> (Vec<f32>, Vec<u32>) {
+    y: &mut [f32],
+    arg: &mut [u32],
+) {
     let (oh, ow) = (h / 2, w / 2);
-    let mut y = vec![0.0f32; n * oh * ow * c];
-    let mut arg = vec![0u32; n * oh * ow * c];
+    assert_eq!(y.len(), n * oh * ow * c);
+    assert_eq!(arg.len(), n * oh * ow * c);
     for img in 0..n {
         for oy in 0..oh {
+            let iy = oy * 2;
             for ox in 0..ow {
-                for ch in 0..c {
-                    let mut best = f32::NEG_INFINITY;
-                    let mut best_idx = 0u32;
-                    for dy in 0..2 {
-                        for dx in 0..2 {
-                            let iy = oy * 2 + dy;
-                            let ix = ox * 2 + dx;
-                            let idx = ((img * h + iy) * w + ix) * c + ch;
-                            if x[idx] > best {
-                                best = x[idx];
-                                best_idx = idx as u32;
-                            }
-                        }
-                    }
-                    let o = ((img * oh + oy) * ow + ox) * c + ch;
-                    y[o] = best;
-                    arg[o] = best_idx;
-                }
+                let ix = ox * 2;
+                let r0 = ((img * h + iy) * w + ix) * c;
+                let r1 = r0 + c;
+                let r2 = ((img * h + iy + 1) * w + ix) * c;
+                let r3 = r2 + c;
+                let o = ((img * oh + oy) * ow + ox) * c;
+                kernels::maxpool4(
+                    &x[r0..r0 + c],
+                    &x[r1..r1 + c],
+                    &x[r2..r2 + c],
+                    &x[r3..r3 + c],
+                    [r0 as u32, r1 as u32, r2 as u32, r3 as u32],
+                    &mut y[o..o + c],
+                    &mut arg[o..o + c],
+                );
             }
         }
     }
+}
+
+/// 2×2 max-pool, stride 2, VALID. Returns (y (n,h/2,w/2,c), argmax
+/// indices into the input for the backward pass).
+pub fn maxpool2_fwd(x: &[f32], n: usize, h: usize, w: usize, c: usize) -> (Vec<f32>, Vec<u32>) {
+    let (oh, ow) = (h / 2, w / 2);
+    let mut y = vec![0.0f32; n * oh * ow * c];
+    let mut arg = vec![0u32; n * oh * ow * c];
+    maxpool2_fwd_into(x, n, h, w, c, &mut y, &mut arg);
     (y, arg)
+}
+
+/// max-pool backward into a caller buffer: `dx` is zero-seeded, then
+/// `dy` routes to the argmax inputs.
+pub fn maxpool2_bwd_into(dy: &[f32], arg: &[u32], dx: &mut [f32]) {
+    dx.fill(0.0);
+    for (g, &a) in dy.iter().zip(arg) {
+        dx[a as usize] += g;
+    }
 }
 
 /// max-pool backward: route dy to the argmax inputs.
 pub fn maxpool2_bwd(dy: &[f32], arg: &[u32], input_len: usize) -> Vec<f32> {
     let mut dx = vec![0.0f32; input_len];
-    for (g, &a) in dy.iter().zip(arg) {
-        dx[a as usize] += g;
-    }
+    maxpool2_bwd_into(dy, arg, &mut dx);
     dx
 }
 
@@ -192,6 +313,46 @@ mod tests {
         let x = randv(&mut r, 2 * 3 * 3 * 2);
         let col = im2col(&x, 2, 3, 3, 2, 1);
         assert_eq!(col, x); // 1x1 im2col is the identity
+    }
+
+    #[test]
+    fn im2col_span_merge_matches_per_tap_reference() {
+        // The naive per-(ky,kx) loop with isize bounds checks, as the
+        // pre-span-merge implementation wrote it.
+        fn im2col_naive(x: &[f32], n: usize, h: usize, w: usize, c: usize, ks: usize) -> Vec<f32> {
+            let pad = ks / 2;
+            let cols = ks * ks * c;
+            let mut out = vec![0.0f32; n * h * w * cols];
+            for img in 0..n {
+                let base = img * h * w * c;
+                for oy in 0..h {
+                    for ox in 0..w {
+                        let row = ((img * h + oy) * w + ox) * cols;
+                        for ky in 0..ks {
+                            let iy = oy as isize + ky as isize - pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..ks {
+                                let ix = ox as isize + kx as isize - pad as isize;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                let src = base + ((iy as usize * w) + ix as usize) * c;
+                                let dst = row + (ky * ks + kx) * c;
+                                out[dst..dst + c].copy_from_slice(&x[src..src + c]);
+                            }
+                        }
+                    }
+                }
+            }
+            out
+        }
+        let mut r = Rng::seed_from_u64(7);
+        for (n, h, w, c, ks) in [(1, 4, 4, 2, 3), (2, 5, 3, 1, 5), (1, 3, 3, 3, 1)] {
+            let x = randv(&mut r, n * h * w * c);
+            assert_eq!(im2col(&x, n, h, w, c, ks), im2col_naive(&x, n, h, w, c, ks));
+        }
     }
 
     #[test]
@@ -250,6 +411,57 @@ mod tests {
         assert_eq!(arg, vec![1]);
         let dx = maxpool2_bwd(&[2.0], &arg, 4);
         assert_eq!(dx, vec![0.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn maxpool_matches_per_channel_reference() {
+        // The pre-kernel scalar loop: per-channel candidate scan in
+        // (dy, dx) order, strict > so the first max wins.
+        fn maxpool_naive(
+            x: &[f32],
+            n: usize,
+            h: usize,
+            w: usize,
+            c: usize,
+        ) -> (Vec<f32>, Vec<u32>) {
+            let (oh, ow) = (h / 2, w / 2);
+            let mut y = vec![0.0f32; n * oh * ow * c];
+            let mut arg = vec![0u32; n * oh * ow * c];
+            for img in 0..n {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        for ch in 0..c {
+                            let mut best = f32::NEG_INFINITY;
+                            let mut best_idx = 0u32;
+                            for dy in 0..2 {
+                                for dx in 0..2 {
+                                    let idx =
+                                        ((img * h + oy * 2 + dy) * w + ox * 2 + dx) * c + ch;
+                                    if x[idx] > best {
+                                        best = x[idx];
+                                        best_idx = idx as u32;
+                                    }
+                                }
+                            }
+                            let o = ((img * oh + oy) * ow + ox) * c + ch;
+                            y[o] = best;
+                            arg[o] = best_idx;
+                        }
+                    }
+                }
+            }
+            (y, arg)
+        }
+        let mut r = Rng::seed_from_u64(9);
+        // Channel counts below, at, and above the 8-lane width; repeated
+        // values to exercise tie-breaking.
+        for (n, h, w, c) in [(1, 4, 4, 1), (2, 4, 6, 8), (1, 6, 4, 17)] {
+            let x: Vec<f32> = (0..n * h * w * c).map(|_| (r.below(5) as f32) - 2.0).collect();
+            let (y, arg) = maxpool2_fwd(&x, n, h, w, c);
+            let (yn, argn) = maxpool_naive(&x, n, h, w, c);
+            assert_eq!(y, yn);
+            assert_eq!(arg, argn);
+        }
     }
 
     #[test]

@@ -27,13 +27,12 @@ pub fn matmul_zero_skip(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize,
 
 /// C(m,n) = Aᵀ(m,k stored k,m) · B(k,n) — i.e. A is (k, m) and we compute
 /// AᵀB. Used for dW = Xᵀ·dY.
+///
+/// (There is deliberately no `matmul_a_bt` twin here: the transposed-B
+/// product is only used by kernel-layer consumers, which call
+/// [`kernels::matmul_a_bt`] directly.)
 pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
     kernels::matmul_at_b(a, b, c, k, m, n);
-}
-
-/// C(m,k) = A(m,n) · Bᵀ(n,k stored k,n). Used for dX = dY·Wᵀ.
-pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
-    kernels::matmul_a_bt(a, b, c, m, n, k);
 }
 
 /// Forward fused linear: y(m,n) = act(x(m,k)·w(k,n) + bias). Returns the
@@ -109,7 +108,7 @@ mod tests {
         let x = randv(&mut r, m * n); // (m, n)
         let w = randv(&mut r, k * n); // (k, n) -> wT is (n, k)
         let mut d1 = vec![0.0; m * k];
-        matmul_a_bt(&x, &w, &mut d1, m, n, k);
+        kernels::matmul_a_bt(&x, &w, &mut d1, m, n, k);
         let mut wt = vec![0.0f32; n * k];
         for j in 0..k {
             for p in 0..n {

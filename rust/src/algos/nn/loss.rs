@@ -2,19 +2,21 @@
 //! python/compile/model.py): labels < 0 are padding and contribute
 //! nothing; loss is normalized by the number of valid rows.
 
-/// Forward + backward in one pass.
-///
-/// Returns (loss_mean, correct_count, n_valid, dlogits) where `dlogits`
-/// is ∂loss_mean/∂logits — i.e. (softmax − onehot) / n_valid on valid rows.
-pub fn softmax_xent(
+/// Forward + backward in one pass, writing ∂loss_mean/∂logits into a
+/// caller buffer (fully overwritten: zero-seeded, valid rows then
+/// filled — the exact state the allocating form returns). Returns
+/// (loss_mean, correct_count, n_valid).
+pub fn softmax_xent_into(
     logits: &[f32],
     labels: &[i32],
     n_classes: usize,
-) -> (f64, f64, f64, Vec<f32>) {
+    dlogits: &mut [f32],
+) -> (f64, f64, f64) {
     let rows = labels.len();
     assert_eq!(logits.len(), rows * n_classes);
+    assert_eq!(dlogits.len(), logits.len());
     let n_valid = labels.iter().filter(|&&l| l >= 0).count().max(1) as f32;
-    let mut dlogits = vec![0.0f32; logits.len()];
+    dlogits.fill(0.0);
     let (mut loss_sum, mut correct) = (0.0f64, 0.0f64);
     let mut actually_valid = 0.0f64;
     for (i, &label) in labels.iter().enumerate() {
@@ -53,7 +55,22 @@ pub fn softmax_xent(
         }
     }
     let loss_mean = loss_sum / actually_valid.max(1.0);
-    (loss_mean, correct, actually_valid, dlogits)
+    (loss_mean, correct, actually_valid)
+}
+
+/// Forward + backward in one pass.
+///
+/// Returns (loss_mean, correct_count, n_valid, dlogits) where `dlogits`
+/// is ∂loss_mean/∂logits — i.e. (softmax − onehot) / n_valid on valid
+/// rows. Allocating wrapper over [`softmax_xent_into`].
+pub fn softmax_xent(
+    logits: &[f32],
+    labels: &[i32],
+    n_classes: usize,
+) -> (f64, f64, f64, Vec<f32>) {
+    let mut dlogits = vec![0.0f32; logits.len()];
+    let (loss_mean, correct, n_valid) = softmax_xent_into(logits, labels, n_classes, &mut dlogits);
+    (loss_mean, correct, n_valid, dlogits)
 }
 
 #[cfg(test)]

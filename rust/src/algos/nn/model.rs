@@ -5,11 +5,16 @@
 //! are directly usable here and vice versa — verified by
 //! `rust/tests/hlo_native_equivalence.rs`.
 
+use crate::util::kernels::{fused_linear_bwd_into, fused_linear_fwd_into};
+use crate::util::workspace::Workspace;
 use crate::util::Rng;
 
-use super::conv::{conv2d_bwd, conv2d_fwd, maxpool2_bwd, maxpool2_fwd};
-use super::linear::{fused_linear_bwd, fused_linear_fwd, Act};
-use super::loss::softmax_xent;
+use super::conv::{
+    conv2d_bwd_into, conv2d_fwd, conv2d_fwd_ws, maxpool2_bwd_into, maxpool2_fwd,
+    maxpool2_fwd_into,
+};
+use super::linear::{fused_linear_fwd, Act};
+use super::loss::{softmax_xent, softmax_xent_into};
 
 /// Geometry of the paper's CNN (§5.1): 2× [conv5x5 SAME + maxpool2 + relu]
 /// then 3 FC layers. Mirrors `CnnConfig` in model.py.
@@ -86,8 +91,34 @@ impl NativeModel {
         }
     }
 
+    /// Flat tensor sizes of the CNN in parameter order — the
+    /// allocation-free twin of [`NativeModel::param_sizes`] for the hot
+    /// path (no name strings).
+    fn cnn_sizes(s: &CnnShape) -> [usize; 10] {
+        [
+            s.ks * s.ks * s.c * s.conv1,
+            s.conv1,
+            s.ks * s.ks * s.conv1 * s.conv2,
+            s.conv2,
+            s.flat_after_conv() * s.fc1,
+            s.fc1,
+            s.fc1 * s.fc2,
+            s.fc2,
+            s.fc2 * s.classes,
+            s.classes,
+        ]
+    }
+
     pub fn param_count(&self) -> usize {
-        self.param_sizes().iter().map(|(_, s)| s).sum()
+        // Computed arithmetically (not via `param_sizes`, whose name
+        // strings allocate) so the per-iteration gradient path stays
+        // allocation-free.
+        match self {
+            NativeModel::Mlp { dims } => {
+                (0..dims.len() - 1).map(|i| dims[i] * dims[i + 1] + dims[i + 1]).sum()
+            }
+            NativeModel::Cnn { shape } => Self::cnn_sizes(shape).iter().sum(),
+        }
     }
 
     pub fn input_dim(&self) -> usize {
@@ -139,115 +170,279 @@ impl NativeModel {
     }
 
     /// Loss + grads on a batch. Returns (grads, loss_mean, correct, n_valid).
-    pub fn grad(
+    /// Allocating wrapper over [`NativeModel::grad_ws`] (runs the same
+    /// code against a throwaway workspace — bit-identical).
+    pub fn grad(&self, params: &[f32], x: &[f32], labels: &[i32]) -> (Vec<f32>, f64, f64, f64) {
+        self.grad_ws(params, x, labels, &mut Workspace::new())
+    }
+
+    /// Workspace-backed gradient: every intermediate (im2col matrices,
+    /// activations, pre-activations, pool argmaxes, backward deltas, and
+    /// the returned gradient vector itself) is checked out of `ws`.
+    /// With a warm workspace the steady-state call performs **zero**
+    /// heap allocations; callers on the hot path `put` the returned
+    /// grads back once consumed. Workspace buffers are fully
+    /// overwritten before use, so a dirty workspace is bit-identical to
+    /// fresh allocation.
+    pub fn grad_ws(
         &self,
         params: &[f32],
         x: &[f32],
         labels: &[i32],
+        ws: &mut Workspace,
     ) -> (Vec<f32>, f64, f64, f64) {
         let batch = labels.len();
         match self {
             NativeModel::Mlp { dims } => {
-                // Forward, retaining residuals.
                 let n_layers = dims.len() - 1;
-                let mut offs = Vec::new();
+                // Parameter offsets, and the offsets of each layer's
+                // activation/pre-activation inside one flat buffer:
+                // acts[i] (i ≥ 1) and pres[i−1] both have length
+                // batch·dims[i] and live at a_off[i−1]; layer 0's input
+                // is `x` itself.
+                let mut offs = ws.take_usize_cleared();
                 let mut off = 0usize;
                 for i in 0..n_layers {
                     offs.push(off);
                     off += dims[i] * dims[i + 1] + dims[i + 1];
                 }
-                let mut acts: Vec<Vec<f32>> = vec![x.to_vec()];
-                let mut pres: Vec<Vec<f32>> = Vec::new();
+                let mut a_off = ws.take_usize_cleared();
+                let mut total = 0usize;
+                for i in 1..=n_layers {
+                    a_off.push(total);
+                    total += batch * dims[i];
+                }
+                let mut acts = ws.take(total);
+                let mut pres = ws.take(total);
                 for i in 0..n_layers {
                     let (k, n) = (dims[i], dims[i + 1]);
                     let w = &params[offs[i]..offs[i] + k * n];
                     let b = &params[offs[i] + k * n..offs[i] + k * n + n];
                     let act = if i == n_layers - 1 { Act::None } else { Act::Relu };
-                    let (y, pre) = fused_linear_fwd(acts[i].as_slice(), w, b, batch, k, n, act);
-                    acts.push(y);
-                    pres.push(pre);
+                    let pre = &mut pres[a_off[i]..a_off[i] + batch * n];
+                    if i == 0 {
+                        let y = &mut acts[..batch * n];
+                        fused_linear_fwd_into(x, w, b, batch, k, n, act, y, pre, ws);
+                    } else {
+                        let (lo, hi) = acts.split_at_mut(a_off[i]);
+                        let xin = &lo[a_off[i - 1]..];
+                        fused_linear_fwd_into(
+                            xin, w, b, batch, k, n, act, &mut hi[..batch * n], pre, ws,
+                        );
+                    }
                 }
-                let (loss, correct, n_valid, dlogits) =
-                    softmax_xent(acts.last().unwrap(), labels, dims[n_layers]);
-                // Backward.
-                let mut grads = vec![0.0f32; self.param_count()];
-                let mut dy = dlogits;
+                let n_cls = dims[n_layers];
+                let logits = &acts[a_off[n_layers - 1]..a_off[n_layers - 1] + batch * n_cls];
+                // Ping-pong backward-delta buffers sized to the widest layer.
+                let max_dim = dims.iter().copied().max().unwrap_or(0);
+                let mut dy = ws.take(batch * max_dim);
+                let mut dx = ws.take(batch * max_dim);
+                let (loss, correct, n_valid) =
+                    softmax_xent_into(logits, labels, n_cls, &mut dy[..batch * n_cls]);
+                let mut grads = ws.take_zeroed(self.param_count());
                 for i in (0..n_layers).rev() {
                     let (k, n) = (dims[i], dims[i + 1]);
                     let w = &params[offs[i]..offs[i] + k * n];
                     let act = if i == n_layers - 1 { Act::None } else { Act::Relu };
-                    let (dx, dw, db) =
-                        fused_linear_bwd(&acts[i], w, &pres[i], &dy, batch, k, n, act);
-                    grads[offs[i]..offs[i] + k * n].copy_from_slice(&dw);
-                    grads[offs[i] + k * n..offs[i] + k * n + n].copy_from_slice(&db);
-                    dy = dx;
+                    let xin: &[f32] =
+                        if i == 0 { x } else { &acts[a_off[i - 1]..a_off[i - 1] + batch * k] };
+                    let pre = &pres[a_off[i]..a_off[i] + batch * n];
+                    let (gw, gb) = grads[offs[i]..offs[i] + k * n + n].split_at_mut(k * n);
+                    fused_linear_bwd_into(
+                        xin,
+                        w,
+                        pre,
+                        &dy[..batch * n],
+                        batch,
+                        k,
+                        n,
+                        act,
+                        &mut dx[..batch * k],
+                        gw,
+                        gb,
+                        ws,
+                    );
+                    std::mem::swap(&mut dy, &mut dx);
                 }
+                ws.put(dx);
+                ws.put(dy);
+                ws.put(pres);
+                ws.put(acts);
+                ws.put_usize(a_off);
+                ws.put_usize(offs);
                 (grads, loss, correct, n_valid)
             }
             NativeModel::Cnn { shape: s } => {
-                let sizes = self.param_sizes();
-                let mut offs = Vec::new();
+                let sizes = Self::cnn_sizes(s);
+                let mut offs = [0usize; 10];
                 let mut off = 0usize;
-                for (_, sz) in &sizes {
-                    offs.push(off);
+                for (o, sz) in offs.iter_mut().zip(sizes) {
+                    *o = off;
                     off += sz;
                 }
-                let p = |i: usize| &params[offs[i]..offs[i] + sizes[i].1];
+                let p = |i: usize| &params[offs[i]..offs[i] + sizes[i]];
                 let (n, h, w, c) = (batch, s.h, s.w, s.c);
                 // conv1 + pool + relu
-                let (c1, col1) = conv2d_fwd(x, p(0), p(1), n, h, w, c, s.ks, s.conv1);
-                let (p1, arg1) = maxpool2_fwd(&c1, n, h, w, s.conv1);
-                let r1: Vec<f32> = p1.iter().map(|&v| v.max(0.0)).collect();
+                let (c1, col1) = conv2d_fwd_ws(x, p(0), p(1), n, h, w, c, s.ks, s.conv1, ws);
                 let (h2, w2) = (h / 2, w / 2);
+                let mut p1 = ws.take(n * h2 * w2 * s.conv1);
+                let mut arg1 = ws.take_u32(p1.len());
+                maxpool2_fwd_into(&c1, n, h, w, s.conv1, &mut p1, &mut arg1);
+                let mut r1 = ws.take(p1.len());
+                for (r, &v) in r1.iter_mut().zip(&p1) {
+                    *r = v.max(0.0);
+                }
                 // conv2 + pool + relu
-                let (c2, col2) = conv2d_fwd(&r1, p(2), p(3), n, h2, w2, s.conv1, s.ks, s.conv2);
-                let (p2, arg2) = maxpool2_fwd(&c2, n, h2, w2, s.conv2);
-                let r2: Vec<f32> = p2.iter().map(|&v| v.max(0.0)).collect();
+                let (c2, col2) =
+                    conv2d_fwd_ws(&r1, p(2), p(3), n, h2, w2, s.conv1, s.ks, s.conv2, ws);
+                let (h4, w4) = (h2 / 2, w2 / 2);
+                let mut p2 = ws.take(n * h4 * w4 * s.conv2);
+                let mut arg2 = ws.take_u32(p2.len());
+                maxpool2_fwd_into(&c2, n, h2, w2, s.conv2, &mut p2, &mut arg2);
+                let mut r2 = ws.take(p2.len());
+                for (r, &v) in r2.iter_mut().zip(&p2) {
+                    *r = v.max(0.0);
+                }
                 let flat = s.flat_after_conv();
                 // fc1 relu, fc2 relu, fc3 none
-                let (f1, pre1) = fused_linear_fwd(&r2, p(4), p(5), n, flat, s.fc1, Act::Relu);
-                let (f2, pre2) = fused_linear_fwd(&f1, p(6), p(7), n, s.fc1, s.fc2, Act::Relu);
-                let (logits, pre3) =
-                    fused_linear_fwd(&f2, p(8), p(9), n, s.fc2, s.classes, Act::None);
-                let (loss, correct, n_valid, dlogits) =
-                    softmax_xent(&logits, labels, s.classes);
-                // Backward.
-                let mut grads = vec![0.0f32; self.param_count()];
-                let gslice = |grads: &mut Vec<f32>, i: usize, v: &[f32]| {
-                    grads[offs[i]..offs[i] + sizes[i].1].copy_from_slice(v);
-                };
-                let (d_f2, dw3, db3) =
-                    fused_linear_bwd(&f2, p(8), &pre3, &dlogits, n, s.fc2, s.classes, Act::None);
-                gslice(&mut grads, 8, &dw3);
-                gslice(&mut grads, 9, &db3);
-                let (d_f1, dw2, db2) =
-                    fused_linear_bwd(&f1, p(6), &pre2, &d_f2, n, s.fc1, s.fc2, Act::Relu);
-                gslice(&mut grads, 6, &dw2);
-                gslice(&mut grads, 7, &db2);
-                let (d_r2, dw1, db1) =
-                    fused_linear_bwd(&r2, p(4), &pre1, &d_f1, n, flat, s.fc1, Act::Relu);
-                gslice(&mut grads, 4, &dw1);
-                gslice(&mut grads, 5, &db1);
+                let mut f1 = ws.take(n * s.fc1);
+                let mut pre1 = ws.take(n * s.fc1);
+                fused_linear_fwd_into(
+                    &r2, p(4), p(5), n, flat, s.fc1, Act::Relu, &mut f1, &mut pre1, ws,
+                );
+                let mut f2 = ws.take(n * s.fc2);
+                let mut pre2 = ws.take(n * s.fc2);
+                fused_linear_fwd_into(
+                    &f1, p(6), p(7), n, s.fc1, s.fc2, Act::Relu, &mut f2, &mut pre2, ws,
+                );
+                let mut logits = ws.take(n * s.classes);
+                let mut pre3 = ws.take(n * s.classes);
+                fused_linear_fwd_into(
+                    &f2,
+                    p(8),
+                    p(9),
+                    n,
+                    s.fc2,
+                    s.classes,
+                    Act::None,
+                    &mut logits,
+                    &mut pre3,
+                    ws,
+                );
+                let mut dlogits = ws.take(logits.len());
+                let (loss, correct, n_valid) =
+                    softmax_xent_into(&logits, labels, s.classes, &mut dlogits);
+                // Backward. dw/db write straight into the flat grads
+                // vector (zero-seeded overwrites — bit-identical to
+                // compute-then-copy); each layer's (w, b) pair is
+                // adjacent in the flat layout, so one split_at_mut
+                // yields both slices.
+                let mut grads = ws.take_zeroed(self.param_count());
+                let mut d_f2 = ws.take(n * s.fc2);
+                {
+                    let (gw, gb) =
+                        grads[offs[8]..offs[8] + sizes[8] + sizes[9]].split_at_mut(sizes[8]);
+                    fused_linear_bwd_into(
+                        &f2,
+                        p(8),
+                        &pre3,
+                        &dlogits,
+                        n,
+                        s.fc2,
+                        s.classes,
+                        Act::None,
+                        &mut d_f2,
+                        gw,
+                        gb,
+                        ws,
+                    );
+                }
+                let mut d_f1 = ws.take(n * s.fc1);
+                {
+                    let (gw, gb) =
+                        grads[offs[6]..offs[6] + sizes[6] + sizes[7]].split_at_mut(sizes[6]);
+                    fused_linear_bwd_into(
+                        &f1, p(6), &pre2, &d_f2, n, s.fc1, s.fc2, Act::Relu, &mut d_f1, gw, gb, ws,
+                    );
+                }
+                let mut d_r2 = ws.take(n * flat);
+                {
+                    let (gw, gb) =
+                        grads[offs[4]..offs[4] + sizes[4] + sizes[5]].split_at_mut(sizes[4]);
+                    fused_linear_bwd_into(
+                        &r2, p(4), &pre1, &d_f1, n, flat, s.fc1, Act::Relu, &mut d_r2, gw, gb, ws,
+                    );
+                }
                 // relu' then unpool then conv2 backward
-                let d_p2: Vec<f32> = d_r2
-                    .iter()
-                    .zip(&p2)
-                    .map(|(&g, &v)| if v > 0.0 { g } else { 0.0 })
-                    .collect();
-                let d_c2 = maxpool2_bwd(&d_p2, &arg2, c2.len());
-                let (d_r1, dwc2, dbc2) =
-                    conv2d_bwd(&col2, p(2), &d_c2, n, h2, w2, s.conv1, s.ks, s.conv2);
-                gslice(&mut grads, 2, &dwc2);
-                gslice(&mut grads, 3, &dbc2);
-                let d_p1: Vec<f32> = d_r1
-                    .iter()
-                    .zip(&p1)
-                    .map(|(&g, &v)| if v > 0.0 { g } else { 0.0 })
-                    .collect();
-                let d_c1 = maxpool2_bwd(&d_p1, &arg1, c1.len());
-                let (_dx, dwc1, dbc1) = conv2d_bwd(&col1, p(0), &d_c1, n, h, w, c, s.ks, s.conv1);
-                gslice(&mut grads, 0, &dwc1);
-                gslice(&mut grads, 1, &dbc1);
+                let mut d_p2 = ws.take(d_r2.len());
+                for ((d, &g), &v) in d_p2.iter_mut().zip(&d_r2).zip(&p2) {
+                    *d = if v > 0.0 { g } else { 0.0 };
+                }
+                let mut d_c2 = ws.take(c2.len());
+                maxpool2_bwd_into(&d_p2, &arg2, &mut d_c2);
+                let mut d_r1 = ws.take(r1.len());
+                {
+                    let (gw, gb) =
+                        grads[offs[2]..offs[2] + sizes[2] + sizes[3]].split_at_mut(sizes[2]);
+                    conv2d_bwd_into(
+                        &col2,
+                        p(2),
+                        &d_c2,
+                        n,
+                        h2,
+                        w2,
+                        s.conv1,
+                        s.ks,
+                        s.conv2,
+                        &mut d_r1,
+                        gw,
+                        gb,
+                        ws,
+                    );
+                }
+                let mut d_p1 = ws.take(d_r1.len());
+                for ((d, &g), &v) in d_p1.iter_mut().zip(&d_r1).zip(&p1) {
+                    *d = if v > 0.0 { g } else { 0.0 };
+                }
+                let mut d_c1 = ws.take(c1.len());
+                maxpool2_bwd_into(&d_p1, &arg1, &mut d_c1);
+                let mut d_x = ws.take(x.len());
+                {
+                    let (gw, gb) =
+                        grads[offs[0]..offs[0] + sizes[0] + sizes[1]].split_at_mut(sizes[0]);
+                    conv2d_bwd_into(
+                        &col1, p(0), &d_c1, n, h, w, c, s.ks, s.conv1, &mut d_x, gw, gb, ws,
+                    );
+                }
+                // Return every residual to the pool (reverse order of
+                // checkout keeps the LIFO take/put sequence stable
+                // across iterations).
+                ws.put(d_x);
+                ws.put(d_c1);
+                ws.put(d_p1);
+                ws.put(d_r1);
+                ws.put(d_c2);
+                ws.put(d_p2);
+                ws.put(d_r2);
+                ws.put(d_f1);
+                ws.put(d_f2);
+                ws.put(dlogits);
+                ws.put(pre3);
+                ws.put(logits);
+                ws.put(pre2);
+                ws.put(f2);
+                ws.put(pre1);
+                ws.put(f1);
+                ws.put(r2);
+                ws.put_u32(arg2);
+                ws.put(p2);
+                ws.put(col2);
+                ws.put(c2);
+                ws.put(r1);
+                ws.put_u32(arg1);
+                ws.put(p1);
+                ws.put(col1);
+                ws.put(c1);
                 (grads, loss, correct, n_valid)
             }
         }
@@ -344,7 +539,8 @@ mod tests {
 
     #[test]
     fn cnn_grad_matches_finite_difference_small() {
-        let shape = CnnShape { h: 8, w: 8, c: 1, conv1: 2, conv2: 3, ks: 3, fc1: 6, fc2: 4, classes: 3 };
+        let shape =
+            CnnShape { h: 8, w: 8, c: 1, conv1: 2, conv2: 3, ks: 3, fc1: 6, fc2: 4, classes: 3 };
         let m = NativeModel::Cnn { shape };
         let params = m.init(2);
         let mut r = Rng::seed_from_u64(3);

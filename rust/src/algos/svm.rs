@@ -116,9 +116,23 @@ pub fn scd_pass_dense_scalar(
     )
 }
 
-/// Sparse-row variant (Criteo-like workload).
+type SparseDotFn = fn(&[u32], &[f32], &[f32]) -> f32;
+type SparseFusedAxpy2Fn = fn(&mut [f32], &mut [f32], f32, f32, &[u32], &[f32]);
+
+/// Shared sparse-pass body, parameterized over the dense-dot (for the
+/// row self-product), sparse-dot (gather), and sparse fused-axpy
+/// (scatter) kernels — the dispatched and scalar-reference entry points
+/// run the exact same row loop and produce bit-identical α, v, dv.
+///
+/// Note: unlike the dense pass there is no clipped-no-op skip here; the
+/// sparse scatter is cheap enough that the branch costs more than it
+/// saves, and keeping the loop unconditional preserves the historical
+/// trajectory bit-for-bit.
 #[allow(clippy::too_many_arguments)]
-pub fn scd_pass_sparse(
+fn scd_pass_sparse_with(
+    dot_fn: DotFn,
+    sdot: SparseDotFn,
+    sfax2: SparseFusedAxpy2Fn,
     rows: &[crate::data::SparseVec],
     y: &[f32],
     order: &[usize],
@@ -130,22 +144,75 @@ pub fn scd_pass_sparse(
 ) {
     for &i in order {
         let row = &rows[i];
-        let sq = row.sq_norm();
+        let sq = dot_fn(&row.values, &row.values);
         if sq <= 0.0 {
             continue;
         }
-        let margin = y[i] * row.dot_dense(v);
+        let margin = y[i] * sdot(&row.indices, &row.values, v);
         let step = (1.0 - margin) / (sigma * sq / lam_n);
         let a_new = (alpha[i] + step).clamp(0.0, 1.0);
         let scale = (a_new - alpha[i]) * y[i] / lam_n;
         alpha[i] = a_new;
-        for (&j, &xv) in row.indices.iter().zip(&row.values) {
-            let u = scale * xv;
-            // CoCoA+ local view: own updates enter scaled by sigma'.
-            v[j as usize] += sigma * u;
-            dv[j as usize] += u;
-        }
+        // CoCoA+ local view: own updates enter v scaled by sigma', the
+        // raw delta accumulates in dv for the global merge.
+        sfax2(v, dv, sigma, scale, &row.indices, &row.values);
     }
+}
+
+/// Sparse-row variant (Criteo-like workload): gather dot for the margin,
+/// scatter fused-axpy for the update, both runtime-dispatched.
+#[allow(clippy::too_many_arguments)]
+pub fn scd_pass_sparse(
+    rows: &[crate::data::SparseVec],
+    y: &[f32],
+    order: &[usize],
+    alpha: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+    lam_n: f32,
+    sigma: f32,
+) {
+    scd_pass_sparse_with(
+        kernels::dot,
+        kernels::sparse_dot,
+        kernels::sparse_fused_axpy2,
+        rows,
+        y,
+        order,
+        alpha,
+        v,
+        dv,
+        lam_n,
+        sigma,
+    )
+}
+
+/// Scalar-reference twin of [`scd_pass_sparse`] (bench pairing / parity):
+/// same row loop, forced onto the scalar kernels. Bit-identical output.
+#[allow(clippy::too_many_arguments)]
+pub fn scd_pass_sparse_scalar(
+    rows: &[crate::data::SparseVec],
+    y: &[f32],
+    order: &[usize],
+    alpha: &mut [f32],
+    v: &mut [f32],
+    dv: &mut [f32],
+    lam_n: f32,
+    sigma: f32,
+) {
+    scd_pass_sparse_with(
+        kernels::scalar::dot,
+        kernels::scalar::sparse_dot,
+        kernels::scalar::sparse_fused_axpy2,
+        rows,
+        y,
+        order,
+        alpha,
+        v,
+        dv,
+        lam_n,
+        sigma,
+    )
 }
 
 /// Per-chunk duality-gap contributions: (Σ hinge, Σ α, Σ correct, n).

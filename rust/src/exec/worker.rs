@@ -50,6 +50,7 @@ use crate::cluster::NodeId;
 use crate::transport::{
     ring_allreduce, tree_allreduce, AllreduceKind, AllreduceRun, CollectiveCtx, Transport,
 };
+use crate::util::Workspace;
 
 use super::reduce::{ModelRef, ReduceBuf, ShardQueue};
 
@@ -160,6 +161,20 @@ pub enum Reply {
     Drained(Vec<Chunk>),
 }
 
+/// One logical task's worker-resident context: its index, its shared
+/// chunk store, and its private scratch [`Workspace`]. The workspace is
+/// keyed by *task*, not thread or slot — PR-8 oversubscription (K tasks
+/// round-robin on W ≤ K threads) reuses a task's scratch across its
+/// slots every iteration, which is what makes steady-state iterations
+/// allocation-free. A task migrated to another worker starts with a
+/// fresh workspace there; since workspace reuse is bit-invisible (see
+/// [`Workspace`]), rebinding never perturbs the trajectory.
+struct TaskCtx {
+    task: usize,
+    store: SharedStore,
+    ws: Workspace,
+}
+
 /// One completed logical-task iteration.
 #[derive(Clone, Debug)]
 pub struct TaskRun {
@@ -186,14 +201,17 @@ pub(crate) fn worker_loop(
     commands: Receiver<Command>,
     replies: Sender<Reply>,
 ) {
-    let mut contexts = contexts;
+    let mut contexts: Vec<TaskCtx> = contexts
+        .into_iter()
+        .map(|(task, store)| TaskCtx { task, store, ws: Workspace::new() })
+        .collect();
     // Artificial per-element reduce delay (straggler simulation).
     let mut slow_ns_per_elem = 0u64;
     while let Ok(cmd) = commands.recv() {
         match cmd {
             Command::RunIteration { model, k_tasks, slots, budget } => {
                 let result = match model.wait() {
-                    Some(m) => run_slots(algo.as_ref(), &contexts, m, k_tasks, &slots, budget),
+                    Some(m) => run_slots(algo.as_ref(), &mut contexts, m, k_tasks, &slots, budget),
                     None => Err(anyhow!("model reduction was abandoned")),
                 };
                 // Release the model snapshot before signalling completion
@@ -258,16 +276,18 @@ pub(crate) fn worker_loop(
                 }
             }
             Command::InstallTask { task, store } => {
-                match contexts.iter_mut().find(|(t, _)| *t == task) {
-                    Some(ctx) => ctx.1 = store,
-                    None => contexts.push((task, store)),
+                match contexts.iter_mut().find(|c| c.task == task) {
+                    // Re-install: replace the store handle, keep the
+                    // task's warmed workspace.
+                    Some(ctx) => ctx.store = store,
+                    None => contexts.push(TaskCtx { task, store, ws: Workspace::new() }),
                 }
             }
-            Command::RevokeTask { task } => contexts.retain(|(t, _)| *t != task),
+            Command::RevokeTask { task } => contexts.retain(|c| c.task != task),
             Command::SetReduceSlowdown(ns) => slow_ns_per_elem = ns,
             Command::InstallChunks(chunks) => {
-                if let Some((_, store)) = contexts.first() {
-                    let mut store = store.lock();
+                if let Some(ctx) = contexts.first() {
+                    let mut store = ctx.store.lock();
                     for chunk in chunks {
                         store.add(chunk);
                     }
@@ -275,8 +295,8 @@ pub(crate) fn worker_loop(
             }
             Command::DrainChunks => {
                 let mut drained = Vec::new();
-                for (_, store) in &contexts {
-                    drained.extend(store.lock().drain());
+                for ctx in &contexts {
+                    drained.extend(ctx.store.lock().drain());
                 }
                 if replies.send(Reply::Drained(drained)).is_err() {
                     break;
@@ -307,7 +327,7 @@ fn spin_for(d: Duration) {
 /// missing run would shrink the fold).
 fn run_slots(
     algo: &dyn Algorithm,
-    contexts: &[(usize, SharedStore)],
+    contexts: &mut [TaskCtx],
     model: &ModelVec,
     k_tasks: usize,
     slots: &[TaskSlot],
@@ -315,28 +335,28 @@ fn run_slots(
 ) -> Result<Vec<TaskRun>> {
     let mut runs = Vec::with_capacity(slots.len());
     for slot in slots {
-        let store = contexts
-            .iter()
-            .find(|(t, _)| *t == slot.task)
-            .map(|(_, s)| s)
+        let ctx = contexts
+            .iter_mut()
+            .find(|c| c.task == slot.task)
             .ok_or_else(|| anyhow!("logical task {} is not hosted by this worker", slot.task))?;
-        runs.push(run_iteration(algo, store, model, k_tasks, slot, budget)?);
+        runs.push(run_iteration(algo, ctx, model, k_tasks, slot, budget)?);
     }
     Ok(runs)
 }
 
 fn run_iteration(
     algo: &dyn Algorithm,
-    store: &SharedStore,
+    ctx: &mut TaskCtx,
     model: &ModelVec,
     k_tasks: usize,
     slot: &TaskSlot,
     budget: Option<usize>,
 ) -> Result<TaskRun> {
-    let mut store = store.lock();
+    let mut store = ctx.store.lock();
     if store.n_samples() == 0 {
         // A task without chunks contributes a zero update (it can receive
-        // chunks next boundary — e.g. a freshly assigned node).
+        // chunks next boundary — e.g. a freshly assigned node). Not a
+        // steady-state path, so plain allocation is fine here.
         return Ok(TaskRun {
             task: slot.task,
             update: LocalUpdate {
@@ -348,6 +368,13 @@ fn run_iteration(
         });
     }
     let t0 = Instant::now();
-    let update = algo.task_iterate(store.chunks_mut(), model, k_tasks, slot.seed, budget)?;
+    let update = algo.task_iterate_ws(
+        store.chunks_mut(),
+        model,
+        k_tasks,
+        slot.seed,
+        budget,
+        &mut ctx.ws,
+    )?;
     Ok(TaskRun { task: slot.task, update, wall: t0.elapsed() })
 }

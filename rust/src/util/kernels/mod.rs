@@ -52,6 +52,8 @@ pub mod scalar;
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 mod x86;
 
+use crate::util::workspace::Workspace;
+
 /// Accumulator lanes used by the fixed-split reduction kernels (two
 /// 8-wide AVX2 registers; four 4-wide SSE2 registers after autovec).
 pub const LANES: usize = 16;
@@ -217,6 +219,74 @@ pub fn fused_axpy2(v: &mut [f32], dv: &mut [f32], sigma: f32, scale: f32, x: &[f
     scalar::fused_axpy2(v, dv, sigma, scale, x)
 }
 
+/// Sparse·dense dot product `Σ vals[i] · dense[idx[i]]` with the same
+/// fixed lane split as [`dot`] (AVX2 path: `vgatherdps`). Every
+/// `idx[i]` must be `< dense.len()`.
+#[inline]
+pub fn sparse_dot(idx: &[u32], vals: &[f32], dense: &[f32]) -> f32 {
+    debug_assert!(idx.iter().all(|&j| (j as usize) < dense.len()));
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2() {
+            // SAFETY: avx2() confirmed the CPU supports AVX2; the index
+            // bound is the caller's contract (debug-asserted above).
+            return unsafe { x86::sparse_dot(idx, vals, dense) };
+        }
+    }
+    scalar::sparse_dot(idx, vals, dense)
+}
+
+/// Sparse scatter form of [`fused_axpy2`]: with `u = scale · vals[i]`,
+/// `v[idx[i]] += sigma · u` and `dv[idx[i]] += u`, entries in input
+/// order. Every `idx[i]` must be `< v.len().min(dv.len())`.
+#[inline]
+pub fn sparse_fused_axpy2(
+    v: &mut [f32],
+    dv: &mut [f32],
+    sigma: f32,
+    scale: f32,
+    idx: &[u32],
+    vals: &[f32],
+) {
+    debug_assert!(idx.iter().all(|&j| (j as usize) < v.len() && (j as usize) < dv.len()));
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2() {
+            // SAFETY: avx2() confirmed the CPU supports AVX2.
+            unsafe { x86::sparse_fused_axpy2(v, dv, sigma, scale, idx, vals) };
+            return;
+        }
+    }
+    scalar::sparse_fused_axpy2(v, dv, sigma, scale, idx, vals)
+}
+
+/// One 2×2 max-pool window across the channel dimension: candidates
+/// `c0..c3` in `(dy, dx)` order, `base[q]` the flat index of candidate
+/// `q`'s channel 0; writes `y[ch] = max` and `arg[ch] = base[q*] + ch`
+/// with strict-`>` first-max-wins tie-breaking. Lane-per-channel.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool4(
+    c0: &[f32],
+    c1: &[f32],
+    c2: &[f32],
+    c3: &[f32],
+    base: [u32; 4],
+    y: &mut [f32],
+    arg: &mut [u32],
+) {
+    debug_assert_eq!(y.len(), arg.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if avx2() {
+            // SAFETY: avx2() confirmed the CPU supports AVX2.
+            unsafe { x86::maxpool4(c0, c1, c2, c3, base, y, arg) };
+            return;
+        }
+    }
+    scalar::maxpool4(c0, c1, c2, c3, base, y, arg)
+}
+
 // ----------------------------------------------------- blocked matmul
 
 #[inline]
@@ -323,10 +393,27 @@ pub fn matmul_zero_skip(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize,
 /// the blocked [`matmul`] accumulation (the transpose is O(km), dwarfed
 /// by the O(mkn) product, and buys the dense contiguous inner loop).
 pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: usize) {
+    matmul_at_b_ws(a, b, c, k, m, n, &mut Workspace::new())
+}
+
+/// [`matmul_at_b`] with the transpose scratch checked out of `ws`
+/// instead of freshly allocated — the form the allocation-free backward
+/// pass uses. The scratch is fully overwritten before use, so a dirty
+/// workspace gives bit-identical results to [`matmul_at_b`].
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_at_b_ws(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    ws: &mut Workspace,
+) {
     assert_eq!(a.len(), k * m);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
-    let mut at = vec![0.0f32; m * k];
+    let mut at = ws.take(m * k);
     for p in 0..k {
         let arow = &a[p * m..(p + 1) * m];
         for (i, &av) in arow.iter().enumerate() {
@@ -335,6 +422,7 @@ pub fn matmul_at_b(a: &[f32], b: &[f32], c: &mut [f32], k: usize, m: usize, n: u
     }
     c.fill(0.0);
     matmul_acc_with(pick_axpy(), &at, b, c, m, k, n);
+    ws.put(at);
 }
 
 /// `C(m,k) = A(m,n) · Bᵀ` where B is stored `(k,n)`. Used for
@@ -355,10 +443,115 @@ pub fn matmul_a_bt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: u
     }
 }
 
+// ------------------------------------------------------ packed-B matmul
+
+/// Length of the packed-B buffer for a `(k, n)` B matrix: packing is a
+/// permutation of B, so the panel buffer is exactly `k · n` floats.
+pub fn packed_b_len(k: usize, n: usize) -> usize {
+    k * n
+}
+
+/// Pack `B(k, n)` into `(BLOCK_K × BLOCK_N)`-panel order: panels laid
+/// out in the exact `(p0, j0)` order the blocked accumulate loop visits
+/// them, each panel row-major (`p` rows of `j1−j0` contiguous floats).
+/// For `n > BLOCK_N` this turns the strided `B[p·n + j0 ..]` row
+/// segments the inner axpy streams into contiguous memory, packed once
+/// and reused across all `m` rows — the pack is O(kn) copies, dwarfed
+/// by the O(mkn) product. For `n ≤ BLOCK_N` there is a single column
+/// block and packing degenerates to a plain copy of B.
+pub fn pack_b(b: &[f32], k: usize, n: usize, packed: &mut [f32]) {
+    assert_eq!(b.len(), k * n);
+    assert_eq!(packed.len(), packed_b_len(k, n));
+    let mut off = 0;
+    for p0 in (0..k).step_by(BLOCK_K) {
+        let p1 = (p0 + BLOCK_K).min(k);
+        for j0 in (0..n).step_by(BLOCK_N) {
+            let j1 = (j0 + BLOCK_N).min(n);
+            let bw = j1 - j0;
+            for p in p0..p1 {
+                packed[off..off + bw].copy_from_slice(&b[p * n + j0..p * n + j1]);
+                off += bw;
+            }
+        }
+    }
+}
+
+/// The packed-B accumulate: identical `(p0, j0, i, p)` iteration order
+/// and per-element arithmetic as [`matmul_acc_with`] — only the B panel
+/// addressing changes — so the packed product is bit-identical to the
+/// unpacked one (pinned by `tests/kernel_parity.rs` across
+/// block-straddling N).
+pub(crate) fn matmul_packed_acc_with(
+    axpy_fn: fn(&mut [f32], f32, &[f32]),
+    a: &[f32],
+    packed: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut off = 0;
+    for p0 in (0..k).step_by(BLOCK_K) {
+        let p1 = (p0 + BLOCK_K).min(k);
+        for j0 in (0..n).step_by(BLOCK_N) {
+            let j1 = (j0 + BLOCK_N).min(n);
+            let bw = j1 - j0;
+            for i in 0..m {
+                let crow = &mut c[i * n + j0..i * n + j1];
+                let mut po = off;
+                for p in p0..p1 {
+                    axpy_fn(crow, a[i * k + p], &packed[po..po + bw]);
+                    po += bw;
+                }
+            }
+            off += (p1 - p0) * bw;
+        }
+    }
+}
+
+/// Packed-B `C(m,n) = A(m,k) · B(k,n)`: packs B into `packed` (caller
+/// scratch of [`packed_b_len`] floats, workspace-checked-out on the hot
+/// path), then runs the blocked accumulate against the contiguous
+/// panels. Bit-identical to [`matmul`]; worth it when `n > BLOCK_N`,
+/// where it is used by the fused linear forward.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_packed(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    packed: &mut [f32],
+) {
+    matmul_checked(a, b, c, m, k, n);
+    pack_b(b, k, n, packed);
+    c.fill(0.0);
+    matmul_packed_acc_with(pick_axpy(), a, packed, c, m, k, n);
+}
+
+/// Scalar-reference twin of [`matmul_packed`] for bench pairing: same
+/// packing and accumulate order, forced onto the scalar axpy.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_packed_scalar(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    packed: &mut [f32],
+) {
+    matmul_checked(a, b, c, m, k, n);
+    pack_b(b, k, n, packed);
+    c.fill(0.0);
+    matmul_packed_acc_with(scalar::axpy, a, packed, c, m, k, n);
+}
+
 // ------------------------------------------------------- fused linear
 
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn fused_linear_fwd_with(
+pub(crate) fn fused_linear_fwd_into_with(
     axpy_fn: fn(&mut [f32], f32, &[f32]),
     x: &[f32],
     w: &[f32],
@@ -367,24 +560,59 @@ pub(crate) fn fused_linear_fwd_with(
     k: usize,
     n: usize,
     act: Act,
-) -> (Vec<f32>, Vec<f32>) {
+    y: &mut [f32],
+    pre: &mut [f32],
+    ws: &mut Workspace,
+) {
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), k * n);
     assert_eq!(bias.len(), n);
+    assert_eq!(y.len(), m * n);
+    assert_eq!(pre.len(), m * n);
     // Fused pass: seed each output row with the bias (so pre = bias + Σ,
     // accumulated p-ascending), run the blocked matmul accumulate, then
     // apply the activation while the rows are still hot.
-    let mut pre = vec![0.0f32; m * n];
     for row in pre.chunks_exact_mut(n) {
         row.copy_from_slice(bias);
     }
-    matmul_acc_with(axpy_fn, x, w, &mut pre, m, k, n);
-    let y: Vec<f32> = pre.iter().map(|&v| act.apply(v)).collect();
-    (y, pre)
+    if n > BLOCK_N {
+        // Wide layer: W's row segments are strided across column blocks
+        // — pack once into workspace panels, reuse across all m rows.
+        // Identical accumulation order, so identical bits.
+        let mut packed = ws.take(packed_b_len(k, n));
+        pack_b(w, k, n, &mut packed);
+        matmul_packed_acc_with(axpy_fn, x, &packed, pre, m, k, n);
+        ws.put(packed);
+    } else {
+        matmul_acc_with(axpy_fn, x, w, pre, m, k, n);
+    }
+    for (yv, &pv) in y.iter_mut().zip(pre.iter()) {
+        *yv = act.apply(pv);
+    }
+}
+
+/// Forward fused linear writing into caller buffers (`y` and `pre` are
+/// fully overwritten; internal scratch comes from `ws`) — the
+/// allocation-free form the training hot path uses.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_linear_fwd_into(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    act: Act,
+    y: &mut [f32],
+    pre: &mut [f32],
+    ws: &mut Workspace,
+) {
+    fused_linear_fwd_into_with(pick_axpy(), x, w, bias, m, k, n, act, y, pre, ws);
 }
 
 /// Forward fused linear: `y(m,n) = act(x(m,k)·w(k,n) + bias)`. Returns
-/// the pre-activation too (the gelu backward needs it).
+/// the pre-activation too (the gelu backward needs it). Allocating
+/// convenience wrapper over [`fused_linear_fwd_into`].
 pub fn fused_linear_fwd(
     x: &[f32],
     w: &[f32],
@@ -394,11 +622,26 @@ pub fn fused_linear_fwd(
     n: usize,
     act: Act,
 ) -> (Vec<f32>, Vec<f32>) {
-    fused_linear_fwd_with(pick_axpy(), x, w, bias, m, k, n, act)
+    let mut y = vec![0.0f32; m * n];
+    let mut pre = vec![0.0f32; m * n];
+    fused_linear_fwd_into_with(
+        pick_axpy(),
+        x,
+        w,
+        bias,
+        m,
+        k,
+        n,
+        act,
+        &mut y,
+        &mut pre,
+        &mut Workspace::new(),
+    );
+    (y, pre)
 }
 
 /// Scalar-reference forward for bench pairing and parity tests:
-/// identical blocking and per-element accumulation order to
+/// identical blocking, packing, and per-element accumulation order to
 /// [`fused_linear_fwd`], forced onto the scalar axpy kernel (so its
 /// output is bit-equal to the dispatched version — the pair measures
 /// pure kernel speedup, not algorithmic drift).
@@ -411,11 +654,76 @@ pub fn fused_linear_fwd_scalar(
     n: usize,
     act: Act,
 ) -> (Vec<f32>, Vec<f32>) {
-    fused_linear_fwd_with(scalar::axpy, x, w, bias, m, k, n, act)
+    let mut y = vec![0.0f32; m * n];
+    let mut pre = vec![0.0f32; m * n];
+    fused_linear_fwd_into_with(
+        scalar::axpy,
+        x,
+        w,
+        bias,
+        m,
+        k,
+        n,
+        act,
+        &mut y,
+        &mut pre,
+        &mut Workspace::new(),
+    );
+    (y, pre)
+}
+
+/// Backward fused linear writing into caller buffers: `dx`, `dw`, `db`
+/// are fully overwritten (`dw`/`db` may alias disjoint slices of a flat
+/// gradient vector — the in-place form is bit-identical to computing
+/// into fresh buffers and copying, because both are zero-seeded
+/// overwrites). Internal `d(pre)` and transpose scratch come from `ws`.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_linear_bwd_into(
+    x: &[f32],
+    w: &[f32],
+    pre: &[f32],
+    dy: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    act: Act,
+    dx: &mut [f32],
+    dw: &mut [f32],
+    db: &mut [f32],
+    ws: &mut Workspace,
+) {
+    assert_eq!(pre.len(), m * n);
+    assert_eq!(dy.len(), m * n);
+    assert_eq!(dx.len(), m * k);
+    assert_eq!(dw.len(), k * n);
+    assert_eq!(db.len(), n);
+    // d(pre) = dy ⊙ act'(pre) — elementwise, lane-per-element safe.
+    let mut dpre = ws.take(m * n);
+    match act {
+        Act::None => dpre.copy_from_slice(dy),
+        Act::Relu => {
+            for ((d, &g), &p) in dpre.iter_mut().zip(dy).zip(pre) {
+                *d = if p > 0.0 { g } else { 0.0 };
+            }
+        }
+        Act::Gelu => {
+            for ((d, &g), &p) in dpre.iter_mut().zip(dy).zip(pre) {
+                *d = g * gelu_grad(p);
+            }
+        }
+    }
+    matmul_a_bt(&dpre, w, dx, m, n, k);
+    matmul_at_b_ws(x, &dpre, dw, m, k, n, ws);
+    db.fill(0.0);
+    for row in 0..m {
+        acc(db, &dpre[row * n..(row + 1) * n]);
+    }
+    ws.put(dpre);
 }
 
 /// Backward fused linear given upstream grad `dy`: returns
-/// `(dx, dw, db)`. `pre` is the forward pre-activation.
+/// `(dx, dw, db)`. `pre` is the forward pre-activation. Allocating
+/// convenience wrapper over [`fused_linear_bwd_into`].
 #[allow(clippy::too_many_arguments)]
 pub fn fused_linear_bwd(
     x: &[f32],
@@ -427,26 +735,23 @@ pub fn fused_linear_bwd(
     n: usize,
     act: Act,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    assert_eq!(pre.len(), m * n);
-    assert_eq!(dy.len(), m * n);
-    // d(pre) = dy ⊙ act'(pre) — elementwise, lane-per-element safe.
-    let dpre: Vec<f32> = match act {
-        Act::None => dy.to_vec(),
-        Act::Relu => dy
-            .iter()
-            .zip(pre)
-            .map(|(&g, &p)| if p > 0.0 { g } else { 0.0 })
-            .collect(),
-        Act::Gelu => dy.iter().zip(pre).map(|(&g, &p)| g * gelu_grad(p)).collect(),
-    };
     let mut dx = vec![0.0f32; m * k];
-    matmul_a_bt(&dpre, w, &mut dx, m, n, k);
     let mut dw = vec![0.0f32; k * n];
-    matmul_at_b(x, &dpre, &mut dw, m, k, n);
     let mut db = vec![0.0f32; n];
-    for row in 0..m {
-        acc(&mut db, &dpre[row * n..(row + 1) * n]);
-    }
+    fused_linear_bwd_into(
+        x,
+        w,
+        pre,
+        dy,
+        m,
+        k,
+        n,
+        act,
+        &mut dx,
+        &mut dw,
+        &mut db,
+        &mut Workspace::new(),
+    );
     (dx, dw, db)
 }
 
@@ -550,6 +855,56 @@ mod tests {
             assert_eq!(vmax(&x), want);
         }
         assert_eq!(vmax(&[]), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn packed_matmul_bit_equal_unpacked_across_block_geometries() {
+        // N below, at, and straddling BLOCK_N; K straddling BLOCK_K.
+        for (m, k, n) in [(3usize, 130usize, 300usize), (2, 64, 512), (3, 200, 515), (2, 300, 1030)]
+        {
+            let a = seq(m * k, |i| ((i % 23) as f32 - 11.0) * 0.09);
+            let b = seq(k * n, |i| ((i % 17) as f32 - 8.0) * 0.07);
+            let mut c1 = vec![0.0; m * n];
+            let mut c2 = vec![0.0; m * n];
+            let mut packed = vec![0.0; packed_b_len(k, n)];
+            matmul(&a, &b, &mut c1, m, k, n);
+            matmul_packed(&a, &b, &mut c2, m, k, n, &mut packed);
+            assert_eq!(c1, c2, "packed vs unpacked at (m={m}, k={k}, n={n})");
+        }
+    }
+
+    #[test]
+    fn sparse_dot_matches_dense_dot_on_scattered_data() {
+        let dim = 211usize;
+        let idx: Vec<u32> = (0..50).map(|i| (i * 4 + 1) as u32).collect();
+        let vals = seq(idx.len(), |i| (i as f32 * 0.31).sin());
+        let dense = seq(dim, |i| (i as f32 * 0.17).cos());
+        let densified: Vec<f32> = {
+            let mut d = vec![0.0f32; dim];
+            for (&j, &v) in idx.iter().zip(&vals) {
+                d[j as usize] = v;
+            }
+            d
+        };
+        let got = sparse_dot(&idx, &vals, &dense) as f64;
+        let want = densified.iter().zip(&dense).map(|(&a, &b)| a as f64 * b as f64).sum::<f64>();
+        assert!((got - want).abs() < 1e-4 * (1.0 + want.abs()), "{got} vs {want}");
+        // Dispatched and scalar twins bit-equal.
+        assert_eq!(got as f32, scalar::sparse_dot(&idx, &vals, &dense));
+    }
+
+    #[test]
+    fn maxpool4_first_max_wins_ties() {
+        // Candidates 0 and 2 tie at channel 0; strict > keeps candidate 0.
+        let c0 = [5.0f32, 1.0];
+        let c1 = [2.0f32, 4.0];
+        let c2 = [5.0f32, 3.0];
+        let c3 = [0.0f32, 2.0];
+        let mut y = [0.0f32; 2];
+        let mut arg = [0u32; 2];
+        maxpool4(&c0, &c1, &c2, &c3, [100, 200, 300, 400], &mut y, &mut arg);
+        assert_eq!(y, [5.0, 4.0]);
+        assert_eq!(arg, [100, 201]);
     }
 
     #[test]

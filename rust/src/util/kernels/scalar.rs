@@ -107,3 +107,82 @@ pub fn fused_axpy2(v: &mut [f32], dv: &mut [f32], sigma: f32, scale: f32, x: &[f
         *dvv += u;
     }
 }
+
+/// Sparse·dense dot product `Σ vals[i] · dense[idx[i]]` with the same
+/// fixed [`LANES`]-wide split and [`hsum`] tree as [`dot`]: entry `i`
+/// accumulates into lane `i % LANES`, tail summed serially. The AVX2
+/// twin replaces the indexed loads with `vgatherdps`; the arithmetic
+/// sequence is identical. Requires every `idx[i] < dense.len()`.
+pub fn sparse_dot(idx: &[u32], vals: &[f32], dense: &[f32]) -> f32 {
+    let n = idx.len().min(vals.len());
+    let chunks = n / LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in 0..chunks {
+        let base = c * LANES;
+        for (l, av) in acc.iter_mut().enumerate() {
+            *av += vals[base + l] * dense[idx[base + l] as usize];
+        }
+    }
+    let mut s = hsum(&acc);
+    for i in chunks * LANES..n {
+        s += vals[i] * dense[idx[i] as usize];
+    }
+    s
+}
+
+/// Sparse scatter form of [`fused_axpy2`]: with `u = scale · vals[i]`,
+/// do `v[idx[i]] += sigma · u` and `dv[idx[i]] += u`, entries in input
+/// order. The AVX2 twin vectorizes the two multiplies 8-wide and keeps
+/// the scatter scalar (AVX2 has gathers but no scatters), touching every
+/// element with the identical rounded values in the identical order.
+pub fn sparse_fused_axpy2(
+    v: &mut [f32],
+    dv: &mut [f32],
+    sigma: f32,
+    scale: f32,
+    idx: &[u32],
+    vals: &[f32],
+) {
+    for (&j, &xv) in idx.iter().zip(vals) {
+        let u = scale * xv;
+        let j = j as usize;
+        v[j] += sigma * u;
+        dv[j] += u;
+    }
+}
+
+/// One 2×2 max-pool window across `c` channels: candidates `c0..c3` are
+/// the four window cells in `(dy, dx)` row-major order, `base[q]` the
+/// flat index of candidate `q`'s channel 0. Strict `>` comparisons in
+/// candidate order, so the **first** maximum wins ties — the argmax
+/// contract `maxpool2_bwd` routes gradients by. Lane-per-channel: pure
+/// copies and compares, so the AVX2 twin (blendv on the compare mask)
+/// is trivially bit-identical. Finite inputs only.
+pub fn maxpool4(
+    c0: &[f32],
+    c1: &[f32],
+    c2: &[f32],
+    c3: &[f32],
+    base: [u32; 4],
+    y: &mut [f32],
+    arg: &mut [u32],
+) {
+    for ch in 0..y.len() {
+        let mut best = c0[ch];
+        let mut bidx = base[0];
+        if c1[ch] > best {
+            best = c1[ch];
+            bidx = base[1];
+        }
+        if c2[ch] > best {
+            best = c2[ch];
+            bidx = base[2];
+        }
+        if c3[ch] > best {
+            best = c3[ch];
+            bidx = base[3];
+        }
+        y[ch] = best;
+        arg[ch] = bidx + ch as u32;
+    }
+}

@@ -160,6 +160,132 @@ pub(super) unsafe fn fused_axpy2(v: &mut [f32], dv: &mut [f32], sigma: f32, scal
     }
 }
 
+/// Sparse·dense dot via `vgatherdps`, mirroring `scalar::sparse_dot`:
+/// two 8-wide accumulator chains (lane `i % LANES`), `hsum8` tree,
+/// serial tail. Caller guarantees every `idx[i] < dense.len()` (the
+/// gather reads `dense + idx[i]` unchecked).
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn sparse_dot(idx: &[u32], vals: &[f32], dense: &[f32]) -> f32 {
+    let n = idx.len().min(vals.len());
+    let chunks = n / LANES;
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let ip = idx.as_ptr();
+    let vp = vals.as_ptr();
+    let dp = dense.as_ptr();
+    for c in 0..chunks {
+        let base = c * LANES;
+        let i0 = _mm256_loadu_si256(ip.add(base) as *const __m256i);
+        let g0 = _mm256_i32gather_ps::<4>(dp, i0);
+        acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_loadu_ps(vp.add(base)), g0));
+        let i1 = _mm256_loadu_si256(ip.add(base + 8) as *const __m256i);
+        let g1 = _mm256_i32gather_ps::<4>(dp, i1);
+        acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_loadu_ps(vp.add(base + 8)), g1));
+    }
+    let mut s = hsum8(_mm256_add_ps(acc0, acc1));
+    for i in chunks * LANES..n {
+        s += vals[i] * dense[idx[i] as usize];
+    }
+    s
+}
+
+/// Sparse scatter fused-axpy2: `u = scale · vals` and `sigma · u` are
+/// computed 8-wide (same mul/mul rounding as the scalar twin), then
+/// scattered with scalar adds in entry order — AVX2 has no scatter, and
+/// the scalar adds keep the per-element sequence identical to
+/// `scalar::sparse_fused_axpy2`.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn sparse_fused_axpy2(
+    v: &mut [f32],
+    dv: &mut [f32],
+    sigma: f32,
+    scale: f32,
+    idx: &[u32],
+    vals: &[f32],
+) {
+    let n = idx.len().min(vals.len());
+    let chunks = n / 8;
+    let vs = _mm256_set1_ps(sigma);
+    let vc = _mm256_set1_ps(scale);
+    let mut ua = [0.0f32; 8];
+    let mut sa = [0.0f32; 8];
+    for c in 0..chunks {
+        let o = c * 8;
+        let u = _mm256_mul_ps(vc, _mm256_loadu_ps(vals.as_ptr().add(o)));
+        let su = _mm256_mul_ps(vs, u);
+        _mm256_storeu_ps(ua.as_mut_ptr(), u);
+        _mm256_storeu_ps(sa.as_mut_ptr(), su);
+        for l in 0..8 {
+            let j = idx[o + l] as usize;
+            v[j] += sa[l];
+            dv[j] += ua[l];
+        }
+    }
+    for i in chunks * 8..n {
+        let u = scale * vals[i];
+        let j = idx[i] as usize;
+        v[j] += sigma * u;
+        dv[j] += u;
+    }
+}
+
+/// Channel-vectorized 2×2 max-pool window, mirroring `scalar::maxpool4`:
+/// candidates in `(dy, dx)` order, strict-greater compare
+/// (`_CMP_GT_OQ`) so the first maximum wins ties, value and index lanes
+/// blended on the same mask. Pure copies/compares — bit-identical to
+/// the scalar twin on finite inputs.
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn maxpool4(
+    c0: &[f32],
+    c1: &[f32],
+    c2: &[f32],
+    c3: &[f32],
+    base: [u32; 4],
+    y: &mut [f32],
+    arg: &mut [u32],
+) {
+    let n = y.len();
+    let chunks = n / 8;
+    let iota = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+    for cix in 0..chunks {
+        let o = cix * 8;
+        let vo = _mm256_add_epi32(iota, _mm256_set1_epi32(o as i32));
+        let mut best = _mm256_loadu_ps(c0.as_ptr().add(o));
+        let mut bidx = _mm256_add_epi32(_mm256_set1_epi32(base[0] as i32), vo);
+        for (cand, b) in [(c1, base[1]), (c2, base[2]), (c3, base[3])] {
+            let vc = _mm256_loadu_ps(cand.as_ptr().add(o));
+            let gt = _mm256_cmp_ps::<_CMP_GT_OQ>(vc, best);
+            best = _mm256_blendv_ps(best, vc, gt);
+            let vi = _mm256_add_epi32(_mm256_set1_epi32(b as i32), vo);
+            bidx = _mm256_castps_si256(_mm256_blendv_ps(
+                _mm256_castsi256_ps(bidx),
+                _mm256_castsi256_ps(vi),
+                gt,
+            ));
+        }
+        _mm256_storeu_ps(y.as_mut_ptr().add(o), best);
+        _mm256_storeu_si256(arg.as_mut_ptr().add(o) as *mut __m256i, bidx);
+    }
+    for ch in chunks * 8..n {
+        let mut bv = c0[ch];
+        let mut bi = base[0];
+        if c1[ch] > bv {
+            bv = c1[ch];
+            bi = base[1];
+        }
+        if c2[ch] > bv {
+            bv = c2[ch];
+            bi = base[2];
+        }
+        if c3[ch] > bv {
+            bv = c3[ch];
+            bi = base[3];
+        }
+        y[ch] = bv;
+        arg[ch] = bi + ch as u32;
+    }
+}
+
 // Safe fn-pointer shims for the blocked matmul dispatch table. Only
 // installed after `avx2()` has returned true, which upholds the
 // target-feature contract of the unsafe fns they wrap.

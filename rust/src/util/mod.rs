@@ -3,12 +3,16 @@
 //! This reproduction builds fully offline against a minimal vendored crate
 //! set (xla + anyhow), so the usual ecosystem crates are reimplemented here
 //! as small, tested substrates: a seeded RNG ([`rng`]), a JSON
-//! parser/writer ([`json`]), and a micro-benchmark harness ([`bench`]).
+//! parser/writer ([`json`]), a micro-benchmark harness ([`bench`]), and
+//! the grow-only scratch pool behind the allocation-free training hot
+//! path ([`workspace`]).
 
 pub mod bench;
 pub mod json;
 pub mod kernels;
 pub mod rng;
+pub mod workspace;
 
 pub use json::Json;
 pub use rng::Rng;
+pub use workspace::Workspace;

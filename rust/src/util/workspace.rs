@@ -1,0 +1,190 @@
+//! Grow-only scratch-buffer pool for the per-iteration training hot path.
+//!
+//! A [`Workspace`] owns typed free-lists of buffers. `take*` pops the
+//! most-recently-returned buffer (LIFO) and resizes it in place; `put*`
+//! returns a buffer to the pool without shrinking it. The training loops
+//! take and put in a fixed order every iteration, so after the first
+//! pass through a workspace the buffer-to-role assignment is stable and
+//! every `take` is satisfied from the pool with sufficient capacity —
+//! the steady-state iteration performs **zero heap allocations** in the
+//! compute loop (pinned by `tests/alloc_free_hot_path.rs`).
+//!
+//! # Ownership
+//!
+//! One `Workspace` per *logical task* (not per worker thread): the
+//! executor's task contexts in `exec/worker.rs` each carry their own,
+//! so PR-8 oversubscription (K tasks round-robin on W ≤ K threads)
+//! reuses a task's scratch across its slots, and migrating a task to
+//! another thread just moves (or lazily recreates) its workspace.
+//!
+//! # Why reuse can never change bits
+//!
+//! The contract is purely about *capacity*, never *contents*:
+//! [`Workspace::take`] returns a buffer with **unspecified contents**
+//! and the caller must fully overwrite it before reading; callers that
+//! need defined contents use [`Workspace::take_zeroed`] /
+//! [`Workspace::take_copy`] / the `*_cleared` variants, which
+//! re-establish the exact state a fresh allocation would have. Since no
+//! value ever read from a workspace buffer can depend on what a
+//! previous iteration (or a previous task binding) left behind, a dirty
+//! workspace produces bit-identical results to fresh allocation — the
+//! W-sweep / task-rebinding determinism contract holds by construction,
+//! and `tests/kernel_parity.rs` pins it.
+
+/// Typed grow-only scratch pools. See the module docs for the reuse
+/// contract.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    f32s: Vec<Vec<f32>>,
+    u32s: Vec<Vec<u32>>,
+    i32s: Vec<Vec<i32>>,
+    usizes: Vec<Vec<usize>>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Check out an `f32` buffer of length `len` with **unspecified
+    /// contents** — the caller must fully overwrite it before reading.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.f32s.pop().unwrap_or_default();
+        if v.len() < len {
+            v.resize(len, 0.0);
+        } else {
+            v.truncate(len);
+        }
+        v
+    }
+
+    /// Check out an `f32` buffer of length `len`, zero-filled (the state
+    /// `vec![0.0; len]` would have).
+    pub fn take_zeroed(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.take(len);
+        v.fill(0.0);
+        v
+    }
+
+    /// Check out an `f32` buffer initialized to a copy of `src` (the
+    /// state `src.to_vec()` would have).
+    pub fn take_copy(&mut self, src: &[f32]) -> Vec<f32> {
+        let mut v = self.f32s.pop().unwrap_or_default();
+        v.clear();
+        v.extend_from_slice(src);
+        v
+    }
+
+    /// Check out an empty `f32` buffer (length 0, capacity retained from
+    /// previous use) for `push`/`extend_from_slice`-style filling.
+    pub fn take_cleared(&mut self) -> Vec<f32> {
+        let mut v = self.f32s.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// Return an `f32` buffer to the pool.
+    pub fn put(&mut self, v: Vec<f32>) {
+        self.f32s.push(v);
+    }
+
+    /// Check out a `u32` buffer of length `len` with unspecified
+    /// contents (e.g. maxpool argmax indices, fully overwritten).
+    pub fn take_u32(&mut self, len: usize) -> Vec<u32> {
+        let mut v = self.u32s.pop().unwrap_or_default();
+        if v.len() < len {
+            v.resize(len, 0);
+        } else {
+            v.truncate(len);
+        }
+        v
+    }
+
+    /// Return a `u32` buffer to the pool.
+    pub fn put_u32(&mut self, v: Vec<u32>) {
+        self.u32s.push(v);
+    }
+
+    /// Check out an empty `i32` buffer (e.g. a label batch built with
+    /// `push`).
+    pub fn take_i32_cleared(&mut self) -> Vec<i32> {
+        let mut v = self.i32s.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// Return an `i32` buffer to the pool.
+    pub fn put_i32(&mut self, v: Vec<i32>) {
+        self.i32s.push(v);
+    }
+
+    /// Check out a `usize` buffer filled with `0..n` — the state
+    /// `(0..n).collect()` would have (e.g. a permutation about to be
+    /// shuffled; the RNG draw sequence is identical either way).
+    pub fn take_usize_seq(&mut self, n: usize) -> Vec<usize> {
+        let mut v = self.usizes.pop().unwrap_or_default();
+        v.clear();
+        v.extend(0..n);
+        v
+    }
+
+    /// Check out an empty `usize` buffer for `push`-style filling.
+    pub fn take_usize_cleared(&mut self) -> Vec<usize> {
+        let mut v = self.usizes.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// Return a `usize` buffer to the pool.
+    pub fn put_usize(&mut self, v: Vec<usize>) {
+        self.usizes.push(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_zeroed_and_copy_match_fresh_allocation_state() {
+        let mut ws = Workspace::new();
+        // Dirty a buffer, return it, and check every typed take
+        // re-establishes fresh-allocation state.
+        let mut b = ws.take(8);
+        b.fill(7.5);
+        ws.put(b);
+        assert_eq!(ws.take_zeroed(5), vec![0.0; 5]);
+
+        let mut b = ws.take(8);
+        b.fill(-1.0);
+        ws.put(b);
+        assert_eq!(ws.take_copy(&[1.0, 2.0]), vec![1.0, 2.0]);
+
+        let mut s = ws.take_usize_seq(4);
+        assert_eq!(s, vec![0, 1, 2, 3]);
+        s.reverse();
+        ws.put_usize(s);
+        assert_eq!(ws.take_usize_seq(6), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn lifo_reuse_retains_capacity() {
+        let mut ws = Workspace::new();
+        let b = ws.take(1024);
+        let cap = b.capacity();
+        ws.put(b);
+        // A smaller take reuses the same buffer (and its capacity).
+        let b2 = ws.take(16);
+        assert_eq!(b2.len(), 16);
+        assert!(b2.capacity() >= cap);
+    }
+
+    #[test]
+    fn take_shrinks_and_grows_length() {
+        let mut ws = Workspace::new();
+        ws.put(vec![1.0; 10]);
+        assert_eq!(ws.take(3).len(), 3);
+        ws.put(vec![1.0; 2]);
+        assert_eq!(ws.take(9).len(), 9);
+    }
+}

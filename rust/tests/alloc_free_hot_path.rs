@@ -1,0 +1,204 @@
+//! Pins the allocation-free hot-path contract: after warmup iterations
+//! prime a task's [`Workspace`], steady-state compute — a full CNN/MLP
+//! gradient and an SCD chunk pass — performs **zero** heap allocations,
+//! and a whole `task_iterate_ws` performs at most the one documented
+//! allocation per iteration (the `LocalUpdate::delta` handoff buffer).
+//!
+//! The counter is a `#[global_allocator]` wrapper around the system
+//! allocator that counts `alloc`, `alloc_zeroed` *and* `realloc` (a
+//! grow-in-place still means the pool under-reserved) — per thread, so
+//! the harness's other test threads cannot bleed into a window.
+//! Integration tests are separate crates, so installing the wrapper
+//! here affects only this test binary.
+//!
+//! Warmup runs several iterations, not one: buffers permute through
+//! pool roles across iterations (the LIFO take/put cycle), so a buffer
+//! may only reach its largest role — and final capacity — after a few
+//! cycles. Steady state is reached once every buffer has cycled.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use chicle::algos::nn::{CnnShape, NativeModel};
+use chicle::algos::{Algorithm, Backend, CocoaAlgo, LsgdAlgo};
+use chicle::chunks::chunker::make_chunks;
+use chicle::config::{CocoaConfig, LsgdConfig, ModelKind};
+use chicle::data::synth;
+use chicle::util::{Rng, Workspace};
+
+thread_local! {
+    static TL_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+fn bump() {
+    // try_with: never panic inside the allocator (TLS may be gone
+    // during thread teardown — those allocations just go uncounted).
+    let _ = TL_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Allocations made by *this thread* while running `f`.
+fn count_allocs<R>(f: impl FnOnce() -> R) -> (u64, R) {
+    let before = TL_ALLOCS.with(|c| c.get());
+    let r = f();
+    (TL_ALLOCS.with(|c| c.get()) - before, r)
+}
+
+/// Enough iterations for every pooled buffer to cycle through all the
+/// roles its pool position visits (longest cycle ≈ pool size).
+const WARMUP: usize = 40;
+
+#[test]
+fn cnn_grad_steady_state_allocates_nothing() {
+    let shape =
+        CnnShape { h: 8, w: 8, c: 1, conv1: 2, conv2: 3, ks: 3, fc1: 6, fc2: 4, classes: 3 };
+    let model = NativeModel::Cnn { shape };
+    let params = model.init(3);
+    let batch = 4usize;
+    let mut rng = Rng::seed_from_u64(4);
+    let x: Vec<f32> = (0..batch * 64).map(|_| rng.normal_f32()).collect();
+    let y: Vec<i32> = (0..batch).map(|_| rng.below(3) as i32).collect();
+
+    let mut ws = Workspace::new();
+    for _ in 0..WARMUP {
+        let (g, ..) = model.grad_ws(&params, &x, &y, &mut ws);
+        ws.put(g);
+    }
+
+    let (n, _) = count_allocs(|| {
+        for _ in 0..5 {
+            let (g, ..) = model.grad_ws(&params, &x, &y, &mut ws);
+            ws.put(g);
+        }
+    });
+    assert_eq!(n, 0, "steady-state CNN grad allocated {n} times");
+}
+
+#[test]
+fn mlp_grad_steady_state_allocates_nothing() {
+    let model = NativeModel::Mlp { dims: vec![32, 24, 16, 5] };
+    let params = model.init(5);
+    let batch = 8usize;
+    let mut rng = Rng::seed_from_u64(6);
+    let x: Vec<f32> = (0..batch * 32).map(|_| rng.normal_f32()).collect();
+    let y: Vec<i32> = (0..batch).map(|_| rng.below(5) as i32).collect();
+
+    let mut ws = Workspace::new();
+    for _ in 0..WARMUP {
+        let (g, ..) = model.grad_ws(&params, &x, &y, &mut ws);
+        ws.put(g);
+    }
+
+    let (n, _) = count_allocs(|| {
+        for _ in 0..5 {
+            let (g, ..) = model.grad_ws(&params, &x, &y, &mut ws);
+            ws.put(g);
+        }
+    });
+    assert_eq!(n, 0, "steady-state MLP grad allocated {n} times");
+}
+
+#[test]
+fn scd_chunk_steady_state_allocates_nothing() {
+    let ds = synth::higgs_like(512, 9);
+    let mut chunks = make_chunks(&ds, usize::MAX);
+    let backend = Backend::native_cocoa();
+    let dim = ds.dim();
+    let n = chunks[0].n_samples();
+    let order: Vec<usize> = (0..n).collect();
+    let lam_n = 0.01 * n as f32;
+    let mut v = vec![0.0f32; dim];
+
+    let mut ws = Workspace::new();
+    for _ in 0..WARMUP {
+        let dv =
+            backend.scd_chunk_ws(&mut chunks[0], &order, &mut v, lam_n, 2.0, &mut ws).unwrap();
+        ws.put(dv);
+    }
+
+    let (count, _) = count_allocs(|| {
+        for _ in 0..5 {
+            let dv = backend
+                .scd_chunk_ws(&mut chunks[0], &order, &mut v, lam_n, 2.0, &mut ws)
+                .unwrap();
+            ws.put(dv);
+        }
+    });
+    assert_eq!(count, 0, "steady-state SCD chunk pass allocated {count} times");
+}
+
+/// A whole task iteration is allowed exactly the documented handoff
+/// allocation — the `LocalUpdate::delta` buffer it returns — plus the
+/// collection bookkeeping of the test itself.
+#[test]
+fn task_iterate_steady_state_allocates_only_the_delta() {
+    // CoCoA.
+    let ds = synth::higgs_like(600, 12);
+    let mut chunks = make_chunks(&ds, 16 * 1024);
+    let algo =
+        CocoaAlgo::new(CocoaConfig::default(), Backend::native_cocoa(), ds.n_samples(), ds.dim());
+    let model = algo.init_model().unwrap();
+    let mut ws = Workspace::new();
+    for it in 0..WARMUP as u64 {
+        algo.task_iterate_ws(&mut chunks, &model, 2, it, None, &mut ws).unwrap();
+    }
+    let (count, updates) = count_allocs(|| {
+        (0..4u64)
+            .map(|it| algo.task_iterate_ws(&mut chunks, &model, 2, it, None, &mut ws).unwrap())
+            .collect::<Vec<_>>()
+    });
+    // Per iteration: one delta Vec; the collect adds a few Vec growths
+    // for the results vector itself. Bound generously but meaningfully
+    // (an accidentally allocating inner loop would blow far past this).
+    assert!(count <= 12, "cocoa task_iterate_ws allocated {count} times over 4 iters");
+    drop(updates);
+
+    // lSGD (MLP).
+    let ds = synth::fmnist_like(400, 13);
+    let mut cfg = LsgdConfig::paper_defaults(ModelKind::Mlp);
+    cfg.h = 2;
+    let algo = LsgdAlgo::new_classif(
+        cfg,
+        Backend::native_nn(NativeModel::Mlp { dims: vec![784, 32, 10] }),
+        784,
+        Vec::new(),
+        Vec::new(),
+        2,
+    )
+    .unwrap();
+    let mut chunks = make_chunks(&ds, 64 * 1024);
+    let model = algo.init_model().unwrap();
+    let mut ws = Workspace::new();
+    for it in 0..WARMUP as u64 {
+        algo.task_iterate_ws(&mut chunks, &model, 2, it, None, &mut ws).unwrap();
+    }
+    let (count, updates) = count_allocs(|| {
+        (0..4u64)
+            .map(|it| algo.task_iterate_ws(&mut chunks, &model, 2, it, None, &mut ws).unwrap())
+            .collect::<Vec<_>>()
+    });
+    assert!(count <= 12, "lsgd task_iterate_ws allocated {count} times over 4 iters");
+    drop(updates);
+}

@@ -14,12 +14,16 @@
 use std::sync::Arc;
 
 use chicle::algos::nn::linear::Act;
-use chicle::algos::svm::{scd_pass_dense, scd_pass_dense_scalar};
+use chicle::algos::svm::{
+    scd_pass_dense, scd_pass_dense_scalar, scd_pass_sparse, scd_pass_sparse_scalar,
+};
 use chicle::algos::{Algorithm, Backend, CocoaAlgo, LocalUpdate, LsgdAlgo};
-use chicle::chunks::SharedStore;
+use chicle::chunks::chunker::make_chunks;
+use chicle::chunks::{Samples, SharedStore};
 use chicle::config::{CocoaConfig, LsgdConfig, ModelKind};
+use chicle::data::{synth, SparseVec};
 use chicle::exec::{ReduceOptions, WorkerPool};
-use chicle::util::{kernels, Rng};
+use chicle::util::{kernels, Rng, Workspace};
 
 fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.normal_f32()).collect()
@@ -142,6 +146,166 @@ fn matmul_zero_skip_bit_equal_dense_on_mixed_input() {
     kernels::matmul(&a, &b, &mut dense, m, k, n);
     kernels::matmul_zero_skip(&a, &b, &mut skip, m, k, n);
     assert_eq!(dense, skip);
+}
+
+/// Packed-B matmul vs the unpacked blocked matmul, bitwise, across
+/// geometries with N below, at, and above the packing block width
+/// (BLOCK_N = 512) — and the packed dispatch vs its scalar twin.
+#[test]
+fn packed_matmul_bit_equal_unpacked_and_scalar_twin() {
+    let mut rng = Rng::seed_from_u64(21);
+    for (m, k, n) in [(3usize, 130usize, 300usize), (2, 64, 512), (3, 200, 515), (2, 300, 1030)] {
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let mut unpacked = vec![0.0f32; m * n];
+        kernels::matmul(&a, &b, &mut unpacked, m, k, n);
+
+        let mut scratch = vec![0.0f32; kernels::packed_b_len(k, n)];
+        let mut packed = vec![0.0f32; m * n];
+        kernels::matmul_packed(&a, &b, &mut packed, m, k, n, &mut scratch);
+        assert_eq!(packed, unpacked, "packed vs unpacked {m}x{k}x{n}");
+
+        let mut packed_scalar = vec![0.0f32; m * n];
+        kernels::matmul_packed_scalar(&a, &b, &mut packed_scalar, m, k, n, &mut scratch);
+        assert_eq!(packed_scalar, packed, "packed scalar twin {m}x{k}x{n}");
+    }
+}
+
+/// The sparse gather/scatter kernels against their scalar twins, bitwise,
+/// across index patterns (contiguous, strided, clustered) and lengths
+/// straddling the lane boundaries.
+#[test]
+fn sparse_kernels_bit_equal_scalar_reference() {
+    let mut rng = Rng::seed_from_u64(22);
+    let dim = 4096usize;
+    let dense = randv(&mut rng, dim);
+    for nnz in [0usize, 1, 7, 8, 15, 16, 17, 255, 1000] {
+        // Sorted unique random indices (the SparseVec invariant).
+        let mut idx: Vec<u32> = Vec::with_capacity(nnz);
+        let mut next = 0u32;
+        for _ in 0..nnz {
+            next += 1 + rng.below(3) as u32;
+            idx.push(next);
+        }
+        let vals = randv(&mut rng, nnz);
+
+        let d = kernels::sparse_dot(&idx, &vals, &dense);
+        let ds = kernels::scalar::sparse_dot(&idx, &vals, &dense);
+        assert_eq!(d.to_bits(), ds.to_bits(), "sparse_dot nnz={nnz}");
+
+        let (mut v1, mut dv1) = (dense.clone(), vec![0.5f32; dim]);
+        let (mut v2, mut dv2) = (dense.clone(), vec![0.5f32; dim]);
+        kernels::sparse_fused_axpy2(&mut v1, &mut dv1, 4.0, -0.37, &idx, &vals);
+        kernels::scalar::sparse_fused_axpy2(&mut v2, &mut dv2, 4.0, -0.37, &idx, &vals);
+        assert_eq!(v1, v2, "sparse_fused_axpy2 v nnz={nnz}");
+        assert_eq!(dv1, dv2, "sparse_fused_axpy2 dv nnz={nnz}");
+    }
+}
+
+/// Dispatched maxpool4 vs its scalar twin, bitwise, including the
+/// tie-heavy case (quantized values force equal candidates — first max
+/// must win on both paths).
+#[test]
+fn maxpool4_bit_equal_scalar_reference() {
+    let mut rng = Rng::seed_from_u64(23);
+    for c in [1usize, 7, 8, 16, 17, 64] {
+        let quantized: Vec<f32> = (0..4 * c).map(|_| rng.below(4) as f32).collect();
+        let rows: Vec<&[f32]> =
+            (0..4).map(|i| &quantized[i * c..(i + 1) * c]).collect();
+        let base = [0u32, 1000, 2000, 3000];
+
+        let (mut y1, mut a1) = (vec![0.0f32; c], vec![0u32; c]);
+        let (mut y2, mut a2) = (vec![0.0f32; c], vec![0u32; c]);
+        kernels::maxpool4(rows[0], rows[1], rows[2], rows[3], base, &mut y1, &mut a1);
+        kernels::scalar::maxpool4(rows[0], rows[1], rows[2], rows[3], base, &mut y2, &mut a2);
+        assert_eq!(y1, y2, "maxpool4 y c={c}");
+        assert_eq!(a1, a2, "maxpool4 arg c={c}");
+    }
+}
+
+/// The full sparse SCD pass against its scalar twin on Criteo-like data:
+/// the trajectory (α, v, dv) must be bit-identical, not merely close.
+#[test]
+fn scd_sparse_pass_scalar_twin_bit_equal() {
+    let ds = synth::criteo_like_with(512, 2000, 30, 24, 7);
+    let chunks = make_chunks(&ds, usize::MAX);
+    let (rows, dim, y): (&[SparseVec], usize, &[f32]) = match chunks[0].samples() {
+        Samples::SparseBinary { rows, dim, y } => (rows, *dim, y),
+        _ => panic!("criteo-like data should chunk sparse"),
+    };
+    let order: Vec<usize> = (0..y.len()).collect();
+    let lam_n = 0.01 * y.len() as f32;
+
+    let mut a1 = vec![0.0f32; y.len()];
+    let mut v1 = vec![0.01f32; dim];
+    let mut dv1 = vec![0.0f32; dim];
+    scd_pass_sparse(rows, y, &order, &mut a1, &mut v1, &mut dv1, lam_n, 4.0);
+
+    let mut a2 = vec![0.0f32; y.len()];
+    let mut v2 = vec![0.01f32; dim];
+    let mut dv2 = vec![0.0f32; dim];
+    scd_pass_sparse_scalar(rows, y, &order, &mut a2, &mut v2, &mut dv2, lam_n, 4.0);
+
+    assert_eq!(a1, a2, "alpha diverged");
+    assert_eq!(v1, v2, "v diverged");
+    assert_eq!(dv1, dv2, "dv diverged");
+}
+
+/// The workspace-reuse contract: running an iteration through a *dirty*
+/// workspace (already used by a different-shaped iteration) must produce
+/// the exact bits of a fresh workspace — and of the plain allocating
+/// `task_iterate`. This is what makes W-sweeps and task rebinding
+/// trajectory-invariant.
+#[test]
+fn dirty_workspace_bit_identical_to_fresh() {
+    // CoCoA over dense chunks.
+    let ds = synth::higgs_like(1000, 7);
+    let chunks = make_chunks(&ds, 16 * 1024);
+    let algo =
+        CocoaAlgo::new(CocoaConfig::default(), Backend::native_cocoa(), ds.n_samples(), ds.dim());
+    let model = algo.init_model().unwrap();
+    // Chunk state mutates, so each run gets its own clone of the chunks.
+    let run = |ws: &mut Workspace| {
+        let mut cs = chunks.clone();
+        algo.task_iterate_ws(&mut cs, &model, 4, 99, None, ws).unwrap()
+    };
+    let fresh = run(&mut Workspace::new());
+    let mut dirty = Workspace::new();
+    // Dirty it: a different seed draws different orders and leaves
+    // different garbage in every pooled buffer.
+    run(&mut dirty);
+    let reused = run(&mut dirty);
+    assert_eq!(fresh.delta, reused.delta, "cocoa: dirty workspace changed bits");
+    assert_eq!(fresh.samples, reused.samples);
+    let plain = {
+        let mut cs = chunks.clone();
+        algo.task_iterate(&mut cs, &model, 4, 99, None).unwrap()
+    };
+    assert_eq!(plain.delta, fresh.delta, "cocoa: task_iterate vs task_iterate_ws");
+
+    // lSGD over an MLP (chunks are read-only here).
+    let ds = synth::fmnist_like(600, 5);
+    let mut cfg = LsgdConfig::paper_defaults(ModelKind::Mlp);
+    cfg.h = 2;
+    let algo = LsgdAlgo::new_classif(
+        cfg,
+        Backend::native_nn(chicle::algos::nn::NativeModel::mlp_default()),
+        784,
+        Vec::new(),
+        Vec::new(),
+        7,
+    )
+    .unwrap();
+    let mut chunks = make_chunks(&ds, 64 * 1024);
+    let model = algo.init_model().unwrap();
+    let fresh =
+        algo.task_iterate_ws(&mut chunks, &model, 2, 55, None, &mut Workspace::new()).unwrap();
+    let mut dirty = Workspace::new();
+    algo.task_iterate_ws(&mut chunks, &model, 2, 56, None, &mut dirty).unwrap();
+    let reused = algo.task_iterate_ws(&mut chunks, &model, 2, 55, None, &mut dirty).unwrap();
+    assert_eq!(fresh.delta, reused.delta, "lsgd: dirty workspace changed bits");
+    let plain = algo.task_iterate(&mut chunks, &model, 2, 55, None).unwrap();
+    assert_eq!(plain.delta, fresh.delta, "lsgd: task_iterate vs task_iterate_ws");
 }
 
 fn pool_of(algo: &Arc<dyn Algorithm>, n_workers: usize) -> WorkerPool {
